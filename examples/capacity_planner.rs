@@ -1,0 +1,74 @@
+//! Capacity planner walkthrough — the paper's §4.3 model in practice:
+//! given a model, a GPU and a latency budget, how many CPU sockets do I
+//! buy, and what batch do I run?
+//!
+//! Run: `cargo run --release --example capacity_planner`
+
+use fastdecode::bench::Table;
+use fastdecode::model::{LLAMA_13B, LLAMA_7B, OPT_175B};
+use fastdecode::perfmodel::{
+    CpuModel, GpuModel, PlanInput, Planner, A10, EPYC_7452,
+};
+
+fn main() {
+    let planner =
+        Planner::new(GpuModel::new(A10), CpuModel::from_device(EPYC_7452));
+
+    let mut t = Table::new(
+        "FastDecode capacity plans (A10 S-worker, Epyc-7452 R-sockets, S=1024)",
+        &[
+            "model",
+            "latency budget",
+            "batch B",
+            "sockets P",
+            "step ms",
+            "tok/s",
+            "bound",
+        ],
+    );
+    for spec in [LLAMA_7B, LLAMA_13B, OPT_175B] {
+        for budget in [None, Some(120.0), Some(400.0)] {
+            let r = planner.plan(
+                &spec,
+                PlanInput {
+                    seq_len: 1024,
+                    latency_budget: budget,
+                    ..Default::default()
+                },
+            );
+            t.row(&[
+                spec.name.into(),
+                budget
+                    .map(|b| format!("{b:.0} s/seq"))
+                    .unwrap_or_else(|| "none".into()),
+                r.batch.to_string(),
+                r.sockets.to_string(),
+                format!("{:.1}", r.step_latency * 1e3),
+                format!("{:.0}", r.throughput),
+                format!("{:?}", r.batch_bound),
+            ]);
+        }
+    }
+    t.print();
+
+    println!("observations (matching §4.3):");
+    println!("  - tighter latency budgets shrink B (eq. 7), costing throughput;");
+    println!("  - larger models (bigger h) need FEWER sockets per GPU (P ∝ 1/h);");
+    println!("  - socket count scales with expected sequence length (eq. 11).");
+
+    // sensitivity: sockets vs sequence length for the 7b model
+    let mut t2 = Table::new(
+        "Sensitivity: minimum sockets vs sequence length (llama7b, B=512)",
+        &["seq len S", "sockets P"],
+    );
+    for s in [128usize, 256, 512, 1024, 2048, 4096] {
+        let p = planner.min_sockets(
+            &LLAMA_7B,
+            512,
+            s,
+            fastdecode::model::Precision::F16,
+        );
+        t2.row(&[s.to_string(), p.to_string()]);
+    }
+    t2.print();
+}

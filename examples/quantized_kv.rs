@@ -1,0 +1,110 @@
+//! Quantized KV-cache (§5.2): serve the same workload with fp16, int8
+//! and int4 caches; compare output agreement, memory, measured R-worker
+//! speed, and the planner's socket savings.
+//!
+//! Run: `make artifacts && cargo run --release --example quantized_kv`
+
+use std::sync::Arc;
+
+use fastdecode::bench::{Bench, Table};
+use fastdecode::coordinator::real::{FastDecode, FastDecodeConfig};
+use fastdecode::kvcache::SeqKv;
+use fastdecode::model::{Precision, LLAMA_7B, TINY};
+use fastdecode::perfmodel::{CpuModel, GpuModel, Planner, A10, EPYC_7452};
+use fastdecode::runtime::Engine;
+use fastdecode::rworker::{attend_one, AttnScratch};
+use fastdecode::util::Rng;
+use fastdecode::workload::fixed_batch;
+
+fn generate_tokens(
+    engine: &Arc<Engine>,
+    prec: Precision,
+) -> anyhow::Result<Vec<Vec<i32>>> {
+    let mut fd = FastDecode::new(
+        engine.clone(),
+        TINY,
+        FastDecodeConfig {
+            batch: 8,
+            sockets: 2,
+            precision: prec,
+            capacity_per_seq: 64,
+            weight_seed: 21,
+            ..Default::default()
+        },
+    )?;
+    let prompts = fixed_batch(8, 4, TINY.vocab, 13);
+    Ok(fd.generate(&prompts, 16)?.tokens)
+}
+
+fn agreement(a: &[Vec<i32>], b: &[Vec<i32>]) -> f64 {
+    let total: usize = a.iter().map(|s| s.len()).sum();
+    let same: usize = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| x.iter().zip(y).filter(|(p, q)| p == q).count())
+        .sum();
+    same as f64 / total as f64
+}
+
+fn measure_attention(prec: Precision) -> f64 {
+    let (h, d, ctx) = (8usize, 128usize, 2048usize);
+    let mut kv = SeqKv::new(h, d, ctx, prec);
+    let mut rng = Rng::new(5);
+    let k = rng.normal_vec(h * d, 0.5);
+    let v = rng.normal_vec(h * d, 0.5);
+    for _ in 0..ctx {
+        kv.append(&k, &v);
+    }
+    let q = rng.normal_vec(h * d, 0.5);
+    let mut o = vec![0.0; h * d];
+    let mut scratch = AttnScratch::new(d);
+    Bench::quick()
+        .measure(|| {
+            attend_one(&kv, &q, &mut o, &mut scratch);
+            std::hint::black_box(&o);
+        })
+        .mean_s
+}
+
+fn main() -> anyhow::Result<()> {
+    let engine = Arc::new(Engine::load(fastdecode::artifacts_dir())?);
+    let reference = generate_tokens(&engine, Precision::F32)?;
+    let planner =
+        Planner::new(GpuModel::new(A10), CpuModel::from_device(EPYC_7452));
+    let f16_lat = measure_attention(Precision::F16);
+
+    let mut t = Table::new(
+        "KV-cache precision trade-offs (tiny model e2e + 7b planning)",
+        &[
+            "precision",
+            "token agreement vs f32",
+            "KV bytes/token (7b)",
+            "R-worker latency (measured)",
+            "sockets for 7b/S=1024/B=512",
+        ],
+    );
+    for prec in [
+        Precision::F16,
+        Precision::Int8,
+        Precision::Int4,
+    ] {
+        let toks = generate_tokens(&engine, prec)?;
+        let agree = agreement(&reference, &toks);
+        let lat = measure_attention(prec);
+        let sockets = planner.min_sockets(&LLAMA_7B, 512, 1024, prec);
+        t.row(&[
+            prec.label().into(),
+            format!("{:.1} %", agree * 100.0),
+            format!("{} KiB", LLAMA_7B.kv_bytes_per_token(prec) / 1024),
+            format!("{:.2} ms ({:.2}x f16)", lat * 1e3, f16_lat / lat),
+            sockets.to_string(),
+        ]);
+    }
+    t.print();
+
+    println!("§5.1–5.2 story:");
+    println!("  - fp16 is lossless in practice (high token agreement);");
+    println!("  - int8 stays close; int4 trades accuracy for 4x less memory");
+    println!("    traffic — fewer CPUs for the same GPU (last column).");
+    Ok(())
+}

@@ -1,0 +1,43 @@
+"""Model configurations mirrored by rust/src/model/spec.rs.
+
+The paper evaluates Llama-7b, Llama-13b and OPT-175b (§6.1). Like the
+paper, we reduce the number of layers for experiments and extrapolate
+linearly (their Fig 8 justifies this). The ``tiny`` config is small enough
+to push real numerics end-to-end through PJRT-CPU from the Rust
+coordinator.
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    hidden: int          # feature dimension h
+    n_heads: int
+    n_layers: int        # full-model layer count (extrapolation target)
+    ffn: int             # MLP intermediate dimension
+    vocab: int
+    # layers actually instantiated for experiments (paper reduces layers too)
+    eval_layers: int
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden % self.n_heads == 0
+        return self.hidden // self.n_heads
+
+    def kv_bytes_per_token(self, bytes_per_el: int = 2) -> int:
+        """fp16 K+V bytes appended per token per layer-stack (eq. of Fig 1)."""
+        return 2 * self.hidden * self.n_layers * bytes_per_el
+
+
+TINY = ModelConfig("tiny", hidden=64, n_heads=4, n_layers=2, ffn=176,
+                   vocab=256, eval_layers=2)
+LLAMA_7B = ModelConfig("llama7b", hidden=4096, n_heads=32, n_layers=32,
+                       ffn=11008, vocab=32000, eval_layers=2)
+LLAMA_13B = ModelConfig("llama13b", hidden=5120, n_heads=40, n_layers=40,
+                        ffn=13824, vocab=32000, eval_layers=2)
+OPT_175B = ModelConfig("opt175b", hidden=12288, n_heads=96, n_layers=96,
+                       ffn=49152, vocab=50272, eval_layers=1)
+
+CONFIGS = {c.name: c for c in (TINY, LLAMA_7B, LLAMA_13B, OPT_175B)}

@@ -1,0 +1,122 @@
+"""L1 Pallas kernel: flash-decoding attention over a ragged KV-cache.
+
+This is the paper's compute hot-spot (*R-Part*, eqs. 2-3): for every
+sequence in the batch, the newest token's query attends over that
+sequence's own KV-cache. It is memory-bound — each K/V element is read
+once per generated token — which is exactly why FastDecode moves it off
+the GPU and next to the cache.
+
+Hardware adaptation (GPU paper → TPU kernel, DESIGN.md §Hardware-
+Adaptation): the CUDA version assigns one threadblock per (sequence,
+head) and streams KV from HBM through shared memory. Here the same
+schedule is expressed with a Pallas grid ``(B, H, S/block_s)`` and
+``BlockSpec``s that stage one ``(block_s, D)`` K tile and V tile into
+VMEM per grid step. A running (online) softmax accumulator lives in VMEM
+scratch across the sequence-axis grid dimension, so the ``[B, S]``
+attention matrix is never materialized — the flash-attention trick, sized
+for a decode workload where Q is a single row.
+
+VMEM budget per grid step (fp16 KV, fp32 scratch):
+    2 * block_s * D * 2B  (K,V tiles)  +  D * 4B (acc) + 8B (m, l)
+With block_s=512, D=128: 256 KiB — far below the ~16 MiB/core budget, so
+on a real TPU several (b, h) programs can be double-buffered; the MXU
+sees a (1×D)·(D×block_s) matmul per tile.
+
+Ragged batches: `lengths` masks per-tile via iota comparison, so one
+compiled kernel serves any mix of sequence lengths (the paper's batched-
+GeMV over ragged KV).
+
+interpret=True always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; correctness is established here and perf is estimated
+analytically (DESIGN.md §5).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30  # finite stand-in for -inf: keeps fp16-safe exp() semantics
+
+
+def _decode_attn_kernel(lengths_ref, q_ref, k_ref, v_ref, o_ref,
+                        m_ref, l_ref, acc_ref, *, block_s: int):
+    """One grid step: fold one (block_s, D) KV tile into the online softmax.
+
+    Grid: (B, H, num_s_blocks); the s axis is minor-most, so scratch
+    persists across the KV tiles of one (b, h) program.
+    """
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0, :].astype(jnp.float32)                 # [D]
+    k = k_ref[0, 0, :, :].astype(jnp.float32)              # [block_s, D]
+    v = v_ref[0, 0, :, :].astype(jnp.float32)              # [block_s, D]
+
+    d = q.shape[0]
+    scale = 1.0 / (d ** 0.5)
+    scores = (k @ q) * scale                               # [block_s]
+
+    # Mask out positions beyond this sequence's true length.
+    length = lengths_ref[0]
+    pos = s_idx * block_s + jax.lax.broadcasted_iota(jnp.int32, (block_s,), 0)
+    scores = jnp.where(pos < length, scores, NEG_INF)
+
+    # Online softmax update.
+    m_prev = m_ref[0]
+    m_new = jnp.maximum(m_prev, scores.max())
+    correction = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)                            # [block_s]
+    l_new = l_ref[0] * correction + p.sum()
+    acc_ref[...] = acc_ref[...] * correction + p @ v       # [D]
+    m_ref[0] = m_new
+    l_ref[0] = l_new
+
+    @pl.when(s_idx == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0, 0, :] = (acc_ref[...] / l_ref[0]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s",))
+def decode_attention(q, k_cache, v_cache, lengths, *, block_s: int = 64):
+    """Pallas flash-decoding attention; same contract as ref.decode_attention_ref.
+
+    q: [B, H, D]; k_cache/v_cache: [B, H, S, D]; lengths: [B] int32
+    (valid positions per sequence, masked positions may hold garbage).
+    Returns o: [B, H, D] in q's dtype. S must be a multiple of block_s
+    only for convenience — shorter S is handled by clamping block_s.
+    """
+    B, H, S, D = k_cache.shape
+    assert q.shape == (B, H, D), (q.shape, k_cache.shape)
+    block_s = min(block_s, S)
+    num_blocks = (S + block_s - 1) // block_s
+    assert S % block_s == 0, (
+        f"S={S} must be a multiple of block_s={block_s}; pad the cache"
+    )
+
+    grid = (B, H, num_blocks)
+    return pl.pallas_call(
+        functools.partial(_decode_attn_kernel, block_s=block_s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, s: (b,)),               # lengths
+            pl.BlockSpec((1, 1, D), lambda b, h, s: (b, h, 0)),     # q
+            pl.BlockSpec((1, 1, block_s, D), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, block_s, D), lambda b, h, s: (b, h, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda b, h, s: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),   # running max m
+            pltpu.VMEM((1,), jnp.float32),   # running denom l
+            pltpu.VMEM((D,), jnp.float32),   # output accumulator
+        ],
+        interpret=True,
+    )(lengths, q, k_cache, v_cache)

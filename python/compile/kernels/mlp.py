@@ -1,0 +1,85 @@
+"""L1 Pallas kernel: tiled gated MLP (the dominant S-Part matmuls).
+
+S-Part is compute-bound (Fig 3): three [h, f]-scale matmuls per block.
+On a real TPU this kernel tiles the batch and ffn axes so each grid step
+runs an MXU-shaped (block_b × h)·(h × block_f) matmul with fp32
+accumulation, streaming weight tiles HBM→VMEM. The gate and up
+projections share the staged `x` tile; the down-projection is folded into
+the same grid via a VMEM output accumulator over the f axis (minor-most
+grid dim), so the [B, f] intermediate never hits HBM.
+
+VMEM per step (fp16 weights): block_b*h*2 (x) + 2*h*block_f*2 (Wg, Wu)
++ block_f*h*2 (Wd tile) + block_b*h*4 (acc). h=4096, block_b=64,
+block_f=512: ≈ 13 MiB — one buffer set per core, MXU utilization bounded
+by the (64×4096)·(4096×512) shapes ≈ full tiles.
+
+interpret=True (see decode_attention.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mlp_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref):
+    """Grid (num_b_blocks, num_f_blocks); f minor-most, acc over f tiles."""
+    f_idx = pl.program_id(1)
+
+    @pl.when(f_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)                      # [bb, h]
+    g = x @ wg_ref[...].astype(jnp.float32)                 # [bb, bf]
+    u = x @ wu_ref[...].astype(jnp.float32)
+    act = (g * (1.0 / (1.0 + jnp.exp(-g)))) * u             # silu(g) * u
+    acc_ref[...] += act @ wd_ref[...].astype(jnp.float32)   # [bb, h]
+
+    @pl.when(f_idx == pl.num_programs(1) - 1)
+    def _finish():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_f"))
+def mlp(x, w_gate, w_up, w_down, *, block_b: int = 8, block_f: int = 64):
+    """Tiled gated MLP; same contract as ref.mlp_ref.
+
+    x: [B, h]; w_gate/w_up: [h, f]; w_down: [f, h]. Returns [B, h] in
+    x's dtype. B and f are padded up to the block sizes internally.
+    """
+    B, h = x.shape
+    f = w_gate.shape[1]
+    assert w_gate.shape == (h, f) and w_up.shape == (h, f)
+    assert w_down.shape == (f, h)
+
+    block_b = min(block_b, B)
+    block_f = min(block_f, f)
+    pad_b = (-B) % block_b
+    pad_f = (-f) % block_f
+    if pad_b:
+        x = jnp.pad(x, ((0, pad_b), (0, 0)))
+    if pad_f:
+        w_gate = jnp.pad(w_gate, ((0, 0), (0, pad_f)))
+        w_up = jnp.pad(w_up, ((0, 0), (0, pad_f)))
+        w_down = jnp.pad(w_down, ((0, pad_f), (0, 0)))
+    Bp, fp = B + pad_b, f + pad_f
+
+    grid = (Bp // block_b, fp // block_f)
+    out = pl.pallas_call(
+        _mlp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, h), lambda b, fi: (b, 0)),     # x
+            pl.BlockSpec((h, block_f), lambda b, fi: (0, fi)),    # w_gate
+            pl.BlockSpec((h, block_f), lambda b, fi: (0, fi)),    # w_up
+            pl.BlockSpec((block_f, h), lambda b, fi: (fi, 0)),    # w_down
+        ],
+        out_specs=pl.BlockSpec((block_b, h), lambda b, fi: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, h), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_b, h), jnp.float32)],
+        interpret=True,
+    )(x, w_gate, w_up, w_down)
+    return out[:B]

@@ -1,0 +1,103 @@
+"""Pure-jnp oracles for the Pallas kernels and the decomposed model.
+
+These are the CORE correctness references: every Pallas kernel and every
+exported HLO is validated against these functions (pytest + hypothesis).
+Everything here is written in the most obvious way possible — no tiling,
+no running softmax — so that a bug in the optimized paths cannot hide in a
+shared trick.
+"""
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """Single-token decode attention over a ragged KV-cache (paper eq. 2-3).
+
+    Args:
+      q:        [B, H, D]   query of the latest token per sequence.
+      k_cache:  [B, H, S, D] keys of all preceding tokens (padded to S).
+      v_cache:  [B, H, S, D]
+      lengths:  [B] int32, number of valid cache positions per sequence
+                (including the latest token's K/V already appended).
+
+    Returns:
+      o: [B, H, D] attention output, in q's dtype.
+    """
+    B, H, S, D = k_cache.shape
+    qf = q.astype(jnp.float32)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.float32(D))
+    # scores: [B, H, S]
+    scores = jnp.einsum("bhd,bhsd->bhs", qf, kf) * scale
+    mask = jnp.arange(S)[None, :] < lengths[:, None]          # [B, S]
+    scores = jnp.where(mask[:, None, :], scores, -jnp.inf)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bhs,bhsd->bhd", probs, vf)
+    return o.astype(q.dtype)
+
+
+def silu(x):
+    return x * (1.0 / (1.0 + jnp.exp(-x)))
+
+
+def mlp_ref(x, w_gate, w_up, w_down):
+    """Llama-style gated MLP: (silu(x W_g) * (x W_u)) W_d, fp32 accumulate.
+
+    x: [B, h]; w_gate/w_up: [h, f]; w_down: [f, h].
+    """
+    xf = x.astype(jnp.float32)
+    g = silu(xf @ w_gate.astype(jnp.float32))
+    u = xf @ w_up.astype(jnp.float32)
+    return ((g * u) @ w_down.astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm_ref(x, w, eps=1e-5):
+    """RMSNorm over the last axis, fp32 accumulate."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * (1.0 / jnp.sqrt(var + eps)) * w.astype(jnp.float32)).astype(
+        x.dtype
+    )
+
+
+def block_decode_ref(x, k_cache, v_cache, lengths, params):
+    """One full transformer-block decode step, the composition oracle.
+
+    Must equal s_part_pre → decode_attention_ref → s_part_post exactly
+    (that equality is the decomposition test for the paper's R/S split).
+
+    x: [B, h]. params: dict with n_heads, ln1, wq, wk, wv, wo, ln2,
+    w_gate, w_up, w_down. Returns (y [B, h], k_new [B, H, D],
+    v_new [B, H, D]). k_cache/v_cache must NOT yet contain this token;
+    lengths counts only the preceding tokens.
+    """
+    B, h = x.shape
+    H = params["n_heads"]
+    D = h // H
+
+    xn = rmsnorm_ref(x, params["ln1"])
+    q = xn.astype(jnp.float32) @ params["wq"].astype(jnp.float32)
+    k = xn.astype(jnp.float32) @ params["wk"].astype(jnp.float32)
+    v = xn.astype(jnp.float32) @ params["wv"].astype(jnp.float32)
+    q = q.astype(x.dtype).reshape(B, H, D)
+    k_new = k.astype(x.dtype).reshape(B, H, D)
+    v_new = v.astype(x.dtype).reshape(B, H, D)
+
+    # Append this token's K/V at position `lengths` (per sequence).
+    kc = jnp.concatenate([k_cache, jnp.zeros_like(k_cache[:, :, :1])], axis=2)
+    vc = jnp.concatenate([v_cache, jnp.zeros_like(v_cache[:, :, :1])], axis=2)
+    b_idx = jnp.arange(B)
+    kc = kc.at[b_idx, :, lengths].set(k_new)
+    vc = vc.at[b_idx, :, lengths].set(v_new)
+
+    o = decode_attention_ref(q, kc, vc, lengths + 1)          # [B, H, D]
+    o = o.reshape(B, h)
+    attn_out = o.astype(jnp.float32) @ params["wo"].astype(jnp.float32)
+    x1 = (x.astype(jnp.float32) + attn_out).astype(x.dtype)
+
+    xn2 = rmsnorm_ref(x1, params["ln2"])
+    m = mlp_ref(xn2, params["w_gate"], params["w_up"], params["w_down"])
+    y = (x1.astype(jnp.float32) + m.astype(jnp.float32)).astype(x.dtype)
+    return y, k_new, v_new

@@ -1,0 +1,142 @@
+"""L2: the decomposed transformer decode step (paper §3.1).
+
+The model is split exactly along the paper's R/S boundary:
+
+* ``s_part_pre``   — RMSNorm + fused QKV projection (S-Part, before R).
+* ``s_part_post``  — output projection + residual + RMSNorm + gated MLP
+                     + residual (S-Part, after R).
+* *R-Part* (decode attention over the KV-cache) is NOT in the exported
+  S-Part graphs: at serving time the Rust R-workers compute it near the
+  cache (rust/src/rworker/). The Pallas kernel version here exists for
+  the fused single-device baseline and as a cross-check.
+* ``fused_decode_step`` — the vanilla GPU-only baseline: the whole block
+  including Pallas attention, in one graph.
+* ``embed`` / ``logits_head`` — token embedding and final projection.
+
+All functions take weights as explicit arguments so a single exported HLO
+serves every layer (weights are runtime inputs fed by Rust).
+Everything accumulates in fp32 and stores activations in the model dtype,
+mirroring both the GPU baseline and the Rust mixed-precision R-worker.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.decode_attention import decode_attention
+from .kernels.mlp import mlp as pallas_mlp
+
+
+# ---------------------------------------------------------------------------
+# S-Part graphs (exported to HLO, executed by the Rust S-worker)
+# ---------------------------------------------------------------------------
+
+def s_part_pre(x, ln1, wqkv):
+    """S-Part before attention: RMSNorm + fused QKV projection.
+
+    x: [B, h]; ln1: [h]; wqkv: [h, 3h] (Wq | Wk | Wv fused column-wise).
+    Returns qkv: [B, 3h] in x's dtype — the activation tensor that is
+    shipped to the R-workers (Table 3's "intermediate vectors").
+    """
+    xn = ref.rmsnorm_ref(x, ln1)
+    qkv = xn.astype(jnp.float32) @ wqkv.astype(jnp.float32)
+    return (qkv.astype(x.dtype),)
+
+
+def s_part_post(x, o, wo, ln2, w_gate, w_up, w_down):
+    """S-Part after attention: O-projection + residuals + gated MLP.
+
+    x: [B, h] block input (residual stream); o: [B, h] attention output
+    gathered from the R-workers. Returns y: [B, h].
+    """
+    attn = o.astype(jnp.float32) @ wo.astype(jnp.float32)
+    x1 = (x.astype(jnp.float32) + attn).astype(x.dtype)
+    xn2 = ref.rmsnorm_ref(x1, ln2)
+    m = ref.mlp_ref(xn2, w_gate, w_up, w_down)
+    y = (x1.astype(jnp.float32) + m.astype(jnp.float32)).astype(x.dtype)
+    return (y,)
+
+
+def embed(tokens, w_emb):
+    """tokens: [B] int32 → x: [B, h] (model dtype of w_emb)."""
+    return (jnp.take(w_emb, tokens, axis=0),)
+
+
+def logits_head(x, ln_f, w_emb):
+    """Final RMSNorm + tied-embedding projection → logits [B, vocab] f32."""
+    xn = ref.rmsnorm_ref(x, ln_f)
+    logits = xn.astype(jnp.float32) @ w_emb.astype(jnp.float32).T
+    return (logits,)
+
+
+# ---------------------------------------------------------------------------
+# Fused single-device step (vanilla baseline; uses the L1 Pallas kernels)
+# ---------------------------------------------------------------------------
+
+def fused_decode_step(x, k_cache, v_cache, lengths, ln1, wqkv, wo, ln2,
+                      w_gate, w_up, w_down, *, n_heads: int,
+                      use_pallas_mlp: bool = True):
+    """One whole transformer-block decode step on one device.
+
+    k_cache/v_cache: [B, H, S, D] with this token's K/V NOT yet present;
+    lengths: [B] count of preceding tokens (< S). Returns
+    (y [B,h], k_new [B,H,D], v_new [B,H,D]) — the caller appends K/V.
+    """
+    B, h = x.shape
+    H = n_heads
+    D = h // H
+
+    (qkv,) = s_part_pre(x, ln1, wqkv)
+    q, k_new, v_new = jnp.split(qkv, 3, axis=1)
+    q = q.reshape(B, H, D)
+    k_new = k_new.reshape(B, H, D)
+    v_new = v_new.reshape(B, H, D)
+
+    # Scatter this token's K/V into the padded cache at its position.
+    b_idx = jnp.arange(B)
+    kc = k_cache.at[b_idx, :, lengths].set(k_new)
+    vc = v_cache.at[b_idx, :, lengths].set(v_new)
+
+    o = decode_attention(q, kc, vc, lengths + 1)            # L1 kernel
+    o = o.reshape(B, h)
+
+    attn = o.astype(jnp.float32) @ wo.astype(jnp.float32)
+    x1 = (x.astype(jnp.float32) + attn).astype(x.dtype)
+    xn2 = ref.rmsnorm_ref(x1, ln2)
+    if use_pallas_mlp:
+        m = pallas_mlp(xn2, w_gate, w_up, w_down)           # L1 kernel
+    else:
+        m = ref.mlp_ref(xn2, w_gate, w_up, w_down)
+    y = (x1.astype(jnp.float32) + m.astype(jnp.float32)).astype(x.dtype)
+    return y, k_new, v_new
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization (synthetic weights; DESIGN.md §2 substitution)
+# ---------------------------------------------------------------------------
+
+def init_block_params(key, cfg, dtype=jnp.float32):
+    """Random block weights at the true dims, scaled for stable decode."""
+    h, f = cfg.hidden, cfg.ffn
+    ks = jax.random.split(key, 7)
+    s = 1.0 / (h ** 0.5)
+    sf = 1.0 / (f ** 0.5)
+    return {
+        "n_heads": cfg.n_heads,
+        "ln1": jnp.ones((h,), dtype),
+        "wqkv": (jax.random.normal(ks[0], (h, 3 * h)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[1], (h, h)) * s).astype(dtype),
+        "ln2": jnp.ones((h,), dtype),
+        "w_gate": (jax.random.normal(ks[2], (h, f)) * s).astype(dtype),
+        "w_up": (jax.random.normal(ks[3], (h, f)) * s).astype(dtype),
+        "w_down": (jax.random.normal(ks[4], (f, h)) * sf).astype(dtype),
+    }
+
+
+def split_qkv(params):
+    """Unfuse wqkv into the ref.py layout (wq, wk, wv)."""
+    wq, wk, wv = jnp.split(params["wqkv"], 3, axis=1)
+    out = dict(params)
+    out.pop("wqkv")
+    out.update(wq=wq, wk=wk, wv=wv)
+    return out

@@ -1,0 +1,135 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+Hypothesis sweeps shapes, dtypes and ragged lengths; fixed cases pin the
+regressions we care about (block boundaries, length==1, full cache).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.decode_attention import decode_attention
+from compile.kernels.mlp import mlp as pallas_mlp
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype != jnp.float32 \
+        else dict(rtol=1e-5, atol=1e-5)
+
+
+def make_attn_case(seed, B, H, S, D, dtype):
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(k, 4)
+    q = (jax.random.normal(k1, (B, H, D)) * 0.5).astype(dtype)
+    kc = (jax.random.normal(k2, (B, H, S, D)) * 0.5).astype(dtype)
+    vc = (jax.random.normal(k3, (B, H, S, D)) * 0.5).astype(dtype)
+    lengths = jax.random.randint(k4, (B,), 1, S + 1).astype(jnp.int32)
+    return q, kc, vc, lengths
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float16])
+@pytest.mark.parametrize("B,H,S,D,block_s", [
+    (1, 1, 8, 4, 8),      # single block
+    (2, 2, 32, 8, 8),     # multiple blocks
+    (3, 4, 64, 16, 16),   # non-power-of-two batch
+    (1, 1, 16, 4, 4),     # many tiny blocks
+])
+def test_decode_attention_fixed(B, H, S, D, block_s, dtype):
+    q, kc, vc, lengths = make_attn_case(0, B, H, S, D, dtype)
+    got = decode_attention(q, kc, vc, lengths, block_s=block_s)
+    want = ref.decode_attention_ref(q, kc, vc, lengths)
+    np.testing.assert_allclose(got, want, **tol(dtype))
+
+
+def test_decode_attention_length_one():
+    """With one valid position, output must equal that position's V."""
+    q, kc, vc, _ = make_attn_case(1, 2, 2, 16, 8, jnp.float32)
+    lengths = jnp.ones((2,), jnp.int32)
+    got = decode_attention(q, kc, vc, lengths, block_s=8)
+    np.testing.assert_allclose(got, vc[:, :, 0, :], rtol=1e-5, atol=1e-6)
+
+
+def test_decode_attention_full_cache():
+    q, kc, vc, _ = make_attn_case(2, 2, 3, 32, 8, jnp.float32)
+    lengths = jnp.full((2,), 32, jnp.int32)
+    got = decode_attention(q, kc, vc, lengths, block_s=16)
+    want = ref.decode_attention_ref(q, kc, vc, lengths)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_decode_attention_ignores_padding_garbage():
+    """Masked cache positions must not influence the result at all."""
+    q, kc, vc, lengths = make_attn_case(3, 2, 2, 32, 8, jnp.float32)
+    got1 = decode_attention(q, kc, vc, lengths, block_s=8)
+    mask = (jnp.arange(32)[None, :] < lengths[:, None])[:, None, :, None]
+    kc2 = jnp.where(mask, kc, 1e4)   # garbage in padding
+    vc2 = jnp.where(mask, vc, -1e4)
+    got2 = decode_attention(q, kc2, vc2, lengths, block_s=8)
+    np.testing.assert_allclose(got1, got2, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    B=st.integers(1, 4),
+    H=st.integers(1, 4),
+    s_blocks=st.integers(1, 4),
+    block_s=st.sampled_from([4, 8, 16]),
+    D=st.sampled_from([4, 8, 16, 32]),
+    dtype=st.sampled_from([jnp.float32, jnp.float16]),
+)
+def test_decode_attention_hypothesis(seed, B, H, s_blocks, block_s, D, dtype):
+    S = s_blocks * block_s
+    q, kc, vc, lengths = make_attn_case(seed, B, H, S, D, dtype)
+    got = decode_attention(q, kc, vc, lengths, block_s=block_s)
+    want = ref.decode_attention_ref(q, kc, vc, lengths)
+    np.testing.assert_allclose(got, want, **tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# MLP kernel
+# ---------------------------------------------------------------------------
+
+def make_mlp_case(seed, B, h, f, dtype):
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(k, 4)
+    x = (jax.random.normal(k1, (B, h)) * 0.5).astype(dtype)
+    wg = (jax.random.normal(k2, (h, f)) / (h ** 0.5)).astype(dtype)
+    wu = (jax.random.normal(k3, (h, f)) / (h ** 0.5)).astype(dtype)
+    wd = (jax.random.normal(k4, (f, h)) / (f ** 0.5)).astype(dtype)
+    return x, wg, wu, wd
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float16])
+@pytest.mark.parametrize("B,h,f,bb,bf", [
+    (1, 16, 48, 8, 16),    # B smaller than block
+    (8, 32, 96, 4, 32),
+    (5, 16, 40, 2, 16),    # ragged B and f
+    (3, 8, 20, 8, 64),     # blocks larger than dims
+])
+def test_mlp_fixed(B, h, f, bb, bf, dtype):
+    x, wg, wu, wd = make_mlp_case(0, B, h, f, dtype)
+    got = pallas_mlp(x, wg, wu, wd, block_b=bb, block_f=bf)
+    want = ref.mlp_ref(x, wg, wu, wd)
+    np.testing.assert_allclose(got, want, **tol(dtype))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    B=st.integers(1, 9),
+    h=st.sampled_from([8, 16, 32]),
+    f=st.sampled_from([12, 24, 40, 64]),
+    bb=st.sampled_from([2, 4, 8]),
+    bf=st.sampled_from([8, 16, 64]),
+)
+def test_mlp_hypothesis(seed, B, h, f, bb, bf):
+    x, wg, wu, wd = make_mlp_case(seed, B, h, f, jnp.float32)
+    got = pallas_mlp(x, wg, wu, wd, block_b=bb, block_f=bf)
+    want = ref.mlp_ref(x, wg, wu, wd)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)

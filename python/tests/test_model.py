@@ -1,0 +1,129 @@
+"""L2 correctness: the R/S decomposition must be exact.
+
+The paper's whole system rests on s_pre → R-Part → s_post being the same
+function as the undecomposed block. These tests pin that equality, plus
+the fused (Pallas) baseline path and shape contracts for every exported
+graph.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.configs import TINY, CONFIGS
+from compile.kernels import ref
+
+CFG = TINY
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_block_params(jax.random.PRNGKey(0), CFG, jnp.float32)
+
+
+def make_state(seed, B, S, dtype=jnp.float32):
+    h, H, D = CFG.hidden, CFG.n_heads, CFG.head_dim
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(k, 4)
+    x = (jax.random.normal(k1, (B, h)) * 0.5).astype(dtype)
+    kc = (jax.random.normal(k2, (B, H, S, D)) * 0.5).astype(dtype)
+    vc = (jax.random.normal(k3, (B, H, S, D)) * 0.5).astype(dtype)
+    lengths = jax.random.randint(k4, (B,), 0, S - 1).astype(jnp.int32)
+    return x, kc, vc, lengths
+
+
+@pytest.mark.parametrize("B,S", [(1, 16), (4, 32), (7, 64)])
+def test_decomposition_equals_monolithic_block(params, B, S):
+    """s_pre ∘ attention ∘ s_post == block_decode_ref, exactly the R/S cut."""
+    x, kc, vc, lengths = make_state(1, B, S)
+    H, D = CFG.n_heads, CFG.head_dim
+
+    # Decomposed path (what FastDecode actually executes).
+    (qkv,) = model.s_part_pre(x, params["ln1"], params["wqkv"])
+    q, k_new, v_new = jnp.split(qkv, 3, axis=1)
+    q = q.reshape(B, H, D)
+    k_new, v_new = k_new.reshape(B, H, D), v_new.reshape(B, H, D)
+    b_idx = jnp.arange(B)
+    kc2 = kc.at[b_idx, :, lengths].set(k_new)   # R-worker append
+    vc2 = vc.at[b_idx, :, lengths].set(v_new)
+    o = ref.decode_attention_ref(q, kc2, vc2, lengths + 1).reshape(B, -1)
+    (y,) = model.s_part_post(x, o, params["wo"], params["ln2"],
+                             params["w_gate"], params["w_up"],
+                             params["w_down"])
+
+    # Monolithic oracle.
+    y_ref, k_ref, v_ref = ref.block_decode_ref(
+        x, kc, vc, lengths, model.split_qkv(params))
+
+    np.testing.assert_allclose(y, y_ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(k_new, k_ref, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(v_new, v_ref, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("B,S", [(2, 16), (8, 32)])
+@pytest.mark.parametrize("use_pallas_mlp", [True, False])
+def test_fused_step_matches_oracle(params, B, S, use_pallas_mlp):
+    x, kc, vc, lengths = make_state(2, B, S)
+    y, k_new, v_new = model.fused_decode_step(
+        x, kc, vc, lengths, params["ln1"], params["wqkv"], params["wo"],
+        params["ln2"], params["w_gate"], params["w_up"], params["w_down"],
+        n_heads=CFG.n_heads, use_pallas_mlp=use_pallas_mlp)
+    y_ref, k_ref, v_ref = ref.block_decode_ref(
+        x, kc, vc, lengths, model.split_qkv(params))
+    np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(k_new, k_ref, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(v_new, v_ref, rtol=1e-6, atol=1e-6)
+
+
+def test_multi_step_generation_consistency(params):
+    """Decode 5 tokens with the fused step; lengths/caches stay coherent."""
+    B, S = 3, 16
+    x, kc, vc, _ = make_state(3, B, S)
+    lengths = jnp.zeros((B,), jnp.int32)
+    kc = jnp.zeros_like(kc)
+    vc = jnp.zeros_like(vc)
+    b_idx = jnp.arange(B)
+    for step in range(5):
+        y, k_new, v_new = model.fused_decode_step(
+            x, kc, vc, lengths, params["ln1"], params["wqkv"], params["wo"],
+            params["ln2"], params["w_gate"], params["w_up"],
+            params["w_down"], n_heads=CFG.n_heads, use_pallas_mlp=False)
+        kc = kc.at[b_idx, :, lengths].set(k_new)
+        vc = vc.at[b_idx, :, lengths].set(v_new)
+        lengths = lengths + 1
+        assert jnp.all(jnp.isfinite(y)), f"non-finite activations at {step}"
+        x = y
+    assert int(lengths[0]) == 5
+
+
+def test_embed_and_logits_shapes(params):
+    B = 4
+    w_emb = jax.random.normal(jax.random.PRNGKey(9),
+                              (CFG.vocab, CFG.hidden)).astype(jnp.float32)
+    tokens = jnp.array([0, 1, 2, CFG.vocab - 1], jnp.int32)
+    (x,) = model.embed(tokens, w_emb)
+    assert x.shape == (B, CFG.hidden)
+    np.testing.assert_allclose(x[0], w_emb[0])
+    (logits,) = model.logits_head(x, jnp.ones((CFG.hidden,)), w_emb)
+    assert logits.shape == (B, CFG.vocab)
+    assert logits.dtype == jnp.float32
+
+
+def test_greedy_next_token_is_deterministic(params):
+    w_emb = jax.random.normal(jax.random.PRNGKey(10),
+                              (CFG.vocab, CFG.hidden)).astype(jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(11), (2, CFG.hidden))
+    (l1,) = model.logits_head(x, jnp.ones((CFG.hidden,)), w_emb)
+    (l2,) = model.logits_head(x, jnp.ones((CFG.hidden,)), w_emb)
+    assert jnp.array_equal(jnp.argmax(l1, -1), jnp.argmax(l2, -1))
+
+
+def test_configs_sane():
+    for cfg in CONFIGS.values():
+        assert cfg.hidden % cfg.n_heads == 0
+        assert cfg.kv_bytes_per_token() == 4 * cfg.hidden * cfg.n_layers
+    assert CONFIGS["llama7b"].kv_bytes_per_token() == 4 * 4096 * 32

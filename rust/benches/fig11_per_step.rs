@@ -1,0 +1,162 @@
+//! Figures 8, 11, 12 and 15 — the per-step latency family:
+//!   default  : Fig 11 (7b & 13b): vanilla vs ours without SLS vs ours+SLS
+//!   --fig8   : latency vs layer count (opt-175b)
+//!   --fig12  : Fig 11 with reduced sequence length 768 (7b)
+//!   --fig15  : per-op breakdown with synchronous communication (13b)
+//!
+//! Run: `cargo bench --bench fig11_per_step [-- --fig8|--fig12|--fig15]`
+
+use fastdecode::baselines::{vanilla, BaselineConfig};
+use fastdecode::bench::{record_result, Table};
+use fastdecode::coordinator::sim::steady_throughput;
+use fastdecode::coordinator::{simulate, SimConfig};
+use fastdecode::model::{ModelSpec, LLAMA_13B, LLAMA_7B, OPT_175B};
+use fastdecode::perfmodel::{CpuModel, GpuModel, A10, EPYC_7452};
+use fastdecode::util::json::Json;
+
+fn base(spec: ModelSpec, batch: usize, seq: usize, sockets: usize) -> SimConfig {
+    SimConfig::new(
+        spec,
+        GpuModel::new(A10),
+        CpuModel::from_device(EPYC_7452),
+        sockets,
+        batch,
+        seq,
+    )
+}
+
+fn fig11(spec: ModelSpec, seq: usize) {
+    let batch = 1024;
+    let sockets = 8;
+
+    let no_sls = simulate(&base(spec, batch, seq, sockets));
+    let mut cfg = base(spec, batch, seq, sockets);
+    cfg.sls_interval = Some((seq / 32).max(1));
+    cfg.steps = 3 * seq;
+    let sls = simulate(&cfg);
+    // vanilla runs its (much smaller) memory-capped batch
+    let van = vanilla(&BaselineConfig::a10(spec, 1024, seq));
+
+    let mut t = Table::new(
+        &format!(
+            "Fig 11: per-step latency, {} (B=1024, S={seq}, P={sockets})",
+            spec.name
+        ),
+        &["step", "vanilla ms (B_cap)", "ours no-SLS ms", "ours +SLS ms"],
+    );
+    for &s in [0usize, 64, 128, 256, 384, 512, 640, 768, seq - 1]
+        .iter()
+        .filter(|&&s| s < seq)
+    {
+        let sls_idx = seq + s; // steady-state window of the SLS run
+        t.row(&[
+            s.to_string(),
+            format!("{:.1}", van.records[s].latency_s * 1e3),
+            format!("{:.1}", no_sls.records[s].latency_s * 1e3),
+            format!("{:.1}", sls.records[sls_idx.min(sls.len() - 1)].latency_s * 1e3),
+        ]);
+    }
+    t.print();
+
+    let peak = no_sls.max_latency();
+    let steady = sls.steady_latency(seq);
+    let tp_gain = steady_throughput(&sls, seq) / no_sls.throughput() - 1.0;
+    println!(
+        "{}: steady/peak latency = {:.2} (paper 0.66–0.70); SLS throughput gain = {:+.1}% (paper +8–11%)",
+        spec.name,
+        steady / peak,
+        tp_gain * 100.0
+    );
+    record_result(
+        "fig11",
+        Json::obj()
+            .set("model", spec.name)
+            .set("seq", seq)
+            .set("steady_over_peak", steady / peak)
+            .set("sls_gain", tp_gain),
+    );
+}
+
+fn fig8() {
+    let mut t = Table::new(
+        "Fig 8: per-step latency vs number of layers (opt-175b, B=256)",
+        &["layers", "steady latency ms", "ratio vs 2 layers"],
+    );
+    let mut first = 0.0;
+    let mut js = Vec::new();
+    for layers in [2usize, 4, 8, 16, 32, 64, 96] {
+        let mut cfg = base(OPT_175B, 256, 256, 2);
+        cfg.layers = layers;
+        let lat = simulate(&cfg).steady_latency(10);
+        if layers == 2 {
+            first = lat;
+        }
+        t.row(&[
+            layers.to_string(),
+            format!("{:.1}", lat * 1e3),
+            format!("{:.2}", lat / first),
+        ]);
+        js.push(Json::obj().set("layers", layers).set("ms", lat * 1e3));
+    }
+    t.print();
+    println!("paper shape: latency strictly linear in layer count");
+    record_result("fig8", Json::Arr(js));
+}
+
+fn fig15() {
+    let spec = LLAMA_13B;
+    let mut cfg = base(spec, 1024, 1024, 2);
+    cfg.sync_comm = true;
+    cfg.steps = 256;
+    let trace = simulate(&cfg);
+    let r = &trace.records[200];
+    let mut t = Table::new(
+        "Fig 15: per-op breakdown of one step (13b, B=1024, 2 sockets, sync comm)",
+        &["component", "ms", "share %"],
+    );
+    let total = r.latency_s;
+    for (name, v) in [
+        ("S-Part compute", r.s_time),
+        ("R-Part compute (max socket)", r.r_time),
+        ("QKV/O transfer (PCIe+net)", r.comm_time),
+    ] {
+        t.row(&[
+            name.into(),
+            format!("{:.1}", v * 1e3),
+            format!("{:.0}", v / total * 100.0),
+        ]);
+    }
+    t.row(&["total step".into(), format!("{:.1}", total * 1e3), "100".into()]);
+    t.print();
+    println!(
+        "paper shape: comm ≈ 25% of the step when exposed; S-worker busy <50% \
+         (R-workers overloaded at 2 sockets)"
+    );
+    record_result(
+        "fig15",
+        Json::obj()
+            .set("s_ms", r.s_time * 1e3)
+            .set("r_ms", r.r_time * 1e3)
+            .set("comm_ms", r.comm_time * 1e3),
+    );
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let has = |f: &str| args.iter().any(|a| a == f);
+    if has("--fig8") {
+        fig8();
+    } else if has("--fig12") {
+        // Fig 12: shorter sequences rebalance S/R (paper: gain 8%→13%)
+        fig11(LLAMA_7B, 768);
+    } else if has("--fig15") {
+        fig15();
+    } else {
+        fig11(LLAMA_7B, 1024);
+        fig11(LLAMA_13B, 1024);
+        // run the variants too so `cargo bench` covers every figure
+        fig11(LLAMA_7B, 768); // Fig 12
+        fig8();
+        fig15();
+    }
+}

@@ -1,0 +1,86 @@
+//! Figure 1 + Figure 3: GPU throughput/utilization vs batch size, the
+//! KV-cache footprint wall, and FC-vs-attention throughput divergence.
+//!
+//! Run: `cargo bench --bench fig1_gpu_util`
+
+use fastdecode::bench::{record_result, Table};
+use fastdecode::model::{Precision, LLAMA_7B};
+use fastdecode::perfmodel::{GpuModel, A10};
+use fastdecode::util::json::Json;
+
+fn main() {
+    let spec = LLAMA_7B;
+    let gpu = GpuModel::new(A10);
+    let gpu_mem_gb = 24.0;
+
+    let mut t = Table::new(
+        "Fig 1: GPU throughput vs batch size vs KV footprint (7b, A10, S=512)",
+        &[
+            "batch",
+            "T(B) ms",
+            "tok/s",
+            "GPU util %",
+            "KV @S=512 (GB)",
+            "fits 24 GB?",
+        ],
+    );
+    let mut batches = vec![];
+    let mut tputs = vec![];
+    for b in [1usize, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096] {
+        let t_b = gpu.s_part_latency(&spec, b);
+        // full-model token rate of the S-Part alone (this figure's scope)
+        let tok_s = b as f64 / (t_b * spec.n_layers as f64);
+        let kv_gb = spec.kv_bytes_total(b, 512, Precision::F16) as f64 / 1e9;
+        t.row(&[
+            b.to_string(),
+            format!("{:.3}", t_b * 1e3),
+            format!("{:.0}", tok_s),
+            format!("{:.1}", gpu.utilization(&spec, b) * 100.0),
+            format!("{kv_gb:.2}"),
+            if kv_gb < gpu_mem_gb { "yes" } else { "NO" }.to_string(),
+        ]);
+        batches.push(b as f64);
+        tputs.push(tok_s);
+    }
+    t.print();
+    let idx = |b: f64| batches.iter().position(|&x| x == b).unwrap();
+    println!(
+        "shape check: tok/s(1024)/tok/s(128) = {:.2} (paper: ~2x); \
+         KV wall (24 GB) crossed at B={}",
+        tputs[idx(1024.0)] / tputs[idx(128.0)],
+        batches
+            .iter()
+            .find(|&&b| spec.kv_bytes_total(b as usize, 512, Precision::F16)
+                as f64
+                / 1e9
+                > gpu_mem_gb)
+            .copied()
+            .unwrap_or(0.0)
+    );
+
+    // Fig 3: FC (S-Part) throughput scales with B; attention (R-Part,
+    // batched GeMV) throughput does not.
+    let mut t3 = Table::new(
+        "Fig 3: FC vs attention throughput vs batch (7b, A10, ctx=512)",
+        &["batch", "S-Part TFLOP/s", "R-Part TFLOP/s (GPU)"],
+    );
+    for b in [1usize, 8, 64, 512, 1024, 4096] {
+        let s_flops = (spec.s_part_flops_per_token_layer() * b) as f64
+            / gpu.s_part_latency(&spec, b)
+            / 1e12;
+        let r_flops = (spec.r_part_flops_per_token_layer(512) * b) as f64
+            / gpu.r_part_latency(&spec, b, 512)
+            / 1e12;
+        t3.row(&[
+            b.to_string(),
+            format!("{s_flops:.2}"),
+            format!("{r_flops:.3}"),
+        ]);
+    }
+    t3.print();
+
+    record_result(
+        "fig1",
+        Json::obj().set("batch", batches).set("tok_per_s", tputs),
+    );
+}

@@ -1,0 +1,68 @@
+//! Figure 9: maximum token-generation throughput — FastDecode at
+//! ℬ ∈ {128, 512, 1024} vs vLLM / TensorRT-LLM / FastLLM / vanilla, on
+//! the 7b and 13b models (S = 1024).
+//!
+//! Run: `cargo bench --bench fig9_throughput`
+
+use fastdecode::baselines::{fastllm, tensorrt, vanilla, vllm, BaselineConfig};
+use fastdecode::bench::{record_result, Table};
+use fastdecode::coordinator::sim::steady_throughput;
+use fastdecode::coordinator::{simulate, SimConfig};
+use fastdecode::model::{ModelSpec, LLAMA_13B, LLAMA_7B};
+use fastdecode::perfmodel::{CpuModel, GpuModel, A10, EPYC_7452};
+use fastdecode::util::json::Json;
+
+fn ours(spec: ModelSpec, batch: usize, seq: usize, sockets: usize) -> f64 {
+    let mut cfg = SimConfig::new(
+        spec,
+        GpuModel::new(A10),
+        CpuModel::from_device(EPYC_7452),
+        sockets,
+        batch,
+        seq,
+    );
+    cfg.sls_interval = Some((seq / 32).max(1));
+    cfg.steps = 3 * seq;
+    steady_throughput(&simulate(&cfg), seq)
+}
+
+fn main() {
+    let seq = 1024;
+    let mut js = Vec::new();
+    for spec in [LLAMA_7B, LLAMA_13B] {
+        let mut t = Table::new(
+            &format!("Fig 9: throughput, {} (S=1024, A10 + 8 Epyc sockets)", spec.name),
+            &["system", "batch", "tok/s", "vs vLLM"],
+        );
+        let b_static = BaselineConfig::a10(spec, 1024, seq);
+        let tp_vllm = vllm(&b_static).throughput();
+        let b16 = BaselineConfig::a10(spec, 16, seq);
+        let mut add = |name: &str, batch: String, tp: f64| {
+            t.row(&[
+                name.into(),
+                batch,
+                format!("{tp:.0}"),
+                format!("{:.2}x", tp / tp_vllm),
+            ]);
+            js.push(
+                Json::obj()
+                    .set("model", spec.name)
+                    .set("system", name)
+                    .set("tok_per_s", tp),
+            );
+        };
+        for b in [128usize, 512, 1024] {
+            add("ours", format!("{b}"), ours(spec, b, seq, 8));
+        }
+        add("vLLM", "dyn".into(), tp_vllm);
+        add("TensorRT-LLM", "16".into(), tensorrt(&b16).throughput());
+        add("FastLLM", "16".into(), fastllm(&b16).throughput());
+        add("vanilla", "16".into(), vanilla(&b16).throughput());
+        t.print();
+    }
+    println!(
+        "paper shape: ours(1024) ≈ 4x vLLM ≈ 8.7x TRT on 7b; ours(1024) ≈ 4.12x vLLM on 13b;\n\
+         ours(128) ≈ 1.88–2.32x vLLM"
+    );
+    record_result("fig9", Json::Arr(js));
+}

@@ -1,0 +1,93 @@
+//! Hot-path micro-benchmarks of the R-worker attention loop — the
+//! §5.1/§5.2 performance story: effective KV streaming bandwidth per
+//! precision, and the quantization speedup. This is also the input to
+//! the EXPERIMENTS.md §Perf iteration log.
+//!
+//! Run: `cargo bench --bench rworker_hotpath`
+
+use fastdecode::bench::{record_result, Bench, Table};
+use fastdecode::kvcache::SeqKv;
+use fastdecode::model::Precision;
+use fastdecode::rworker::{attend_one, AttnScratch};
+use fastdecode::util::json::Json;
+use fastdecode::util::Rng;
+
+fn bench_precision(prec: Precision, ctx: usize) -> (f64, f64) {
+    let (heads, d) = (8usize, 128usize);
+    let mut kv = SeqKv::new(heads, d, ctx, prec);
+    let mut rng = Rng::new(3);
+    let k = rng.normal_vec(heads * d, 0.5);
+    let v = rng.normal_vec(heads * d, 0.5);
+    for _ in 0..ctx {
+        kv.append(&k, &v);
+    }
+    let q = rng.normal_vec(heads * d, 0.5);
+    let mut o = vec![0.0f32; heads * d];
+    let mut scratch = AttnScratch::new(d);
+    let stats = Bench::default().measure(|| {
+        attend_one(&kv, &q, &mut o, &mut scratch);
+        std::hint::black_box(&o);
+    });
+    // bytes actually streamed from the cache per call
+    let payload = 2.0 * (ctx * heads * d) as f64 * prec.bits() as f64 / 8.0;
+    (stats.mean_s, payload / stats.mean_s)
+}
+
+fn main() {
+    let ctx = 2048;
+    let mut t = Table::new(
+        "R-worker attention hot path (8 heads x d=128, ctx=2048, 1 thread)",
+        &["precision", "latency", "payload GB/s", "vs f16"],
+    );
+    let mut f16_lat = 0.0;
+    let mut js = Vec::new();
+    for prec in [
+        Precision::F32,
+        Precision::F16,
+        Precision::Int8,
+        Precision::Int4,
+    ] {
+        let (lat, bw) = bench_precision(prec, ctx);
+        if prec == Precision::F16 {
+            f16_lat = lat;
+        }
+        let speedup = if f16_lat > 0.0 { f16_lat / lat } else { 0.0 };
+        t.row(&[
+            prec.label().into(),
+            format!("{:.3} ms", lat * 1e3),
+            format!("{:.2}", bw / 1e9),
+            if prec == Precision::F16 || f16_lat == 0.0 {
+                "1.00x".into()
+            } else {
+                format!("{speedup:.2}x")
+            },
+        ]);
+        js.push(
+            Json::obj()
+                .set("precision", prec.label())
+                .set("latency_ms", lat * 1e3)
+                .set("payload_gbps", bw / 1e9),
+        );
+    }
+    t.print();
+    println!(
+        "§5.2 expectation: int8/int4 speed up roughly with the memory-size \
+         ratio once the loop is memory-bound (paper: 'likely to get 4x')"
+    );
+
+    // context-length linearity (the R in eq. 10 is per-token-of-context)
+    let mut t2 = Table::new(
+        "R cost linearity in context length (f16)",
+        &["ctx", "latency ms", "ns per ctx token"],
+    );
+    for ctx in [256usize, 512, 1024, 2048, 4096] {
+        let (lat, _) = bench_precision(Precision::F16, ctx);
+        t2.row(&[
+            ctx.to_string(),
+            format!("{:.3}", lat * 1e3),
+            format!("{:.1}", lat * 1e9 / ctx as f64),
+        ]);
+    }
+    t2.print();
+    record_result("rworker_hotpath", Json::Arr(js));
+}

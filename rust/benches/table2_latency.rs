@@ -1,0 +1,105 @@
+//! Table 2: latency of R-Part and S-Part on GPU vs CPU at batch 1 and
+//! 1024 (7b model) — the decomposition argument in numbers.
+//!
+//! GPU columns come from the calibrated A10 roofline; "CPU (Epyc×2)"
+//! columns from the Table-1-parameterized CpuModel; "CPU (this host)"
+//! R-Part rows are REAL measurements of the Rust mixed-precision
+//! attention hot loop on this machine, scaled to the batch.
+//!
+//! Run: `cargo bench --bench table2_latency`
+
+use fastdecode::bench::{fmt_time, record_result, Bench, Table};
+use fastdecode::kvcache::SeqKv;
+use fastdecode::model::{Precision, LLAMA_7B};
+use fastdecode::perfmodel::{CpuModel, GpuModel, A10, EPYC_7452};
+use fastdecode::rworker::{attend_one, AttnScratch};
+use fastdecode::util::json::Json;
+use fastdecode::util::Rng;
+
+/// Measure real R-Part time for ONE 7b-dims sequence at context `ctx`
+/// on one thread of this machine, per layer.
+fn measure_r_one_seq(ctx: usize) -> f64 {
+    let spec = LLAMA_7B;
+    let (h, d) = (spec.n_heads, spec.head_dim());
+    let mut kv = SeqKv::new(h, d, ctx, Precision::F16);
+    let mut rng = Rng::new(1);
+    let k = rng.normal_vec(h * d, 0.5);
+    let v = rng.normal_vec(h * d, 0.5);
+    for _ in 0..ctx {
+        kv.append(&k, &v);
+    }
+    let q = rng.normal_vec(h * d, 0.5);
+    let mut o = vec![0.0; h * d];
+    let mut scratch = AttnScratch::new(d);
+    let stats = Bench::quick().measure(|| {
+        attend_one(&kv, &q, &mut o, &mut scratch);
+    });
+    stats.mean_s
+}
+
+fn main() {
+    let spec = LLAMA_7B;
+    let gpu = GpuModel::new(A10);
+    // the paper's "two CPU nodes" = 2 Epyc sockets aggregated
+    let cpu = CpuModel::from_device(EPYC_7452);
+    let sockets = 2.0;
+    let ctx = 512; // mid-generation context, matching Table 2's setup
+
+    let r_real_1 = measure_r_one_seq(ctx);
+    // B=1024 across all host threads: perfectly parallel per-sequence
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4) as f64;
+    let r_real_1024 = r_real_1 * 1024.0 / threads;
+
+    let mut t = Table::new(
+        "Table 2: computation latency, 7b model, one transformer block (ctx=512)",
+        &["operation", "batch", "A10 (model)", "Epyc x2 (model)", "this host (measured)"],
+    );
+    for &(b, label) in &[(1usize, "1"), (1024, "1024")] {
+        let r_gpu = gpu.r_part_latency(&spec, b, ctx);
+        let r_cpu = cpu.r_part_latency(&spec, b * ctx, Precision::F16) / sockets;
+        let r_host = if b == 1 { r_real_1 } else { r_real_1024 };
+        t.row(&[
+            "R-Part (eq.2-3)".into(),
+            label.into(),
+            fmt_time(r_gpu),
+            fmt_time(r_cpu),
+            fmt_time(r_host),
+        ]);
+    }
+    for &(b, label) in &[(1usize, "1"), (1024, "1024")] {
+        let s_gpu = gpu.s_part_latency(&spec, b);
+        let s_cpu = GpuModel::s_part_latency_on(EPYC_7452, &spec, b) / sockets;
+        t.row(&[
+            "S-Part (~16x eq.4)".into(),
+            label.into(),
+            fmt_time(s_gpu),
+            fmt_time(s_cpu),
+            "-".into(),
+        ]);
+    }
+    t.print();
+
+    let r_gpu_1024 = gpu.r_part_latency(&spec, 1024, ctx);
+    let r_cpu_1024 = cpu.r_part_latency(&spec, 1024 * ctx, Precision::F16) / sockets;
+    let s_gpu_1024 = gpu.s_part_latency(&spec, 1024);
+    let s_cpu_1024 = GpuModel::s_part_latency_on(EPYC_7452, &spec, 1024) / sockets;
+    println!(
+        "shape checks (paper values in parens):\n  \
+         R-Part B=1024 CPU/GPU = {:.2} (≈1: 8.12/8.32)\n  \
+         S-Part B=1024 CPU/GPU = {:.0}x (86x: 611/7.08)",
+        r_cpu_1024 / r_gpu_1024,
+        s_cpu_1024 / s_gpu_1024,
+    );
+
+    record_result(
+        "table2",
+        Json::obj()
+            .set("r_gpu_1024_ms", r_gpu_1024 * 1e3)
+            .set("r_cpu_1024_ms", r_cpu_1024 * 1e3)
+            .set("r_host_1024_ms", r_real_1024 * 1e3)
+            .set("s_gpu_1024_ms", s_gpu_1024 * 1e3)
+            .set("s_cpu_1024_ms", s_cpu_1024 * 1e3),
+    );
+}

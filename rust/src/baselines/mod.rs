@@ -1,0 +1,282 @@
+//! Baseline serving systems (paper §6.1), as calibrated simulators
+//! sharing the same GpuModel/LinkModel substrate as the FastDecode sim,
+//! so Figs 9–11 compare like against like (DESIGN.md §2).
+//!
+//! * `vanilla`  — the reference PyTorch implementation: whole model on
+//!   the GPU, KV in GPU memory, batch capped by what fits at full length.
+//! * `tensorrt` — same structure with a faster-kernel GpuModel (the
+//!   paper: best per-token latency, small static batch).
+//! * `fastllm`  — C++ serving stack, kernels between vanilla and TRT.
+//! * `vllm`     — paged KV + host swapping: starts at a huge batch while
+//!   sequences are short, loses batch as KV grows, pays PCIe swap stalls
+//!   (the paper's "few steps that swap are significantly slow").
+
+use crate::metrics::{StepRecord, StepTrace};
+use crate::model::{ModelSpec, Precision};
+use crate::perfmodel::{DeviceSpec, GpuModel};
+use crate::transport::{LinkModel, PCIE4_X16};
+
+/// Common testbed parameters for all GPU-only baselines.
+#[derive(Clone, Copy, Debug)]
+pub struct BaselineConfig {
+    pub spec: ModelSpec,
+    pub device: DeviceSpec,
+    /// GPU memory, bytes (A10: 24 GB).
+    pub gpu_mem: usize,
+    /// Host memory for vLLM swap space, bytes.
+    pub host_mem: usize,
+    /// Requested batch (systems cap it by memory).
+    pub batch: usize,
+    pub seq_len: usize,
+    pub pcie: LinkModel,
+}
+
+impl BaselineConfig {
+    pub fn a10(spec: ModelSpec, batch: usize, seq_len: usize) -> BaselineConfig {
+        BaselineConfig {
+            spec,
+            device: crate::perfmodel::A10,
+            gpu_mem: 24 << 30,
+            host_mem: 256 << 30,
+            batch,
+            seq_len,
+            pcie: PCIE4_X16,
+        }
+    }
+
+    /// fp16 bytes of ALL model weights (blocks + embedding).
+    pub fn total_weight_bytes(&self) -> usize {
+        self.spec.block_weight_bytes() * self.spec.n_layers
+            + self.spec.vocab * self.spec.hidden * 2
+    }
+
+    /// GPU memory left for KV after weights + activation scratch.
+    ///
+    /// Models whose full fp16 weights don't fit the GPU (13b/175b on an
+    /// A10) are evaluated the way the paper does it (§6.1): with a
+    /// reduced layer count and linear extrapolation — which leaves such
+    /// runs the same *fraction* of GPU memory for KV as a fitting model.
+    /// We grant non-fitting models a floor of 40 % of GPU memory (the
+    /// fraction the 7b model leaves on a 24 GB A10), matching the
+    /// reduced-layer evaluation's memory conditions.
+    pub fn kv_budget(&self) -> usize {
+        let scratch = 1 << 30; // 1 GB activations/workspace
+        let fit = self
+            .gpu_mem
+            .saturating_sub(self.total_weight_bytes())
+            .saturating_sub(scratch);
+        fit.max(self.gpu_mem * 40 / 100)
+    }
+
+    /// Max batch whose KV fits on-GPU at context `ctx`.
+    pub fn gpu_batch_cap(&self, ctx: usize) -> usize {
+        let per_seq = self.spec.kv_bytes_per_token(Precision::F16) * ctx.max(1);
+        (self.kv_budget() / per_seq).max(1)
+    }
+}
+
+/// Kernel-quality tiers for the GPU-only systems.
+fn tuned_gpu(device: DeviceSpec, tier: &str) -> GpuModel {
+    let mut g = GpuModel::new(device);
+    match tier {
+        // TensorRT-LLM: best kernels, lowest launch overhead
+        "tensorrt" => {
+            g.flops_eff = 0.85;
+            g.bw_eff = 0.92;
+            g.launch_s = 8e-6;
+        }
+        // vanilla PyTorch: eager-mode kernels + launch gaps
+        "vanilla" => {
+            g.flops_eff = 0.45;
+            g.bw_eff = 0.60;
+            g.launch_s = 60e-6;
+        }
+        // fastllm: hand-written C++/CUDA, between the two
+        "fastllm" => {
+            g.flops_eff = 0.55;
+            g.bw_eff = 0.70;
+            g.launch_s = 30e-6;
+        }
+        // vLLM: paged-attention kernels near TRT quality
+        "vllm" => {
+            g.flops_eff = 0.75;
+            g.bw_eff = 0.85;
+            g.launch_s = 15e-6;
+        }
+        _ => panic!("unknown tier {tier}"),
+    }
+    g
+}
+
+/// A GPU-only static-batch run (vanilla / tensorrt / fastllm): batch is
+/// capped so the FULL-length KV fits; every step runs S+R on the GPU.
+pub fn gpu_only(cfg: &BaselineConfig, tier: &str) -> StepTrace {
+    let gpu = tuned_gpu(cfg.device, tier);
+    let b = cfg.batch.min(cfg.gpu_batch_cap(cfg.seq_len));
+    let layers = cfg.spec.n_layers as f64;
+    let mut trace = StepTrace::default();
+    for step in 0..cfg.seq_len {
+        let ctx = step + 1;
+        let s = layers * gpu.s_part_latency(&cfg.spec, b);
+        let r = layers * gpu.r_part_latency(&cfg.spec, b, ctx);
+        trace.push(StepRecord {
+            step,
+            latency_s: s + r,
+            s_time: s,
+            r_time: r,
+            comm_time: 0.0,
+            tokens: b,
+            total_ctx: b * ctx,
+        });
+    }
+    trace
+}
+
+pub fn vanilla(cfg: &BaselineConfig) -> StepTrace {
+    gpu_only(cfg, "vanilla")
+}
+
+pub fn tensorrt(cfg: &BaselineConfig) -> StepTrace {
+    gpu_only(cfg, "tensorrt")
+}
+
+pub fn fastllm(cfg: &BaselineConfig) -> StepTrace {
+    gpu_only(cfg, "fastllm")
+}
+
+/// vLLM-like paged KV + host swap (§2.2 and the paper's §6.2-6.3
+/// observations). Per step: the GPU processes the resident group at the
+/// paged-kernel rate; when resident capacity shrinks below the live
+/// batch, groups rotate through host memory, paying KV transfer over
+/// PCIe every rotation — rare but very slow steps (the P99 spikes of
+/// Fig 10).
+pub fn vllm(cfg: &BaselineConfig) -> StepTrace {
+    let gpu = tuned_gpu(cfg.device, "vllm");
+    let layers = cfg.spec.n_layers as f64;
+    let kv_per_tok = cfg.spec.kv_bytes_per_token(Precision::F16);
+    let mut trace = StepTrace::default();
+    // progress per sequence group; all must reach seq_len
+    let b_total = cfg.batch;
+    let mut done_tokens = vec![0usize; b_total.max(1)];
+    let mut step = 0usize;
+    loop {
+        // unfinished sequences, least-advanced first (vLLM-style FCFS
+        // over preempted sequences)
+        let mut order: Vec<usize> = (0..b_total)
+            .filter(|&i| done_tokens[i] < cfg.seq_len)
+            .collect();
+        if order.is_empty() {
+            break;
+        }
+        order.sort_by_key(|&i| done_tokens[i]);
+        // context of the laggiest live sequence defines the resident cap
+        let ctx = done_tokens[order[0]] + 1;
+        let cap = cfg.gpu_batch_cap(ctx).min(order.len());
+        let group = &order[..cap];
+        let s = layers * gpu.s_part_latency(&cfg.spec, cap);
+        let r = layers * gpu.r_part_latency(&cfg.spec, cap, ctx);
+        // swap cost: when not everything is resident, the resident group
+        // rotates every `residency` steps, re-staging its KV over PCIe —
+        // rare but very slow steps (the Fig 10 P99 spikes).
+        let mut swap = 0.0;
+        if cap < order.len() {
+            let residency = 64; // steps a group stays resident
+            if step % residency == 0 {
+                let group_kv = cap * kv_per_tok * ctx;
+                swap = cfg.pcie.transfer_time(2 * group_kv); // out + in
+            }
+        }
+        for &i in group {
+            done_tokens[i] += 1;
+        }
+        trace.push(StepRecord {
+            step,
+            latency_s: s + r + swap,
+            s_time: s,
+            r_time: r,
+            comm_time: swap,
+            tokens: cap,
+            total_ctx: cap * ctx,
+        });
+        step += 1;
+        if step > 4 * cfg.seq_len * b_total {
+            break; // safety rail
+        }
+    }
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{LLAMA_13B, LLAMA_7B};
+
+    #[test]
+    fn weight_bytes_7b_about_13gb() {
+        let cfg = BaselineConfig::a10(LLAMA_7B, 16, 1024);
+        let gb = cfg.total_weight_bytes() as f64 / (1u64 << 30) as f64;
+        assert!((11.0..=14.5).contains(&gb), "{gb} GB");
+    }
+
+    /// §6.2: GPU-only systems "barely more than 16" sequences at S=1024.
+    #[test]
+    fn gpu_batch_cap_matches_paper() {
+        let cfg = BaselineConfig::a10(LLAMA_7B, 1024, 1024);
+        let cap = cfg.gpu_batch_cap(1024);
+        assert!((8..=32).contains(&cap), "cap {cap}");
+        // 13b doesn't fit an A10 at full weights: it gets the reduced-
+        // layer floor (40 % of 24 GB), and its fatter KV rows still give
+        // a smaller cap than the 7b model
+        let cfg13 = BaselineConfig::a10(LLAMA_13B, 1024, 1024);
+        let cap13 = cfg13.gpu_batch_cap(1024);
+        assert!(cap13 < cap, "cap13 {cap13} !< cap7 {cap}");
+    }
+
+    /// Fig 9/10 ordering: TRT beats fastllm beats vanilla on latency.
+    #[test]
+    fn kernel_tier_ordering() {
+        let cfg = BaselineConfig::a10(LLAMA_7B, 16, 256);
+        let lat = |t: &StepTrace| t.steady_latency(8);
+        let v = lat(&vanilla(&cfg));
+        let f = lat(&fastllm(&cfg));
+        let t = lat(&tensorrt(&cfg));
+        assert!(t < f && f < v, "trt {t} fastllm {f} vanilla {v}");
+    }
+
+    /// vLLM starts with a big batch (short KV), degrades as KV grows
+    /// (the paper's §6.2 observation).
+    #[test]
+    fn vllm_batch_decays() {
+        let cfg = BaselineConfig::a10(LLAMA_7B, 1024, 512);
+        let trace = vllm(&cfg);
+        let early = trace.records[2].tokens;
+        let late = trace.records[trace.len() - 1].tokens;
+        assert!(early > 4 * late, "early {early} late {late}");
+        // everyone finished
+        let total: usize = trace.records.iter().map(|r| r.tokens).sum();
+        assert_eq!(total, 1024 * 512);
+    }
+
+    /// vLLM's swap steps create a long tail: max ≫ median latency.
+    #[test]
+    fn vllm_has_swap_spikes() {
+        let cfg = BaselineConfig::a10(LLAMA_7B, 256, 512);
+        let trace = vllm(&cfg);
+        let mut lats: Vec<f64> =
+            trace.records.iter().map(|r| r.latency_s).collect();
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p50 = lats[lats.len() / 2];
+        let max = lats[lats.len() - 1];
+        assert!(max > 3.0 * p50, "max {max} p50 {p50}");
+    }
+
+    /// vLLM still beats the static GPU-only systems on throughput
+    /// (it IS the strongest baseline in Fig 9).
+    #[test]
+    fn vllm_beats_static_baselines() {
+        let cfg = BaselineConfig::a10(LLAMA_7B, 1024, 512);
+        let tp_vllm = vllm(&cfg).throughput();
+        let tp_trt = tensorrt(&cfg).throughput();
+        assert!(tp_vllm > tp_trt, "vllm {tp_vllm} trt {tp_trt}");
+    }
+}

@@ -1,0 +1,214 @@
+//! In-tree micro-benchmark harness (offline stand-in for criterion).
+//!
+//! `cargo bench` targets are `harness = false` binaries that call
+//! `Bench::measure` and print paper-style tables via `Table`. Results
+//! are also appended as JSON lines to `target/bench_results.jsonl` so
+//! EXPERIMENTS.md numbers are reproducible.
+
+use std::io::Write as _;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Timing statistics of one measured closure.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<f64>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let idx = |q: f64| ((q * (n - 1) as f64).round() as usize).min(n - 1);
+        Stats {
+            iters: n,
+            mean_s: samples.iter().sum::<f64>() / n as f64,
+            min_s: samples[0],
+            max_s: samples[n - 1],
+            p50_s: samples[idx(0.5)],
+            p99_s: samples[idx(0.99)],
+        }
+    }
+}
+
+/// Benchmark runner with warmup and a time budget.
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Stop sampling after this much measuring time.
+    pub budget_s: f64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup_iters: 2,
+            min_iters: 5,
+            max_iters: 200,
+            budget_s: 2.0,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Bench {
+        Bench {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 20,
+            budget_s: 0.5,
+        }
+    }
+
+    /// Measure `f`, returning stats over its per-call wall time.
+    pub fn measure<F: FnMut()>(&self, mut f: F) -> Stats {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters
+            || (samples.len() < self.max_iters
+                && start.elapsed().as_secs_f64() < self.budget_s)
+        {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        Stats::from_samples(samples)
+    }
+}
+
+/// Fixed-width table printer for paper-style rows.
+pub struct Table {
+    pub title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = format!("\n## {}\n\n", self.title);
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!(" {c:<w$} |"));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<1$}|", "", w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Append a JSON record to target/bench_results.jsonl (best effort).
+pub fn record_result(bench: &str, payload: Json) {
+    let j = Json::obj().set("bench", bench).set("data", payload);
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("target");
+    let _ = std::fs::create_dir_all(&dir);
+    if let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(dir.join("bench_results.jsonl"))
+    {
+        let _ = writeln!(f, "{}", j.render());
+    }
+}
+
+/// Human format for seconds.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_from_samples() {
+        let s = Stats::from_samples(vec![0.1, 0.2, 0.3, 0.4, 0.5]);
+        assert_eq!(s.iters, 5);
+        assert!((s.mean_s - 0.3).abs() < 1e-12);
+        assert_eq!(s.min_s, 0.1);
+        assert_eq!(s.max_s, 0.5);
+        assert_eq!(s.p50_s, 0.3);
+    }
+
+    #[test]
+    fn measure_runs_at_least_min_iters() {
+        let mut calls = 0usize;
+        let b = Bench {
+            warmup_iters: 1,
+            min_iters: 4,
+            max_iters: 8,
+            budget_s: 0.0,
+        };
+        let s = b.measure(|| calls += 1);
+        assert!(calls >= 5); // warmup + min_iters
+        assert_eq!(s.iters, 4);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["col", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["long-name".into(), "2.50 ms".into()]);
+        let r = t.render();
+        assert!(r.contains("## Demo"));
+        assert!(r.contains("| long-name | 2.50 ms |"));
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert_eq!(fmt_time(2.0), "2.00 s");
+        assert_eq!(fmt_time(0.0025), "2.50 ms");
+        assert_eq!(fmt_time(2.5e-6), "2.5 µs");
+    }
+}

@@ -1,0 +1,14 @@
+//! The FastDecode coordinator (leader): request admission, micro-batch
+//! assembly, the pipelined step loop, and token emission.
+//!
+//! * [`real`] — the real-numerics engine: PJRT S-worker + threaded
+//!   R-worker pool, used by examples and integration tests (tiny model).
+//! * [`sim`] — the virtual-clock engine: same control flow priced by the
+//!   calibrated device/link models, used to regenerate the paper's
+//!   figures at A10/Epyc scale (DESIGN.md §2, timing modes).
+
+pub mod real;
+pub mod sim;
+
+pub use real::FastDecode;
+pub use sim::{simulate, SimConfig};

@@ -1,0 +1,233 @@
+//! Real-numerics FastDecode engine: PJRT S-Part + Rust R-Part.
+//!
+//! Data flow per generated token (paper Fig 4):
+//!   embed → for each layer: s_pre (HLO) → scatter QKV to R-workers →
+//!   append+attend near the cache → gather O → s_post (HLO) → logits →
+//!   greedy sample.
+//! The KV-cache never exists on the S-worker; only activation vectors
+//! cross the S↔R boundary.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::metrics::{Histogram, StepRecord, StepTrace};
+use crate::model::{ModelSpec, Precision};
+use crate::runtime::{Engine, Tensor};
+use crate::rworker::{RPool, RPoolConfig, SeqTask};
+use crate::sworker::{ModelWeights, PjrtSWorker};
+
+#[derive(Clone, Copy, Debug)]
+pub struct FastDecodeConfig {
+    pub batch: usize,
+    pub sockets: usize,
+    pub precision: Precision,
+    pub capacity_per_seq: usize,
+    pub weight_seed: u64,
+    /// Number of instantiated layers (≤ spec.n_layers, like the paper's
+    /// reduced-layer evaluation).
+    pub layers: usize,
+}
+
+impl Default for FastDecodeConfig {
+    fn default() -> Self {
+        FastDecodeConfig {
+            batch: 8,
+            sockets: 2,
+            precision: Precision::F16,
+            capacity_per_seq: 256,
+            weight_seed: 0xfa57,
+            layers: 2,
+        }
+    }
+}
+
+/// Output of a generation run.
+pub struct GenerationResult {
+    /// Generated token ids per sequence (excluding the prompt).
+    pub tokens: Vec<Vec<i32>>,
+    pub step_latency: Histogram,
+    pub trace: StepTrace,
+}
+
+pub struct FastDecode {
+    pub spec: ModelSpec,
+    pub cfg: FastDecodeConfig,
+    sworker: PjrtSWorker,
+    rpool: RPool,
+    seq_ids: Vec<u64>,
+    /// Current context length per sequence (tokens in the cache).
+    ctx_len: Vec<usize>,
+}
+
+impl FastDecode {
+    pub fn new(
+        engine: Arc<Engine>,
+        spec: ModelSpec,
+        cfg: FastDecodeConfig,
+    ) -> Result<FastDecode> {
+        // The R-pool sizes its per-sequence cache to the run's needs.
+        let mut spec_l = spec;
+        spec_l.n_layers = cfg.layers; // R-pool allocates per layer
+        let rpool = RPool::spawn(
+            &spec_l,
+            RPoolConfig {
+                sockets: cfg.sockets,
+                capacity_per_seq: cfg.capacity_per_seq,
+                precision: cfg.precision,
+            },
+        );
+        let weights = ModelWeights::random(spec, cfg.layers, cfg.weight_seed);
+        let sworker = PjrtSWorker::new(engine, weights, cfg.batch)?;
+        Ok(FastDecode {
+            spec,
+            cfg,
+            sworker,
+            rpool,
+            seq_ids: Vec::new(),
+            ctx_len: Vec::new(),
+        })
+    }
+
+    /// Register a fresh batch of sequences (drops any previous batch).
+    pub fn start_batch(&mut self, first_id: u64) {
+        if !self.seq_ids.is_empty() {
+            let old = self.seq_ids.clone();
+            self.rpool.drop_seqs(&old);
+        }
+        self.seq_ids = (0..self.cfg.batch as u64).map(|i| first_id + i).collect();
+        self.ctx_len = vec![0; self.cfg.batch];
+        self.rpool.add_seqs(&self.seq_ids.clone());
+    }
+
+    /// One decode step: current tokens `[B]` in → next tokens `[B]` out.
+    pub fn decode_step(&mut self, tokens: &[i32]) -> Result<Vec<i32>> {
+        let (next, _) = self.decode_step_traced(tokens)?;
+        Ok(next)
+    }
+
+    /// Decode step with stage timing (s_time / r_time measured).
+    pub fn decode_step_traced(
+        &mut self,
+        tokens: &[i32],
+    ) -> Result<(Vec<i32>, StepRecord)> {
+        let b = self.cfg.batch;
+        let h = self.spec.hidden;
+        assert_eq!(tokens.len(), b);
+        let mut s_time = 0.0;
+        let mut r_time = 0.0;
+
+        let t0 = Instant::now();
+        let mut x = self.sworker.embed(tokens)?;
+        s_time += t0.elapsed().as_secs_f64();
+
+        for layer in 0..self.cfg.layers {
+            let t = Instant::now();
+            let qkv = self.sworker.s_pre(layer, &x)?;
+            s_time += t.elapsed().as_secs_f64();
+
+            // Scatter: per-sequence Q/K/V slices (head-major [H*D]).
+            let qkv_data = qkv.as_f32()?;
+            let tasks: Vec<SeqTask> = (0..b)
+                .map(|i| {
+                    let row = &qkv_data[i * 3 * h..(i + 1) * 3 * h];
+                    SeqTask {
+                        seq_id: self.seq_ids[i],
+                        q: row[0..h].to_vec(),
+                        k_new: row[h..2 * h].to_vec(),
+                        v_new: row[2 * h..3 * h].to_vec(),
+                    }
+                })
+                .collect();
+            let t = Instant::now();
+            let step = self.rpool.attend(layer, tasks);
+            r_time += t.elapsed().as_secs_f64();
+
+            // Gather O in sequence order.
+            let mut o_data = Vec::with_capacity(b * h);
+            for &id in &self.seq_ids {
+                o_data.extend_from_slice(&step.outputs[&id]);
+            }
+            let o = Tensor::f32(&[b, h], o_data);
+
+            let t = Instant::now();
+            x = self.sworker.s_post(layer, &x, &o)?;
+            s_time += t.elapsed().as_secs_f64();
+        }
+
+        for l in self.ctx_len.iter_mut() {
+            *l += 1;
+        }
+        let t = Instant::now();
+        let logits = self.sworker.logits(&x)?;
+        let next = self.sworker.argmax(&logits)?;
+        s_time += t.elapsed().as_secs_f64();
+
+        let rec = StepRecord {
+            step: 0,
+            latency_s: t0.elapsed().as_secs_f64(),
+            s_time,
+            r_time,
+            comm_time: 0.0,
+            tokens: b,
+            total_ctx: self.ctx_len.iter().sum(),
+        };
+        Ok((next, rec))
+    }
+
+    /// Prefill + generate: feed each prompt token, then decode `steps`
+    /// new tokens greedily. All prompts must have equal length (the
+    /// paper's throughput benchmark uses a short fixed prompt).
+    pub fn generate(
+        &mut self,
+        prompts: &[Vec<i32>],
+        steps: usize,
+    ) -> Result<GenerationResult> {
+        let b = self.cfg.batch;
+        assert_eq!(prompts.len(), b, "need exactly batch={b} prompts");
+        let plen = prompts[0].len();
+        assert!(plen > 0);
+        assert!(
+            prompts.iter().all(|p| p.len() == plen),
+            "prompts must be equal length"
+        );
+        assert!(
+            plen + steps <= self.cfg.capacity_per_seq,
+            "prompt+steps exceeds KV capacity"
+        );
+        self.start_batch(1);
+
+        // Prefill one position at a time (token-batched across sequences,
+        // same code path as decode — correct but not prefill-optimized).
+        let mut current: Vec<i32> = prompts.iter().map(|p| p[0]).collect();
+        for pos in 1..plen {
+            self.decode_step(&current)?;
+            current = prompts.iter().map(|p| p[pos]).collect();
+        }
+
+        let mut out: Vec<Vec<i32>> = vec![Vec::with_capacity(steps); b];
+        let mut hist = Histogram::new();
+        let mut trace = StepTrace::default();
+        for step in 0..steps {
+            let (next, mut rec) = self.decode_step_traced(&current)?;
+            rec.step = step;
+            hist.record_secs(rec.latency_s);
+            trace.push(rec);
+            for (o, &t) in out.iter_mut().zip(&next) {
+                o.push(t);
+            }
+            current = next;
+        }
+        Ok(GenerationResult {
+            tokens: out,
+            step_latency: hist,
+            trace,
+        })
+    }
+
+    /// Aggregate KV tokens currently held across sockets.
+    pub fn cache_tokens(&self) -> usize {
+        self.rpool.stats().iter().map(|s| s.total_tokens).sum()
+    }
+}

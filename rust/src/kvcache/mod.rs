@@ -1,0 +1,16 @@
+//! KV-cache storage near the CPU (paper §4.1, §5.1–5.2).
+//!
+//! Each R-worker socket owns the KV-cache of its assigned sequences.
+//! Storage is per-sequence, per-layer, laid out `[heads][capacity][dim]`
+//! so the per-head attention scan is contiguous. Element formats
+//! (`model::Precision`): fp16 (lossless vs the fp16 GPU baseline), int8
+//! and int4 with one scale per (head, token) — §5.2's quantization hooks.
+
+mod quant;
+mod store;
+
+pub use quant::{
+    dequant_i4, dequant_i8, nibble_to_i32, quant_i4, quant_i8,
+    NIBBLE_PAIR_LUT,
+};
+pub use store::{CacheStats, SeqKv, SocketCache};

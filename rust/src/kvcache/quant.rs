@@ -1,0 +1,147 @@
+//! Symmetric per-vector quantization for KV entries (§5.2).
+//!
+//! One fp32 scale per (head, token) vector: `x ≈ scale * q` with q in
+//! i8 ([-127,127]) or i4 ([-7,7], two values per byte). Chosen over
+//! per-tensor scales because K/V magnitudes drift over a sequence, and
+//! over asymmetric zero-points because attention dot-products then stay
+//! a single fused multiply per element.
+
+/// Quantize one vector to i8; returns the scale.
+pub fn quant_i8(src: &[f32], dst: &mut [i8]) -> f32 {
+    assert_eq!(src.len(), dst.len());
+    let max = src.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    if max == 0.0 {
+        dst.fill(0);
+        return 0.0;
+    }
+    let scale = max / 127.0;
+    let inv = 127.0 / max;
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = (s * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+    scale
+}
+
+/// Dequantize i8 into an fp32 buffer.
+pub fn dequant_i8(src: &[i8], scale: f32, dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = s as f32 * scale;
+    }
+}
+
+/// Quantize one vector to packed i4 (two values per byte, low nibble
+/// first); `dst.len() == src.len().div_ceil(2)`. Returns the scale.
+pub fn quant_i4(src: &[f32], dst: &mut [u8]) -> f32 {
+    assert_eq!(dst.len(), src.len().div_ceil(2));
+    let max = src.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    if max == 0.0 {
+        dst.fill(0);
+        return 0.0;
+    }
+    let scale = max / 7.0;
+    let inv = 7.0 / max;
+    for (i, pair) in dst.iter_mut().enumerate() {
+        let lo = (src[2 * i] * inv).round().clamp(-7.0, 7.0) as i8;
+        let hi = src
+            .get(2 * i + 1)
+            .map(|&x| (x * inv).round().clamp(-7.0, 7.0) as i8)
+            .unwrap_or(0);
+        *pair = ((lo as u8) & 0x0f) | ((hi as u8) << 4);
+    }
+    scale
+}
+
+/// Sign-extend a nibble (stored two's-complement in 4 bits).
+#[inline(always)]
+pub fn nibble_to_i32(n: u8) -> i32 {
+    ((n as i32) << 28) >> 28
+}
+
+/// Byte → (low nibble, high nibble) as f32, via a 2 KiB L1-resident LUT
+/// (one load replaces two shift/mask/sign-extend/convert chains in the
+/// int4 attention hot loop — EXPERIMENTS.md §Perf).
+pub static NIBBLE_PAIR_LUT: once_cell::sync::Lazy<[[f32; 2]; 256]> =
+    once_cell::sync::Lazy::new(|| {
+        let mut t = [[0.0f32; 2]; 256];
+        for (b, pair) in t.iter_mut().enumerate() {
+            pair[0] = nibble_to_i32(b as u8 & 0x0f) as f32;
+            pair[1] = nibble_to_i32(b as u8 >> 4) as f32;
+        }
+        t
+    });
+
+/// Dequantize packed i4 into fp32; `dst.len()` values are produced.
+pub fn dequant_i4(src: &[u8], scale: f32, dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len().div_ceil(2));
+    for (i, d) in dst.iter_mut().enumerate() {
+        let byte = src[i / 2];
+        let nib = if i % 2 == 0 { byte & 0x0f } else { byte >> 4 };
+        *d = nibble_to_i32(nib) as f32 * scale;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn i8_roundtrip_error_bounded() {
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let src = rng.normal_vec(64, 1.0);
+            let mut q = vec![0i8; 64];
+            let scale = quant_i8(&src, &mut q);
+            let mut back = vec![0.0; 64];
+            dequant_i8(&q, scale, &mut back);
+            let max = src.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            for (a, b) in src.iter().zip(&back) {
+                assert!((a - b).abs() <= max / 127.0 * 0.51 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn i4_roundtrip_error_bounded() {
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            let src = rng.normal_vec(63, 1.0); // odd length exercises tail
+            let mut q = vec![0u8; 32];
+            let scale = quant_i4(&src, &mut q);
+            let mut back = vec![0.0; 63];
+            dequant_i4(&q, scale, &mut back);
+            let max = src.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            for (a, b) in src.iter().zip(&back) {
+                assert!((a - b).abs() <= max / 7.0 * 0.51 + 1e-6, "{a} {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_vector_is_exact() {
+        let src = vec![0.0f32; 16];
+        let mut q8 = vec![0i8; 16];
+        assert_eq!(quant_i8(&src, &mut q8), 0.0);
+        let mut q4 = vec![0u8; 8];
+        assert_eq!(quant_i4(&src, &mut q4), 0.0);
+    }
+
+    #[test]
+    fn nibble_sign_extension() {
+        assert_eq!(nibble_to_i32(0x0), 0);
+        assert_eq!(nibble_to_i32(0x7), 7);
+        assert_eq!(nibble_to_i32(0x9), -7);
+        assert_eq!(nibble_to_i32(0xf), -1);
+    }
+
+    #[test]
+    fn extremes_hit_limits() {
+        let src = [1.0f32, -1.0, 0.5, -0.5];
+        let mut q = vec![0i8; 4];
+        let scale = quant_i8(&src, &mut q);
+        assert_eq!(q[0], 127);
+        assert_eq!(q[1], -127);
+        assert!((scale * 127.0 - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,413 @@
+//! Per-sequence KV storage and the per-socket cache map.
+
+use std::collections::HashMap;
+
+use crate::model::Precision;
+use crate::util::f16::{encode_slice, F16};
+
+/// K and V of one sequence on one layer, laid out `[H][capacity][D]`
+/// (per-head scans are contiguous — the attention hot loop walks `t`
+/// within a head).
+pub struct SeqKv {
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub capacity: usize,
+    pub len: usize,
+    prec: Precision,
+    // exactly one representation is non-empty, selected by `prec`
+    k16: Vec<F16>,
+    v16: Vec<F16>,
+    k32: Vec<f32>,
+    v32: Vec<f32>,
+    k8: Vec<i8>,
+    v8: Vec<i8>,
+    k4: Vec<u8>,
+    v4: Vec<u8>,
+    /// per-(head, token) scales for the quantized formats
+    k_scale: Vec<f32>,
+    v_scale: Vec<f32>,
+}
+
+impl SeqKv {
+    pub fn new(
+        n_heads: usize,
+        head_dim: usize,
+        capacity: usize,
+        prec: Precision,
+    ) -> SeqKv {
+        let n = n_heads * capacity * head_dim;
+        let mut s = SeqKv {
+            n_heads,
+            head_dim,
+            capacity,
+            len: 0,
+            prec,
+            k16: vec![],
+            v16: vec![],
+            k32: vec![],
+            v32: vec![],
+            k8: vec![],
+            v8: vec![],
+            k4: vec![],
+            v4: vec![],
+            k_scale: vec![],
+            v_scale: vec![],
+        };
+        match prec {
+            Precision::F16 => {
+                s.k16 = vec![F16::ZERO; n];
+                s.v16 = vec![F16::ZERO; n];
+            }
+            Precision::F32 => {
+                s.k32 = vec![0.0; n];
+                s.v32 = vec![0.0; n];
+            }
+            Precision::Int8 => {
+                s.k8 = vec![0; n];
+                s.v8 = vec![0; n];
+                s.k_scale = vec![0.0; n_heads * capacity];
+                s.v_scale = vec![0.0; n_heads * capacity];
+            }
+            Precision::Int4 => {
+                assert_eq!(head_dim % 2, 0, "int4 needs even head_dim");
+                s.k4 = vec![0; n / 2];
+                s.v4 = vec![0; n / 2];
+                s.k_scale = vec![0.0; n_heads * capacity];
+                s.v_scale = vec![0.0; n_heads * capacity];
+            }
+        }
+        s
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.prec
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len >= self.capacity
+    }
+
+    /// Append one token's K and V, each `[H * D]` f32 (head-major).
+    /// Returns the token's position.
+    pub fn append(&mut self, k: &[f32], v: &[f32]) -> usize {
+        let (h, d) = (self.n_heads, self.head_dim);
+        assert_eq!(k.len(), h * d);
+        assert_eq!(v.len(), h * d);
+        assert!(!self.is_full(), "KV-cache overflow (capacity {})", self.capacity);
+        let t = self.len;
+        for head in 0..h {
+            let src_k = &k[head * d..(head + 1) * d];
+            let src_v = &v[head * d..(head + 1) * d];
+            let off = (head * self.capacity + t) * d;
+            match self.prec {
+                Precision::F16 => {
+                    encode_slice(src_k, &mut self.k16[off..off + d]);
+                    encode_slice(src_v, &mut self.v16[off..off + d]);
+                }
+                Precision::F32 => {
+                    self.k32[off..off + d].copy_from_slice(src_k);
+                    self.v32[off..off + d].copy_from_slice(src_v);
+                }
+                Precision::Int8 => {
+                    let si = head * self.capacity + t;
+                    self.k_scale[si] =
+                        super::quant_i8(src_k, &mut self.k8[off..off + d]);
+                    self.v_scale[si] =
+                        super::quant_i8(src_v, &mut self.v8[off..off + d]);
+                }
+                Precision::Int4 => {
+                    let si = head * self.capacity + t;
+                    let po = off / 2;
+                    self.k_scale[si] =
+                        super::quant_i4(src_k, &mut self.k4[po..po + d / 2]);
+                    self.v_scale[si] =
+                        super::quant_i4(src_v, &mut self.v4[po..po + d / 2]);
+                }
+            }
+        }
+        self.len = t + 1;
+        t
+    }
+
+    /// Raw per-head K row access for the attention hot loop (fp16 path).
+    #[inline(always)]
+    pub fn k16_head(&self, head: usize) -> &[F16] {
+        let (c, d) = (self.capacity, self.head_dim);
+        &self.k16[head * c * d..(head + 1) * c * d]
+    }
+
+    #[inline(always)]
+    pub fn v16_head(&self, head: usize) -> &[F16] {
+        let (c, d) = (self.capacity, self.head_dim);
+        &self.v16[head * c * d..(head + 1) * c * d]
+    }
+
+    #[inline(always)]
+    pub fn k32_head(&self, head: usize) -> &[f32] {
+        let (c, d) = (self.capacity, self.head_dim);
+        &self.k32[head * c * d..(head + 1) * c * d]
+    }
+
+    #[inline(always)]
+    pub fn v32_head(&self, head: usize) -> &[f32] {
+        let (c, d) = (self.capacity, self.head_dim);
+        &self.v32[head * c * d..(head + 1) * c * d]
+    }
+
+    #[inline(always)]
+    pub fn k8_head(&self, head: usize) -> (&[i8], &[f32]) {
+        let (c, d) = (self.capacity, self.head_dim);
+        (
+            &self.k8[head * c * d..(head + 1) * c * d],
+            &self.k_scale[head * c..head * c + c],
+        )
+    }
+
+    #[inline(always)]
+    pub fn v8_head(&self, head: usize) -> (&[i8], &[f32]) {
+        let (c, d) = (self.capacity, self.head_dim);
+        (
+            &self.v8[head * c * d..(head + 1) * c * d],
+            &self.v_scale[head * c..head * c + c],
+        )
+    }
+
+    #[inline(always)]
+    pub fn k4_head(&self, head: usize) -> (&[u8], &[f32]) {
+        let (c, d) = (self.capacity, self.head_dim);
+        (
+            &self.k4[head * c * d / 2..(head + 1) * c * d / 2],
+            &self.k_scale[head * c..head * c + c],
+        )
+    }
+
+    #[inline(always)]
+    pub fn v4_head(&self, head: usize) -> (&[u8], &[f32]) {
+        let (c, d) = (self.capacity, self.head_dim);
+        (
+            &self.v4[head * c * d / 2..(head + 1) * c * d / 2],
+            &self.v_scale[head * c..head * c + c],
+        )
+    }
+
+    /// Decode token `t` of head `h` (K) into `out` — test/debug helper.
+    pub fn decode_k(&self, head: usize, t: usize, out: &mut [f32]) {
+        let d = self.head_dim;
+        assert!(t < self.len);
+        let off = (head * self.capacity + t) * d;
+        match self.prec {
+            Precision::F16 => {
+                for (o, x) in out.iter_mut().zip(&self.k16[off..off + d]) {
+                    *o = x.to_f32();
+                }
+            }
+            Precision::F32 => out.copy_from_slice(&self.k32[off..off + d]),
+            Precision::Int8 => super::dequant_i8(
+                &self.k8[off..off + d],
+                self.k_scale[head * self.capacity + t],
+                out,
+            ),
+            Precision::Int4 => super::dequant_i4(
+                &self.k4[off / 2..off / 2 + d / 2],
+                self.k_scale[head * self.capacity + t],
+                out,
+            ),
+        }
+    }
+
+    /// Bytes of KV payload actually stored (capacity allocation).
+    pub fn allocated_bytes(&self) -> usize {
+        self.k16.len() * 2
+            + self.v16.len() * 2
+            + (self.k32.len() + self.v32.len()) * 4
+            + self.k8.len()
+            + self.v8.len()
+            + self.k4.len()
+            + self.v4.len()
+            + (self.k_scale.len() + self.v_scale.len()) * 4
+    }
+}
+
+/// Aggregate statistics of one socket's cache (capacity planning, eq. 9).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CacheStats {
+    pub sequences: usize,
+    /// Sum of live lengths across sequences × layers (the R-Part load,
+    /// W in Algorithm 1's terms).
+    pub total_tokens: usize,
+    pub allocated_bytes: usize,
+}
+
+/// All sequences assigned to one R-worker socket: (seq, layer) → SeqKv.
+pub struct SocketCache {
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub n_layers: usize,
+    pub capacity_per_seq: usize,
+    pub prec: Precision,
+    seqs: HashMap<u64, Vec<SeqKv>>,
+}
+
+impl SocketCache {
+    pub fn new(
+        n_heads: usize,
+        head_dim: usize,
+        n_layers: usize,
+        capacity_per_seq: usize,
+        prec: Precision,
+    ) -> SocketCache {
+        SocketCache {
+            n_heads,
+            head_dim,
+            n_layers,
+            capacity_per_seq,
+            prec,
+            seqs: HashMap::new(),
+        }
+    }
+
+    /// Register a new sequence (all layers allocated lazily at insert).
+    pub fn add_seq(&mut self, seq_id: u64) {
+        let layers = (0..self.n_layers)
+            .map(|_| {
+                SeqKv::new(
+                    self.n_heads,
+                    self.head_dim,
+                    self.capacity_per_seq,
+                    self.prec,
+                )
+            })
+            .collect();
+        let prev = self.seqs.insert(seq_id, layers);
+        assert!(prev.is_none(), "sequence {seq_id} already present");
+    }
+
+    /// Drop a finished sequence, freeing its memory (§4.1: "drop KV-cache
+    /// of a certain sequence upon its generation ends").
+    pub fn drop_seq(&mut self, seq_id: u64) -> bool {
+        self.seqs.remove(&seq_id).is_some()
+    }
+
+    pub fn contains(&self, seq_id: u64) -> bool {
+        self.seqs.contains_key(&seq_id)
+    }
+
+    pub fn get_mut(&mut self, seq_id: u64, layer: usize) -> &mut SeqKv {
+        &mut self.seqs.get_mut(&seq_id).expect("unknown sequence")[layer]
+    }
+
+    pub fn get(&self, seq_id: u64, layer: usize) -> &SeqKv {
+        &self.seqs.get(&seq_id).expect("unknown sequence")[layer]
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let mut st = CacheStats::default();
+        st.sequences = self.seqs.len();
+        for layers in self.seqs.values() {
+            for kv in layers {
+                st.total_tokens += kv.len;
+                st.allocated_bytes += kv.allocated_bytes();
+            }
+        }
+        st
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn roundtrip(prec: Precision, tol: f32) {
+        let (h, d, cap) = (3, 8, 16);
+        let mut kv = SeqKv::new(h, d, cap, prec);
+        let mut rng = Rng::new(5);
+        let mut tokens = Vec::new();
+        for _ in 0..10 {
+            let k = rng.normal_vec(h * d, 1.0);
+            let v = rng.normal_vec(h * d, 1.0);
+            kv.append(&k, &v);
+            tokens.push(k);
+        }
+        assert_eq!(kv.len, 10);
+        let mut out = vec![0.0; d];
+        for (t, k) in tokens.iter().enumerate() {
+            for head in 0..h {
+                kv.decode_k(head, t, &mut out);
+                for (a, b) in out.iter().zip(&k[head * d..(head + 1) * d]) {
+                    assert!((a - b).abs() <= tol, "{prec:?} t={t}: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f32_roundtrip_exact() {
+        roundtrip(Precision::F32, 0.0);
+    }
+
+    #[test]
+    fn f16_roundtrip_half_ulp() {
+        roundtrip(Precision::F16, 3e-3);
+    }
+
+    #[test]
+    fn int8_roundtrip_bounded() {
+        roundtrip(Precision::Int8, 0.05);
+    }
+
+    #[test]
+    fn int4_roundtrip_bounded() {
+        roundtrip(Precision::Int4, 0.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn overflow_panics() {
+        let mut kv = SeqKv::new(1, 2, 2, Precision::F16);
+        let (k, v) = ([0.0, 0.0], [0.0, 0.0]);
+        kv.append(&k, &v);
+        kv.append(&k, &v);
+        kv.append(&k, &v);
+    }
+
+    #[test]
+    fn quantization_shrinks_memory() {
+        let mk = |p| SeqKv::new(8, 64, 128, p).allocated_bytes();
+        let f16 = mk(Precision::F16);
+        let i8b = mk(Precision::Int8);
+        let i4b = mk(Precision::Int4);
+        assert!(i8b < f16);
+        assert!(i4b < i8b);
+        // §5.2: int4 payload is a quarter of fp16 (scales add a little)
+        assert!((i4b as f64) < 0.3 * f16 as f64);
+    }
+
+    #[test]
+    fn socket_cache_lifecycle() {
+        let mut sc = SocketCache::new(2, 4, 3, 8, Precision::F16);
+        sc.add_seq(7);
+        sc.add_seq(9);
+        let mut rng = Rng::new(1);
+        let k = rng.normal_vec(8, 1.0);
+        let v = rng.normal_vec(8, 1.0);
+        for layer in 0..3 {
+            sc.get_mut(7, layer).append(&k, &v);
+        }
+        sc.get_mut(9, 0).append(&k, &v);
+        let st = sc.stats();
+        assert_eq!(st.sequences, 2);
+        assert_eq!(st.total_tokens, 4);
+        assert!(sc.drop_seq(7));
+        assert!(!sc.drop_seq(7));
+        assert_eq!(sc.stats().sequences, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "already present")]
+    fn duplicate_seq_panics() {
+        let mut sc = SocketCache::new(1, 2, 1, 4, Precision::F16);
+        sc.add_seq(1);
+        sc.add_seq(1);
+    }
+}

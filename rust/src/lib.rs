@@ -1,0 +1,37 @@
+//! FastDecode — high-throughput GPU-efficient LLM serving using
+//! heterogeneous pipelines (reproduction of He & Zhai, 2024).
+//!
+//! The transformer decode step is split at the paper's R/S boundary:
+//! *S-Part* (shared-parameter matmuls) runs as AOT-compiled XLA graphs on
+//! the S-worker; *R-Part* (per-sequence attention over the KV-cache) runs
+//! near the cache on CPU R-worker sockets. The coordinator pipelines the
+//! two at token level and stabilizes R-Part load at sequence level
+//! (SLS + Algorithm 1). See DESIGN.md for the system inventory and the
+//! per-experiment index.
+
+pub mod baselines;
+pub mod bench;
+pub mod coordinator;
+pub mod kvcache;
+pub mod metrics;
+pub mod model;
+pub mod perfmodel;
+pub mod runtime;
+pub mod rworker;
+pub mod sched;
+pub mod server;
+pub mod sworker;
+pub mod transport;
+pub mod util;
+pub mod workload;
+
+/// Default artifacts directory, overridable with FASTDECODE_ARTIFACTS.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("FASTDECODE_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| {
+            // Resolve relative to the crate root so tests/benches work
+            // from any CWD.
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        })
+}

@@ -1,0 +1,216 @@
+//! FastDecode CLI: device tables, capacity planning, figure simulation,
+//! and a real end-to-end demo on the tiny model.
+//!
+//! Offline environment: no clap — a small hand-rolled arg parser.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use fastdecode::bench::Table;
+use fastdecode::coordinator::real::{FastDecode, FastDecodeConfig};
+use fastdecode::coordinator::{simulate, SimConfig};
+use fastdecode::model::ModelSpec;
+use fastdecode::perfmodel::{
+    CpuModel, GpuModel, PlanInput, Planner, A10, EPYC_7452, V100, XEON_5218,
+};
+use fastdecode::runtime::Engine;
+use fastdecode::rworker::stream_bandwidth_probe;
+use fastdecode::workload::fixed_batch;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = &args[1.min(args.len())..];
+    let result = match cmd {
+        "devices" => cmd_devices(),
+        "plan" => cmd_plan(rest),
+        "simulate" => cmd_simulate(rest),
+        "probe" => cmd_probe(),
+        "demo" => cmd_demo(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            Err(anyhow::anyhow!("unknown command {other:?}"))
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "fastdecode — heterogeneous-pipeline LLM serving (paper reproduction)
+
+USAGE: fastdecode <command> [options]
+
+COMMANDS:
+  devices               print the Table 1 hardware comparison
+  plan [--model M] [--seq S] [--latency SECONDS]
+                        run the §4.3 planner: optimal (batch, sockets)
+  simulate [--model M] [--batch B] [--seq S] [--sockets P] [--sls F]
+                        virtual-clock run; prints per-step stats
+  probe                 measure this machine's per-thread KV bandwidth
+  demo [--batch B] [--steps N] [--sockets P]
+                        real end-to-end decode on the tiny model (PJRT)
+"
+    );
+}
+
+fn flag(rest: &[String], name: &str) -> Option<String> {
+    rest.iter()
+        .position(|a| a == name)
+        .and_then(|i| rest.get(i + 1).cloned())
+}
+
+fn parse_model(rest: &[String]) -> Result<ModelSpec> {
+    let name = flag(rest, "--model").unwrap_or_else(|| "llama7b".into());
+    ModelSpec::by_name(&name).with_context(|| format!("unknown model {name}"))
+}
+
+fn cmd_devices() -> Result<()> {
+    let mut t = Table::new(
+        "Table 1: performance and power comparison",
+        &["type", "model", "TDP", "TFLOPs", "W/TFLOP", "GB/s", "W/(GB/s)"],
+    );
+    for d in [XEON_5218, EPYC_7452, A10, V100] {
+        t.row(&[
+            d.kind.to_string(),
+            d.name.to_string(),
+            format!("{:.0} W", d.tdp_w),
+            format!("{:.1}", d.flops / 1e12),
+            format!("{:.2}", d.w_per_tflop()),
+            format!("{:.0}", d.mem_bw / 1e9),
+            format!("{:.2}", d.w_per_gbps()),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_plan(rest: &[String]) -> Result<()> {
+    let spec = parse_model(rest)?;
+    let seq: usize = flag(rest, "--seq")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(1024);
+    let latency: Option<f64> =
+        flag(rest, "--latency").map(|s| s.parse()).transpose()?;
+    let planner = Planner::new(GpuModel::new(A10), CpuModel::from_device(EPYC_7452));
+    let r = planner.plan(
+        &spec,
+        PlanInput {
+            seq_len: seq,
+            latency_budget: latency,
+            ..Default::default()
+        },
+    );
+    println!("model {} (h={}, {} layers)", spec.name, spec.hidden, spec.n_layers);
+    println!("  batch ℬ        = {}  (bound: {:?})", r.batch, r.batch_bound);
+    println!("  sockets 𝒫      = {}", r.sockets);
+    println!("  T(ℬ) per block = {:.3} ms", r.t_b * 1e3);
+    println!("  step latency   = {:.1} ms", r.step_latency * 1e3);
+    println!("  throughput     = {:.0} tok/s", r.throughput);
+    Ok(())
+}
+
+fn cmd_simulate(rest: &[String]) -> Result<()> {
+    let spec = parse_model(rest)?;
+    let batch: usize = flag(rest, "--batch")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(1024);
+    let seq: usize = flag(rest, "--seq")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(1024);
+    let sockets: usize = flag(rest, "--sockets")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(8);
+    let sls: Option<usize> = flag(rest, "--sls").map(|s| s.parse()).transpose()?;
+
+    let mut cfg = SimConfig::new(
+        spec,
+        GpuModel::new(A10),
+        CpuModel::from_device(EPYC_7452),
+        sockets,
+        batch,
+        seq,
+    );
+    cfg.sls_interval = sls;
+    if sls.is_some() {
+        cfg.steps = 2 * seq;
+    }
+    let trace = simulate(&cfg);
+    println!(
+        "{} B={batch} S={seq} P={sockets} sls={sls:?}: {} steps, \
+         throughput {:.0} tok/s, max latency {:.1} ms, steady {:.1} ms",
+        spec.name,
+        trace.len(),
+        trace.throughput(),
+        trace.max_latency() * 1e3,
+        trace.steady_latency(seq) * 1e3,
+    );
+    Ok(())
+}
+
+fn cmd_probe() -> Result<()> {
+    let bw = stream_bandwidth_probe(64);
+    println!(
+        "per-thread KV streaming bandwidth: {:.2} GB/s (fp16 decode + online softmax)",
+        bw / 1e9
+    );
+    println!("(calibrates CpuModel::from_measured for virtual-clock runs)");
+    Ok(())
+}
+
+fn cmd_demo(rest: &[String]) -> Result<()> {
+    let batch: usize = flag(rest, "--batch")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(8);
+    let steps: usize = flag(rest, "--steps")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(32);
+    let sockets: usize = flag(rest, "--sockets")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(2);
+    if batch != 1 && batch != 8 {
+        bail!("artifacts exist for batch 1 and 8 (re-run aot.py for more)");
+    }
+    let engine = Arc::new(Engine::load(fastdecode::artifacts_dir())?);
+    println!("PJRT platform: {}", engine.platform());
+    let spec = fastdecode::model::TINY;
+    let mut fd = FastDecode::new(
+        engine,
+        spec,
+        FastDecodeConfig {
+            batch,
+            sockets,
+            ..Default::default()
+        },
+    )?;
+    let prompts = fixed_batch(batch, 4, spec.vocab, 42);
+    let start = std::time::Instant::now();
+    let result = fd.generate(&prompts, steps)?;
+    let dt = start.elapsed().as_secs_f64();
+    println!(
+        "generated {} tokens in {:.2} s — {:.1} tok/s; per-step {}",
+        batch * steps,
+        dt,
+        (batch * steps) as f64 / dt,
+        result.step_latency.summary_ms()
+    );
+    for (i, toks) in result.tokens.iter().take(3).enumerate() {
+        println!("  seq {i}: {:?}...", &toks[..toks.len().min(12)]);
+    }
+    Ok(())
+}

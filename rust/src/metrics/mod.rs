@@ -1,0 +1,45 @@
+//! Serving metrics: latency histograms with percentiles (Fig 10's
+//! P.01/.5/.99 bars), per-step latency traces (Figs 8, 11, 12), and
+//! throughput counters. No external deps — log-bucketed histogram.
+
+mod histogram;
+mod trace;
+
+pub use histogram::Histogram;
+pub use trace::{StepRecord, StepTrace};
+
+/// Simple throughput accumulator.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Throughput {
+    pub tokens: u64,
+    pub seconds: f64,
+}
+
+impl Throughput {
+    pub fn add(&mut self, tokens: u64, seconds: f64) {
+        self.tokens += tokens;
+        self.seconds += seconds;
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.seconds == 0.0 {
+            0.0
+        } else {
+            self.tokens as f64 / self.seconds
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_accumulates() {
+        let mut t = Throughput::default();
+        t.add(100, 2.0);
+        t.add(300, 2.0);
+        assert_eq!(t.tokens_per_sec(), 100.0);
+        assert_eq!(Throughput::default().tokens_per_sec(), 0.0);
+    }
+}

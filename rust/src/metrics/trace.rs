@@ -1,0 +1,165 @@
+//! Per-step latency traces — the data behind Figs 8, 11, 12 and the
+//! per-op breakdown of Fig 15.
+
+use crate::util::json::Json;
+
+/// One generation step of the whole system.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StepRecord {
+    pub step: usize,
+    /// Wall (or virtual) time of the step, seconds.
+    pub latency_s: f64,
+    /// Time attributable to S-Part compute.
+    pub s_time: f64,
+    /// Time attributable to R-Part compute (max over sockets).
+    pub r_time: f64,
+    /// Time attributable to activation transfer.
+    pub comm_time: f64,
+    /// Tokens generated in this step.
+    pub tokens: usize,
+    /// Aggregate context length processed this step (R-Part load W).
+    pub total_ctx: usize,
+}
+
+/// An append-only trace of steps.
+#[derive(Clone, Debug, Default)]
+pub struct StepTrace {
+    pub records: Vec<StepRecord>,
+}
+
+impl StepTrace {
+    pub fn push(&mut self, r: StepRecord) {
+        self.records.push(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn total_time(&self) -> f64 {
+        self.records.iter().map(|r| r.latency_s).sum()
+    }
+
+    pub fn total_tokens(&self) -> usize {
+        self.records.iter().map(|r| r.tokens).sum()
+    }
+
+    pub fn throughput(&self) -> f64 {
+        let t = self.total_time();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.total_tokens() as f64 / t
+        }
+    }
+
+    pub fn max_latency(&self) -> f64 {
+        self.records
+            .iter()
+            .map(|r| r.latency_s)
+            .fold(0.0, f64::max)
+    }
+
+    /// Mean latency over the steady-state window (skip cold start).
+    pub fn steady_latency(&self, skip: usize) -> f64 {
+        let tail = &self.records[skip.min(self.records.len())..];
+        if tail.is_empty() {
+            return 0.0;
+        }
+        tail.iter().map(|r| r.latency_s).sum::<f64>() / tail.len() as f64
+    }
+
+    /// Downsample to at most `n` points for plotting (keeps endpoints).
+    pub fn downsample(&self, n: usize) -> Vec<StepRecord> {
+        if self.records.len() <= n || n < 2 {
+            return self.records.clone();
+        }
+        let stride = (self.records.len() - 1) as f64 / (n - 1) as f64;
+        (0..n)
+            .map(|i| self.records[(i as f64 * stride).round() as usize])
+            .collect()
+    }
+
+    /// Serialize the latency series for plotting.
+    pub fn to_json(&self, name: &str) -> Json {
+        Json::obj()
+            .set("name", name)
+            .set(
+                "step",
+                self.records.iter().map(|r| r.step as f64).collect::<Vec<_>>(),
+            )
+            .set(
+                "latency_ms",
+                self.records
+                    .iter()
+                    .map(|r| r.latency_s * 1e3)
+                    .collect::<Vec<_>>(),
+            )
+            .set(
+                "total_ctx",
+                self.records
+                    .iter()
+                    .map(|r| r.total_ctx as f64)
+                    .collect::<Vec<_>>(),
+            )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: usize, lat: f64, tokens: usize) -> StepRecord {
+        StepRecord {
+            step,
+            latency_s: lat,
+            tokens,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn throughput_and_max() {
+        let mut t = StepTrace::default();
+        t.push(rec(0, 0.1, 10));
+        t.push(rec(1, 0.3, 10));
+        assert!((t.throughput() - 50.0).abs() < 1e-9);
+        assert_eq!(t.max_latency(), 0.3);
+        assert_eq!(t.total_tokens(), 20);
+    }
+
+    #[test]
+    fn steady_skips_cold_start() {
+        let mut t = StepTrace::default();
+        t.push(rec(0, 1.0, 1));
+        t.push(rec(1, 0.2, 1));
+        t.push(rec(2, 0.2, 1));
+        assert!((t.steady_latency(1) - 0.2).abs() < 1e-12);
+        assert_eq!(t.steady_latency(10), 0.0);
+    }
+
+    #[test]
+    fn downsample_keeps_endpoints() {
+        let mut t = StepTrace::default();
+        for i in 0..100 {
+            t.push(rec(i, i as f64, 1));
+        }
+        let d = t.downsample(10);
+        assert_eq!(d.len(), 10);
+        assert_eq!(d[0].step, 0);
+        assert_eq!(d[9].step, 99);
+    }
+
+    #[test]
+    fn json_renders() {
+        let mut t = StepTrace::default();
+        t.push(rec(0, 0.001, 1));
+        let s = t.to_json("fig11").render();
+        assert!(s.contains("\"fig11\""));
+        assert!(s.contains("latency_ms"));
+    }
+}

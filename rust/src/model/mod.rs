@@ -1,0 +1,5 @@
+//! Model specifications — the Rust mirror of `python/compile/configs.py`.
+
+mod spec;
+
+pub use spec::{ModelSpec, Precision, LLAMA_13B, LLAMA_7B, OPT_175B, TINY};

@@ -1,0 +1,233 @@
+//! Model geometry and derived workload numbers.
+//!
+//! Every per-token byte/FLOP count used by the performance model
+//! (perfmodel/), the capacity planner (eq. 9) and Table 3 is derived
+//! here, in one place, from the model dimensions.
+
+/// KV-cache element precision (§5.1–5.2): lossless fp16 or quantized.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    /// 32-bit float (exact cross-check against the f32 HLO path).
+    F32,
+    /// fp16 storage, fp32 compute — the paper's lossless default.
+    F16,
+    /// int8 per-(head, token) scale quantization.
+    Int8,
+    /// int4 per-(head, token) scale quantization (2 values/byte).
+    Int4,
+}
+
+impl Precision {
+    /// Stored bits per KV element.
+    pub fn bits(self) -> usize {
+        match self {
+            Precision::F32 => 32,
+            Precision::F16 => 16,
+            Precision::Int8 => 8,
+            Precision::Int4 => 4,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::F16 => "f16",
+            Precision::Int8 => "int8",
+            Precision::Int4 => "int4",
+        }
+    }
+}
+
+/// Static geometry of one transformer decoder model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    /// Feature dimension h.
+    pub hidden: usize,
+    pub n_heads: usize,
+    /// Full-model layer count (experiments run fewer and extrapolate,
+    /// like the paper's Fig 8).
+    pub n_layers: usize,
+    /// MLP intermediate dimension f.
+    pub ffn: usize,
+    pub vocab: usize,
+}
+
+pub const TINY: ModelSpec = ModelSpec {
+    name: "tiny",
+    hidden: 64,
+    n_heads: 4,
+    n_layers: 2,
+    ffn: 176,
+    vocab: 256,
+};
+
+pub const LLAMA_7B: ModelSpec = ModelSpec {
+    name: "llama7b",
+    hidden: 4096,
+    n_heads: 32,
+    n_layers: 32,
+    ffn: 11008,
+    vocab: 32000,
+};
+
+pub const LLAMA_13B: ModelSpec = ModelSpec {
+    name: "llama13b",
+    hidden: 5120,
+    n_heads: 40,
+    n_layers: 40,
+    ffn: 13824,
+    vocab: 32000,
+};
+
+pub const OPT_175B: ModelSpec = ModelSpec {
+    name: "opt175b",
+    hidden: 12288,
+    n_heads: 96,
+    n_layers: 96,
+    ffn: 49152,
+    vocab: 50272,
+};
+
+impl ModelSpec {
+    pub fn by_name(name: &str) -> Option<ModelSpec> {
+        match name {
+            "tiny" => Some(TINY),
+            "llama7b" => Some(LLAMA_7B),
+            "llama13b" => Some(LLAMA_13B),
+            "opt175b" => Some(OPT_175B),
+            _ => None,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        debug_assert_eq!(self.hidden % self.n_heads, 0);
+        self.hidden / self.n_heads
+    }
+
+    // ---- memory ----------------------------------------------------------
+
+    /// Bytes of K+V appended per token per layer at `prec`.
+    pub fn kv_bytes_per_token_layer(&self, prec: Precision) -> usize {
+        2 * self.hidden * prec.bits() / 8
+    }
+
+    /// Bytes of K+V per token across all layers (Fig 1's footprint slope).
+    pub fn kv_bytes_per_token(&self, prec: Precision) -> usize {
+        self.kv_bytes_per_token_layer(prec) * self.n_layers
+    }
+
+    /// Total KV footprint for `batch` sequences of length `seq`.
+    pub fn kv_bytes_total(
+        &self,
+        batch: usize,
+        seq: usize,
+        prec: Precision,
+    ) -> usize {
+        self.kv_bytes_per_token(prec) * batch * seq
+    }
+
+    /// fp16 weight bytes of ONE transformer block (Table 3 "Model Weight").
+    pub fn block_weight_bytes(&self) -> usize {
+        let h = self.hidden;
+        let f = self.ffn;
+        // qkv (h×3h) + o (h×h) + gate/up (2 h×f) + down (f×h), fp16
+        (3 * h * h + h * h + 2 * h * f + f * h) * 2
+    }
+
+    /// fp16 bytes of the per-token activation vectors that FastDecode
+    /// ships per block: Q,K,V (S→R) and O (R→S) (Table 3 "Intermediate
+    /// Vectors").
+    pub fn activation_bytes_per_token_layer(&self) -> usize {
+        4 * self.hidden * 2
+    }
+
+    // ---- compute ---------------------------------------------------------
+
+    /// FLOPs of S-Part per token per layer (the batched matmuls).
+    pub fn s_part_flops_per_token_layer(&self) -> usize {
+        let h = self.hidden;
+        let f = self.ffn;
+        // 2·h·3h (qkv) + 2·h·h (o) + 3·2·h·f (gate,up,down)
+        2 * h * 3 * h + 2 * h * h + 3 * 2 * h * f
+    }
+
+    /// FLOPs of R-Part per token per layer for context length `ctx`:
+    /// q·Kᵀ and p·V, each 2·ctx·h.
+    pub fn r_part_flops_per_token_layer(&self, ctx: usize) -> usize {
+        2 * 2 * ctx * self.hidden
+    }
+
+    /// Bytes R-Part must stream from memory per token per layer at `prec`
+    /// (the whole K and V of the sequence — the memory-bound core).
+    pub fn r_part_bytes_per_token_layer(
+        &self,
+        ctx: usize,
+        prec: Precision,
+    ) -> usize {
+        2 * ctx * self.hidden * prec.bits() / 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_dims_divide() {
+        for m in [TINY, LLAMA_7B, LLAMA_13B, OPT_175B] {
+            assert_eq!(m.hidden % m.n_heads, 0, "{}", m.name);
+        }
+    }
+
+    /// Table 3 cross-check: 7b model, one block.
+    /// KV-cache of one token ≈ 4.19 MB/1024 tokens... per the paper the
+    /// per-block numbers are: weights 402 MB (all blocks? no: paper says
+    /// "within a transformer block") — we pin our derived values instead
+    /// and verify the ratios the argument needs.
+    #[test]
+    fn table3_magnitudes_7b() {
+        let m = LLAMA_7B;
+        // Per-token per-layer KV fp16: 2·4096·2 B = 16 KiB; × 32 layers
+        // = 512 KiB/token. Paper's "KV-Cache, batch 1" row is one block
+        // at S=1024 ctx: 2·4096·2·1024 / 2^20 = 16 MiB... the paper's
+        // 4.19 MB = 2·4096·2·256? We pin OUR definition and check the
+        // orders of magnitude that drive the design:
+        let act = m.activation_bytes_per_token_layer(); // 32 KiB
+        assert_eq!(act, 4 * 4096 * 2);
+        let kv_tok_layer = m.kv_bytes_per_token_layer(Precision::F16);
+        assert_eq!(kv_tok_layer, 2 * 4096 * 2);
+        // activations per token are ~2× one token's per-layer KV, but the
+        // R-part STREAMS ctx× that per step — the orders-of-magnitude gap
+        // the paper's Table 3 demonstrates:
+        let streamed = m.r_part_bytes_per_token_layer(1024, Precision::F16);
+        assert!(streamed > 100 * act);
+    }
+
+    #[test]
+    fn weight_bytes_7b_close_to_paper() {
+        // Paper Table 3: one block of the 7b model = 402 MB?? No — 402 MB
+        // is for fp16 ALL weights of one block × ... our formula gives:
+        // (3·h² + h² + 3·h·f)·2 with h=4096, f=11008 → ~403 MB? compute:
+        // 4·4096² = 67.1e6; 3·4096·11008 = 135.3e6; sum 202.4e6 els ×2B
+        // = 404.8 MB — matches the paper's 402 MB within rounding. ✓
+        let mb = LLAMA_7B.block_weight_bytes() as f64 / 1e6;
+        assert!((mb - 402.0).abs() < 5.0, "got {mb} MB");
+    }
+
+    #[test]
+    fn quantization_quarters_kv() {
+        let m = LLAMA_7B;
+        let f16 = m.kv_bytes_per_token(Precision::F16);
+        let i4 = m.kv_bytes_per_token(Precision::Int4);
+        assert_eq!(f16, 4 * i4); // §5.2's 4× saving
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for m in [TINY, LLAMA_7B, LLAMA_13B, OPT_175B] {
+            assert_eq!(ModelSpec::by_name(m.name), Some(m));
+        }
+        assert_eq!(ModelSpec::by_name("nope"), None);
+    }
+}

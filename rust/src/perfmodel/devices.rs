@@ -1,0 +1,95 @@
+//! Hardware specifications — the paper's Table 1 / Figure 2, verbatim.
+//!
+//! These numbers parameterize the analytic device models used by the
+//! virtual-clock experiments (DESIGN.md §2: the A10/Epyc testbed is
+//! simulated; the R-Part cost can instead be calibrated from a *measured*
+//! probe of this machine, see rworker::stream_bandwidth_probe).
+
+/// Static spec of one device type.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    pub kind: &'static str, // "cpu" | "gpu"
+    /// Thermal design power, watts.
+    pub tdp_w: f64,
+    /// Peak dense fp16 compute, FLOP/s.
+    pub flops: f64,
+    /// Peak memory bandwidth, bytes/s.
+    pub mem_bw: f64,
+}
+
+impl DeviceSpec {
+    /// Watts per TFLOP (Table 1 "W. per." compute column).
+    pub fn w_per_tflop(&self) -> f64 {
+        self.tdp_w / (self.flops / 1e12)
+    }
+
+    /// Watts per GB/s (Table 1 "W. per." memory column).
+    pub fn w_per_gbps(&self) -> f64 {
+        self.tdp_w / (self.mem_bw / 1e9)
+    }
+}
+
+/// Intel Xeon Gold 5218 (one socket).
+pub const XEON_5218: DeviceSpec = DeviceSpec {
+    name: "Xeon Gold 5218",
+    kind: "cpu",
+    tdp_w: 125.0,
+    flops: 1.3e12,
+    mem_bw: 128.0e9,
+};
+
+/// AMD Epyc 7452 (one socket) — the paper's R-worker hardware.
+pub const EPYC_7452: DeviceSpec = DeviceSpec {
+    name: "Epyc 7452",
+    kind: "cpu",
+    tdp_w: 155.0,
+    flops: 1.2e12,
+    mem_bw: 205.0e9,
+};
+
+/// NVIDIA A10 — the paper's S-worker GPU.
+pub const A10: DeviceSpec = DeviceSpec {
+    name: "A10",
+    kind: "gpu",
+    tdp_w: 150.0,
+    flops: 125.0e12,
+    mem_bw: 600.0e9,
+};
+
+/// NVIDIA V100.
+pub const V100: DeviceSpec = DeviceSpec {
+    name: "V100",
+    kind: "gpu",
+    tdp_w: 250.0,
+    flops: 112.0e12,
+    mem_bw: 900.0e9,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Pin Table 1's derived efficiency columns (the paper's argument
+    /// that the bandwidth-per-watt gap is ~4×, not ~100×).
+    #[test]
+    fn table1_efficiency_columns() {
+        assert!((XEON_5218.w_per_tflop() - 96.15).abs() < 0.1);
+        assert!((EPYC_7452.w_per_tflop() - 129.2).abs() < 0.1);
+        assert!((A10.w_per_tflop() - 1.2).abs() < 0.01);
+        assert!((V100.w_per_tflop() - 2.2).abs() < 0.05);
+        assert!((XEON_5218.w_per_gbps() - 0.97).abs() < 0.01);
+        assert!((EPYC_7452.w_per_gbps() - 0.76).abs() < 0.01);
+        assert!((A10.w_per_gbps() - 0.25).abs() < 0.01);
+        assert!((V100.w_per_gbps() - 0.27).abs() < 0.01);
+    }
+
+    /// Fig 2's qualitative claim: compute gap ≈100×, bandwidth gap <10×.
+    #[test]
+    fn fig2_gap_shapes() {
+        let compute_gap = A10.flops / EPYC_7452.flops;
+        let bw_gap = A10.mem_bw / EPYC_7452.mem_bw;
+        assert!(compute_gap > 80.0);
+        assert!(bw_gap < 10.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Performance modeling (paper §4.3): device specs (Table 1), the GPU
+//! roofline T(ℬ) (Fig 1/3), the CPU R-Part cost model, and the
+//! (ℬ, 𝒫) planner implementing equations 7, 9 and 11.
+
+mod devices;
+mod gpu;
+mod planner;
+
+pub use devices::{DeviceSpec, A10, EPYC_7452, V100, XEON_5218};
+pub use gpu::{CpuModel, GpuModel};
+pub use planner::{PlanInput, Planner, PlannerResult};

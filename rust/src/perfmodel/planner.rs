@@ -1,0 +1,247 @@
+//! The (ℬ, 𝒫) planner — paper §4.3, equations 7, 9 and 11.
+//!
+//! Given a model, a GPU model (providing 𝕋(ℬ)), a CPU model (providing
+//! R), an expected sequence length 𝒮 and an optional per-sequence latency
+//! budget L, pick:
+//!   ℬ — the largest batch meeting 2·N·𝒮·𝕋(ℬ) ≤ L (eq. 7), or the knee
+//!       of E(ℬ) = ℬ/𝕋(ℬ) when unconstrained (eq. 8);
+//!   𝒫 — the fewest CPU sockets whose aggregate R-Part latency matches
+//!       𝕋(ℬ) (eq. 10 → 11), subject to the memory constraint (eq. 9).
+
+use crate::model::{ModelSpec, Precision};
+
+use super::gpu::{CpuModel, GpuModel};
+
+#[derive(Clone, Copy, Debug)]
+pub struct PlanInput {
+    /// Expected (maximum) generated sequence length 𝒮.
+    pub seq_len: usize,
+    /// Optional end-to-end per-sequence latency budget L, seconds.
+    pub latency_budget: Option<f64>,
+    /// KV tokens one socket's memory can hold (C in eq. 9).
+    pub tokens_per_socket: usize,
+    /// KV storage precision.
+    pub precision: Precision,
+    /// Knee threshold: stop growing ℬ when doubling it improves E(ℬ)
+    /// by less than this factor (paper: "increasing it brings marginal
+    /// throughput improvement").
+    pub knee_gain: f64,
+}
+
+impl Default for PlanInput {
+    fn default() -> Self {
+        PlanInput {
+            seq_len: 1024,
+            latency_budget: None,
+            // 256 GB socket, 7b-scale KV (512 KiB/token) ≈ 500k tokens;
+            // conservative default:
+            tokens_per_socket: 400_000,
+            precision: Precision::F16,
+            knee_gain: 1.10,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PlannerResult {
+    /// Chosen batch size ℬ.
+    pub batch: usize,
+    /// Minimum CPU sockets 𝒫 (eq. 11, rounded up).
+    pub sockets: usize,
+    /// 𝕋(ℬ): per-block S-Part latency at ℬ, seconds.
+    pub t_b: f64,
+    /// Modeled per-token step latency (2·N·𝕋(ℬ)), seconds.
+    pub step_latency: f64,
+    /// Modeled aggregate throughput, tokens/second.
+    pub throughput: f64,
+    /// Which constraint bound ℬ.
+    pub batch_bound: BatchBound,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchBound {
+    /// eq. 7 latency budget.
+    Latency,
+    /// eq. 8 knee of E(ℬ).
+    Knee,
+    /// eq. 9 socket memory (with the planned 𝒫).
+    Memory,
+}
+
+pub struct Planner {
+    pub gpu: GpuModel,
+    pub cpu: CpuModel,
+}
+
+impl Planner {
+    pub fn new(gpu: GpuModel, cpu: CpuModel) -> Planner {
+        Planner { gpu, cpu }
+    }
+
+    /// eq. 7 left side: modeled latency to generate one full sequence.
+    pub fn sequence_latency(&self, spec: &ModelSpec, b: usize, s: usize) -> f64 {
+        2.0 * spec.n_layers as f64
+            * s as f64
+            * self.gpu.s_part_latency(spec, b)
+    }
+
+    /// eq. 11: 𝒫 ≈ ½·𝒮·R·E(ℬ), with R from the CPU model. The ½ comes
+    /// from the SLS schedule holding aggregate context at ℬ𝒮/2.
+    pub fn min_sockets(
+        &self,
+        spec: &ModelSpec,
+        b: usize,
+        s: usize,
+        prec: Precision,
+    ) -> usize {
+        let r = self.cpu.r_coeff(spec, prec);
+        let e = self.gpu.efficiency(spec, b);
+        let p = 0.5 * s as f64 * r * e;
+        p.ceil().max(1.0) as usize
+    }
+
+    pub fn plan(&self, spec: &ModelSpec, input: PlanInput) -> PlannerResult {
+        // Sweep ℬ over powers of two (the paper evaluates the same grid).
+        let mut chosen = 1usize;
+        let mut bound = BatchBound::Knee;
+        let mut b = 1usize;
+        loop {
+            let next = b * 2;
+            // eq. 7: latency budget on the *next* candidate
+            if let Some(l) = input.latency_budget {
+                if self.sequence_latency(spec, next, input.seq_len) > l {
+                    bound = BatchBound::Latency;
+                    break;
+                }
+            }
+            // eq. 8: knee detection
+            let gain = self.gpu.efficiency(spec, next)
+                / self.gpu.efficiency(spec, b);
+            if gain < input.knee_gain {
+                bound = BatchBound::Knee;
+                break;
+            }
+            b = next;
+            if b >= 1 << 20 {
+                break; // safety rail
+            }
+        }
+        chosen = chosen.max(b);
+
+        let mut sockets =
+            self.min_sockets(spec, chosen, input.seq_len, input.precision);
+
+        // eq. 9: ½·ℬ·𝒮 ≤ C·𝒫 — shrink ℬ or add sockets. The paper notes
+        // this "is barely the actual limitation"; we add sockets first
+        // (cheap), and only shrink ℬ if even a huge pool cannot hold it.
+        let need_tokens = |b: usize| b * input.seq_len / 2;
+        while need_tokens(chosen) > input.tokens_per_socket * sockets {
+            if sockets < 1024 {
+                sockets += 1;
+            } else {
+                chosen /= 2;
+                bound = BatchBound::Memory;
+                sockets =
+                    self.min_sockets(spec, chosen, input.seq_len, input.precision);
+            }
+        }
+
+        let t_b = self.gpu.s_part_latency(spec, chosen);
+        let step_latency = 2.0 * spec.n_layers as f64 * t_b;
+        PlannerResult {
+            batch: chosen,
+            sockets,
+            t_b,
+            step_latency,
+            throughput: chosen as f64 / step_latency,
+            batch_bound: bound,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{LLAMA_13B, LLAMA_7B, OPT_175B};
+    use crate::perfmodel::devices::{A10, EPYC_7452};
+
+    fn planner() -> Planner {
+        Planner::new(GpuModel::new(A10), CpuModel::from_device(EPYC_7452))
+    }
+
+    #[test]
+    fn unconstrained_plan_lands_past_the_knee() {
+        let p = planner();
+        let r = p.plan(&LLAMA_7B, PlanInput::default());
+        // paper operates at ℬ ∈ [128, 1024+]
+        assert!(r.batch >= 128, "batch {}", r.batch);
+        assert!(r.sockets >= 1);
+        assert!(r.throughput > 100.0);
+    }
+
+    #[test]
+    fn latency_budget_caps_batch() {
+        let p = planner();
+        let loose = p.plan(&LLAMA_7B, PlanInput::default());
+        let tight = p.plan(
+            &LLAMA_7B,
+            PlanInput {
+                latency_budget: Some(60.0), // 60 s for a 1024-token sequence
+                ..Default::default()
+            },
+        );
+        assert!(tight.batch <= loose.batch);
+        assert_eq!(tight.batch_bound, BatchBound::Latency);
+    }
+
+    /// §4.3's closing claim: 𝒫 ∝ 1/h — larger models need FEWER sockets
+    /// per GPU (motivates Fig 14 using opt-175b with 2 sockets).
+    #[test]
+    fn bigger_models_need_fewer_sockets() {
+        let p = planner();
+        let b = 512;
+        let s7 = p.min_sockets(&LLAMA_7B, b, 1024, Precision::F16);
+        let s13 = p.min_sockets(&LLAMA_13B, b, 1024, Precision::F16);
+        let s175 = p.min_sockets(&OPT_175B, b, 1024, Precision::F16);
+        assert!(s13 <= s7, "{s13} > {s7}");
+        assert!(s175 < s7, "{s175} >= {s7}");
+    }
+
+    /// Longer sequences require proportionally more sockets (eq. 11).
+    #[test]
+    fn sockets_scale_with_seq_len() {
+        let p = planner();
+        let short = p.min_sockets(&LLAMA_7B, 512, 128, Precision::F16);
+        let long = p.min_sockets(&LLAMA_7B, 512, 1024, Precision::F16);
+        assert!(long > short);
+        let ratio = long as f64 / short as f64;
+        assert!((4.0..=12.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn memory_constraint_adds_sockets() {
+        let p = planner();
+        let tiny_mem = p.plan(
+            &LLAMA_7B,
+            PlanInput {
+                tokens_per_socket: 10_000,
+                ..Default::default()
+            },
+        );
+        let big_mem = p.plan(&LLAMA_7B, PlanInput::default());
+        assert!(tiny_mem.sockets >= big_mem.sockets);
+        // eq. 9 must hold in the result
+        assert!(
+            tiny_mem.batch * 1024 / 2
+                <= 10_000 * tiny_mem.sockets
+        );
+    }
+
+    #[test]
+    fn quantized_kv_needs_fewer_sockets() {
+        let p = planner();
+        let f16 = p.min_sockets(&LLAMA_7B, 512, 1024, Precision::F16);
+        let i4 = p.min_sockets(&LLAMA_7B, 512, 1024, Precision::Int4);
+        assert!(i4 < f16, "int4 {i4} !< f16 {f16}"); // §5.2 "save 4× CPUs"
+    }
+}

@@ -1,0 +1,144 @@
+//! The PJRT engine: compile-once / execute-many over manifest artifacts.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Graphs are lowered with
+//! `return_tuple=True`, so results unwrap via `decompose_tuple`.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{Artifact, Dtype, Manifest};
+use super::tensor::Tensor;
+
+/// One compiled graph, ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub artifact: Artifact,
+}
+
+impl Executable {
+    /// Execute with host tensors; validates shapes against the manifest.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let meta = &self.artifact;
+        if inputs.len() != meta.inputs.len() {
+            bail!(
+                "{}: {} inputs given, {} expected",
+                meta.name,
+                inputs.len(),
+                meta.inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (t, m)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            if t.shape() != m.shape.as_slice() {
+                bail!(
+                    "{}: input {i} shape {:?} != manifest {:?}",
+                    meta.name,
+                    t.shape(),
+                    m.shape
+                );
+            }
+            literals.push(to_literal(t)?);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", meta.name))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = tuple
+            .decompose_tuple()
+            .context("decomposing result tuple")?;
+        if parts.len() != meta.outputs.len() {
+            bail!(
+                "{}: {} outputs, {} expected",
+                meta.name,
+                parts.len(),
+                meta.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&meta.outputs)
+            .map(|(lit, m)| from_literal(&lit, &m.shape, m.dtype))
+            .collect()
+    }
+}
+
+fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    let lit = match t {
+        Tensor::F32 { data, .. } => xla::Literal::vec1(data),
+        Tensor::I32 { data, .. } => xla::Literal::vec1(data),
+    };
+    Ok(lit.reshape(&dims)?)
+}
+
+fn from_literal(
+    lit: &xla::Literal,
+    shape: &[usize],
+    dtype: Dtype,
+) -> Result<Tensor> {
+    match dtype {
+        Dtype::F32 => Ok(Tensor::f32(shape, lit.to_vec::<f32>()?)),
+        Dtype::I32 => Ok(Tensor::i32(shape, lit.to_vec::<i32>()?)),
+        Dtype::F16 => bail!("f16 graph outputs are not used on this path"),
+    }
+}
+
+/// Compile-once cache over a manifest directory.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client and load the manifest from `artifacts_dir`.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) executable for a manifest artifact.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let artifact = self.manifest.get(name)?.clone();
+        let proto = xla::HloModuleProto::from_text_file(
+            artifact.path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {:?}", artifact.path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", artifact.name))?;
+        let e = std::sync::Arc::new(Executable { exe, artifact });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// One-shot convenience: compile (cached) + run.
+    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.executable(name)?.run(inputs)
+    }
+}

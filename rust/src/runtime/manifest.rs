@@ -1,0 +1,262 @@
+//! Parser for `artifacts/manifest.txt` (written by python/compile/aot.py).
+//!
+//! Line formats:
+//!   artifact;NAME;FILE;in=a0:f32:8x64,...;out=o0:f32:8x192,...
+//!   golden;NAME;ROLE;INDEX;DTYPE;SHAPE;FILE
+//! '#' starts a comment. Shapes are 'x'-separated dims or 'scalar'.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    F16,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "f16" => Dtype::F16,
+            "i32" => Dtype::I32,
+            _ => bail!("unknown dtype {s:?}"),
+        })
+    }
+
+    pub fn size_bytes(self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::F16 => 2,
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorMeta {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+impl TensorMeta {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(s: &str) -> Result<TensorMeta> {
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.len() != 3 {
+            bail!("bad tensor spec {s:?}");
+        }
+        Ok(TensorMeta {
+            name: parts[0].to_string(),
+            dtype: Dtype::parse(parts[1])?,
+            shape: parse_shape(parts[2])?,
+        })
+    }
+}
+
+fn parse_shape(s: &str) -> Result<Vec<usize>> {
+    if s == "scalar" {
+        return Ok(vec![]);
+    }
+    s.split('x')
+        .map(|d| d.parse::<usize>().context("bad dim"))
+        .collect()
+}
+
+/// One exported HLO graph.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    /// Path to the .hlo.txt file, absolute.
+    pub path: PathBuf,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+}
+
+/// One golden tensor (raw little-endian file) for cross-language tests.
+#[derive(Clone, Debug)]
+pub struct Golden {
+    pub artifact: String,
+    /// "in" or "out".
+    pub role: String,
+    pub index: usize,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+    pub path: PathBuf,
+}
+
+impl Golden {
+    /// Load as f32 (i32 files are refused).
+    pub fn load_f32(&self) -> Result<Vec<f32>> {
+        let bytes = std::fs::read(&self.path)
+            .with_context(|| format!("reading {:?}", self.path))?;
+        match self.dtype {
+            Dtype::F32 => Ok(bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()),
+            _ => bail!("golden {:?} is not f32", self.path),
+        }
+    }
+
+    pub fn load_i32(&self) -> Result<Vec<i32>> {
+        let bytes = std::fs::read(&self.path)?;
+        match self.dtype {
+            Dtype::I32 => Ok(bytes
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()),
+            _ => bail!("golden {:?} is not i32", self.path),
+        }
+    }
+}
+
+/// The parsed artifact index.
+#[derive(Debug, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, Artifact>,
+    pub goldens: Vec<Golden>,
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.txt`; all paths are resolved against `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref();
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("no manifest in {dir:?} — run `make artifacts`"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let mut m = Manifest::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split(';').collect();
+            let ctx = || format!("manifest line {}: {line:?}", lineno + 1);
+            match fields[0] {
+                "artifact" => {
+                    if fields.len() != 5 {
+                        bail!("{}: want 5 fields", ctx());
+                    }
+                    let name = fields[1].to_string();
+                    let inputs = parse_tensor_list(fields[3], "in=")
+                        .with_context(ctx)?;
+                    let outputs = parse_tensor_list(fields[4], "out=")
+                        .with_context(ctx)?;
+                    m.artifacts.insert(
+                        name.clone(),
+                        Artifact {
+                            name,
+                            path: dir.join(fields[2]),
+                            inputs,
+                            outputs,
+                        },
+                    );
+                }
+                "golden" => {
+                    if fields.len() != 7 {
+                        bail!("{}: want 7 fields", ctx());
+                    }
+                    m.goldens.push(Golden {
+                        artifact: fields[1].to_string(),
+                        role: fields[2].to_string(),
+                        index: fields[3].parse().with_context(ctx)?,
+                        dtype: Dtype::parse(fields[4]).with_context(ctx)?,
+                        shape: parse_shape(fields[5]).with_context(ctx)?,
+                        path: dir.join(fields[6]),
+                    });
+                }
+                other => bail!("{}: unknown record {other:?}", ctx()),
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))
+    }
+
+    /// Golden tensors of one artifact, (inputs, outputs), index-ordered.
+    pub fn goldens_for(&self, name: &str) -> (Vec<&Golden>, Vec<&Golden>) {
+        let mut ins: Vec<&Golden> = self
+            .goldens
+            .iter()
+            .filter(|g| g.artifact == name && g.role == "in")
+            .collect();
+        let mut outs: Vec<&Golden> = self
+            .goldens
+            .iter()
+            .filter(|g| g.artifact == name && g.role == "out")
+            .collect();
+        ins.sort_by_key(|g| g.index);
+        outs.sort_by_key(|g| g.index);
+        (ins, outs)
+    }
+}
+
+fn parse_tensor_list(field: &str, prefix: &str) -> Result<Vec<TensorMeta>> {
+    let body = field
+        .strip_prefix(prefix)
+        .with_context(|| format!("field {field:?} missing {prefix:?}"))?;
+    if body.is_empty() {
+        return Ok(vec![]);
+    }
+    body.split(',').map(TensorMeta::parse).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+artifact;tiny_b1_s_pre;tiny_b1_s_pre.hlo.txt;in=a0:f32:1x64,a1:f32:64,a2:f32:64x192;out=o0:f32:1x192
+golden;tiny_b1_s_pre;in;0;f32;1x64;golden/tiny_b1_s_pre.in0.bin
+golden;tiny_b1_s_pre;out;0;f32;1x192;golden/tiny_b1_s_pre.out0.bin
+artifact;tiny_b1_embed;tiny_b1_embed.hlo.txt;in=a0:i32:1,a1:f32:256x64;out=o0:f32:1x64
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/art")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.get("tiny_b1_s_pre").unwrap();
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[2].shape, vec![64, 192]);
+        assert_eq!(a.inputs[2].dtype, Dtype::F32);
+        assert_eq!(a.outputs[0].element_count(), 192);
+        assert_eq!(a.path, Path::new("/art/tiny_b1_s_pre.hlo.txt"));
+        let e = m.get("tiny_b1_embed").unwrap();
+        assert_eq!(e.inputs[0].dtype, Dtype::I32);
+        assert_eq!(e.inputs[0].shape, vec![1]);
+        let (ins, outs) = m.goldens_for("tiny_b1_s_pre");
+        assert_eq!((ins.len(), outs.len()), (1, 1));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("artifact;x;y", Path::new(".")).is_err());
+        assert!(Manifest::parse("bogus;x", Path::new(".")).is_err());
+        assert!(
+            Manifest::parse("artifact;n;f;in=a:zz:1;out=o:f32:1", Path::new("."))
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let m = Manifest::parse(SAMPLE, Path::new(".")).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them from the
+//! Rust hot path.
+//!
+//! `make artifacts` (python, build-time only) writes `artifacts/*.hlo.txt`
+//! plus `manifest.txt`; this module parses the manifest, compiles each
+//! graph once on the PJRT CPU client, and exposes typed `execute` calls.
+//! HLO *text* is the interchange format — xla_extension 0.5.1 rejects
+//! jax≥0.5 serialized protos (see /opt/xla-example/README.md).
+
+mod engine;
+mod manifest;
+mod tensor;
+
+pub use engine::{Engine, Executable};
+pub use manifest::{Artifact, Dtype, Golden, Manifest, TensorMeta};
+pub use tensor::Tensor;

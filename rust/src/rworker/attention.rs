@@ -1,0 +1,533 @@
+//! The mixed-precision attention hot loop (paper §5.1).
+//!
+//! fp16 (or int8/int4) K/V are decoded to fp32 in registers and folded
+//! into an online softmax — a single pass over the cache, no `[S]` score
+//! buffer, no allocation. The paper uses AVX2 `vcvtph2ps`; here the fp16
+//! decode is a 256 KiB LUT (util::f16) and the dot/axpy loops are written
+//! so LLVM auto-vectorizes them (fixed-stride, no bounds checks in the
+//! inner loop via chunks_exact).
+
+use crate::kvcache::SeqKv;
+use crate::model::Precision;
+use crate::util::f16::F16;
+
+/// Reusable per-thread scratch so the hot loop never allocates.
+pub struct AttnScratch {
+    /// fp32 staging for one decoded K/V row.
+    pub row: Vec<f32>,
+    /// fp32 output accumulator, one head at a time.
+    pub acc: Vec<f32>,
+}
+
+impl AttnScratch {
+    pub fn new(head_dim: usize) -> AttnScratch {
+        AttnScratch {
+            row: vec![0.0; head_dim],
+            acc: vec![0.0; head_dim],
+        }
+    }
+}
+
+#[inline(always)]
+fn dot_f16(a: &[f32], b: &[F16]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4 independent accumulators break the FP-add dependency chain so
+    // the loop vectorizes AND pipelines (§Perf: +3.9× over the LUT
+    // decode on this host). to_f32_finite is branchless integer math.
+    let mut acc = [0.0f32; 8];
+    let mut ca = a.chunks_exact(8);
+    let mut cb = b.chunks_exact(8);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for j in 0..8 {
+            acc[j] += xa[j] * xb[j].to_f32_finite();
+        }
+    }
+    let mut tail = 0.0f32;
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += x * y.to_f32_finite();
+    }
+    acc.iter().sum::<f32>() + tail
+}
+
+#[inline(always)]
+fn axpy_f16(alpha: f32, x: &[F16], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    // 8-wide blocks with chunks_exact: bound-check-free and wide enough
+    // for one AVX2 lane per block (indexed 4-unrolling measured SLOWER —
+    // see EXPERIMENTS.md §Perf).
+    let mut cx = x.chunks_exact(8);
+    let mut cy = y.chunks_exact_mut(8);
+    for (xc, yc) in (&mut cx).zip(&mut cy) {
+        for j in 0..8 {
+            yc[j] += alpha * xc[j].to_f32_finite();
+        }
+    }
+    for (xi, yi) in cx.remainder().iter().zip(cy.into_remainder()) {
+        *yi += alpha * xi.to_f32_finite();
+    }
+}
+
+#[inline(always)]
+fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 4];
+    let n4 = a.len() / 4 * 4;
+    for i in (0..n4).step_by(4) {
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut tail = 0.0f32;
+    for i in n4..a.len() {
+        tail += a[i] * b[i];
+    }
+    acc[0] + acc[1] + acc[2] + acc[3] + tail
+}
+
+#[inline(always)]
+fn axpy_f32(alpha: f32, x: &[f32], y: &mut [f32]) {
+    for (xi, yi) in x.iter().zip(y.iter_mut()) {
+        *yi += alpha * xi;
+    }
+}
+
+#[inline(always)]
+fn dot_i8(a: &[f32], b: &[i8]) -> f32 {
+    let mut acc = [0.0f32; 8];
+    let mut ca = a.chunks_exact(8);
+    let mut cb = b.chunks_exact(8);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for j in 0..8 {
+            acc[j] += xa[j] * xb[j] as f32;
+        }
+    }
+    let mut tail = 0.0f32;
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += x * *y as f32;
+    }
+    acc.iter().sum::<f32>() + tail
+}
+
+#[inline(always)]
+fn axpy_i8(alpha: f32, x: &[i8], y: &mut [f32]) {
+    for (xi, yi) in x.iter().zip(y.iter_mut()) {
+        *yi += alpha * *xi as f32;
+    }
+}
+
+/// Decode attention for ONE sequence on one layer: q `[H*D]` against the
+/// sequence's cache (its `len` tokens), output into `o` `[H*D]`.
+/// Dispatches on the cache's storage precision. Zero allocations.
+pub fn attend_one(kv: &SeqKv, q: &[f32], o: &mut [f32], scratch: &mut AttnScratch) {
+    let (h, d) = (kv.n_heads, kv.head_dim);
+    assert_eq!(q.len(), h * d);
+    assert_eq!(o.len(), h * d);
+    assert!(kv.len > 0, "attention over an empty cache");
+    let scale = 1.0 / (d as f32).sqrt();
+
+    match kv.precision() {
+        Precision::F16 => {
+            for head in 0..h {
+                let qh = &q[head * d..(head + 1) * d];
+                let oh = &mut o[head * d..(head + 1) * d];
+                attend_head_f16(
+                    qh,
+                    kv.k16_head(head),
+                    kv.v16_head(head),
+                    kv.len,
+                    d,
+                    scale,
+                    oh,
+                    &mut scratch.acc,
+                );
+            }
+        }
+        Precision::F32 => {
+            for head in 0..h {
+                let qh = &q[head * d..(head + 1) * d];
+                let oh = &mut o[head * d..(head + 1) * d];
+                attend_head_f32(
+                    qh,
+                    kv.k32_head(head),
+                    kv.v32_head(head),
+                    kv.len,
+                    d,
+                    scale,
+                    oh,
+                    &mut scratch.acc,
+                );
+            }
+        }
+        Precision::Int8 => {
+            for head in 0..h {
+                let qh = &q[head * d..(head + 1) * d];
+                let oh = &mut o[head * d..(head + 1) * d];
+                let (krow, kscale) = kv.k8_head(head);
+                let (vrow, vscale) = kv.v8_head(head);
+                attend_head_i8(
+                    qh, krow, kscale, vrow, vscale, kv.len, d, scale, oh,
+                    &mut scratch.acc,
+                );
+            }
+        }
+        Precision::Int4 => {
+            for head in 0..h {
+                let qh = &q[head * d..(head + 1) * d];
+                let oh = &mut o[head * d..(head + 1) * d];
+                let (krow, kscale) = kv.k4_head(head);
+                let (vrow, vscale) = kv.v4_head(head);
+                attend_head_i4(
+                    qh,
+                    krow,
+                    kscale,
+                    vrow,
+                    vscale,
+                    kv.len,
+                    d,
+                    scale,
+                    oh,
+                    &mut scratch.row,
+                    &mut scratch.acc,
+                );
+            }
+        }
+    }
+}
+
+/// f32-cache variant used for exact cross-checks against the HLO oracle.
+pub fn attend_one_f32(kv: &SeqKv, q: &[f32], o: &mut [f32], scratch: &mut AttnScratch) {
+    assert_eq!(kv.precision(), Precision::F32);
+    attend_one(kv, q, o, scratch);
+}
+
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn attend_head_f16(
+    q: &[f32],
+    k: &[F16],
+    v: &[F16],
+    len: usize,
+    d: usize,
+    scale: f32,
+    o: &mut [f32],
+    acc: &mut [f32],
+) {
+    let acc = &mut acc[..d];
+    acc.fill(0.0);
+    let mut m = f32::NEG_INFINITY;
+    let mut l = 0.0f32;
+    for t in 0..len {
+        let krow = &k[t * d..(t + 1) * d];
+        let s = dot_f16(q, krow) * scale;
+        let (p, corr) = online_step(&mut m, s);
+        if corr != 1.0 {
+            for a in acc.iter_mut() {
+                *a *= corr;
+            }
+            l *= corr;
+        }
+        l += p;
+        axpy_f16(p, &v[t * d..(t + 1) * d], acc);
+    }
+    let inv = 1.0 / l;
+    for (oi, a) in o.iter_mut().zip(acc.iter()) {
+        *oi = a * inv;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn attend_head_f32(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    len: usize,
+    d: usize,
+    scale: f32,
+    o: &mut [f32],
+    acc: &mut [f32],
+) {
+    let acc = &mut acc[..d];
+    acc.fill(0.0);
+    let mut m = f32::NEG_INFINITY;
+    let mut l = 0.0f32;
+    for t in 0..len {
+        let s = dot_f32(q, &k[t * d..(t + 1) * d]) * scale;
+        let (p, corr) = online_step(&mut m, s);
+        if corr != 1.0 {
+            for a in acc.iter_mut() {
+                *a *= corr;
+            }
+            l *= corr;
+        }
+        l += p;
+        axpy_f32(p, &v[t * d..(t + 1) * d], acc);
+    }
+    let inv = 1.0 / l;
+    for (oi, a) in o.iter_mut().zip(acc.iter()) {
+        *oi = a * inv;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn attend_head_i8(
+    q: &[f32],
+    k: &[i8],
+    k_scale: &[f32],
+    v: &[i8],
+    v_scale: &[f32],
+    len: usize,
+    d: usize,
+    scale: f32,
+    o: &mut [f32],
+    acc: &mut [f32],
+) {
+    let acc = &mut acc[..d];
+    acc.fill(0.0);
+    let mut m = f32::NEG_INFINITY;
+    let mut l = 0.0f32;
+    for t in 0..len {
+        let s = dot_i8(q, &k[t * d..(t + 1) * d]) * k_scale[t] * scale;
+        let (p, corr) = online_step(&mut m, s);
+        if corr != 1.0 {
+            for a in acc.iter_mut() {
+                *a *= corr;
+            }
+            l *= corr;
+        }
+        l += p;
+        axpy_i8(p * v_scale[t], &v[t * d..(t + 1) * d], acc);
+    }
+    let inv = 1.0 / l;
+    for (oi, a) in o.iter_mut().zip(acc.iter()) {
+        *oi = a * inv;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn attend_head_i4(
+    q: &[f32],
+    k: &[u8],
+    k_scale: &[f32],
+    v: &[u8],
+    v_scale: &[f32],
+    len: usize,
+    d: usize,
+    scale: f32,
+    o: &mut [f32],
+    row: &mut [f32],
+    acc: &mut [f32],
+) {
+    let acc = &mut acc[..d];
+    let row = &mut row[..d];
+    acc.fill(0.0);
+    let mut m = f32::NEG_INFINITY;
+    let mut l = 0.0f32;
+    let pd = d / 2;
+    let _ = row;
+    for t in 0..len {
+        // fused nibble decode + dot: one byte yields two fused
+        // multiply-adds, no staging buffer (§Perf: ~8× over the
+        // dequant-then-dot version)
+        let lut = &*super::super::kvcache::NIBBLE_PAIR_LUT;
+        let krow = &k[t * pd..(t + 1) * pd];
+        let mut s0 = 0.0f32;
+        let mut s1 = 0.0f32;
+        for (j, &byte) in krow.iter().enumerate() {
+            let pair = lut[byte as usize];
+            s0 += q[2 * j] * pair[0];
+            s1 += q[2 * j + 1] * pair[1];
+        }
+        let s = (s0 + s1) * k_scale[t] * scale;
+        let (p, corr) = online_step(&mut m, s);
+        if corr != 1.0 {
+            for a in acc.iter_mut() {
+                *a *= corr;
+            }
+            l *= corr;
+        }
+        l += p;
+        let vrow = &v[t * pd..(t + 1) * pd];
+        let pv = p * v_scale[t];
+        for (j, &byte) in vrow.iter().enumerate() {
+            let pair = lut[byte as usize];
+            acc[2 * j] += pv * pair[0];
+            acc[2 * j + 1] += pv * pair[1];
+        }
+    }
+    let inv = 1.0 / l;
+    for (oi, a) in o.iter_mut().zip(acc.iter()) {
+        *oi = a * inv;
+    }
+}
+
+/// One online-softmax update: given the running max `m` and a new score
+/// `s`, returns (p = e^{s-m'}, correction = e^{m-m'}) and updates `m`.
+#[inline(always)]
+fn online_step(m: &mut f32, s: f32) -> (f32, f32) {
+    if s <= *m {
+        ((s - *m).exp(), 1.0)
+    } else {
+        let corr = (*m - s).exp();
+        *m = s;
+        (1.0, corr)
+    }
+}
+
+/// Measure this machine's effective per-thread KV streaming bandwidth
+/// (bytes/s) with a realistic attention scan. Calibrates the R-Part cost
+/// model (perfmodel) so virtual-clock figures use *measured* CPU numbers.
+pub fn stream_bandwidth_probe(mb: usize) -> f64 {
+    let d = 128;
+    let tokens = mb * 1024 * 1024 / (2 * d * 2); // K+V fp16 rows
+    let mut kv = SeqKv::new(1, d, tokens, Precision::F16);
+    let mut val = vec![0.01f32; d];
+    for _ in 0..tokens {
+        kv.append(&val, &val);
+    }
+    let q = vec![0.5f32; d];
+    let mut o = vec![0.0f32; d];
+    let mut scratch = AttnScratch::new(d);
+    // warm
+    attend_one(&kv, &q, &mut o, &mut scratch);
+    let start = std::time::Instant::now();
+    let reps = 3;
+    for _ in 0..reps {
+        attend_one(&kv, &q, &mut o, &mut scratch);
+        val[0] = o[0]; // keep the result alive
+    }
+    let dt = start.elapsed().as_secs_f64() / reps as f64;
+    let bytes = tokens * 2 * d * 2;
+    bytes as f64 / dt
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Two-pass reference softmax-attention in f64 for one head.
+    fn ref_head(q: &[f32], ks: &[Vec<f32>], vs: &[Vec<f32>]) -> Vec<f32> {
+        let d = q.len();
+        let scale = 1.0 / (d as f64).sqrt();
+        let scores: Vec<f64> = ks
+            .iter()
+            .map(|k| {
+                q.iter()
+                    .zip(k)
+                    .map(|(a, b)| *a as f64 * *b as f64)
+                    .sum::<f64>()
+                    * scale
+            })
+            .collect();
+        let m = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let exps: Vec<f64> = scores.iter().map(|s| (s - m).exp()).collect();
+        let l: f64 = exps.iter().sum();
+        let mut out = vec![0.0f32; d];
+        for (e, v) in exps.iter().zip(vs) {
+            for (o, x) in out.iter_mut().zip(v) {
+                *o += (*e / l) as f32 * *x;
+            }
+        }
+        out
+    }
+
+    fn case(prec: Precision, tol: f32) {
+        let (h, d, len) = (3, 16, 33);
+        let mut rng = Rng::new(11);
+        let mut kv = SeqKv::new(h, d, 64, prec);
+        let mut ks: Vec<Vec<f32>> = Vec::new();
+        let mut vs: Vec<Vec<f32>> = Vec::new();
+        for _ in 0..len {
+            let k = rng.normal_vec(h * d, 0.7);
+            let v = rng.normal_vec(h * d, 0.7);
+            kv.append(&k, &v);
+            ks.push(k);
+            vs.push(v);
+        }
+        let q = rng.normal_vec(h * d, 0.7);
+        let mut o = vec![0.0; h * d];
+        let mut scratch = AttnScratch::new(d);
+        attend_one(&kv, &q, &mut o, &mut scratch);
+
+        for head in 0..h {
+            let sel = |rows: &[Vec<f32>]| -> (Vec<Vec<f32>>, ()) {
+                (
+                    rows.iter()
+                        .map(|r| r[head * d..(head + 1) * d].to_vec())
+                        .collect(),
+                    (),
+                )
+            };
+            let (kh, _) = sel(&ks);
+            let (vh, _) = sel(&vs);
+            let want = ref_head(&q[head * d..(head + 1) * d], &kh, &vh);
+            for (a, b) in o[head * d..(head + 1) * d].iter().zip(&want) {
+                assert!(
+                    (a - b).abs() <= tol,
+                    "{prec:?} head {head}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn f32_matches_reference() {
+        case(Precision::F32, 2e-5);
+    }
+
+    #[test]
+    fn f16_matches_reference() {
+        // fp16 storage error propagates through exp(); generous bound.
+        case(Precision::F16, 6e-3);
+    }
+
+    #[test]
+    fn int8_close_to_reference() {
+        case(Precision::Int8, 6e-2);
+    }
+
+    #[test]
+    fn int4_coarse_but_sane() {
+        case(Precision::Int4, 0.6);
+    }
+
+    #[test]
+    fn single_token_returns_v() {
+        let d = 8;
+        let mut kv = SeqKv::new(1, d, 4, Precision::F32);
+        let k: Vec<f32> = (0..d).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..d).map(|i| 10.0 + i as f32).collect();
+        kv.append(&k, &v);
+        let q = vec![1.0; d];
+        let mut o = vec![0.0; d];
+        attend_one(&kv, &q, &mut o, &mut AttnScratch::new(d));
+        for (a, b) in o.iter().zip(&v) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn online_softmax_handles_huge_scores() {
+        // No overflow even when scores span a huge range.
+        let d = 4;
+        let mut kv = SeqKv::new(1, d, 4, Precision::F32);
+        kv.append(&vec![100.0; d], &vec![1.0; d]);
+        kv.append(&vec![-100.0; d], &vec![2.0; d]);
+        kv.append(&vec![200.0; d], &vec![3.0; d]);
+        let q = vec![5.0; d];
+        let mut o = vec![0.0; d];
+        attend_one(&kv, &q, &mut o, &mut AttnScratch::new(d));
+        // dominated by the largest-score token (k=200 → v=3)
+        assert!(o.iter().all(|x| (x - 3.0).abs() < 1e-3), "{o:?}");
+    }
+
+    #[test]
+    fn probe_returns_positive_bandwidth() {
+        // debug builds are ~30× slower than --release; only sanity-check
+        let bw = stream_bandwidth_probe(2);
+        assert!(bw > 1e7, "absurdly low bandwidth {bw}"); // >10 MB/s
+    }
+}

@@ -1,0 +1,17 @@
+//! R-workers: CPU attention near the KV-cache (paper §4.1, §5.1).
+//!
+//! An R-worker ("socket") owns the KV-cache of its assigned sequences
+//! and, per generated token, receives Q/K/V activation vectors, appends
+//! K/V, computes the attention output O, and sends it back — no model
+//! parameters involved. `attention` is the pure hot path; `worker` wraps
+//! it in a thread + channels; `pool` fans a batch out across sockets.
+
+mod attention;
+mod pool;
+mod worker;
+
+pub use attention::{
+    attend_one, attend_one_f32, stream_bandwidth_probe, AttnScratch,
+};
+pub use pool::{RPool, RPoolConfig};
+pub use worker::{RRequest, RResponse, RWorker, SeqTask};

@@ -1,0 +1,280 @@
+//! The R-worker pool: 𝒫 sockets plus sequence→socket placement
+//! (paper §4.1 "different parts of them related to different sequences
+//! are sent to the R-workers").
+//!
+//! Placement is round-robin at sequence granularity — R-Part has no
+//! cross-sequence interaction, so any balanced assignment is work-
+//! preserving; round-robin keeps per-socket total sequence length
+//! balanced when combined with the SLS schedule (sequences of mixed ages
+//! land on every socket).
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use crate::model::{ModelSpec, Precision};
+
+use super::worker::{RRequest, RResponse, RWorker, SeqTask};
+
+#[derive(Clone, Copy, Debug)]
+pub struct RPoolConfig {
+    pub sockets: usize,
+    pub capacity_per_seq: usize,
+    pub precision: Precision,
+}
+
+impl Default for RPoolConfig {
+    fn default() -> Self {
+        RPoolConfig {
+            sockets: 2,
+            capacity_per_seq: 2048,
+            precision: Precision::F16,
+        }
+    }
+}
+
+/// Outputs of one pooled attend call.
+pub struct PoolStep {
+    /// seq_id → attention output `[H*D]`.
+    pub outputs: HashMap<u64, Vec<f32>>,
+    /// Max busy time across sockets (the pipeline-visible R latency).
+    pub max_busy: Duration,
+    /// Sum of busy times (for utilization accounting).
+    pub total_busy: Duration,
+}
+
+pub struct RPool {
+    workers: Vec<RWorker>,
+    placement: HashMap<u64, usize>,
+    next_socket: usize,
+}
+
+impl RPool {
+    pub fn spawn(spec: &ModelSpec, cfg: RPoolConfig) -> RPool {
+        assert!(cfg.sockets > 0);
+        let workers = (0..cfg.sockets)
+            .map(|i| {
+                RWorker::spawn(
+                    i,
+                    spec.n_heads,
+                    spec.head_dim(),
+                    spec.n_layers,
+                    cfg.capacity_per_seq,
+                    cfg.precision,
+                )
+            })
+            .collect();
+        RPool {
+            workers,
+            placement: HashMap::new(),
+            next_socket: 0,
+        }
+    }
+
+    pub fn sockets(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn socket_of(&self, seq_id: u64) -> Option<usize> {
+        self.placement.get(&seq_id).copied()
+    }
+
+    /// Place and register new sequences (round-robin).
+    pub fn add_seqs(&mut self, seq_ids: &[u64]) {
+        let mut per_socket: Vec<Vec<u64>> = vec![vec![]; self.workers.len()];
+        for &id in seq_ids {
+            assert!(
+                !self.placement.contains_key(&id),
+                "sequence {id} already placed"
+            );
+            let s = self.next_socket;
+            self.next_socket = (self.next_socket + 1) % self.workers.len();
+            self.placement.insert(id, s);
+            per_socket[s].push(id);
+        }
+        for (s, ids) in per_socket.into_iter().enumerate() {
+            if !ids.is_empty() {
+                self.workers[s].submit(RRequest::AddSeqs(ids));
+            } else {
+                continue;
+            }
+            match self.workers[s].recv() {
+                RResponse::Ack => {}
+                _ => panic!("expected ack from socket {s}"),
+            }
+        }
+    }
+
+    /// Drop finished sequences and free their cache.
+    pub fn drop_seqs(&mut self, seq_ids: &[u64]) {
+        let mut per_socket: Vec<Vec<u64>> = vec![vec![]; self.workers.len()];
+        for &id in seq_ids {
+            if let Some(s) = self.placement.remove(&id) {
+                per_socket[s].push(id);
+            }
+        }
+        for (s, ids) in per_socket.into_iter().enumerate() {
+            if ids.is_empty() {
+                continue;
+            }
+            self.workers[s].submit(RRequest::DropSeqs(ids));
+            match self.workers[s].recv() {
+                RResponse::Ack => {}
+                _ => panic!("expected ack from socket {s}"),
+            }
+        }
+    }
+
+    /// Scatter one layer's tasks to sockets, attend in parallel, gather.
+    ///
+    /// All sockets compute concurrently; the returned `max_busy` is what
+    /// the token-level pipeline sees as R-Part latency (Fig 15's
+    /// "performance variance across nodes makes some workers wait").
+    pub fn attend(&mut self, layer: usize, tasks: Vec<SeqTask>) -> PoolStep {
+        let n = tasks.len();
+        let mut per_socket: Vec<Vec<SeqTask>> =
+            (0..self.workers.len()).map(|_| Vec::new()).collect();
+        for task in tasks {
+            let s = *self
+                .placement
+                .get(&task.seq_id)
+                .unwrap_or_else(|| panic!("sequence {} not placed", task.seq_id));
+            per_socket[s].push(task);
+        }
+        let mut active = Vec::new();
+        for (s, tasks) in per_socket.into_iter().enumerate() {
+            if !tasks.is_empty() {
+                self.workers[s].submit(RRequest::Attend { layer, tasks });
+                active.push(s);
+            }
+        }
+        let mut outputs = HashMap::with_capacity(n);
+        let mut max_busy = Duration::ZERO;
+        let mut total_busy = Duration::ZERO;
+        for s in active {
+            match self.workers[s].recv() {
+                RResponse::Outputs { outs, busy } => {
+                    max_busy = max_busy.max(busy);
+                    total_busy += busy;
+                    for (id, o) in outs {
+                        outputs.insert(id, o);
+                    }
+                }
+                _ => panic!("expected outputs from socket {s}"),
+            }
+        }
+        PoolStep {
+            outputs,
+            max_busy,
+            total_busy,
+        }
+    }
+
+    /// Aggregate cache statistics across sockets.
+    pub fn stats(&self) -> Vec<crate::kvcache::CacheStats> {
+        let mut all = Vec::new();
+        for w in &self.workers {
+            w.submit(RRequest::Stats);
+            match w.recv() {
+                RResponse::Stats(st) => all.push(st),
+                _ => panic!("expected stats"),
+            }
+        }
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::TINY;
+    use crate::util::Rng;
+
+    fn mk_task(rng: &mut Rng, id: u64, n: usize) -> SeqTask {
+        SeqTask {
+            seq_id: id,
+            q: rng.normal_vec(n, 1.0),
+            k_new: rng.normal_vec(n, 1.0),
+            v_new: rng.normal_vec(n, 1.0),
+        }
+    }
+
+    #[test]
+    fn round_robin_placement_balances() {
+        let mut pool = RPool::spawn(
+            &TINY,
+            RPoolConfig {
+                sockets: 3,
+                capacity_per_seq: 8,
+                precision: Precision::F32,
+            },
+        );
+        pool.add_seqs(&[0, 1, 2, 3, 4, 5]);
+        let mut counts = [0usize; 3];
+        for id in 0..6u64 {
+            counts[pool.socket_of(id).unwrap()] += 1;
+        }
+        assert_eq!(counts, [2, 2, 2]);
+    }
+
+    #[test]
+    fn scatter_gather_matches_single_socket() {
+        // Same tasks through 1 socket and 3 sockets must agree exactly.
+        let n = TINY.hidden;
+        let run = |sockets: usize| {
+            let mut pool = RPool::spawn(
+                &TINY,
+                RPoolConfig {
+                    sockets,
+                    capacity_per_seq: 8,
+                    precision: Precision::F32,
+                },
+            );
+            let ids: Vec<u64> = (0..5).collect();
+            pool.add_seqs(&ids);
+            let mut rng = Rng::new(42);
+            let mut last = HashMap::new();
+            for _ in 0..3 {
+                let tasks: Vec<SeqTask> =
+                    ids.iter().map(|&i| mk_task(&mut rng, i, n)).collect();
+                last = pool.attend(0, tasks).outputs;
+            }
+            last
+        };
+        let one = run(1);
+        let three = run(3);
+        assert_eq!(one.len(), three.len());
+        for (id, o1) in &one {
+            let o3 = &three[id];
+            for (a, b) in o1.iter().zip(o3) {
+                assert_eq!(a, b, "seq {id} diverged across pool sizes");
+            }
+        }
+    }
+
+    #[test]
+    fn drop_frees_cache() {
+        let mut pool = RPool::spawn(
+            &TINY,
+            RPoolConfig {
+                sockets: 2,
+                capacity_per_seq: 8,
+                precision: Precision::F16,
+            },
+        );
+        pool.add_seqs(&[1, 2, 3, 4]);
+        let before: usize = pool.stats().iter().map(|s| s.sequences).sum();
+        assert_eq!(before, 4);
+        pool.drop_seqs(&[2, 3]);
+        let after: usize = pool.stats().iter().map(|s| s.sequences).sum();
+        assert_eq!(after, 2);
+        assert_eq!(pool.socket_of(2), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "not placed")]
+    fn attend_unplaced_panics() {
+        let mut pool = RPool::spawn(&TINY, RPoolConfig::default());
+        let mut rng = Rng::new(1);
+        pool.attend(0, vec![mk_task(&mut rng, 99, TINY.hidden)]);
+    }
+}

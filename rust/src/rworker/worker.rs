@@ -1,0 +1,245 @@
+//! One R-worker socket: a thread owning a SocketCache, serving
+//! append+attend requests over channels (paper §4.1's R-worker loop).
+
+use std::thread::JoinHandle;
+
+use crate::kvcache::{CacheStats, SocketCache};
+use crate::model::Precision;
+use crate::util::chan::{bounded, Receiver, Sender};
+
+use super::attention::{attend_one, AttnScratch};
+
+/// Per-sequence work item within one step: the activation vectors of the
+/// newest token (the only data FastDecode ships across the interconnect).
+pub struct SeqTask {
+    pub seq_id: u64,
+    /// `[H*D]` each, head-major.
+    pub q: Vec<f32>,
+    pub k_new: Vec<f32>,
+    pub v_new: Vec<f32>,
+}
+
+/// A request to one socket.
+pub enum RRequest {
+    /// Register sequences before first use.
+    AddSeqs(Vec<u64>),
+    /// Drop finished sequences.
+    DropSeqs(Vec<u64>),
+    /// Append K/V and compute attention for one layer of one micro-batch.
+    Attend { layer: usize, tasks: Vec<SeqTask> },
+    /// Report cache statistics.
+    Stats,
+    Shutdown,
+}
+
+/// Socket → coordinator reply.
+pub enum RResponse {
+    /// Outputs in task order: (seq_id, o `[H*D]`), plus busy time spent.
+    Outputs {
+        outs: Vec<(u64, Vec<f32>)>,
+        busy: std::time::Duration,
+    },
+    Stats(CacheStats),
+    Ack,
+}
+
+/// Handle to a spawned R-worker socket thread.
+pub struct RWorker {
+    pub socket_id: usize,
+    tx: Sender<RRequest>,
+    rx: Receiver<RResponse>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl RWorker {
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn(
+        socket_id: usize,
+        n_heads: usize,
+        head_dim: usize,
+        n_layers: usize,
+        capacity_per_seq: usize,
+        prec: Precision,
+    ) -> RWorker {
+        let (req_tx, req_rx) = bounded::<RRequest>(4);
+        let (resp_tx, resp_rx) = bounded::<RResponse>(4);
+        let handle = std::thread::Builder::new()
+            .name(format!("rworker-{socket_id}"))
+            .spawn(move || {
+                run_loop(
+                    req_rx,
+                    resp_tx,
+                    SocketCache::new(
+                        n_heads,
+                        head_dim,
+                        n_layers,
+                        capacity_per_seq,
+                        prec,
+                    ),
+                    head_dim,
+                )
+            })
+            .expect("spawning rworker thread");
+        RWorker {
+            socket_id,
+            tx: req_tx,
+            rx: resp_rx,
+            handle: Some(handle),
+        }
+    }
+
+    /// Fire a request (does not wait for the reply).
+    pub fn submit(&self, req: RRequest) {
+        if self.tx.send(req).is_err() {
+            panic!("rworker thread died");
+        }
+    }
+
+    /// Wait for the next reply.
+    pub fn recv(&self) -> RResponse {
+        self.rx.recv().expect("rworker thread died")
+    }
+}
+
+impl Drop for RWorker {
+    fn drop(&mut self) {
+        let _ = self.tx.send(RRequest::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn run_loop(
+    rx: Receiver<RRequest>,
+    tx: Sender<RResponse>,
+    mut cache: SocketCache,
+    head_dim: usize,
+) {
+    let mut scratch = AttnScratch::new(head_dim);
+    while let Ok(req) = rx.recv() {
+        match req {
+            RRequest::AddSeqs(ids) => {
+                for id in ids {
+                    cache.add_seq(id);
+                }
+                let _ = tx.send(RResponse::Ack);
+            }
+            RRequest::DropSeqs(ids) => {
+                for id in ids {
+                    cache.drop_seq(id);
+                }
+                let _ = tx.send(RResponse::Ack);
+            }
+            RRequest::Attend { layer, tasks } => {
+                let start = std::time::Instant::now();
+                let mut outs = Vec::with_capacity(tasks.len());
+                for task in &tasks {
+                    let kv = cache.get_mut(task.seq_id, layer);
+                    kv.append(&task.k_new, &task.v_new);
+                    let mut o = vec![0.0f32; task.q.len()];
+                    attend_one(kv, &task.q, &mut o, &mut scratch);
+                    outs.push((task.seq_id, o));
+                }
+                let busy = start.elapsed();
+                if tx.send(RResponse::Outputs { outs, busy }).is_err() {
+                    return;
+                }
+            }
+            RRequest::Stats => {
+                let _ = tx.send(RResponse::Stats(cache.stats()));
+            }
+            RRequest::Shutdown => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn worker_appends_and_attends() {
+        let (h, d) = (2, 4);
+        let w = RWorker::spawn(0, h, d, 1, 16, Precision::F32);
+        w.submit(RRequest::AddSeqs(vec![1, 2]));
+        assert!(matches!(w.recv(), RResponse::Ack));
+
+        let mut rng = Rng::new(3);
+        let mk = |rng: &mut Rng, id| SeqTask {
+            seq_id: id,
+            q: rng.normal_vec(h * d, 1.0),
+            k_new: rng.normal_vec(h * d, 1.0),
+            v_new: rng.normal_vec(h * d, 1.0),
+        };
+        let t1 = mk(&mut rng, 1);
+        let v1 = t1.v_new.clone();
+        w.submit(RRequest::Attend {
+            layer: 0,
+            tasks: vec![t1, mk(&mut rng, 2)],
+        });
+        match w.recv() {
+            RResponse::Outputs { outs, .. } => {
+                assert_eq!(outs.len(), 2);
+                assert_eq!(outs[0].0, 1);
+                // first token ⇒ o == v_new exactly (f32 cache)
+                for (a, b) in outs[0].1.iter().zip(&v1) {
+                    assert!((a - b).abs() < 1e-6);
+                }
+            }
+            _ => panic!("expected outputs"),
+        }
+
+        w.submit(RRequest::Stats);
+        match w.recv() {
+            RResponse::Stats(st) => {
+                assert_eq!(st.sequences, 2);
+                assert_eq!(st.total_tokens, 2);
+            }
+            _ => panic!("expected stats"),
+        }
+
+        w.submit(RRequest::DropSeqs(vec![1]));
+        assert!(matches!(w.recv(), RResponse::Ack));
+        w.submit(RRequest::Stats);
+        match w.recv() {
+            RResponse::Stats(st) => assert_eq!(st.sequences, 1),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn growing_sequence_is_consistent() {
+        let (h, d) = (1, 8);
+        let w = RWorker::spawn(0, h, d, 2, 32, Precision::F16);
+        w.submit(RRequest::AddSeqs(vec![7]));
+        w.recv();
+        let mut rng = Rng::new(4);
+        for step in 0..10 {
+            for layer in 0..2 {
+                w.submit(RRequest::Attend {
+                    layer,
+                    tasks: vec![SeqTask {
+                        seq_id: 7,
+                        q: rng.normal_vec(h * d, 1.0),
+                        k_new: rng.normal_vec(h * d, 1.0),
+                        v_new: rng.normal_vec(h * d, 1.0),
+                    }],
+                });
+                match w.recv() {
+                    RResponse::Outputs { outs, .. } => {
+                        assert!(outs[0].1.iter().all(|x| x.is_finite()),
+                            "step {step}");
+                    }
+                    _ => panic!(),
+                }
+            }
+        }
+        w.submit(RRequest::Stats);
+        match w.recv() {
+            RResponse::Stats(st) => assert_eq!(st.total_tokens, 20),
+            _ => panic!(),
+        }
+    }
+}

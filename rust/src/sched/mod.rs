@@ -1,0 +1,11 @@
+//! Scheduling: the token-level two-stage pipeline (§4.1, Fig 5), the
+//! sequence-level load-stabilizing schedule (SLS, §4.2, Fig 7, eqs. 5–6)
+//! and the generalized load-control Algorithm 1.
+
+mod loadctl;
+mod pipeline;
+mod sls;
+
+pub use loadctl::{LoadControl, MicroBatch};
+pub use pipeline::{pipeline_step_latency, PipelineSim};
+pub use sls::SlsSchedule;

@@ -1,0 +1,165 @@
+//! The token-level two-stage pipeline (§4.1, Fig 5).
+//!
+//! The S-worker and the R-workers process two mini-batches in turns:
+//! while the S-worker runs S-Part of mini-batch B, the R-workers run
+//! R-Part of mini-batch A. With per-stage latencies `s` and `r`, one
+//! pipelined step of one mini-batch costs `max(s, r)` in steady state
+//! (plus exposed start/drain overhead); without pipelining it costs
+//! `s + r` (Fig 5a vs 5b).
+
+use crate::metrics::{StepRecord, StepTrace};
+
+/// Effective latency of one step of one mini-batch.
+///
+/// `sync_comm=false` overlaps activation transfer with compute (the
+/// production mode); `true` exposes it (the Fig 15 profiling mode).
+/// `overlap_eff` ∈ [0,1] models how much of the faster stage actually
+/// hides under the slower one: 1.0 is a perfect pipeline; the paper's
+/// Fig 15 trace (S-worker busy <50 %, workers waiting on stragglers)
+/// calibrates the default to 0.7.
+pub fn pipeline_step_latency(
+    s_time: f64,
+    r_time: f64,
+    comm_time: f64,
+    pipelined: bool,
+    sync_comm: bool,
+    overlap_eff: f64,
+) -> f64 {
+    let comm = if sync_comm { comm_time } else { 0.0 };
+    if pipelined {
+        // two mini-batches in flight: the slower stage paces the system,
+        // plus the un-overlapped remainder of the faster one
+        let (hi, lo) = if s_time >= r_time + comm {
+            (s_time, r_time + comm)
+        } else {
+            (r_time + comm, s_time)
+        };
+        hi + (1.0 - overlap_eff.clamp(0.0, 1.0)) * lo
+    } else {
+        s_time + r_time + comm_time
+    }
+}
+
+/// A virtual-clock simulator of a whole generation run: per step it takes
+/// the caller-supplied stage latencies and produces the per-step trace
+/// (the engine behind Figs 8, 11, 12 and the baseline curves).
+pub struct PipelineSim {
+    pub pipelined: bool,
+    pub sync_comm: bool,
+    /// Fixed per-step scheduling overhead (batch (re)assembly etc.).
+    pub overhead_s: f64,
+    /// Fraction of the faster stage hidden under the slower (see
+    /// [`pipeline_step_latency`]).
+    pub overlap_eff: f64,
+}
+
+impl Default for PipelineSim {
+    fn default() -> Self {
+        PipelineSim {
+            pipelined: true,
+            sync_comm: false,
+            overhead_s: 100e-6,
+            overlap_eff: 0.7,
+        }
+    }
+}
+
+impl PipelineSim {
+    /// Run `steps` steps; `stage(step)` returns
+    /// (s_time, r_time, comm_time, tokens, total_ctx) for that step.
+    pub fn run<F>(&self, steps: usize, mut stage: F) -> StepTrace
+    where
+        F: FnMut(usize) -> (f64, f64, f64, usize, usize),
+    {
+        let mut trace = StepTrace::default();
+        for step in 0..steps {
+            let (s, r, c, tokens, ctx) = stage(step);
+            if tokens == 0 {
+                continue;
+            }
+            let lat = pipeline_step_latency(
+                s,
+                r,
+                c,
+                self.pipelined,
+                self.sync_comm,
+                self.overlap_eff,
+            ) + self.overhead_s;
+            trace.push(StepRecord {
+                step,
+                latency_s: lat,
+                s_time: s,
+                r_time: r,
+                comm_time: c,
+                tokens,
+                total_ctx: ctx,
+            });
+        }
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_pipeline_is_max_of_stages() {
+        assert_eq!(pipeline_step_latency(3.0, 5.0, 0.0, true, false, 1.0), 5.0);
+        assert_eq!(pipeline_step_latency(5.0, 3.0, 0.0, true, false, 1.0), 5.0);
+    }
+
+    #[test]
+    fn imperfect_overlap_exposes_remainder() {
+        let l = pipeline_step_latency(4.0, 6.0, 0.0, true, false, 0.7);
+        assert!((l - (6.0 + 0.3 * 4.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unpipelined_is_sum() {
+        assert_eq!(pipeline_step_latency(3.0, 5.0, 1.0, false, false, 1.0), 9.0);
+    }
+
+    #[test]
+    fn sync_comm_extends_r_stage() {
+        let a = pipeline_step_latency(6.0, 5.0, 2.0, true, true, 1.0);
+        assert_eq!(a, 7.0); // r + comm exceeds s
+        let b = pipeline_step_latency(6.0, 5.0, 2.0, true, false, 1.0);
+        assert_eq!(b, 6.0); // overlapped
+    }
+
+    /// Fig 6's area argument: pipelining saves (s+r−max)/step; with
+    /// balanced stages and perfect overlap the saving is ~50 % of serial
+    /// time.
+    #[test]
+    fn balanced_pipeline_halves_serial_time() {
+        let sim_p = PipelineSim {
+            overhead_s: 0.0,
+            overlap_eff: 1.0,
+            ..Default::default()
+        };
+        let sim_s = PipelineSim {
+            pipelined: false,
+            overhead_s: 0.0,
+            overlap_eff: 1.0,
+            ..Default::default()
+        };
+        let stage = |_: usize| (1.0, 1.0, 0.0, 1, 0);
+        let tp = sim_p.run(10, stage).total_time();
+        let ts = sim_s.run(10, stage).total_time();
+        assert!((tp / ts - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_token_steps_are_skipped() {
+        let sim = PipelineSim::default();
+        let trace = sim.run(5, |s| {
+            if s % 2 == 0 {
+                (1.0, 1.0, 0.0, 1, 1)
+            } else {
+                (0.0, 0.0, 0.0, 0, 0)
+            }
+        });
+        assert_eq!(trace.len(), 3);
+    }
+}

@@ -1,0 +1,192 @@
+//! The sequence-level load-stabilizing schedule (§4.2).
+//!
+//! Instead of starting ℬ sequences of target length 𝒮 together (peak
+//! R-Part load W_max = ℬ·𝒮 at the last step), start micro-batches of
+//! M = ℬ·F/𝒮 sequences every F steps (eq. 5). In steady state sequences
+//! of every age coexist and the aggregate context length stays near
+//! W'_max = ℬ·(𝒮+F)/2 ≈ W_max/2 (eq. 6).
+
+/// Static parameters of one SLS configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SlsSchedule {
+    /// Total concurrent batch size ℬ.
+    pub batch: usize,
+    /// Target generated length 𝒮 (steps per sequence).
+    pub seq_len: usize,
+    /// Micro-batch start interval F (steps).
+    pub interval: usize,
+}
+
+impl SlsSchedule {
+    pub fn new(batch: usize, seq_len: usize, interval: usize) -> SlsSchedule {
+        assert!(batch > 0 && seq_len > 0 && interval > 0);
+        assert!(
+            interval <= seq_len,
+            "interval F={interval} must not exceed S={seq_len}"
+        );
+        SlsSchedule {
+            batch,
+            seq_len,
+            interval,
+        }
+    }
+
+    /// eq. 5: micro-batch size M = ℬ·F/𝒮 (≥1).
+    pub fn micro_batch_size(&self) -> usize {
+        ((self.batch * self.interval) as f64 / self.seq_len as f64).round()
+            as usize
+    }
+
+    /// Number of micro-batches concurrently alive in steady state.
+    pub fn concurrent_micro_batches(&self) -> usize {
+        self.seq_len.div_ceil(self.interval)
+    }
+
+    /// Peak aggregate context if all ℬ start together (no SLS).
+    pub fn w_max_naive(&self) -> usize {
+        self.batch * self.seq_len
+    }
+
+    /// eq. 6: steady-state peak aggregate context under SLS,
+    /// W'_max = Σ_{k=1..S/F} M·k·F = ℬ(𝒮+F)/2.
+    pub fn w_max_sls(&self) -> usize {
+        self.batch * (self.seq_len + self.interval) / 2
+    }
+
+    /// Aggregate context processed at `step` when all ℬ sequences start
+    /// together at step 0 (each token attends to its full prefix,
+    /// 1-based).
+    pub fn naive_load_at(&self, step: usize) -> usize {
+        if step < self.seq_len {
+            self.batch * (step + 1)
+        } else {
+            0 // generation finished
+        }
+    }
+
+    /// Aggregate context at `step` under SLS (cold start included):
+    /// sum over alive micro-batches of M · age.
+    pub fn sls_load_at(&self, step: usize) -> usize {
+        let m = self.micro_batch_size();
+        let mut total = 0;
+        // micro-batch j starts at step j·F and lives S steps
+        let mut j = 0usize;
+        loop {
+            let start = j * self.interval;
+            if start > step {
+                break;
+            }
+            let age = step - start + 1;
+            if age <= self.seq_len {
+                total += m * age;
+            }
+            j += 1;
+        }
+        total
+    }
+
+    /// Worst-case queueing delay for an incoming request (paper: S steps
+    /// without SLS, F steps with).
+    pub fn max_admission_delay(&self, sls: bool) -> usize {
+        if sls {
+            self.interval
+        } else {
+            self.seq_len
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn eq5_micro_batch_size() {
+        // Fig 7's example: B=6, S=12?, F such that M=2... and the paper's
+        // real cases: B=1024, S=1024, F=32 → M=32.
+        let s = SlsSchedule::new(1024, 1024, 32);
+        assert_eq!(s.micro_batch_size(), 32);
+        assert_eq!(s.concurrent_micro_batches(), 32);
+    }
+
+    #[test]
+    fn eq6_half_peak() {
+        let s = SlsSchedule::new(1024, 1024, 32);
+        let naive = s.w_max_naive();
+        let sls = s.w_max_sls();
+        let ratio = sls as f64 / naive as f64;
+        // (S+F)/2S = 0.516 for S=1024, F=32
+        assert!((ratio - 0.516).abs() < 0.01, "ratio {ratio}");
+    }
+
+    /// Fig 7's worked example: micro size 2, interval... B=6, S=6?, the
+    /// paper: "size of the micro-batch is 2 ... total load 24 vs 36,
+    /// 1/3 reduction" with S=3F.
+    #[test]
+    fn fig7_worked_example() {
+        // S = 3F: F=2, S=6, B=6 → M = 2
+        let s = SlsSchedule::new(6, 6, 2);
+        assert_eq!(s.micro_batch_size(), 2);
+        assert_eq!(s.w_max_naive(), 36);
+        // W'max = B(S+F)/2 = 6·8/2 = 24 → 2/3 of naive
+        assert_eq!(s.w_max_sls(), 24);
+    }
+
+    #[test]
+    fn steady_state_load_matches_eq6() {
+        let s = SlsSchedule::new(240, 120, 10);
+        // after cold start (step ≥ S), load oscillates around W'max
+        let w = s.w_max_sls();
+        for step in 120..240 {
+            let l = s.sls_load_at(step);
+            assert!(
+                (l as f64 - w as f64).abs() / w as f64 <= 0.15,
+                "step {step}: load {l} vs W'max {w}"
+            );
+        }
+    }
+
+    #[test]
+    fn naive_load_grows_linearly() {
+        let s = SlsSchedule::new(8, 100, 10);
+        assert_eq!(s.naive_load_at(0), 8);
+        assert_eq!(s.naive_load_at(49), 8 * 50);
+        assert_eq!(s.naive_load_at(99), 800);
+    }
+
+    #[test]
+    fn sls_peak_never_exceeds_model_bound() {
+        prop::check("sls-peak-bound", 100, |g| {
+            let seq = g.usize_in(16, 512);
+            let interval = g.usize_in(1, seq / 4 + 1);
+            let batch = g.usize_in(interval.max(4), 2048);
+            let s = SlsSchedule::new(batch, seq, interval);
+            let m = s.micro_batch_size();
+            if m == 0 {
+                return; // degenerate: B·F < S/2 → no stable micro-batch
+            }
+            // true peak over a long horizon
+            let mut peak = 0;
+            for step in 0..3 * seq {
+                peak = peak.max(s.sls_load_at(step));
+            }
+            // peak ≈ M·F·(1+2+..+S/F) — within rounding of eq. 6's bound
+            let bound = (s.w_max_sls() as f64 * 1.25 + (m * seq) as f64) as usize;
+            assert!(peak <= bound, "peak {peak} > bound {bound} (M={m})");
+        });
+    }
+
+    #[test]
+    fn admission_delay_claim() {
+        let s = SlsSchedule::new(1024, 1024, 32);
+        assert_eq!(s.max_admission_delay(false), 1024);
+        assert_eq!(s.max_admission_delay(true), 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "must not exceed")]
+    fn interval_longer_than_seq_panics() {
+        SlsSchedule::new(8, 10, 20);
+    }
+}

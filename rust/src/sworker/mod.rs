@@ -1,0 +1,15 @@
+//! The S-worker: executes S-Part (shared-parameter matmuls) of every
+//! layer (paper §4.1). Two implementations:
+//!
+//! * [`PjrtSWorker`] — real numerics: runs the AOT-compiled HLO graphs
+//!   (embed, s_pre, s_post, logits) on the PJRT CPU client. Used by the
+//!   end-to-end example and cross-language tests.
+//! * Modeled S-workers live in `perfmodel::GpuModel` and are consumed by
+//!   the virtual-clock simulator (`coordinator::sim`) for figure-scale
+//!   batch sizes.
+
+mod weights;
+mod worker;
+
+pub use weights::{BlockWeights, ModelWeights};
+pub use worker::PjrtSWorker;

@@ -1,0 +1,111 @@
+//! Synthetic model weights, generated in Rust (DESIGN.md §2: random
+//! weights at the true dims stand in for proprietary checkpoints; the
+//! golden-file tests pin numerics against the Python-generated weights
+//! instead).
+
+use crate::model::ModelSpec;
+use crate::runtime::Tensor;
+use crate::util::Rng;
+
+/// One transformer block's weights, shaped for the exported HLO graphs.
+#[derive(Clone)]
+pub struct BlockWeights {
+    pub ln1: Tensor,    // [h]
+    pub wqkv: Tensor,   // [h, 3h]
+    pub wo: Tensor,     // [h, h]
+    pub ln2: Tensor,    // [h]
+    pub w_gate: Tensor, // [h, f]
+    pub w_up: Tensor,   // [h, f]
+    pub w_down: Tensor, // [f, h]
+}
+
+impl BlockWeights {
+    pub fn random(spec: &ModelSpec, rng: &mut Rng) -> BlockWeights {
+        let h = spec.hidden;
+        let f = spec.ffn;
+        let s = 1.0 / (h as f32).sqrt();
+        let sf = 1.0 / (f as f32).sqrt();
+        BlockWeights {
+            ln1: Tensor::f32(&[h], vec![1.0; h]),
+            wqkv: Tensor::f32(&[h, 3 * h], rng.normal_vec(h * 3 * h, s)),
+            wo: Tensor::f32(&[h, h], rng.normal_vec(h * h, s)),
+            ln2: Tensor::f32(&[h], vec![1.0; h]),
+            w_gate: Tensor::f32(&[h, f], rng.normal_vec(h * f, s)),
+            w_up: Tensor::f32(&[h, f], rng.normal_vec(h * f, s)),
+            w_down: Tensor::f32(&[f, h], rng.normal_vec(f * h, sf)),
+        }
+    }
+}
+
+/// Full-model weights: `layers` blocks plus embedding and final norm.
+#[derive(Clone)]
+pub struct ModelWeights {
+    pub spec: ModelSpec,
+    pub blocks: Vec<BlockWeights>,
+    pub w_emb: Tensor, // [vocab, h]
+    pub ln_f: Tensor,  // [h]
+}
+
+impl ModelWeights {
+    /// Deterministic synthetic weights with `layers` instantiated blocks.
+    pub fn random(spec: ModelSpec, layers: usize, seed: u64) -> ModelWeights {
+        let mut rng = Rng::new(seed);
+        let h = spec.hidden;
+        let blocks = (0..layers)
+            .map(|_| BlockWeights::random(&spec, &mut rng))
+            .collect();
+        let w_emb = Tensor::f32(
+            &[spec.vocab, h],
+            rng.normal_vec(spec.vocab * h, 1.0 / (h as f32).sqrt()),
+        );
+        ModelWeights {
+            spec,
+            blocks,
+            w_emb,
+            ln_f: Tensor::f32(&[h], vec![1.0; h]),
+        }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.blocks.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::TINY;
+
+    #[test]
+    fn shapes_match_spec() {
+        let w = ModelWeights::random(TINY, 2, 7);
+        assert_eq!(w.layers(), 2);
+        assert_eq!(w.blocks[0].wqkv.shape(), &[64, 192]);
+        assert_eq!(w.blocks[0].w_down.shape(), &[176, 64]);
+        assert_eq!(w.w_emb.shape(), &[256, 64]);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = ModelWeights::random(TINY, 1, 3);
+        let b = ModelWeights::random(TINY, 1, 3);
+        assert_eq!(
+            a.blocks[0].wqkv.as_f32().unwrap()[..8],
+            b.blocks[0].wqkv.as_f32().unwrap()[..8]
+        );
+        let c = ModelWeights::random(TINY, 1, 4);
+        assert_ne!(
+            a.blocks[0].wqkv.as_f32().unwrap()[..8],
+            c.blocks[0].wqkv.as_f32().unwrap()[..8]
+        );
+    }
+
+    #[test]
+    fn layers_differ_from_each_other() {
+        let w = ModelWeights::random(TINY, 2, 7);
+        assert_ne!(
+            w.blocks[0].wqkv.as_f32().unwrap()[..8],
+            w.blocks[1].wqkv.as_f32().unwrap()[..8]
+        );
+    }
+}

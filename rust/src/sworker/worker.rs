@@ -1,0 +1,111 @@
+//! PJRT-backed S-worker: the real-numerics S-Part executor.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{Engine, Executable, Tensor};
+
+use super::weights::ModelWeights;
+
+/// Executes the four exported S-Part graphs for a fixed (model, batch).
+///
+/// Artifact names follow aot.py: `<model>_b<B>_{embed,s_pre,s_post,logits}`.
+/// Weights are runtime inputs, so ONE compiled graph serves every layer.
+pub struct PjrtSWorker {
+    engine: Arc<Engine>,
+    pub weights: ModelWeights,
+    pub batch: usize,
+    embed: Arc<Executable>,
+    s_pre: Arc<Executable>,
+    s_post: Arc<Executable>,
+    logits: Arc<Executable>,
+}
+
+impl PjrtSWorker {
+    pub fn new(
+        engine: Arc<Engine>,
+        weights: ModelWeights,
+        batch: usize,
+    ) -> Result<PjrtSWorker> {
+        let prefix = format!("{}_b{}", weights.spec.name, batch);
+        let get = |suffix: &str| {
+            engine
+                .executable(&format!("{prefix}_{suffix}"))
+                .with_context(|| format!("loading {prefix}_{suffix}"))
+        };
+        Ok(PjrtSWorker {
+            embed: get("embed")?,
+            s_pre: get("s_pre")?,
+            s_post: get("s_post")?,
+            logits: get("logits")?,
+            engine,
+            weights,
+            batch,
+        })
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    /// tokens `[B]` → embeddings `[B, h]`.
+    pub fn embed(&self, tokens: &[i32]) -> Result<Tensor> {
+        assert_eq!(tokens.len(), self.batch);
+        let t = Tensor::i32(&[self.batch], tokens.to_vec());
+        let mut out = self
+            .embed
+            .run(&[t, self.weights.w_emb.clone()])?;
+        Ok(out.remove(0))
+    }
+
+    /// S-Part before attention on `layer`: x `[B, h]` → qkv `[B, 3h]`.
+    pub fn s_pre(&self, layer: usize, x: &Tensor) -> Result<Tensor> {
+        let b = &self.weights.blocks[layer];
+        let mut out = self
+            .s_pre
+            .run(&[x.clone(), b.ln1.clone(), b.wqkv.clone()])?;
+        Ok(out.remove(0))
+    }
+
+    /// S-Part after attention on `layer`: (x, o) `[B, h]` → y `[B, h]`.
+    pub fn s_post(&self, layer: usize, x: &Tensor, o: &Tensor) -> Result<Tensor> {
+        let b = &self.weights.blocks[layer];
+        let mut out = self.s_post.run(&[
+            x.clone(),
+            o.clone(),
+            b.wo.clone(),
+            b.ln2.clone(),
+            b.w_gate.clone(),
+            b.w_up.clone(),
+            b.w_down.clone(),
+        ])?;
+        Ok(out.remove(0))
+    }
+
+    /// Final norm + tied-embedding head: x `[B, h]` → logits `[B, vocab]`.
+    pub fn logits(&self, x: &Tensor) -> Result<Tensor> {
+        let mut out = self.logits.run(&[
+            x.clone(),
+            self.weights.ln_f.clone(),
+            self.weights.w_emb.clone(),
+        ])?;
+        Ok(out.remove(0))
+    }
+
+    /// Greedy sampling over logits `[B, vocab]`.
+    pub fn argmax(&self, logits: &Tensor) -> Result<Vec<i32>> {
+        let data = logits.as_f32()?;
+        let vocab = self.weights.spec.vocab;
+        Ok(data
+            .chunks_exact(vocab)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i as i32)
+                    .unwrap()
+            })
+            .collect())
+    }
+}

@@ -1,0 +1,146 @@
+//! Interconnect models (paper Table 3) and the activation message format.
+//!
+//! The paper's testbed ships QKV/O vectors over PCIe + 100 Gb RoCE /
+//! Infiniband. Offline we carry the *actual tensors* over in-process
+//! channels and charge *modeled* wire time for the real byte counts —
+//! comm cost is bandwidth-dominated, so latency+bandwidth over true
+//! message sizes preserves Table 3 and Fig 15's ~25 % overhead
+//! (DESIGN.md §2).
+
+/// A point-to-point link: fixed latency + bandwidth.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkModel {
+    pub name: &'static str,
+    /// One-way message latency, seconds.
+    pub latency_s: f64,
+    /// Sustained bandwidth, bytes/second.
+    pub bandwidth: f64,
+}
+
+/// PCIe 4.0 ×16 (Table 3's footnote: 32 GB/s).
+pub const PCIE4_X16: LinkModel = LinkModel {
+    name: "PCIe 4.0 x16",
+    latency_s: 5e-6,
+    bandwidth: 32.0e9,
+};
+
+/// 100 Gbps RoCE (Table 3's footnote).
+pub const ROCE_100G: LinkModel = LinkModel {
+    name: "RoCE 100Gb",
+    latency_s: 12e-6,
+    bandwidth: 12.5e9,
+};
+
+/// HDR Infiniband (the evaluation cluster's fabric, §6.1).
+pub const INFINIBAND: LinkModel = LinkModel {
+    name: "Infiniband",
+    latency_s: 6e-6,
+    bandwidth: 25.0e9,
+};
+
+impl LinkModel {
+    /// Wire time for `bytes` in one message.
+    pub fn transfer_time(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth
+    }
+
+    /// Wire time when the payload is split into `n` concurrent messages
+    /// to different peers sharing the link (scatter to 𝒫 sockets):
+    /// bandwidth is shared, per-message latency paid once.
+    pub fn scatter_time(&self, total_bytes: usize, n: usize) -> f64 {
+        assert!(n > 0);
+        self.latency_s + total_bytes as f64 / self.bandwidth
+    }
+}
+
+/// Byte counts of FastDecode's per-step messages for one block
+/// (Table 3 "Intermediate Vectors"): Q,K,V out + O back, fp16.
+pub fn qkv_message_bytes(hidden: usize, batch: usize) -> usize {
+    3 * hidden * 2 * batch
+}
+
+pub fn o_message_bytes(hidden: usize, batch: usize) -> usize {
+    hidden * 2 * batch
+}
+
+/// End-to-end activation round-trip for one block at batch `b`:
+/// GPU→host over PCIe, host→sockets over the network, and back.
+pub fn activation_roundtrip_time(
+    hidden: usize,
+    b: usize,
+    pcie: LinkModel,
+    net: LinkModel,
+    sockets: usize,
+) -> f64 {
+    let out = qkv_message_bytes(hidden, b);
+    let back = o_message_bytes(hidden, b);
+    pcie.transfer_time(out)
+        + net.scatter_time(out, sockets)
+        + net.scatter_time(back, sockets)
+        + pcie.transfer_time(back)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{LLAMA_7B, Precision};
+
+    /// Table 3 pins (7b model, per block).
+    #[test]
+    fn table3_rows() {
+        let m = &LLAMA_7B;
+        // Model weight: 402 MB → PCIe 12.6 ms, RoCE 32.2 ms.
+        let w = m.block_weight_bytes();
+        assert!((PCIE4_X16.transfer_time(w) * 1e3 - 12.6).abs() < 0.7);
+        assert!((ROCE_100G.transfer_time(w) * 1e3 - 32.2).abs() < 1.5);
+
+        // KV-cache batch 1: 4.19 MB → 0.131 / 0.335 ms. The paper's
+        // 4.19 MB = 2·h·2B·256 ctx — one block, 256-token context.
+        let kv1 = m.r_part_bytes_per_token_layer(256, Precision::F16);
+        assert!((kv1 as f64 / 1e6 - 4.19).abs() < 0.01, "{kv1}");
+        assert!((PCIE4_X16.transfer_time(kv1) * 1e3 - 0.131).abs() < 0.01);
+        assert!((ROCE_100G.transfer_time(kv1) * 1e3 - 0.335).abs() < 0.02);
+
+        // Intermediate vectors batch 1: 32.7 KB (4·h fp16). batch 1024:
+        // 33.5 MB → PCIe 1.04 ms, RoCE 2.68 ms.
+        let act1 = m.activation_bytes_per_token_layer();
+        assert_eq!(act1, 32768);
+        let act1024 = act1 * 1024;
+        assert!((PCIE4_X16.transfer_time(act1024) * 1e3 - 1.04).abs() < 0.06);
+        assert!((ROCE_100G.transfer_time(act1024) * 1e3 - 2.68).abs() < 0.1);
+    }
+
+    /// The design argument: shipping activations beats shipping KV by
+    /// orders of magnitude at batch 1024.
+    #[test]
+    fn activations_beat_kv_shipping() {
+        let m = &LLAMA_7B;
+        let kv = m.r_part_bytes_per_token_layer(1024, Precision::F16) * 1024;
+        let act = qkv_message_bytes(m.hidden, 1024)
+            + o_message_bytes(m.hidden, 1024);
+        assert!(kv > 100 * act);
+    }
+
+    #[test]
+    fn transfer_time_monotone() {
+        for link in [PCIE4_X16, ROCE_100G, INFINIBAND] {
+            assert!(link.transfer_time(1) < link.transfer_time(1 << 20));
+            assert!(link.transfer_time(0) == link.latency_s);
+        }
+    }
+
+    /// Fig 15 cross-check: at 13b/B=1024, PCIe copy ≈ 3 ms and network
+    /// ≈ 7.4 ms of a ~43 ms step — comm ≈ 25 % of the step.
+    #[test]
+    fn fig15_comm_fractions() {
+        use crate::model::LLAMA_13B;
+        let b = 1024;
+        let pcie = PCIE4_X16.transfer_time(qkv_message_bytes(LLAMA_13B.hidden, b))
+            + PCIE4_X16.transfer_time(o_message_bytes(LLAMA_13B.hidden, b));
+        let net = ROCE_100G.scatter_time(qkv_message_bytes(LLAMA_13B.hidden, b), 2)
+            + ROCE_100G.scatter_time(o_message_bytes(LLAMA_13B.hidden, b), 2);
+        // paper: copy 3 ms, network 7.4 ms (per token across 2 layers)
+        assert!((1.0..=5.0).contains(&(pcie * 1e3)), "pcie {}", pcie * 1e3);
+        assert!((3.0..=12.0).contains(&(net * 1e3)), "net {}", net * 1e3);
+    }
+}

@@ -1,0 +1,233 @@
+//! Bounded MPMC channel on Mutex + Condvar (offline stand-in for
+//! crossbeam-channel). Used for S-worker ↔ R-worker message passing and
+//! the request queue. Bounded capacity gives natural backpressure.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Inner<T> {
+    queue: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+struct State<T> {
+    buf: VecDeque<T>,
+    senders: usize,
+    receivers: usize,
+}
+
+pub struct Sender<T>(Arc<Inner<T>>);
+pub struct Receiver<T>(Arc<Inner<T>>);
+
+/// Error returned when all receivers are gone.
+#[derive(Debug, PartialEq, Eq)]
+pub struct SendError<T>(pub T);
+
+/// Error returned when the channel is empty and all senders are gone.
+#[derive(Debug, PartialEq, Eq)]
+pub struct RecvError;
+
+pub fn bounded<T>(capacity: usize) -> (Sender<T>, Receiver<T>) {
+    assert!(capacity > 0, "capacity must be positive");
+    let inner = Arc::new(Inner {
+        queue: Mutex::new(State {
+            buf: VecDeque::with_capacity(capacity),
+            senders: 1,
+            receivers: 1,
+        }),
+        not_empty: Condvar::new(),
+        not_full: Condvar::new(),
+        capacity,
+    });
+    (Sender(inner.clone()), Receiver(inner))
+}
+
+impl<T> Sender<T> {
+    /// Blocking send; fails only if every receiver has been dropped.
+    pub fn send(&self, value: T) -> Result<(), SendError<T>> {
+        let mut st = self.0.queue.lock().unwrap();
+        loop {
+            if st.receivers == 0 {
+                return Err(SendError(value));
+            }
+            if st.buf.len() < self.0.capacity {
+                st.buf.push_back(value);
+                self.0.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.0.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking send; Err(value) if full or disconnected.
+    pub fn try_send(&self, value: T) -> Result<(), T> {
+        let mut st = self.0.queue.lock().unwrap();
+        if st.receivers == 0 || st.buf.len() >= self.0.capacity {
+            return Err(value);
+        }
+        st.buf.push_back(value);
+        self.0.not_empty.notify_one();
+        Ok(())
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive; fails when empty and all senders dropped.
+    pub fn recv(&self) -> Result<T, RecvError> {
+        let mut st = self.0.queue.lock().unwrap();
+        loop {
+            if let Some(v) = st.buf.pop_front() {
+                self.0.not_full.notify_one();
+                return Ok(v);
+            }
+            if st.senders == 0 {
+                return Err(RecvError);
+            }
+            st = self.0.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Option<T> {
+        let mut st = self.0.queue.lock().unwrap();
+        let v = st.buf.pop_front();
+        if v.is_some() {
+            self.0.not_full.notify_one();
+        }
+        v
+    }
+
+    /// Drain everything currently queued.
+    pub fn drain(&self) -> Vec<T> {
+        let mut st = self.0.queue.lock().unwrap();
+        let out: Vec<T> = st.buf.drain(..).collect();
+        if !out.is_empty() {
+            self.0.not_full.notify_all();
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.queue.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.0.queue.lock().unwrap().senders += 1;
+        Sender(self.0.clone())
+    }
+}
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        self.0.queue.lock().unwrap().receivers += 1;
+        Receiver(self.0.clone())
+    }
+}
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut st = self.0.queue.lock().unwrap();
+        st.senders -= 1;
+        if st.senders == 0 {
+            self.0.not_empty.notify_all();
+        }
+    }
+}
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        let mut st = self.0.queue.lock().unwrap();
+        st.receivers -= 1;
+        if st.receivers == 0 {
+            self.0.not_full.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn fifo_order() {
+        let (tx, rx) = bounded(8);
+        for i in 0..8 {
+            tx.send(i).unwrap();
+        }
+        for i in 0..8 {
+            assert_eq!(rx.recv().unwrap(), i);
+        }
+    }
+
+    #[test]
+    fn blocks_when_full_then_progresses() {
+        let (tx, rx) = bounded(2);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        assert!(tx.try_send(3).is_err());
+        let h = thread::spawn(move || tx.send(3).unwrap());
+        assert_eq!(rx.recv().unwrap(), 1);
+        h.join().unwrap();
+        assert_eq!(rx.recv().unwrap(), 2);
+        assert_eq!(rx.recv().unwrap(), 3);
+    }
+
+    #[test]
+    fn recv_fails_after_all_senders_drop() {
+        let (tx, rx) = bounded::<i32>(2);
+        tx.send(5).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv().unwrap(), 5);
+        assert_eq!(rx.recv(), Err(RecvError));
+    }
+
+    #[test]
+    fn send_fails_after_all_receivers_drop() {
+        let (tx, rx) = bounded::<i32>(2);
+        drop(rx);
+        assert_eq!(tx.send(1), Err(SendError(1)));
+    }
+
+    #[test]
+    fn mpmc_sums_match() {
+        let (tx, rx) = bounded::<u64>(4);
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let tx = tx.clone();
+                thread::spawn(move || {
+                    for i in 0..100u64 {
+                        tx.send(p * 1000 + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        drop(tx);
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let rx = rx.clone();
+                thread::spawn(move || {
+                    let mut sum = 0u64;
+                    while let Ok(v) = rx.recv() {
+                        sum += v;
+                    }
+                    sum
+                })
+            })
+            .collect();
+        drop(rx);
+        for p in producers {
+            p.join().unwrap();
+        }
+        let total: u64 = consumers.into_iter().map(|c| c.join().unwrap()).sum();
+        let expect: u64 = (0..4u64)
+            .map(|p| (0..100u64).map(|i| p * 1000 + i).sum::<u64>())
+            .sum();
+        assert_eq!(total, expect);
+    }
+}

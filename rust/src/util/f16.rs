@@ -1,0 +1,254 @@
+//! Software IEEE-754 binary16 ("fp16") — the paper's §5.1 substrate.
+//!
+//! The R-worker stores KV-cache in fp16 and computes in fp32
+//! ("mixed-precision CPU attention"). The paper uses AVX2
+//! `vcvtph2ps` intrinsics; portable Rust gets the same effect with a
+//! 65536-entry decode LUT (256 KiB, resident in L2 during the hot loop)
+//! plus a branchy round-to-nearest-even encoder used only on the store
+//! path (appending one token's K/V), which is off the per-step critical
+//! path.
+
+use once_cell::sync::Lazy;
+
+/// A 16-bit IEEE binary16 value stored as raw bits.
+#[derive(Clone, Copy, PartialEq, Eq, Default, Debug)]
+#[repr(transparent)]
+pub struct F16(pub u16);
+
+/// Decode LUT: all 65536 bit patterns → f32. Built once, 256 KiB.
+static F16_TO_F32_LUT: Lazy<Vec<f32>> =
+    Lazy::new(|| (0..=u16::MAX).map(f16_bits_to_f32_slow).collect());
+
+/// Bit-exact fp16 → fp32 (reference path, no LUT).
+pub fn f16_bits_to_f32_slow(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    let bits = match exp {
+        0 => {
+            if mant == 0 {
+                sign // ±0
+            } else {
+                // subnormal: mant * 2^-24
+                let v = (mant as f32) * f32::from_bits(0x3380_0000); // 2^-24
+                return if sign != 0 { -v } else { v };
+            }
+        }
+        31 => sign | 0x7f80_0000 | (mant << 13), // inf / nan
+        _ => sign | ((exp + 112) << 23) | (mant << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// fp32 → fp16 with round-to-nearest-even (reference-quality encoder).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x7f_ffff;
+
+    if exp == 255 {
+        // inf / nan (preserve a nan payload bit)
+        return sign | 0x7c00 | if mant != 0 { 0x200 } else { 0 };
+    }
+    // unbiased exponent
+    let e = exp - 127;
+    if e > 15 {
+        return sign | 0x7c00; // overflow → inf
+    }
+    if e >= -14 {
+        // normal range
+        let mut m = mant >> 13;
+        let rest = mant & 0x1fff;
+        // round to nearest even
+        if rest > 0x1000 || (rest == 0x1000 && (m & 1) == 1) {
+            m += 1;
+        }
+        let mut he = (e + 15) as u32;
+        if m == 0x400 {
+            m = 0;
+            he += 1;
+            if he >= 31 {
+                return sign | 0x7c00;
+            }
+        }
+        return sign | ((he as u16) << 10) | (m as u16);
+    }
+    if e >= -25 {
+        // subnormal
+        let full = mant | 0x80_0000; // implicit bit
+        let shift = (-14 - e) as u32 + 13;
+        let m = full >> shift;
+        let rest = full & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let mut m = m;
+        if rest > half || (rest == half && (m & 1) == 1) {
+            m += 1;
+        }
+        return sign | (m as u16); // may carry into exponent — that's correct
+    }
+    sign // underflow → ±0
+}
+
+impl F16 {
+    pub const ZERO: F16 = F16(0);
+
+    #[inline(always)]
+    pub fn to_f32(self) -> f32 {
+        // LUT path: one L2-resident load. Exact for every bit pattern
+        // (incl. inf/nan); used off the vectorized hot loop.
+        unsafe { *F16_TO_F32_LUT.get_unchecked(self.0 as usize) }
+    }
+
+    /// Branchless decode for FINITE values — shift the exponent+mantissa
+    /// into an f32 whose value is 2⁻¹¹² × |x|, rescale, re-apply the
+    /// sign. Exact for normals AND subnormals (the scaled f32 is always
+    /// normal); only inf/nan decode differently, and the KV-cache never
+    /// stores those. Pure integer/FP ops with no table or branch, so
+    /// LLVM auto-vectorizes the attention dot/axpy loops (§Perf log in
+    /// EXPERIMENTS.md: ~3.9× on this host vs the LUT).
+    #[inline(always)]
+    pub fn to_f32_finite(self) -> f32 {
+        const SCALE: f32 = 5.192296858534828e33; // 2^112
+        let h = self.0 as u32;
+        let magnitude = f32::from_bits((h & 0x7fff) << 13) * SCALE;
+        f32::from_bits(magnitude.to_bits() | ((h & 0x8000) << 16))
+    }
+
+    #[inline]
+    pub fn from_f32(x: f32) -> F16 {
+        F16(f32_to_f16_bits(x))
+    }
+}
+
+impl From<f32> for F16 {
+    fn from(x: f32) -> F16 {
+        F16::from_f32(x)
+    }
+}
+impl From<F16> for f32 {
+    fn from(h: F16) -> f32 {
+        h.to_f32()
+    }
+}
+
+/// Decode a slice of fp16 into an fp32 buffer (lengths must match).
+pub fn decode_slice(src: &[F16], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d = s.to_f32();
+    }
+}
+
+/// Encode a slice of fp32 into an fp16 buffer (lengths must match).
+pub fn encode_slice(src: &[f32], dst: &mut [F16]) {
+    assert_eq!(src.len(), dst.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d = F16::from_f32(*s);
+    }
+}
+
+/// Encode an fp32 vec into a fresh fp16 vec.
+pub fn encode_vec(src: &[f32]) -> Vec<F16> {
+    src.iter().map(|&x| F16::from_f32(x)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_values() {
+        for &(f, h) in &[
+            (0.0f32, 0x0000u16),
+            (1.0, 0x3c00),
+            (-1.0, 0xbc00),
+            (2.0, 0x4000),
+            (0.5, 0x3800),
+            (65504.0, 0x7bff), // f16::MAX
+            (6.103515625e-5, 0x0400), // smallest normal
+            (5.960464477539063e-8, 0x0001), // smallest subnormal
+        ] {
+            assert_eq!(f32_to_f16_bits(f), h, "encode {f}");
+            assert_eq!(f16_bits_to_f32_slow(h), f, "decode {h:#x}");
+            assert_eq!(F16(h).to_f32(), f, "LUT decode {h:#x}");
+        }
+    }
+
+    #[test]
+    fn overflow_and_specials() {
+        assert_eq!(f32_to_f16_bits(1e9), 0x7c00); // +inf
+        assert_eq!(f32_to_f16_bits(-1e9), 0xfc00);
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert!(f16_bits_to_f32_slow(0x7e00).is_nan());
+        assert!(F16::from_f32(f32::NAN).to_f32().is_nan());
+        assert_eq!(f32_to_f16_bits(1e-10), 0x0000); // underflow → 0
+        assert_eq!(f32_to_f16_bits(-1e-10), 0x8000);
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1.0 + 2^-11 is exactly halfway between 1.0 and 1.0+2^-10:
+        // must round to even mantissa (1.0).
+        let halfway = 1.0 + 2f32.powi(-11);
+        assert_eq!(f32_to_f16_bits(halfway), 0x3c00);
+        // just above halfway rounds up
+        let above = 1.0 + 2f32.powi(-11) + 2f32.powi(-20);
+        assert_eq!(f32_to_f16_bits(above), 0x3c01);
+    }
+
+    #[test]
+    fn lut_matches_slow_path_everywhere() {
+        for h in 0..=u16::MAX {
+            let slow = f16_bits_to_f32_slow(h);
+            let fast = F16(h).to_f32();
+            assert!(
+                slow == fast || (slow.is_nan() && fast.is_nan()),
+                "mismatch at {h:#x}: {slow} vs {fast}"
+            );
+        }
+    }
+
+    #[test]
+    fn finite_decode_matches_slow_path_on_finites() {
+        for h in 0..=u16::MAX {
+            let exp = (h >> 10) & 0x1f;
+            if exp == 31 {
+                continue; // inf/nan excluded by contract
+            }
+            let slow = f16_bits_to_f32_slow(h);
+            let fast = F16(h).to_f32_finite();
+            assert!(
+                slow == fast || (slow == 0.0 && fast == 0.0),
+                "mismatch at {h:#x}: {slow} vs {fast}"
+            );
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_exact_for_representable() {
+        // every finite f16 value survives f16→f32→f16 bit-exactly
+        for h in 0..=u16::MAX {
+            let f = f16_bits_to_f32_slow(h);
+            if f.is_nan() {
+                continue;
+            }
+            assert_eq!(f32_to_f16_bits(f), h, "roundtrip {h:#x}");
+        }
+    }
+
+    #[test]
+    fn encode_error_within_half_ulp() {
+        // property: |decode(encode(x)) - x| <= 2^-11 * |x| for normal range
+        let mut state = 0x1234_5678u64;
+        for _ in 0..10_000 {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            let x = ((state >> 40) as f32 / (1u32 << 24) as f32 - 0.5) * 100.0;
+            let y = F16::from_f32(x).to_f32();
+            assert!(
+                (y - x).abs() <= x.abs() * 4.9e-4 + 6e-8,
+                "x={x} y={y}"
+            );
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! In-tree substrates for an offline build (DESIGN.md §1): software fp16,
+//! channels, RNG, property testing, JSON writing.
+
+pub mod chan;
+pub mod f16;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+pub use f16::F16;
+pub use rng::Rng;

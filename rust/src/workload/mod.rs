@@ -1,0 +1,130 @@
+//! Workload generation: synthetic request traces for the serving
+//! examples and the online-admission experiments (no public production
+//! trace is available — DESIGN.md §2).
+
+use crate::util::Rng;
+
+/// One generation request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time offset from trace start, seconds.
+    pub arrival_s: f64,
+    pub prompt: Vec<i32>,
+    /// Tokens to generate.
+    pub target_len: usize,
+}
+
+/// Trace generator: Poisson arrivals, uniform prompt lengths, fixed or
+/// jittered target lengths.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceConfig {
+    pub seed: u64,
+    /// Mean arrivals per second.
+    pub rate: f64,
+    pub prompt_len: (usize, usize),
+    pub target_len: (usize, usize),
+    pub vocab: usize,
+    pub count: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            seed: 1,
+            rate: 16.0,
+            prompt_len: (4, 16),
+            target_len: (32, 64),
+            vocab: 256,
+            count: 64,
+        }
+    }
+}
+
+pub fn generate_trace(cfg: &TraceConfig) -> Vec<Request> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut t = 0.0;
+    (0..cfg.count as u64)
+        .map(|id| {
+            t += rng.exponential(cfg.rate);
+            let plen = rng.range_usize(cfg.prompt_len.0, cfg.prompt_len.1 + 1);
+            let tlen = rng.range_usize(cfg.target_len.0, cfg.target_len.1 + 1);
+            Request {
+                id,
+                arrival_s: t,
+                prompt: (0..plen)
+                    .map(|_| rng.range_usize(0, cfg.vocab) as i32)
+                    .collect(),
+                target_len: tlen,
+            }
+        })
+        .collect()
+}
+
+/// Fixed-shape batch workload (the paper's §6 throughput benchmark:
+/// short prompt, generate to a fixed total length).
+pub fn fixed_batch(
+    batch: usize,
+    prompt_len: usize,
+    vocab: usize,
+    seed: u64,
+) -> Vec<Vec<i32>> {
+    let mut rng = Rng::new(seed);
+    (0..batch)
+        .map(|_| {
+            (0..prompt_len)
+                .map(|_| rng.range_usize(0, vocab) as i32)
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic_and_ordered() {
+        let cfg = TraceConfig::default();
+        let a = generate_trace(&cfg);
+        let b = generate_trace(&cfg);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+        assert_eq!(a.len(), cfg.count);
+    }
+
+    #[test]
+    fn lengths_respect_bounds() {
+        let cfg = TraceConfig {
+            prompt_len: (3, 5),
+            target_len: (10, 12),
+            ..Default::default()
+        };
+        for r in generate_trace(&cfg) {
+            assert!((3..=5).contains(&r.prompt.len()));
+            assert!((10..=12).contains(&r.target_len));
+            assert!(r.prompt.iter().all(|&t| (t as usize) < cfg.vocab));
+        }
+    }
+
+    #[test]
+    fn arrival_rate_roughly_matches() {
+        let cfg = TraceConfig {
+            rate: 100.0,
+            count: 2000,
+            ..Default::default()
+        };
+        let trace = generate_trace(&cfg);
+        let span = trace.last().unwrap().arrival_s;
+        let rate = cfg.count as f64 / span;
+        assert!((rate / cfg.rate - 1.0).abs() < 0.15, "rate {rate}");
+    }
+
+    #[test]
+    fn fixed_batch_shapes() {
+        let b = fixed_batch(4, 7, 100, 3);
+        assert_eq!(b.len(), 4);
+        assert!(b.iter().all(|p| p.len() == 7));
+        assert_ne!(b[0], b[1]); // prompts differ
+    }
+}

@@ -1,0 +1,92 @@
+//! Cross-language numeric pinning: every exported HLO graph, executed
+//! from Rust through PJRT, must reproduce the golden outputs computed by
+//! JAX at export time (python/compile/aot.py, fixed seeds).
+//!
+//! This covers the whole AOT bridge: HLO text parsing under
+//! xla_extension 0.5.1, tuple packing, dtype/layout conventions — and,
+//! via the `fused` artifacts, the interpret-mode *Pallas kernels* lowered
+//! into plain HLO.
+
+use std::sync::Arc;
+
+use fastdecode::runtime::{Dtype, Engine, Tensor};
+
+fn engine() -> Arc<Engine> {
+    Arc::new(Engine::load(fastdecode::artifacts_dir()).expect(
+        "artifacts missing — run `make artifacts` before `cargo test`",
+    ))
+}
+
+fn load_tensor(g: &fastdecode::runtime::Golden) -> Tensor {
+    match g.dtype {
+        Dtype::F32 => Tensor::f32(&g.shape, g.load_f32().unwrap()),
+        Dtype::I32 => Tensor::i32(&g.shape, g.load_i32().unwrap()),
+        Dtype::F16 => panic!("f16 goldens unused"),
+    }
+}
+
+fn check_artifact(engine: &Engine, name: &str, tol: f32) {
+    let (ins, outs) = engine.manifest.goldens_for(name);
+    assert!(!ins.is_empty(), "{name}: no golden inputs");
+    assert!(!outs.is_empty(), "{name}: no golden outputs");
+    let inputs: Vec<Tensor> = ins.iter().map(|g| load_tensor(g)).collect();
+    let results = engine.run(name, &inputs).expect("execution failed");
+    assert_eq!(results.len(), outs.len(), "{name}: output arity");
+    for (i, (got, want_g)) in results.iter().zip(&outs).enumerate() {
+        let want = load_tensor(want_g);
+        match (&got, &want) {
+            (Tensor::I32 { .. }, _) => {
+                assert_eq!(
+                    got.as_i32().unwrap(),
+                    want.as_i32().unwrap(),
+                    "{name} out{i}"
+                );
+            }
+            _ => {
+                let diff = got.max_abs_diff(&want).unwrap();
+                assert!(
+                    diff <= tol,
+                    "{name} out{i}: max abs diff {diff} > {tol}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn all_simple_graphs_match_golden() {
+    let e = engine();
+    for b in [1, 8] {
+        for suffix in ["embed", "s_pre", "s_post", "logits"] {
+            check_artifact(&e, &format!("tiny_b{b}_{suffix}"), 1e-5);
+        }
+    }
+}
+
+/// The fused decode step embeds the interpret-mode Pallas attention and
+/// MLP kernels — this is the L1-through-the-bridge test.
+#[test]
+fn fused_pallas_graphs_match_golden() {
+    let e = engine();
+    for b in [1, 8] {
+        check_artifact(&e, &format!("tiny_b{b}_fused_s128"), 5e-5);
+    }
+}
+
+#[test]
+fn manifest_lists_all_artifacts() {
+    let e = engine();
+    assert!(e.manifest.artifacts.len() >= 10);
+    for a in e.manifest.artifacts.values() {
+        assert!(a.path.exists(), "missing artifact file {:?}", a.path);
+        assert!(!a.inputs.is_empty());
+        assert!(!a.outputs.is_empty());
+    }
+}
+
+#[test]
+fn shape_mismatch_is_rejected() {
+    let e = engine();
+    let bad = vec![Tensor::zeros_f32(&[2, 2])];
+    assert!(e.run("tiny_b1_s_pre", &bad).is_err());
+}

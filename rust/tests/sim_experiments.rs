@@ -1,0 +1,179 @@
+//! Integration tests over the virtual-clock experiment stack: the
+//! headline comparisons of §6 must hold in *shape* (who wins, by roughly
+//! what factor) every time the models change.
+
+use fastdecode::baselines::{tensorrt, vanilla, vllm, BaselineConfig};
+use fastdecode::coordinator::sim::steady_throughput;
+use fastdecode::coordinator::{simulate, SimConfig};
+use fastdecode::model::{LLAMA_13B, LLAMA_7B};
+use fastdecode::perfmodel::{CpuModel, GpuModel, A10, EPYC_7452};
+
+fn ours(spec: fastdecode::model::ModelSpec, batch: usize, seq: usize) -> f64 {
+    let mut cfg = SimConfig::new(
+        spec,
+        GpuModel::new(A10),
+        CpuModel::from_device(EPYC_7452),
+        8,
+        batch,
+        seq,
+    );
+    cfg.sls_interval = Some((seq / 32).max(1));
+    cfg.steps = 3 * seq;
+    steady_throughput(&simulate(&cfg), seq)
+}
+
+/// Fig 9 headline: FastDecode ℬ=1024 ≥ ~2k tok/s on the 7b model and
+/// 1.88–5.04× the strongest baseline (vLLM).
+#[test]
+fn fig9_headline_7b() {
+    let seq = 1024;
+    let fd1024 = ours(LLAMA_7B, 1024, seq);
+    let base = BaselineConfig::a10(LLAMA_7B, 1024, seq);
+    let tp_vllm = vllm(&base).throughput();
+    let tp_trt = tensorrt(&BaselineConfig::a10(LLAMA_7B, 16, seq)).throughput();
+    let tp_vanilla =
+        vanilla(&BaselineConfig::a10(LLAMA_7B, 16, seq)).throughput();
+
+    assert!(fd1024 > 1000.0, "ours(1024) = {fd1024}");
+    let vs_vllm = fd1024 / tp_vllm;
+    assert!(
+        (1.5..=8.0).contains(&vs_vllm),
+        "ours/vllm = {vs_vllm} (paper: 1.88–5.04)"
+    );
+    let vs_trt = fd1024 / tp_trt;
+    assert!(
+        (3.0..=20.0).contains(&vs_trt),
+        "ours/trt = {vs_trt} (paper: 8.7)"
+    );
+    assert!(tp_vllm > tp_vanilla, "vLLM must be the strongest baseline");
+}
+
+/// Fig 9: smaller batch (128) still beats vLLM but by less (paper 2.32×).
+#[test]
+fn fig9_batch128_still_wins() {
+    let seq = 1024;
+    let fd128 = ours(LLAMA_7B, 128, seq);
+    let fd1024 = ours(LLAMA_7B, 1024, seq);
+    let tp_vllm =
+        vllm(&BaselineConfig::a10(LLAMA_7B, 1024, seq)).throughput();
+    assert!(fd128 > tp_vllm, "ours(128)={fd128} vllm={tp_vllm}");
+    assert!(fd1024 > 1.5 * fd128, "1024 should be ≫ 128");
+}
+
+/// Fig 9 on the 13b model: ours ≈ 4× vLLM at max batch (paper 4.12×).
+#[test]
+fn fig9_13b() {
+    let seq = 1024;
+    let fd = ours(LLAMA_13B, 1024, seq);
+    let tp_vllm =
+        vllm(&BaselineConfig::a10(LLAMA_13B, 1024, seq)).throughput();
+    // Paper: 4.12×. Our simulator is optimistic toward FastDecode on
+    // 13b (it models a perfectly overlapped pipeline; the paper's §7.3
+    // trace shows the S-worker idle >50 % waiting on overloaded
+    // R-workers), so we accept a wider band on the winning factor.
+    let ratio = fd / tp_vllm;
+    assert!((2.0..=30.0).contains(&ratio), "ours/vllm 13b = {ratio}");
+}
+
+/// Fig 10: trading latency for throughput — ours(1024) latency is a few
+/// × ours(128), and both are above TRT's minimum (paper: 120.8 ms vs
+/// 34.2 ms for 7b).
+#[test]
+fn fig10_latency_ordering() {
+    let mk = |b: usize| {
+        let mut cfg = SimConfig::new(
+            LLAMA_7B,
+            GpuModel::new(A10),
+            CpuModel::from_device(EPYC_7452),
+            8,
+            b,
+            1024,
+        );
+        cfg.sls_interval = Some(32);
+        cfg.steps = 2048;
+        simulate(&cfg).steady_latency(1024)
+    };
+    let l128 = mk(128);
+    let l1024 = mk(1024);
+    assert!(
+        (1.5..=6.0).contains(&(l1024 / l128)),
+        "latency(1024)/latency(128) = {} (paper ≈ 3.5)",
+        l1024 / l128
+    );
+    let trt = tensorrt(&BaselineConfig::a10(LLAMA_7B, 16, 1024))
+        .steady_latency(16);
+    assert!(l128 > trt, "ours(128) {l128} must exceed TRT {trt}");
+    assert!(l128 / trt < 10.0, "but not absurdly (paper ≈ 3.5×)");
+}
+
+/// Fig 8: latency is linear in the number of layers.
+#[test]
+fn fig8_layers_linear() {
+    let lat = |layers: usize| {
+        let mut cfg = SimConfig::new(
+            fastdecode::model::OPT_175B,
+            GpuModel::new(A10),
+            CpuModel::from_device(EPYC_7452),
+            2,
+            256,
+            256,
+        );
+        cfg.layers = layers;
+        simulate(&cfg).steady_latency(10)
+    };
+    let l2 = lat(2);
+    let l4 = lat(4);
+    let l8 = lat(8);
+    assert!((l4 / l2 - 2.0).abs() < 0.15, "4/2 = {}", l4 / l2);
+    assert!((l8 / l2 - 4.0).abs() < 0.3, "8/2 = {}", l8 / l2);
+}
+
+/// Fig 13 shape: strong scaling works at S=1024 but 8 sockets can LOSE
+/// to 4 at S=128 on the 13b model (S-worker becomes the bottleneck).
+#[test]
+fn fig13_short_sequences_saturate() {
+    let tp = |sockets: usize, seq: usize| {
+        let mut cfg = SimConfig::new(
+            LLAMA_13B,
+            GpuModel::new(A10),
+            CpuModel::from_device(EPYC_7452),
+            sockets,
+            1024,
+            seq,
+        );
+        cfg.sls_interval = Some((seq / 16).max(1));
+        cfg.steps = 3 * seq;
+        steady_throughput(&simulate(&cfg), seq)
+    };
+    // long sequences: scaling 1→8 with decent efficiency
+    let e8 = tp(8, 1024) / (8.0 * tp(1, 1024));
+    assert!((0.5..=1.05).contains(&e8), "8-socket efficiency {e8}");
+    // short sequences: 8 sockets ≈ 4 sockets (bounded by the S-worker)
+    let gain = tp(8, 128) / tp(4, 128);
+    assert!(gain < 1.35, "8 vs 4 sockets at S=128 gained {gain}");
+}
+
+/// Fig 15: with synchronous communication exposed, comm is a visible
+/// but minority share (~25 % in the paper).
+#[test]
+fn fig15_comm_share() {
+    let mut cfg = SimConfig::new(
+        LLAMA_13B,
+        GpuModel::new(A10),
+        CpuModel::from_device(EPYC_7452),
+        2,
+        1024,
+        1024,
+    );
+    cfg.sync_comm = true;
+    cfg.steps = 256; // mid-generation, R-workers loaded like the trace
+    let trace = simulate(&cfg);
+    let tail = &trace.records[128..];
+    let comm: f64 = tail.iter().map(|r| r.comm_time).sum();
+    let total: f64 = tail.iter().map(|r| r.latency_s).sum();
+    let share = comm / total;
+    assert!(
+        (0.08..=0.45).contains(&share),
+        "comm share {share} (paper ≈ 0.25)"
+    );
+}
