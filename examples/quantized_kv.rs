@@ -2,26 +2,19 @@
 //! and int4 caches; compare output agreement, memory, measured R-worker
 //! speed, and the planner's socket savings.
 //!
-//! Run: `make artifacts && cargo run --release --example quantized_kv`
-
-use std::sync::Arc;
+//! Run: `cargo run --release --example quantized_kv`
 
 use fastdecode::bench::{Bench, Table};
 use fastdecode::coordinator::real::{FastDecode, FastDecodeConfig};
 use fastdecode::kvcache::SeqKv;
 use fastdecode::model::{Precision, LLAMA_7B, TINY};
 use fastdecode::perfmodel::{CpuModel, GpuModel, Planner, A10, EPYC_7452};
-use fastdecode::runtime::Engine;
 use fastdecode::rworker::{attend_one, AttnScratch};
 use fastdecode::util::Rng;
 use fastdecode::workload::fixed_batch;
 
-fn generate_tokens(
-    engine: &Arc<Engine>,
-    prec: Precision,
-) -> anyhow::Result<Vec<Vec<i32>>> {
+fn generate_tokens(prec: Precision) -> anyhow::Result<Vec<Vec<i32>>> {
     let mut fd = FastDecode::new(
-        engine.clone(),
         TINY,
         FastDecodeConfig {
             batch: 8,
@@ -67,8 +60,7 @@ fn measure_attention(prec: Precision) -> f64 {
 }
 
 fn main() -> anyhow::Result<()> {
-    let engine = Arc::new(Engine::load(fastdecode::artifacts_dir())?);
-    let reference = generate_tokens(&engine, Precision::F32)?;
+    let reference = generate_tokens(Precision::F32)?;
     let planner =
         Planner::new(GpuModel::new(A10), CpuModel::from_device(EPYC_7452));
     let f16_lat = measure_attention(Precision::F16);
@@ -88,7 +80,7 @@ fn main() -> anyhow::Result<()> {
         Precision::Int8,
         Precision::Int4,
     ] {
-        let toks = generate_tokens(&engine, prec)?;
+        let toks = generate_tokens(prec)?;
         let agree = agreement(&reference, &toks);
         let lat = measure_attention(prec);
         let sockets = planner.min_sockets(&LLAMA_7B, 512, 1024, prec);

@@ -1,25 +1,17 @@
-//! Quickstart: load the AOT artifacts, build a FastDecode engine on the
-//! tiny model, and generate a batch of sequences end-to-end — S-Part on
-//! PJRT, R-Part (attention over the fp16 KV-cache) on Rust CPU workers.
+//! Quickstart: build a FastDecode engine on the tiny model and generate
+//! a batch of sequences end-to-end — S-Part on the native S-worker
+//! thread, R-Part (attention over the fp16 KV-cache) on Rust CPU worker
+//! sockets, double-buffered by the token-level pipeline.
 //!
-//! Run: `make artifacts && cargo run --release --example quickstart`
-
-use std::sync::Arc;
+//! Run: `cargo run --release --example quickstart`
 
 use fastdecode::coordinator::real::{FastDecode, FastDecodeConfig};
 use fastdecode::model::{Precision, TINY};
-use fastdecode::runtime::Engine;
 use fastdecode::workload::fixed_batch;
 
 fn main() -> anyhow::Result<()> {
-    // 1. Load the compiled HLO graphs (written once by `make artifacts`).
-    let engine = Arc::new(Engine::load(fastdecode::artifacts_dir())?);
-    println!("PJRT platform: {}", engine.platform());
-    println!("artifacts: {}", engine.manifest.artifacts.len());
-
-    // 2. Build the engine: 8-sequence batch, 2 R-worker sockets, fp16 KV.
+    // 1. Build the engine: 8-sequence batch, 2 R-worker sockets, fp16 KV.
     let mut fd = FastDecode::new(
-        engine,
         TINY,
         FastDecodeConfig {
             batch: 8,
@@ -29,8 +21,9 @@ fn main() -> anyhow::Result<()> {
             ..Default::default()
         },
     )?;
+    println!("backend: native S-worker thread + 2 R-socket threads");
 
-    // 3. Generate 24 tokens over 8 random 4-token prompts, greedily.
+    // 2. Generate 24 tokens over 8 random 4-token prompts, greedily.
     let prompts = fixed_batch(8, 4, TINY.vocab, 7);
     let result = fd.generate(&prompts, 24)?;
 

@@ -1,29 +1,26 @@
 //! End-to-end serving driver (the DESIGN.md validation workload): a real
 //! small model served in batched waves against a synthetic online trace,
-//! through the full stack — Algorithm-1 admission, PJRT S-Part, Rust
-//! R-workers over fp16 KV — reporting latency and throughput.
+//! through the full stack — Algorithm-1 admission, the threaded
+//! token-level pipeline (native S-Part thread + Rust R-workers over fp16
+//! KV) — reporting latency and throughput.
 //!
-//! Run: `make artifacts && cargo run --release --example serve_e2e`
+//! Run: `cargo run --release --example serve_e2e`
 //! Results are recorded in EXPERIMENTS.md §End-to-end.
 
-use std::sync::Arc;
 use std::time::Instant;
 
 use fastdecode::coordinator::real::{FastDecode, FastDecodeConfig};
 use fastdecode::metrics::Histogram;
 use fastdecode::model::{Precision, TINY};
-use fastdecode::runtime::Engine;
 use fastdecode::server::AdmissionQueue;
 use fastdecode::workload::{generate_trace, TraceConfig};
 
 fn main() -> anyhow::Result<()> {
-    let batch = 8; // wave size == compiled batch of the artifacts
+    let batch = 8; // wave size
     let gen_steps = 24; // tokens generated per request
     let prompt_len = 4;
 
-    let engine = Arc::new(Engine::load(fastdecode::artifacts_dir())?);
     let mut fd = FastDecode::new(
-        engine,
         TINY,
         FastDecodeConfig {
             batch,

@@ -1,8 +1,12 @@
 //! The FastDecode coordinator (leader): request admission, micro-batch
 //! assembly, the pipelined step loop, and token emission.
 //!
-//! * [`real`] — the real-numerics engine: PJRT S-worker + threaded
-//!   R-worker pool, used by examples and integration tests (tiny model).
+//! Two engines sit behind the [`Coordinator`] trait:
+//!
+//! * [`real`] — the live engine: native S-worker thread + threaded
+//!   R-worker pool joined by the token-level pipeline
+//!   (`runtime::pipeline`), tracing real wall-clock stage times. Used by
+//!   the examples, the integration tests and the pipeline smoke test.
 //! * [`sim`] — the virtual-clock engine: same control flow priced by the
 //!   calibrated device/link models, used to regenerate the paper's
 //!   figures at A10/Epyc scale (DESIGN.md §2, timing modes).
@@ -10,5 +14,67 @@
 pub mod real;
 pub mod sim;
 
+use anyhow::Result;
+
+use crate::metrics::StepTrace;
+
 pub use real::FastDecode;
 pub use sim::{simulate, SimConfig};
+
+/// A decode engine that can drive `steps` generation steps and report a
+/// per-step trace. `real::FastDecode` produces measured wall-clock
+/// records; [`SimCoordinator`] produces virtual-clock records — the
+/// benches and experiments consume either through this one interface.
+pub trait Coordinator {
+    /// Human-readable backend id (for reports and tables).
+    fn backend(&self) -> &'static str;
+    /// Drive `steps` decode steps, returning the per-step trace.
+    fn run_steps(&mut self, steps: usize) -> Result<StepTrace>;
+}
+
+/// The virtual-clock simulator behind the [`Coordinator`] interface.
+pub struct SimCoordinator {
+    pub cfg: SimConfig,
+}
+
+impl SimCoordinator {
+    pub fn new(cfg: SimConfig) -> SimCoordinator {
+        SimCoordinator { cfg }
+    }
+}
+
+impl Coordinator for SimCoordinator {
+    fn backend(&self) -> &'static str {
+        "virtual-clock-sim"
+    }
+
+    fn run_steps(&mut self, steps: usize) -> Result<StepTrace> {
+        let mut cfg = self.cfg;
+        cfg.steps = steps;
+        Ok(simulate(&cfg))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::LLAMA_7B;
+    use crate::perfmodel::{CpuModel, GpuModel, A10, EPYC_7452};
+
+    #[test]
+    fn sim_backend_runs_behind_the_trait() {
+        let cfg = SimConfig::new(
+            LLAMA_7B,
+            GpuModel::new(A10),
+            CpuModel::from_device(EPYC_7452),
+            4,
+            256,
+            128,
+        );
+        let mut c: Box<dyn Coordinator> = Box::new(SimCoordinator::new(cfg));
+        assert_eq!(c.backend(), "virtual-clock-sim");
+        let trace = c.run_steps(64).unwrap();
+        assert_eq!(trace.len(), 64);
+        assert!(trace.throughput() > 0.0);
+    }
+}

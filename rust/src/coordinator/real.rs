@@ -1,22 +1,25 @@
-//! Real-numerics FastDecode engine: PJRT S-Part + Rust R-Part.
+//! Real-numerics FastDecode engine: native S-Part on its own thread +
+//! threaded R-Part socket pool, joined by the token-level pipeline.
 //!
 //! Data flow per generated token (paper Fig 4):
-//!   embed → for each layer: s_pre (HLO) → scatter QKV to R-workers →
-//!   append+attend near the cache → gather O → s_post (HLO) → logits →
+//!   embed → for each layer: s_pre → scatter QKV to R-workers →
+//!   append+attend near the cache → gather O → s_post → logits →
 //!   greedy sample.
 //! The KV-cache never exists on the S-worker; only activation vectors
-//! cross the S↔R boundary.
+//! cross the S↔R boundary. The batch is split into two mini-batches that
+//! the S thread and the R sockets process in alternation
+//! (`runtime::pipeline`, Fig 5b), so each step's wall time approaches
+//! max(s, r) instead of s + r.
 
-use std::sync::Arc;
-use std::time::Instant;
-
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::metrics::{Histogram, StepRecord, StepTrace};
 use crate::model::{ModelSpec, Precision};
-use crate::runtime::{Engine, Tensor};
-use crate::rworker::{RPool, RPoolConfig, SeqTask};
-use crate::sworker::{ModelWeights, PjrtSWorker};
+use crate::runtime::{PipelineConfig, ThreadedPipeline};
+use crate::rworker::{RPool, RPoolConfig};
+use crate::sworker::{ModelWeights, NativeSWorker};
+
+use super::Coordinator;
 
 #[derive(Clone, Copy, Debug)]
 pub struct FastDecodeConfig {
@@ -28,6 +31,12 @@ pub struct FastDecodeConfig {
     /// Number of instantiated layers (≤ spec.n_layers, like the paper's
     /// reduced-layer evaluation).
     pub layers: usize,
+    /// Overlap the two mini-batches (Fig 5b); false = serial (Fig 5a).
+    pub pipelined: bool,
+    /// Artificial stage dilation for pipeline calibration/smoke tests
+    /// (see `PipelineConfig::s_pad` / `RPoolConfig::attend_pad`).
+    pub s_pad: std::time::Duration,
+    pub r_pad: std::time::Duration,
 }
 
 impl Default for FastDecodeConfig {
@@ -39,6 +48,9 @@ impl Default for FastDecodeConfig {
             capacity_per_seq: 256,
             weight_seed: 0xfa57,
             layers: 2,
+            pipelined: true,
+            s_pad: std::time::Duration::ZERO,
+            r_pad: std::time::Duration::ZERO,
         }
     }
 }
@@ -54,19 +66,30 @@ pub struct GenerationResult {
 pub struct FastDecode {
     pub spec: ModelSpec,
     pub cfg: FastDecodeConfig,
-    sworker: PjrtSWorker,
-    rpool: RPool,
+    pipeline: ThreadedPipeline,
     seq_ids: Vec<u64>,
     /// Current context length per sequence (tokens in the cache).
     ctx_len: Vec<usize>,
+    /// Current tokens after `prime` (consumed by `Coordinator::run_steps`).
+    current: Option<Vec<i32>>,
 }
 
 impl FastDecode {
-    pub fn new(
-        engine: Arc<Engine>,
-        spec: ModelSpec,
-        cfg: FastDecodeConfig,
-    ) -> Result<FastDecode> {
+    pub fn new(spec: ModelSpec, cfg: FastDecodeConfig) -> Result<FastDecode> {
+        if cfg.batch == 0 {
+            bail!("batch must be > 0");
+        }
+        if cfg.sockets == 0 {
+            bail!("sockets must be > 0");
+        }
+        if cfg.layers == 0 || cfg.layers > spec.n_layers {
+            bail!(
+                "layers {} outside 1..={} for {}",
+                cfg.layers,
+                spec.n_layers,
+                spec.name
+            );
+        }
         // The R-pool sizes its per-sequence cache to the run's needs.
         let mut spec_l = spec;
         spec_l.n_layers = cfg.layers; // R-pool allocates per layer
@@ -76,17 +99,27 @@ impl FastDecode {
                 sockets: cfg.sockets,
                 capacity_per_seq: cfg.capacity_per_seq,
                 precision: cfg.precision,
+                attend_pad: cfg.r_pad,
             },
         );
         let weights = ModelWeights::random(spec, cfg.layers, cfg.weight_seed);
-        let sworker = PjrtSWorker::new(engine, weights, cfg.batch)?;
+        let sworker = NativeSWorker::new(weights);
+        let pipeline = ThreadedPipeline::new(
+            sworker,
+            rpool,
+            PipelineConfig {
+                pipelined: cfg.pipelined,
+                s_pad: cfg.s_pad,
+                ..Default::default()
+            },
+        );
         Ok(FastDecode {
             spec,
             cfg,
-            sworker,
-            rpool,
+            pipeline,
             seq_ids: Vec::new(),
             ctx_len: Vec::new(),
+            current: None,
         })
     }
 
@@ -94,11 +127,13 @@ impl FastDecode {
     pub fn start_batch(&mut self, first_id: u64) {
         if !self.seq_ids.is_empty() {
             let old = self.seq_ids.clone();
-            self.rpool.drop_seqs(&old);
+            self.pipeline.rpool_mut().drop_seqs(&old);
         }
         self.seq_ids = (0..self.cfg.batch as u64).map(|i| first_id + i).collect();
         self.ctx_len = vec![0; self.cfg.batch];
-        self.rpool.add_seqs(&self.seq_ids.clone());
+        let ids = self.seq_ids.clone();
+        self.pipeline.rpool_mut().add_seqs(&ids);
+        self.current = None;
     }
 
     /// One decode step: current tokens `[B]` in → next tokens `[B]` out.
@@ -107,97 +142,58 @@ impl FastDecode {
         Ok(next)
     }
 
-    /// Decode step with stage timing (s_time / r_time measured).
+    /// Decode step with stage timing measured from real wall-clock
+    /// timestamps inside the threaded pipeline.
     pub fn decode_step_traced(
         &mut self,
         tokens: &[i32],
     ) -> Result<(Vec<i32>, StepRecord)> {
         let b = self.cfg.batch;
-        let h = self.spec.hidden;
         assert_eq!(tokens.len(), b);
-        let mut s_time = 0.0;
-        let mut r_time = 0.0;
-
-        let t0 = Instant::now();
-        let mut x = self.sworker.embed(tokens)?;
-        s_time += t0.elapsed().as_secs_f64();
-
-        for layer in 0..self.cfg.layers {
-            let t = Instant::now();
-            let qkv = self.sworker.s_pre(layer, &x)?;
-            s_time += t.elapsed().as_secs_f64();
-
-            // Scatter: per-sequence Q/K/V slices (head-major [H*D]).
-            let qkv_data = qkv.as_f32()?;
-            let tasks: Vec<SeqTask> = (0..b)
-                .map(|i| {
-                    let row = &qkv_data[i * 3 * h..(i + 1) * 3 * h];
-                    SeqTask {
-                        seq_id: self.seq_ids[i],
-                        q: row[0..h].to_vec(),
-                        k_new: row[h..2 * h].to_vec(),
-                        v_new: row[2 * h..3 * h].to_vec(),
-                    }
-                })
-                .collect();
-            let t = Instant::now();
-            let step = self.rpool.attend(layer, tasks);
-            r_time += t.elapsed().as_secs_f64();
-
-            // Gather O in sequence order.
-            let mut o_data = Vec::with_capacity(b * h);
-            for &id in &self.seq_ids {
-                o_data.extend_from_slice(&step.outputs[&id]);
-            }
-            let o = Tensor::f32(&[b, h], o_data);
-
-            let t = Instant::now();
-            x = self.sworker.s_post(layer, &x, &o)?;
-            s_time += t.elapsed().as_secs_f64();
+        // Every step appends one token's K/V per sequence; refuse the
+        // step that would overflow the per-sequence cache instead of
+        // asserting inside an R-worker thread.
+        if self.ctx_len.first().is_some_and(|&l| l >= self.cfg.capacity_per_seq)
+        {
+            bail!(
+                "KV capacity exhausted: {} tokens per sequence already \
+                 cached (capacity_per_seq = {})",
+                self.ctx_len[0],
+                self.cfg.capacity_per_seq
+            );
         }
-
+        let (next, t) = self.pipeline.step(tokens, &self.seq_ids)?;
         for l in self.ctx_len.iter_mut() {
             *l += 1;
         }
-        let t = Instant::now();
-        let logits = self.sworker.logits(&x)?;
-        let next = self.sworker.argmax(&logits)?;
-        s_time += t.elapsed().as_secs_f64();
-
         let rec = StepRecord {
             step: 0,
-            latency_s: t0.elapsed().as_secs_f64(),
-            s_time,
-            r_time,
-            comm_time: 0.0,
+            latency_s: t.latency_s,
+            s_time: t.s_time,
+            r_time: t.r_time,
+            comm_time: t.comm_time,
             tokens: b,
             total_ctx: self.ctx_len.iter().sum(),
         };
         Ok((next, rec))
     }
 
-    /// Prefill + generate: feed each prompt token, then decode `steps`
-    /// new tokens greedily. All prompts must have equal length (the
-    /// paper's throughput benchmark uses a short fixed prompt).
-    pub fn generate(
-        &mut self,
-        prompts: &[Vec<i32>],
-        steps: usize,
-    ) -> Result<GenerationResult> {
+    /// Start a batch and run the prompt prefill, leaving the engine one
+    /// decode step away from its first generated token. All prompts must
+    /// have equal length.
+    pub fn prime(&mut self, prompts: &[Vec<i32>], first_id: u64) -> Result<()> {
         let b = self.cfg.batch;
-        assert_eq!(prompts.len(), b, "need exactly batch={b} prompts");
+        if prompts.len() != b {
+            bail!("need exactly batch={b} prompts, got {}", prompts.len());
+        }
         let plen = prompts[0].len();
-        assert!(plen > 0);
-        assert!(
-            prompts.iter().all(|p| p.len() == plen),
-            "prompts must be equal length"
-        );
-        assert!(
-            plen + steps <= self.cfg.capacity_per_seq,
-            "prompt+steps exceeds KV capacity"
-        );
-        self.start_batch(1);
-
+        if plen == 0 || prompts.iter().any(|p| p.len() != plen) {
+            bail!("prompts must be equal non-zero length");
+        }
+        if plen > self.cfg.capacity_per_seq {
+            bail!("prompt length {plen} exceeds KV capacity");
+        }
+        self.start_batch(first_id);
         // Prefill one position at a time (token-batched across sequences,
         // same code path as decode — correct but not prefill-optimized).
         let mut current: Vec<i32> = prompts.iter().map(|p| p[0]).collect();
@@ -205,6 +201,24 @@ impl FastDecode {
             self.decode_step(&current)?;
             current = prompts.iter().map(|p| p[pos]).collect();
         }
+        self.current = Some(current);
+        Ok(())
+    }
+
+    /// Prefill + generate: feed each prompt token, then decode `steps`
+    /// new tokens greedily.
+    pub fn generate(
+        &mut self,
+        prompts: &[Vec<i32>],
+        steps: usize,
+    ) -> Result<GenerationResult> {
+        let b = self.cfg.batch;
+        let plen = prompts.first().map(Vec::len).unwrap_or(0);
+        if plen + steps > self.cfg.capacity_per_seq {
+            bail!("prompt+steps exceeds KV capacity");
+        }
+        self.prime(prompts, 1)?;
+        let mut current = self.current.take().expect("primed");
 
         let mut out: Vec<Vec<i32>> = vec![Vec::with_capacity(steps); b];
         let mut hist = Histogram::new();
@@ -219,6 +233,7 @@ impl FastDecode {
             }
             current = next;
         }
+        self.current = Some(current);
         Ok(GenerationResult {
             tokens: out,
             step_latency: hist,
@@ -228,6 +243,43 @@ impl FastDecode {
 
     /// Aggregate KV tokens currently held across sockets.
     pub fn cache_tokens(&self) -> usize {
-        self.rpool.stats().iter().map(|s| s.total_tokens).sum()
+        self.pipeline
+            .rpool()
+            .stats()
+            .iter()
+            .map(|s| s.total_tokens)
+            .sum()
+    }
+}
+
+impl Coordinator for FastDecode {
+    fn backend(&self) -> &'static str {
+        // the pipeline silently degrades to the serial schedule when the
+        // batch cannot be split into two mini-batches — report the mode
+        // that actually ran, not the requested one
+        if self.cfg.pipelined && self.cfg.batch >= 2 {
+            "real-threaded-pipelined"
+        } else {
+            "real-threaded-serial"
+        }
+    }
+
+    /// Decode `steps` tokens from the primed state (see
+    /// [`FastDecode::prime`]), tracing every step with measured
+    /// wall-clock stage times.
+    fn run_steps(&mut self, steps: usize) -> Result<StepTrace> {
+        let mut current = match self.current.take() {
+            Some(c) => c,
+            None => bail!("run_steps needs prime() first"),
+        };
+        let mut trace = StepTrace::default();
+        for step in 0..steps {
+            let (next, mut rec) = self.decode_step_traced(&current)?;
+            rec.step = step;
+            trace.push(rec);
+            current = next;
+        }
+        self.current = Some(current);
+        Ok(trace)
     }
 }

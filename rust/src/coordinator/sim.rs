@@ -86,7 +86,7 @@ impl SimConfig {
             }
             Some(f) => {
                 let sls = SlsSchedule::new(self.batch, self.seq_len, f);
-                let m = sls.micro_batch_size().max(1);
+                let m = sls.micro_batch_size(); // ≥ 1 by contract
                 // count alive micro-batches at `step`
                 let mut active = 0usize;
                 let mut j = 0usize;
@@ -110,7 +110,7 @@ impl SimConfig {
 // count capped so aggregate active sequences never exceed ℬ.
 impl SlsSchedule {
     pub fn load_at_capped(&self, step: usize, batch_cap: usize) -> usize {
-        let m = self.micro_batch_size().max(1);
+        let m = self.micro_batch_size(); // ≥ 1 by contract
         let mut total = 0usize;
         let mut active = 0usize;
         // youngest first so the cap drops the OLDEST batches (they finish)

@@ -10,7 +10,7 @@ mod quant;
 mod store;
 
 pub use quant::{
-    dequant_i4, dequant_i8, nibble_to_i32, quant_i4, quant_i8,
-    NIBBLE_PAIR_LUT,
+    dequant_i4, dequant_i8, nibble_pair_lut, nibble_to_i32, quant_i4,
+    quant_i8,
 };
 pub use store::{CacheStats, SeqKv, SocketCache};

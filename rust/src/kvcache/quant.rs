@@ -58,18 +58,23 @@ pub fn nibble_to_i32(n: u8) -> i32 {
     ((n as i32) << 28) >> 28
 }
 
+static NIBBLE_PAIR_LUT: std::sync::OnceLock<[[f32; 2]; 256]> =
+    std::sync::OnceLock::new();
+
 /// Byte → (low nibble, high nibble) as f32, via a 2 KiB L1-resident LUT
 /// (one load replaces two shift/mask/sign-extend/convert chains in the
-/// int4 attention hot loop — EXPERIMENTS.md §Perf).
-pub static NIBBLE_PAIR_LUT: once_cell::sync::Lazy<[[f32; 2]; 256]> =
-    once_cell::sync::Lazy::new(|| {
+/// int4 attention hot loop — EXPERIMENTS.md §Perf). Callers hoist the
+/// returned reference out of their inner loops.
+pub fn nibble_pair_lut() -> &'static [[f32; 2]; 256] {
+    NIBBLE_PAIR_LUT.get_or_init(|| {
         let mut t = [[0.0f32; 2]; 256];
         for (b, pair) in t.iter_mut().enumerate() {
             pair[0] = nibble_to_i32(b as u8 & 0x0f) as f32;
             pair[1] = nibble_to_i32(b as u8 >> 4) as f32;
         }
         t
-    });
+    })
+}
 
 /// Dequantize packed i4 into fp32; `dst.len()` values are produced.
 pub fn dequant_i4(src: &[u8], scale: f32, dst: &mut [f32]) {

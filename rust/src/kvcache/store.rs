@@ -371,6 +371,101 @@ mod tests {
         kv.append(&k, &v);
     }
 
+    /// `is_full` is ENFORCED: an append past capacity is rejected before
+    /// any write, so the stored tokens survive untouched (no silent
+    /// ring-buffer overwrite).
+    #[test]
+    fn append_past_capacity_rejected_without_overwrite() {
+        let (h, d, cap) = (2, 4, 3);
+        let mut kv = SeqKv::new(h, d, cap, Precision::F32);
+        let mut rng = Rng::new(8);
+        let tokens: Vec<(Vec<f32>, Vec<f32>)> = (0..cap)
+            .map(|_| (rng.normal_vec(h * d, 1.0), rng.normal_vec(h * d, 1.0)))
+            .collect();
+        for (k, v) in &tokens {
+            kv.append(k, v);
+        }
+        assert!(kv.is_full());
+        let extra_k = rng.normal_vec(h * d, 1.0);
+        let extra_v = rng.normal_vec(h * d, 1.0);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || kv.append(&extra_k, &extra_v),
+        ));
+        assert!(result.is_err(), "overfull append must be rejected");
+        // every original token decodes back exactly — nothing overwritten
+        assert_eq!(kv.len, cap);
+        let mut out = vec![0.0; d];
+        for (t, (k, _)) in tokens.iter().enumerate() {
+            for head in 0..h {
+                kv.decode_k(head, t, &mut out);
+                assert_eq!(out, &k[head * d..(head + 1) * d], "token {t}");
+            }
+        }
+    }
+
+    /// Int4 with an odd number of appended tokens: the per-token packing
+    /// is independent of the token count, and every token (including the
+    /// last, odd one) round-trips within the int4 quantization bound.
+    #[test]
+    fn int4_odd_token_count_roundtrips() {
+        let (h, d, cap) = (2, 6, 16);
+        let mut kv = SeqKv::new(h, d, cap, Precision::Int4);
+        let mut rng = Rng::new(21);
+        let mut kept = Vec::new();
+        for _ in 0..7 {
+            let k = rng.normal_vec(h * d, 1.0);
+            let v = rng.normal_vec(h * d, 1.0);
+            kv.append(&k, &v);
+            kept.push(k);
+        }
+        assert_eq!(kv.len, 7);
+        let mut out = vec![0.0; d];
+        for (t, k) in kept.iter().enumerate() {
+            for head in 0..h {
+                let row = &k[head * d..(head + 1) * d];
+                let max = row.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                kv.decode_k(head, t, &mut out);
+                for (a, b) in out.iter().zip(row) {
+                    assert!(
+                        (a - b).abs() <= max / 7.0 * 0.51 + 1e-6,
+                        "t={t} head={head}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Int8 per-(head, token) scales: each token's decode error is
+    /// bounded by ITS OWN scale, even when magnitudes differ by 100×
+    /// between tokens (a per-tensor scale would fail this).
+    #[test]
+    fn int8_scale_roundtrip_per_token() {
+        let (h, d, cap) = (1, 8, 8);
+        let mut kv = SeqKv::new(h, d, cap, Precision::Int8);
+        let mut rng = Rng::new(33);
+        let magnitudes = [0.01f32, 1.0, 100.0];
+        let rows: Vec<Vec<f32>> = magnitudes
+            .iter()
+            .map(|&m| rng.normal_vec(d, m))
+            .collect();
+        for row in &rows {
+            kv.append(row, row);
+        }
+        let mut out = vec![0.0; d];
+        for (t, row) in rows.iter().enumerate() {
+            let max = row.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            kv.decode_k(0, t, &mut out);
+            for (a, b) in out.iter().zip(row) {
+                // half-step of THIS token's scale, not the batch max
+                assert!(
+                    (a - b).abs() <= max / 127.0 * 0.51 + 1e-7,
+                    "t={t}: {a} vs {b} (scale step {})",
+                    max / 127.0
+                );
+            }
+        }
+    }
+
     #[test]
     fn quantization_shrinks_memory() {
         let mk = |p| SeqKv::new(8, 64, 128, p).allocated_bytes();

@@ -2,10 +2,12 @@
 //! heterogeneous pipelines (reproduction of He & Zhai, 2024).
 //!
 //! The transformer decode step is split at the paper's R/S boundary:
-//! *S-Part* (shared-parameter matmuls) runs as AOT-compiled XLA graphs on
-//! the S-worker; *R-Part* (per-sequence attention over the KV-cache) runs
-//! near the cache on CPU R-worker sockets. The coordinator pipelines the
-//! two at token level and stabilizes R-Part load at sequence level
+//! *S-Part* (shared-parameter matmuls) runs on the S-worker thread
+//! (native Rust executor, `sworker::NativeSWorker`); *R-Part*
+//! (per-sequence attention over the KV-cache) runs near the cache on CPU
+//! R-worker socket threads. The coordinator pipelines the two at token
+//! level — two mini-batches double-buffered over channels
+//! (`runtime::pipeline`) — and stabilizes R-Part load at sequence level
 //! (SLS + Algorithm 1). See DESIGN.md for the system inventory and the
 //! per-experiment index.
 

@@ -3,9 +3,7 @@
 //!
 //! Offline environment: no clap — a small hand-rolled arg parser.
 
-use std::sync::Arc;
-
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
 use fastdecode::bench::Table;
 use fastdecode::coordinator::real::{FastDecode, FastDecodeConfig};
@@ -14,7 +12,6 @@ use fastdecode::model::ModelSpec;
 use fastdecode::perfmodel::{
     CpuModel, GpuModel, PlanInput, Planner, A10, EPYC_7452, V100, XEON_5218,
 };
-use fastdecode::runtime::Engine;
 use fastdecode::rworker::stream_bandwidth_probe;
 use fastdecode::workload::fixed_batch;
 
@@ -56,8 +53,9 @@ COMMANDS:
   simulate [--model M] [--batch B] [--seq S] [--sockets P] [--sls F]
                         virtual-clock run; prints per-step stats
   probe                 measure this machine's per-thread KV bandwidth
-  demo [--batch B] [--steps N] [--sockets P]
-                        real end-to-end decode on the tiny model (PJRT)
+  demo [--batch B] [--steps N] [--sockets P] [--no-pipeline]
+                        real end-to-end decode on the tiny model
+                        (native S-worker + threaded R-pool)
 "
     );
 }
@@ -183,21 +181,21 @@ fn cmd_demo(rest: &[String]) -> Result<()> {
         .map(|s| s.parse())
         .transpose()?
         .unwrap_or(2);
-    if batch != 1 && batch != 8 {
-        bail!("artifacts exist for batch 1 and 8 (re-run aot.py for more)");
-    }
-    let engine = Arc::new(Engine::load(fastdecode::artifacts_dir())?);
-    println!("PJRT platform: {}", engine.platform());
+    let pipelined = !rest.iter().any(|a| a == "--no-pipeline");
     let spec = fastdecode::model::TINY;
     let mut fd = FastDecode::new(
-        engine,
         spec,
         FastDecodeConfig {
             batch,
             sockets,
+            pipelined,
             ..Default::default()
         },
     )?;
+    println!(
+        "backend: native S-worker thread + {sockets} R-socket threads \
+         (pipelined: {pipelined})"
+    );
     let prompts = fixed_batch(batch, 4, spec.vocab, 42);
     let start = std::time::Instant::now();
     let result = fd.generate(&prompts, steps)?;

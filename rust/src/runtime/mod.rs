@@ -1,16 +1,21 @@
-//! PJRT runtime: load AOT artifacts (HLO text) and execute them from the
-//! Rust hot path.
+//! The execution runtime: host tensors, the AOT artifact manifest, and
+//! the threaded token-level pipeline.
 //!
-//! `make artifacts` (python, build-time only) writes `artifacts/*.hlo.txt`
-//! plus `manifest.txt`; this module parses the manifest, compiles each
-//! graph once on the PJRT CPU client, and exposes typed `execute` calls.
-//! HLO *text* is the interchange format — xla_extension 0.5.1 rejects
-//! jax≥0.5 serialized protos (see /opt/xla-example/README.md).
+//! * [`pipeline`] — the real two-stage S/R pipeline (paper Fig 5b): the
+//!   S-worker thread and the R-worker sockets double-buffer two
+//!   mini-batches over `util::chan` channels.
+//! * [`Tensor`] — f32/i32 host tensors crossing the S↔R boundary.
+//! * [`Manifest`] — the `artifacts/manifest.txt` format written by
+//!   `python/compile/aot.py`. The PJRT executor that consumed it was
+//!   removed (the `xla_extension` native library is unavailable in the
+//!   offline build); the format and the golden files remain the
+//!   cross-language pinning contract — see `tests/golden_roundtrip.rs`,
+//!   which replays goldens through the native S-Part ops when present.
 
-mod engine;
 mod manifest;
+pub mod pipeline;
 mod tensor;
 
-pub use engine::{Engine, Executable};
 pub use manifest::{Artifact, Dtype, Golden, Manifest, TensorMeta};
+pub use pipeline::{PipelineConfig, StepTiming, ThreadedPipeline};
 pub use tensor::Tensor;

@@ -1,0 +1,453 @@
+//! The REAL token-level two-stage pipeline (paper §4.1, Fig 5b) — the
+//! threaded runtime behind `coordinator::real`.
+//!
+//! The S-worker runs on its own thread (owning the native S-Part
+//! executor); the R-workers are the `RPool` socket threads. One decode
+//! step splits the batch into two mini-batches, A and B, that the two
+//! sides process in alternation: while the R-sockets attend mini-batch
+//! A's layer, the S-thread runs mini-batch B's matmuls, and vice versa —
+//! so the steady-state step costs max(s, r) instead of s + r. QKV and O
+//! activations cross the S↔R boundary over `util::chan` channels, and
+//! [`crate::transport::LinkModel`] charges modeled wire time against the
+//! real byte counts (recorded as `comm_time`; wall latency is measured).
+//!
+//! With `pipelined = false` the SAME two mini-batches run strictly
+//! serially (Fig 5a with an identical stage decomposition), which is
+//! what the smoke tests compare against.
+
+use std::collections::HashMap;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::rworker::{PendingAttend, RPool, SeqTask};
+use crate::sworker::NativeSWorker;
+use crate::transport::{LinkModel, PCIE4_X16, ROCE_100G};
+use crate::util::chan::{bounded, Receiver, Sender};
+
+use super::tensor::Tensor;
+
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineConfig {
+    /// Overlap the two mini-batches (Fig 5b). When false the same
+    /// mini-batches run serially (Fig 5a).
+    pub pipelined: bool,
+    /// Artificial dilation of every S stage, slept on the S-thread and
+    /// counted in `s_time`. Zero in production; smoke tests use it to
+    /// pin stage latencies.
+    pub s_pad: Duration,
+    /// Links used to price the activation traffic (GPU→host→sockets).
+    pub pcie: LinkModel,
+    pub net: LinkModel,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            pipelined: true,
+            s_pad: Duration::ZERO,
+            pcie: PCIE4_X16,
+            net: ROCE_100G,
+        }
+    }
+}
+
+/// Timing of one decode step, from real wall-clock timestamps.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepTiming {
+    /// Wall time of the whole step.
+    pub latency_s: f64,
+    /// Σ of S-stage durations measured on the S-thread.
+    pub s_time: f64,
+    /// Σ over (mini-batch, layer) of the slowest socket's busy time.
+    pub r_time: f64,
+    /// Modeled activation wire time for the real bytes shipped.
+    pub comm_time: f64,
+}
+
+/// Coordinator → S-thread.
+enum SReq {
+    /// Begin a step for mini-batch `mb`: embed + s_pre(layer 0).
+    Start { mb: usize, tokens: Vec<i32> },
+    /// O gathered for (mb, layer): s_post, then s_pre(layer+1) — or the
+    /// logits head if `layer` was the last.
+    Advance { mb: usize, layer: usize, o: Vec<f32> },
+    Shutdown,
+}
+
+/// S-thread → coordinator.
+enum SResp {
+    Qkv {
+        mb: usize,
+        layer: usize,
+        qkv: Vec<f32>,
+        elapsed_s: f64,
+    },
+    Done {
+        mb: usize,
+        next: Vec<i32>,
+        elapsed_s: f64,
+    },
+}
+
+pub struct ThreadedPipeline {
+    req_tx: Sender<SReq>,
+    resp_rx: Receiver<SResp>,
+    handle: Option<JoinHandle<()>>,
+    rpool: RPool,
+    cfg: PipelineConfig,
+    hidden: usize,
+    layers: usize,
+    vocab: usize,
+}
+
+impl ThreadedPipeline {
+    /// Spawn the S-worker thread around `sworker`; `rpool`'s socket
+    /// threads are already running.
+    pub fn new(
+        sworker: NativeSWorker,
+        rpool: RPool,
+        cfg: PipelineConfig,
+    ) -> ThreadedPipeline {
+        let hidden = sworker.spec().hidden;
+        let vocab = sworker.spec().vocab;
+        let layers = sworker.layers();
+        assert!(layers > 0, "pipeline needs at least one layer");
+        let (req_tx, req_rx) = bounded::<SReq>(8);
+        let (resp_tx, resp_rx) = bounded::<SResp>(8);
+        let pad = cfg.s_pad;
+        let handle = std::thread::Builder::new()
+            .name("sworker".into())
+            .spawn(move || s_worker_loop(sworker, pad, req_rx, resp_tx))
+            .expect("spawning s-worker thread");
+        ThreadedPipeline {
+            req_tx,
+            resp_rx,
+            handle: Some(handle),
+            rpool,
+            cfg,
+            hidden,
+            layers,
+            vocab,
+        }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    pub fn pipelined(&self) -> bool {
+        self.cfg.pipelined
+    }
+
+    pub fn rpool(&self) -> &RPool {
+        &self.rpool
+    }
+
+    pub fn rpool_mut(&mut self) -> &mut RPool {
+        &mut self.rpool
+    }
+
+    /// One decode step: `tokens[i]` is the current token of sequence
+    /// `seq_ids[i]`. Returns the greedily sampled next tokens in the
+    /// same order, plus the measured stage timing.
+    pub fn step(
+        &mut self,
+        tokens: &[i32],
+        seq_ids: &[u64],
+    ) -> Result<(Vec<i32>, StepTiming)> {
+        assert_eq!(tokens.len(), seq_ids.len());
+        let b = tokens.len();
+        if b == 0 {
+            bail!("empty decode step");
+        }
+        // Validate here, at the Result-returning surface: once a bad id
+        // reaches the S-thread it can only surface as a thread death.
+        for &t in tokens {
+            if t < 0 || t as usize >= self.vocab {
+                bail!("token id {t} outside vocab {}", self.vocab);
+            }
+        }
+        let t0 = Instant::now();
+        let mut timing = StepTiming::default();
+        // Two mini-batches whenever the batch allows, in BOTH modes, so
+        // pipelined and serial runs do identical per-stage work.
+        let ranges: Vec<(usize, usize)> = if b >= 2 {
+            vec![(0, b / 2), (b / 2, b)]
+        } else {
+            vec![(0, b)]
+        };
+        let next = if self.cfg.pipelined && ranges.len() == 2 {
+            self.step_pipelined(tokens, seq_ids, &ranges, &mut timing)?
+        } else {
+            self.step_serial(tokens, seq_ids, &ranges, &mut timing)?
+        };
+        timing.latency_s = t0.elapsed().as_secs_f64();
+        Ok((next, timing))
+    }
+
+    /// Fig 5b: strict two-mini-batch alternation. Every R stage of one
+    /// mini-batch runs concurrently with an S stage of the other.
+    fn step_pipelined(
+        &mut self,
+        tokens: &[i32],
+        ids: &[u64],
+        ranges: &[(usize, usize)],
+        timing: &mut StepTiming,
+    ) -> Result<Vec<i32>> {
+        let (ra, rb) = (ranges[0], ranges[1]);
+        let layers = self.layers;
+        self.send_start(0, ra, tokens)?;
+        let qkv_a = self.expect_qkv(0, 0, timing)?;
+        let mut pend_a = self.dispatch(0, ra, ids, &qkv_a, timing);
+        self.send_start(1, rb, tokens)?; // S(B) ∥ R(A, 0)
+
+        let mut next_a = Vec::new();
+        let mut next_b = Vec::new();
+        for layer in 0..layers {
+            let qkv_b = self.expect_qkv(1, layer, timing)?;
+            let o_a = self.gather(pend_a, ra, ids, timing);
+            self.send_advance(0, layer, o_a)?;
+            let pend_b = self.dispatch(layer, rb, ids, &qkv_b, timing);
+            // now: S(A, layer→layer+1) ∥ R(B, layer)
+            if layer + 1 < layers {
+                let qkv_a = self.expect_qkv(0, layer + 1, timing)?;
+                let o_b = self.gather(pend_b, rb, ids, timing);
+                self.send_advance(1, layer, o_b)?;
+                pend_a = self.dispatch(layer + 1, ra, ids, &qkv_a, timing);
+                // next iteration: S(B, layer+1) ∥ R(A, layer+1)
+            } else {
+                next_a = self.expect_done(0, timing)?;
+                let o_b = self.gather(pend_b, rb, ids, timing);
+                self.send_advance(1, layer, o_b)?;
+                next_b = self.expect_done(1, timing)?;
+            }
+        }
+        next_a.extend(next_b);
+        Ok(next_a)
+    }
+
+    /// Fig 5a: the same mini-batches, strictly serial (no S/R overlap).
+    fn step_serial(
+        &mut self,
+        tokens: &[i32],
+        ids: &[u64],
+        ranges: &[(usize, usize)],
+        timing: &mut StepTiming,
+    ) -> Result<Vec<i32>> {
+        let layers = self.layers;
+        let mut next = Vec::with_capacity(tokens.len());
+        for (mb, &range) in ranges.iter().enumerate() {
+            self.send_start(mb, range, tokens)?;
+            let mut qkv = self.expect_qkv(mb, 0, timing)?;
+            for layer in 0..layers {
+                let pend = self.dispatch(layer, range, ids, &qkv, timing);
+                let o = self.gather(pend, range, ids, timing);
+                self.send_advance(mb, layer, o)?;
+                if layer + 1 < layers {
+                    qkv = self.expect_qkv(mb, layer + 1, timing)?;
+                } else {
+                    next.extend(self.expect_done(mb, timing)?);
+                }
+            }
+        }
+        Ok(next)
+    }
+
+    fn send_start(
+        &mut self,
+        mb: usize,
+        (lo, hi): (usize, usize),
+        tokens: &[i32],
+    ) -> Result<()> {
+        self.req_tx
+            .send(SReq::Start {
+                mb,
+                tokens: tokens[lo..hi].to_vec(),
+            })
+            .map_err(|_| anyhow!("s-worker thread died"))
+    }
+
+    fn send_advance(&mut self, mb: usize, layer: usize, o: Vec<f32>) -> Result<()> {
+        self.req_tx
+            .send(SReq::Advance { mb, layer, o })
+            .map_err(|_| anyhow!("s-worker thread died"))
+    }
+
+    /// Split one mini-batch's fused QKV rows into per-sequence tasks,
+    /// charge the modeled wire time for the real bytes, and scatter to
+    /// the sockets without waiting.
+    fn dispatch(
+        &mut self,
+        layer: usize,
+        (lo, hi): (usize, usize),
+        ids: &[u64],
+        qkv: &[f32],
+        timing: &mut StepTiming,
+    ) -> PendingAttend {
+        let h = self.hidden;
+        debug_assert_eq!(qkv.len(), (hi - lo) * 3 * h);
+        let tasks: Vec<SeqTask> = (lo..hi)
+            .enumerate()
+            .map(|(i, s)| {
+                let row = &qkv[i * 3 * h..(i + 1) * 3 * h];
+                SeqTask {
+                    seq_id: ids[s],
+                    q: row[..h].to_vec(),
+                    k_new: row[h..2 * h].to_vec(),
+                    v_new: row[2 * h..].to_vec(),
+                }
+            })
+            .collect();
+        // Modeled comm for the actual payload: QKV down over PCIe then
+        // scattered across the sockets; O back the same way.
+        let qkv_bytes = qkv.len() * 4;
+        let o_bytes = (hi - lo) * h * 4;
+        let sockets = self.rpool.sockets();
+        timing.comm_time += self.cfg.pcie.transfer_time(qkv_bytes)
+            + self.cfg.net.scatter_time(qkv_bytes, sockets)
+            + self.cfg.net.scatter_time(o_bytes, sockets)
+            + self.cfg.pcie.transfer_time(o_bytes);
+        self.rpool.submit_attend(layer, tasks)
+    }
+
+    /// Gather one mini-batch's attention outputs in sequence order.
+    fn gather(
+        &mut self,
+        pending: PendingAttend,
+        (lo, hi): (usize, usize),
+        ids: &[u64],
+        timing: &mut StepTiming,
+    ) -> Vec<f32> {
+        let step = self.rpool.wait_attend(pending);
+        timing.r_time += step.max_busy.as_secs_f64();
+        let mut o = Vec::with_capacity((hi - lo) * self.hidden);
+        for s in lo..hi {
+            o.extend_from_slice(&step.outputs[&ids[s]]);
+        }
+        o
+    }
+
+    fn recv_s(&mut self, timing: &mut StepTiming) -> Result<SResp> {
+        match self.resp_rx.recv() {
+            Ok(resp) => {
+                timing.s_time += match &resp {
+                    SResp::Qkv { elapsed_s, .. } => *elapsed_s,
+                    SResp::Done { elapsed_s, .. } => *elapsed_s,
+                };
+                Ok(resp)
+            }
+            Err(_) => bail!("s-worker thread died"),
+        }
+    }
+
+    fn expect_qkv(
+        &mut self,
+        mb: usize,
+        layer: usize,
+        timing: &mut StepTiming,
+    ) -> Result<Vec<f32>> {
+        match self.recv_s(timing)? {
+            SResp::Qkv {
+                mb: m,
+                layer: l,
+                qkv,
+                ..
+            } if m == mb && l == layer => Ok(qkv),
+            SResp::Qkv { mb: m, layer: l, .. } => bail!(
+                "pipeline protocol violation: got qkv({m}, {l}), \
+                 wanted qkv({mb}, {layer})"
+            ),
+            SResp::Done { mb: m, .. } => bail!(
+                "pipeline protocol violation: got done({m}), \
+                 wanted qkv({mb}, {layer})"
+            ),
+        }
+    }
+
+    fn expect_done(
+        &mut self,
+        mb: usize,
+        timing: &mut StepTiming,
+    ) -> Result<Vec<i32>> {
+        match self.recv_s(timing)? {
+            SResp::Done { mb: m, next, .. } if m == mb => Ok(next),
+            _ => bail!("pipeline protocol violation: wanted done({mb})"),
+        }
+    }
+}
+
+impl Drop for ThreadedPipeline {
+    fn drop(&mut self) {
+        let _ = self.req_tx.send(SReq::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// S-worker thread body: serve Start/Advance requests FIFO, holding the
+/// per-mini-batch residual stream between phases.
+fn s_worker_loop(
+    sworker: NativeSWorker,
+    pad: Duration,
+    rx: Receiver<SReq>,
+    tx: Sender<SResp>,
+) {
+    let layers = sworker.layers();
+    let h = sworker.spec().hidden;
+    let mut resid: HashMap<usize, Tensor> = HashMap::new();
+    while let Ok(req) = rx.recv() {
+        let t0 = Instant::now();
+        enum Payload {
+            Qkv(usize, usize, Vec<f32>),
+            Done(usize, Vec<i32>),
+        }
+        let payload = match req {
+            SReq::Shutdown => return,
+            SReq::Start { mb, tokens } => {
+                let x = sworker.embed(&tokens).expect("s-worker embed");
+                let qkv = sworker.s_pre(0, &x).expect("s-worker s_pre");
+                resid.insert(mb, x);
+                Payload::Qkv(mb, 0, qkv.into_f32().expect("qkv dtype"))
+            }
+            SReq::Advance { mb, layer, o } => {
+                let x = resid.remove(&mb).expect("no residual for mini-batch");
+                let n = o.len() / h;
+                let o_t = Tensor::f32(&[n, h], o);
+                let y = sworker.s_post(layer, &x, &o_t).expect("s-worker s_post");
+                if layer + 1 < layers {
+                    let qkv =
+                        sworker.s_pre(layer + 1, &y).expect("s-worker s_pre");
+                    resid.insert(mb, y);
+                    Payload::Qkv(mb, layer + 1, qkv.into_f32().expect("qkv"))
+                } else {
+                    let logits = sworker.logits(&y).expect("s-worker logits");
+                    let next = sworker.argmax(&logits).expect("argmax");
+                    Payload::Done(mb, next)
+                }
+            }
+        };
+        if !pad.is_zero() {
+            std::thread::sleep(pad);
+        }
+        let elapsed_s = t0.elapsed().as_secs_f64();
+        let resp = match payload {
+            Payload::Qkv(mb, layer, qkv) => SResp::Qkv {
+                mb,
+                layer,
+                qkv,
+                elapsed_s,
+            },
+            Payload::Done(mb, next) => SResp::Done {
+                mb,
+                next,
+                elapsed_s,
+            },
+        };
+        if tx.send(resp).is_err() {
+            return;
+        }
+    }
+}

@@ -1,9 +1,10 @@
-//! A tiny host tensor type for crossing the Rust ⇄ PJRT boundary.
+//! A tiny host tensor type for the S-worker boundary.
 //!
 //! Activations on the S-worker↔R-worker path are f32 row-major buffers
-//! with explicit shapes; `Tensor` carries both and converts to/from
-//! `xla::Literal` in engine.rs. (KV-cache storage uses its own packed
-//! fp16/int formats in kvcache/ — this type is only for graph I/O.)
+//! with explicit shapes; `Tensor` carries both through the native
+//! S-Part executor and the pipeline channels. (KV-cache storage uses its
+//! own packed fp16/int formats in kvcache/ — this type is only for
+//! graph I/O.)
 
 use anyhow::{bail, Result};
 

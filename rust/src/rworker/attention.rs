@@ -327,11 +327,11 @@ fn attend_head_i4(
     let mut l = 0.0f32;
     let pd = d / 2;
     let _ = row;
+    let lut = crate::kvcache::nibble_pair_lut();
     for t in 0..len {
         // fused nibble decode + dot: one byte yields two fused
         // multiply-adds, no staging buffer (§Perf: ~8× over the
         // dequant-then-dot version)
-        let lut = &*super::super::kvcache::NIBBLE_PAIR_LUT;
         let krow = &k[t * pd..(t + 1) * pd];
         let mut s0 = 0.0f32;
         let mut s1 = 0.0f32;

@@ -13,5 +13,5 @@ mod worker;
 pub use attention::{
     attend_one, attend_one_f32, stream_bandwidth_probe, AttnScratch,
 };
-pub use pool::{RPool, RPoolConfig};
+pub use pool::{PendingAttend, PoolStep, RPool, RPoolConfig};
 pub use worker::{RRequest, RResponse, RWorker, SeqTask};

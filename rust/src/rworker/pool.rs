@@ -20,6 +20,10 @@ pub struct RPoolConfig {
     pub sockets: usize,
     pub capacity_per_seq: usize,
     pub precision: Precision,
+    /// Artificial per-attend dilation, applied inside every socket and
+    /// counted in its busy time. Zero in production; pipeline smoke
+    /// tests use it to pin the R-stage latency (see `RWorker::spawn`).
+    pub attend_pad: Duration,
 }
 
 impl Default for RPoolConfig {
@@ -28,8 +32,17 @@ impl Default for RPoolConfig {
             sockets: 2,
             capacity_per_seq: 2048,
             precision: Precision::F16,
+            attend_pad: Duration::ZERO,
         }
     }
+}
+
+/// Handle to an attend that has been scattered to the sockets but not
+/// yet gathered (returned by [`RPool::submit_attend`]).
+pub struct PendingAttend {
+    active: Vec<usize>,
+    layer: usize,
+    n: usize,
 }
 
 /// Outputs of one pooled attend call.
@@ -60,6 +73,7 @@ impl RPool {
                     spec.n_layers,
                     cfg.capacity_per_seq,
                     cfg.precision,
+                    cfg.attend_pad,
                 )
             })
             .collect();
@@ -124,12 +138,16 @@ impl RPool {
         }
     }
 
-    /// Scatter one layer's tasks to sockets, attend in parallel, gather.
-    ///
-    /// All sockets compute concurrently; the returned `max_busy` is what
-    /// the token-level pipeline sees as R-Part latency (Fig 15's
-    /// "performance variance across nodes makes some workers wait").
-    pub fn attend(&mut self, layer: usize, tasks: Vec<SeqTask>) -> PoolStep {
+    /// Scatter one layer's tasks to their sockets WITHOUT waiting for
+    /// the results — the sockets start computing immediately, and the
+    /// caller is free to do S-Part work for the other mini-batch before
+    /// calling [`RPool::wait_attend`]. This split is what the threaded
+    /// token-level pipeline (Fig 5b) is built on.
+    pub fn submit_attend(
+        &mut self,
+        layer: usize,
+        tasks: Vec<SeqTask>,
+    ) -> PendingAttend {
         let n = tasks.len();
         let mut per_socket: Vec<Vec<SeqTask>> =
             (0..self.workers.len()).map(|_| Vec::new()).collect();
@@ -147,12 +165,27 @@ impl RPool {
                 active.push(s);
             }
         }
-        let mut outputs = HashMap::with_capacity(n);
+        PendingAttend { active, layer, n }
+    }
+
+    /// Gather one in-flight attend. Replies are FIFO per socket, so
+    /// pending handles must be waited in submission order; the echoed
+    /// layer tag and output count turn an out-of-order wait into a
+    /// panic instead of silently crossed activations.
+    pub fn wait_attend(&mut self, pending: PendingAttend) -> PoolStep {
+        let mut outputs = HashMap::with_capacity(pending.n);
         let mut max_busy = Duration::ZERO;
         let mut total_busy = Duration::ZERO;
-        for s in active {
+        for s in pending.active {
             match self.workers[s].recv() {
-                RResponse::Outputs { outs, busy } => {
+                RResponse::Outputs { layer, outs, busy } => {
+                    assert_eq!(
+                        layer, pending.layer,
+                        "socket {s} replied for layer {layer}, \
+                         handle is for layer {}: attends gathered out \
+                         of submission order",
+                        pending.layer
+                    );
                     max_busy = max_busy.max(busy);
                     total_busy += busy;
                     for (id, o) in outs {
@@ -162,11 +195,28 @@ impl RPool {
                 _ => panic!("expected outputs from socket {s}"),
             }
         }
+        assert_eq!(
+            outputs.len(),
+            pending.n,
+            "attend returned {} outputs for {} tasks",
+            outputs.len(),
+            pending.n
+        );
         PoolStep {
             outputs,
             max_busy,
             total_busy,
         }
+    }
+
+    /// Scatter one layer's tasks to sockets, attend in parallel, gather.
+    ///
+    /// All sockets compute concurrently; the returned `max_busy` is what
+    /// the token-level pipeline sees as R-Part latency (Fig 15's
+    /// "performance variance across nodes makes some workers wait").
+    pub fn attend(&mut self, layer: usize, tasks: Vec<SeqTask>) -> PoolStep {
+        let pending = self.submit_attend(layer, tasks);
+        self.wait_attend(pending)
     }
 
     /// Aggregate cache statistics across sockets.
@@ -206,6 +256,7 @@ mod tests {
                 sockets: 3,
                 capacity_per_seq: 8,
                 precision: Precision::F32,
+                ..Default::default()
             },
         );
         pool.add_seqs(&[0, 1, 2, 3, 4, 5]);
@@ -227,6 +278,7 @@ mod tests {
                     sockets,
                     capacity_per_seq: 8,
                     precision: Precision::F32,
+                    ..Default::default()
                 },
             );
             let ids: Vec<u64> = (0..5).collect();
@@ -259,6 +311,7 @@ mod tests {
                 sockets: 2,
                 capacity_per_seq: 8,
                 precision: Precision::F16,
+                ..Default::default()
             },
         );
         pool.add_seqs(&[1, 2, 3, 4]);

@@ -2,6 +2,7 @@
 //! append+attend requests over channels (paper §4.1's R-worker loop).
 
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use crate::kvcache::{CacheStats, SocketCache};
 use crate::model::Precision;
@@ -35,7 +36,10 @@ pub enum RRequest {
 /// Socket → coordinator reply.
 pub enum RResponse {
     /// Outputs in task order: (seq_id, o `[H*D]`), plus busy time spent.
+    /// Echoes the request's `layer` so out-of-order gathers fail loudly
+    /// instead of silently crossing activations between layers.
     Outputs {
+        layer: usize,
         outs: Vec<(u64, Vec<f32>)>,
         busy: std::time::Duration,
     },
@@ -52,6 +56,10 @@ pub struct RWorker {
 }
 
 impl RWorker {
+    /// `attend_pad` artificially dilates every Attend by a fixed sleep
+    /// (counted in the reported busy time). Zero in production; the
+    /// pipeline smoke tests use it to pin the R-stage latency so the
+    /// max(s, r)-vs-(s + r) assertion is robust on any machine.
     #[allow(clippy::too_many_arguments)]
     pub fn spawn(
         socket_id: usize,
@@ -60,6 +68,7 @@ impl RWorker {
         n_layers: usize,
         capacity_per_seq: usize,
         prec: Precision,
+        attend_pad: Duration,
     ) -> RWorker {
         let (req_tx, req_rx) = bounded::<RRequest>(4);
         let (resp_tx, resp_rx) = bounded::<RResponse>(4);
@@ -77,6 +86,7 @@ impl RWorker {
                         prec,
                     ),
                     head_dim,
+                    attend_pad,
                 )
             })
             .expect("spawning rworker thread");
@@ -115,6 +125,7 @@ fn run_loop(
     tx: Sender<RResponse>,
     mut cache: SocketCache,
     head_dim: usize,
+    attend_pad: Duration,
 ) {
     let mut scratch = AttnScratch::new(head_dim);
     while let Ok(req) = rx.recv() {
@@ -141,8 +152,11 @@ fn run_loop(
                     attend_one(kv, &task.q, &mut o, &mut scratch);
                     outs.push((task.seq_id, o));
                 }
+                if !attend_pad.is_zero() {
+                    std::thread::sleep(attend_pad);
+                }
                 let busy = start.elapsed();
-                if tx.send(RResponse::Outputs { outs, busy }).is_err() {
+                if tx.send(RResponse::Outputs { layer, outs, busy }).is_err() {
                     return;
                 }
             }
@@ -162,7 +176,7 @@ mod tests {
     #[test]
     fn worker_appends_and_attends() {
         let (h, d) = (2, 4);
-        let w = RWorker::spawn(0, h, d, 1, 16, Precision::F32);
+        let w = RWorker::spawn(0, h, d, 1, 16, Precision::F32, Duration::ZERO);
         w.submit(RRequest::AddSeqs(vec![1, 2]));
         assert!(matches!(w.recv(), RResponse::Ack));
 
@@ -212,7 +226,7 @@ mod tests {
     #[test]
     fn growing_sequence_is_consistent() {
         let (h, d) = (1, 8);
-        let w = RWorker::spawn(0, h, d, 2, 32, Precision::F16);
+        let w = RWorker::spawn(0, h, d, 2, 32, Precision::F16, Duration::ZERO);
         w.submit(RRequest::AddSeqs(vec![7]));
         w.recv();
         let mut rng = Rng::new(4);

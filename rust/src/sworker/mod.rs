@@ -1,15 +1,22 @@
 //! The S-worker: executes S-Part (shared-parameter matmuls) of every
-//! layer (paper §4.1). Two implementations:
+//! layer (paper §4.1).
 //!
-//! * [`PjrtSWorker`] — real numerics: runs the AOT-compiled HLO graphs
-//!   (embed, s_pre, s_post, logits) on the PJRT CPU client. Used by the
-//!   end-to-end example and cross-language tests.
+//! * [`NativeSWorker`] — real numerics in pure Rust (fp32), the same
+//!   math as the exported HLO graphs (`python/compile/model.py`). Runs
+//!   on its own thread inside the token-level pipeline
+//!   (`runtime::pipeline`). The previous PJRT executor was removed: the
+//!   `xla_extension` native library is unavailable in the offline build;
+//!   the artifact/golden format (`runtime::manifest`) is kept so the AOT
+//!   bridge can return as an optional backend.
+//! * [`ops`] — the underlying primitives plus the fused single-device
+//!   reference block used by the decomposition-equivalence tests.
 //! * Modeled S-workers live in `perfmodel::GpuModel` and are consumed by
 //!   the virtual-clock simulator (`coordinator::sim`) for figure-scale
 //!   batch sizes.
 
+mod native;
+pub mod ops;
 mod weights;
-mod worker;
 
+pub use native::NativeSWorker;
 pub use weights::{BlockWeights, ModelWeights};
-pub use worker::PjrtSWorker;

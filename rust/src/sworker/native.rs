@@ -1,0 +1,237 @@
+//! Native S-worker: the in-process S-Part executor.
+//!
+//! Executes embed / s_pre / s_post / logits in pure Rust (fp32), with
+//! the exact math of the exported HLO graphs (`python/compile/model.py`)
+//! — so it slots in wherever the PJRT executor did, with no artifacts
+//! and no native XLA library. Row counts are inferred from the inputs,
+//! which lets the token-level pipeline drive it with mini-batches.
+
+use anyhow::{bail, Result};
+
+use crate::model::ModelSpec;
+use crate::runtime::Tensor;
+
+use super::ops;
+use super::weights::ModelWeights;
+
+pub struct NativeSWorker {
+    pub weights: ModelWeights,
+}
+
+impl NativeSWorker {
+    pub fn new(weights: ModelWeights) -> NativeSWorker {
+        NativeSWorker { weights }
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.weights.spec
+    }
+
+    pub fn layers(&self) -> usize {
+        self.weights.layers()
+    }
+
+    /// tokens `[n]` → embeddings `[n, h]`.
+    pub fn embed(&self, tokens: &[i32]) -> Result<Tensor> {
+        let spec = self.weights.spec;
+        for &t in tokens {
+            if t < 0 || t as usize >= spec.vocab {
+                bail!("token id {t} outside vocab {}", spec.vocab);
+            }
+        }
+        let rows = ops::embed_rows(
+            tokens,
+            self.weights.w_emb.as_f32()?,
+            spec.vocab,
+            spec.hidden,
+        );
+        Ok(Tensor::f32(&[tokens.len(), spec.hidden], rows))
+    }
+
+    /// S-Part before attention on `layer`: x `[n, h]` → qkv `[n, 3h]`.
+    pub fn s_pre(&self, layer: usize, x: &Tensor) -> Result<Tensor> {
+        let h = self.weights.spec.hidden;
+        let b = self.block(layer)?;
+        let xs = x.as_f32()?;
+        let n = xs.len() / h;
+        let xn = ops::rmsnorm(xs, b.ln1.as_f32()?, h);
+        let qkv = ops::matmul(&xn, b.wqkv.as_f32()?, n, h, 3 * h);
+        Ok(Tensor::f32(&[n, 3 * h], qkv))
+    }
+
+    /// S-Part after attention on `layer`: (x, o) `[n, h]` → y `[n, h]`.
+    pub fn s_post(&self, layer: usize, x: &Tensor, o: &Tensor) -> Result<Tensor> {
+        let spec = self.weights.spec;
+        let h = spec.hidden;
+        let b = self.block(layer)?;
+        let xs = x.as_f32()?;
+        let os = o.as_f32()?;
+        if xs.len() != os.len() {
+            bail!("x/o row mismatch: {} vs {}", xs.len(), os.len());
+        }
+        let n = xs.len() / h;
+        let attn = ops::matmul(os, b.wo.as_f32()?, n, h, h);
+        let x1: Vec<f32> = xs.iter().zip(&attn).map(|(a, c)| a + c).collect();
+        let xn2 = ops::rmsnorm(&x1, b.ln2.as_f32()?, h);
+        let m = ops::gated_mlp(
+            &xn2,
+            b.w_gate.as_f32()?,
+            b.w_up.as_f32()?,
+            b.w_down.as_f32()?,
+            h,
+            spec.ffn,
+        );
+        let y: Vec<f32> = x1.iter().zip(&m).map(|(a, c)| a + c).collect();
+        Ok(Tensor::f32(&[n, h], y))
+    }
+
+    /// Final norm + tied-embedding head: x `[n, h]` → logits `[n, vocab]`.
+    pub fn logits(&self, x: &Tensor) -> Result<Tensor> {
+        let spec = self.weights.spec;
+        let h = spec.hidden;
+        let xs = x.as_f32()?;
+        let n = xs.len() / h;
+        let xn = ops::rmsnorm(xs, self.weights.ln_f.as_f32()?, h);
+        let logits =
+            ops::tied_logits(&xn, self.weights.w_emb.as_f32()?, h, spec.vocab);
+        Ok(Tensor::f32(&[n, spec.vocab], logits))
+    }
+
+    /// Greedy sampling over logits `[n, vocab]`.
+    pub fn argmax(&self, logits: &Tensor) -> Result<Vec<i32>> {
+        Ok(ops::argmax_rows(logits.as_f32()?, self.weights.spec.vocab))
+    }
+
+    fn block(&self, layer: usize) -> Result<&super::BlockWeights> {
+        match self.weights.blocks.get(layer) {
+            Some(b) => Ok(b),
+            None => bail!(
+                "layer {layer} out of range ({} instantiated)",
+                self.weights.layers()
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::SeqKv;
+    use crate::model::{Precision, TINY};
+    use crate::rworker::{attend_one, AttnScratch};
+    use crate::util::Rng;
+
+    /// The paper's load-bearing identity, in-process: s_pre → R-worker
+    /// attention → s_post over several steps equals the fused
+    /// single-device block with the same weights.
+    #[test]
+    fn decomposition_matches_fused_block() {
+        let spec = TINY;
+        let (b, h) = (4usize, spec.hidden);
+        let (nh, d) = (spec.n_heads, spec.head_dim());
+        let smax = 16usize;
+        let w = ModelWeights::random(spec, 1, 77);
+        let sw = NativeSWorker::new(w.clone());
+        let blk = &w.blocks[0];
+
+        // decomposed side: one SeqKv per sequence (f32, exact)
+        let mut kvs: Vec<SeqKv> =
+            (0..b).map(|_| SeqKv::new(nh, d, smax, Precision::F32)).collect();
+        let mut scratch = AttnScratch::new(d);
+
+        // fused side: padded caches
+        let mut kc = vec![0.0f32; b * nh * smax * d];
+        let mut vc = vec![0.0f32; b * nh * smax * d];
+        let mut lengths = vec![0i32; b];
+
+        let mut rng = Rng::new(5);
+        for step in 0..6 {
+            let x_data = rng.normal_vec(b * h, 0.5);
+            let x = Tensor::f32(&[b, h], x_data.clone());
+
+            // decomposed path
+            let qkv = sw.s_pre(0, &x).unwrap();
+            let qkv_f = qkv.as_f32().unwrap();
+            let mut o = vec![0.0f32; b * h];
+            for i in 0..b {
+                let row = &qkv_f[i * 3 * h..(i + 1) * 3 * h];
+                kvs[i].append(&row[h..2 * h], &row[2 * h..]);
+                attend_one(
+                    &kvs[i],
+                    &row[..h],
+                    &mut o[i * h..(i + 1) * h],
+                    &mut scratch,
+                );
+            }
+            let y = sw
+                .s_post(0, &x, &Tensor::f32(&[b, h], o))
+                .unwrap()
+                .into_f32()
+                .unwrap();
+
+            // fused path
+            let dims = ops::FusedDims {
+                batch: b,
+                hidden: h,
+                n_heads: nh,
+                smax,
+                ffn: spec.ffn,
+            };
+            let (yf, k_new, v_new) = ops::fused_block_step(
+                &x_data,
+                &kc,
+                &vc,
+                &lengths,
+                blk.ln1.as_f32().unwrap(),
+                blk.wqkv.as_f32().unwrap(),
+                blk.wo.as_f32().unwrap(),
+                blk.ln2.as_f32().unwrap(),
+                blk.w_gate.as_f32().unwrap(),
+                blk.w_up.as_f32().unwrap(),
+                blk.w_down.as_f32().unwrap(),
+                dims,
+            );
+            // append K/V into the padded caches
+            for i in 0..b {
+                let pos = lengths[i] as usize;
+                for head in 0..nh {
+                    let dst = ((i * nh + head) * smax + pos) * d;
+                    let src = i * h + head * d;
+                    kc[dst..dst + d].copy_from_slice(&k_new[src..src + d]);
+                    vc[dst..dst + d].copy_from_slice(&v_new[src..src + d]);
+                }
+                lengths[i] += 1;
+            }
+
+            for (a, c) in y.iter().zip(&yf) {
+                assert!(
+                    (a - c).abs() < 1e-4,
+                    "step {step}: decomposed {a} vs fused {c}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn embed_rejects_out_of_vocab() {
+        let sw = NativeSWorker::new(ModelWeights::random(TINY, 1, 1));
+        assert!(sw.embed(&[0, 1, 2]).is_ok());
+        assert!(sw.embed(&[TINY.vocab as i32]).is_err());
+        assert!(sw.embed(&[-1]).is_err());
+    }
+
+    #[test]
+    fn shapes_flow_through() {
+        let sw = NativeSWorker::new(ModelWeights::random(TINY, 2, 3));
+        let x = sw.embed(&[1, 2, 3]).unwrap();
+        assert_eq!(x.shape(), &[3, TINY.hidden]);
+        let qkv = sw.s_pre(1, &x).unwrap();
+        assert_eq!(qkv.shape(), &[3, 3 * TINY.hidden]);
+        let y = sw.s_post(1, &x, &x).unwrap();
+        assert_eq!(y.shape(), &[3, TINY.hidden]);
+        let l = sw.logits(&y).unwrap();
+        assert_eq!(l.shape(), &[3, TINY.vocab]);
+        assert_eq!(sw.argmax(&l).unwrap().len(), 3);
+        assert!(sw.s_pre(2, &x).is_err());
+    }
+}

@@ -1,0 +1,342 @@
+//! Pure-Rust S-Part math, mirroring `python/compile/kernels/ref.py` and
+//! `python/compile/model.py` (fp32 accumulation everywhere).
+//!
+//! These primitives back the native S-worker (the offline replacement
+//! for the PJRT/HLO bridge, which needs the unavailable `xla_extension`
+//! native library) and the fused single-device reference block used by
+//! the decomposition-equivalence tests: s_pre → attention → s_post must
+//! be THE SAME FUNCTION as [`fused_block_step`].
+
+/// RMSNorm epsilon, matching `ref.rmsnorm_ref`.
+pub const RMS_EPS: f32 = 1e-5;
+
+/// Row-major matmul: `a [m, k] × b [k, n] → [m, n]`, fp32 accumulate.
+/// i-k-j loop order keeps the inner loop stride-1 over both `b` and the
+/// output row, which LLVM auto-vectorizes.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "lhs shape mismatch");
+    assert_eq!(b.len(), k * n, "rhs shape mismatch");
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &aik) in a[i * k..(i + 1) * k].iter().enumerate() {
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += aik * bv;
+            }
+        }
+    }
+    c
+}
+
+/// RMSNorm over the last axis for `x` of row width `h` (any row count).
+pub fn rmsnorm(x: &[f32], w: &[f32], h: usize) -> Vec<f32> {
+    assert_eq!(w.len(), h);
+    assert_eq!(x.len() % h, 0);
+    let mut out = vec![0.0f32; x.len()];
+    for (row, orow) in x.chunks_exact(h).zip(out.chunks_exact_mut(h)) {
+        let ms = row.iter().map(|v| v * v).sum::<f32>() / h as f32;
+        let inv = 1.0 / (ms + RMS_EPS).sqrt();
+        for ((o, &v), &wv) in orow.iter_mut().zip(row).zip(w) {
+            *o = v * inv * wv;
+        }
+    }
+    out
+}
+
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Llama-style gated MLP: `(silu(xn Wg) * (xn Wu)) Wd` for rows of
+/// width `h`, intermediate width `f`.
+pub fn gated_mlp(
+    xn: &[f32],
+    w_gate: &[f32],
+    w_up: &[f32],
+    w_down: &[f32],
+    h: usize,
+    f: usize,
+) -> Vec<f32> {
+    let m = xn.len() / h;
+    let mut g = matmul(xn, w_gate, m, h, f);
+    let u = matmul(xn, w_up, m, h, f);
+    for (gv, uv) in g.iter_mut().zip(&u) {
+        *gv = silu(*gv) * uv;
+    }
+    matmul(&g, w_down, m, f, h)
+}
+
+/// Token embedding lookup: `tokens [n] → rows [n, h]` from `w_emb
+/// [vocab, h]`. Token ids must be in `[0, vocab)`.
+pub fn embed_rows(
+    tokens: &[i32],
+    w_emb: &[f32],
+    vocab: usize,
+    h: usize,
+) -> Vec<f32> {
+    assert_eq!(w_emb.len(), vocab * h);
+    let mut out = Vec::with_capacity(tokens.len() * h);
+    for &t in tokens {
+        let t = t as usize;
+        assert!(t < vocab, "token id {t} out of vocab {vocab}");
+        out.extend_from_slice(&w_emb[t * h..(t + 1) * h]);
+    }
+    out
+}
+
+/// Tied-embedding head: `xn [m, h] × w_emb [vocab, h]ᵀ → [m, vocab]`.
+pub fn tied_logits(
+    xn: &[f32],
+    w_emb: &[f32],
+    h: usize,
+    vocab: usize,
+) -> Vec<f32> {
+    assert_eq!(w_emb.len(), vocab * h);
+    let m = xn.len() / h;
+    let mut out = vec![0.0f32; m * vocab];
+    for i in 0..m {
+        let row = &xn[i * h..(i + 1) * h];
+        let orow = &mut out[i * vocab..(i + 1) * vocab];
+        for (o, wrow) in orow.iter_mut().zip(w_emb.chunks_exact(h)) {
+            *o = row.iter().zip(wrow).map(|(a, b)| a * b).sum();
+        }
+    }
+    out
+}
+
+/// Greedy sampling over `logits [m, vocab]`. Ties resolve to the LAST
+/// maximum (the historical behavior of the serving path — both sides of
+/// every equivalence test must use this same function).
+pub fn argmax_rows(logits: &[f32], vocab: usize) -> Vec<i32> {
+    logits
+        .chunks_exact(vocab)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i as i32)
+                .unwrap()
+        })
+        .collect()
+}
+
+/// Dimensions of one fused block step.
+#[derive(Clone, Copy, Debug)]
+pub struct FusedDims {
+    pub batch: usize,
+    pub hidden: usize,
+    pub n_heads: usize,
+    /// Padded cache capacity S of `k_cache`/`v_cache` `[B, H, S, D]`.
+    pub smax: usize,
+    pub ffn: usize,
+}
+
+/// One whole transformer-block decode step on one device — the fused
+/// single-device oracle (`model.fused_decode_step` in Python).
+///
+/// `k_cache`/`v_cache` are `[B, H, S, D]` WITHOUT this token's K/V;
+/// `lengths` counts preceding tokens per sequence. Attention covers the
+/// cached tokens plus the freshly projected K/V (two-pass softmax, fp32).
+/// Returns `(y [B, h], k_new [B, h], v_new [B, h])`; the caller appends
+/// K/V to its cache, exactly like the exported HLO contract.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_block_step(
+    x: &[f32],
+    k_cache: &[f32],
+    v_cache: &[f32],
+    lengths: &[i32],
+    ln1: &[f32],
+    wqkv: &[f32],
+    wo: &[f32],
+    ln2: &[f32],
+    w_gate: &[f32],
+    w_up: &[f32],
+    w_down: &[f32],
+    dims: FusedDims,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let FusedDims {
+        batch: b,
+        hidden: h,
+        n_heads: nh,
+        smax,
+        ffn,
+    } = dims;
+    let d = h / nh;
+    assert_eq!(x.len(), b * h);
+    assert_eq!(k_cache.len(), b * nh * smax * d);
+    assert_eq!(v_cache.len(), b * nh * smax * d);
+    assert_eq!(lengths.len(), b);
+
+    // s_pre: RMSNorm + fused QKV projection.
+    let xn = rmsnorm(x, ln1, h);
+    let qkv = matmul(&xn, wqkv, b, h, 3 * h);
+    let mut q = vec![0.0f32; b * h];
+    let mut k_new = vec![0.0f32; b * h];
+    let mut v_new = vec![0.0f32; b * h];
+    for i in 0..b {
+        let row = &qkv[i * 3 * h..(i + 1) * 3 * h];
+        q[i * h..(i + 1) * h].copy_from_slice(&row[..h]);
+        k_new[i * h..(i + 1) * h].copy_from_slice(&row[h..2 * h]);
+        v_new[i * h..(i + 1) * h].copy_from_slice(&row[2 * h..]);
+    }
+
+    // R-Part: per-(sequence, head) softmax attention over cache + new
+    // token. Naive two-pass on purpose — a bug in the R-worker's online
+    // softmax cannot hide in a shared trick.
+    let scale = 1.0 / (d as f32).sqrt();
+    let dot = |a: &[f32], c: &[f32]| -> f32 {
+        a.iter().zip(c).map(|(x, y)| x * y).sum()
+    };
+    let mut o = vec![0.0f32; b * h];
+    for i in 0..b {
+        let len = lengths[i] as usize;
+        assert!(len < smax, "sequence {i} overflows the padded cache");
+        for head in 0..nh {
+            let qh = &q[i * h + head * d..i * h + (head + 1) * d];
+            let knh = &k_new[i * h + head * d..i * h + (head + 1) * d];
+            let vnh = &v_new[i * h + head * d..i * h + (head + 1) * d];
+            let base = (i * nh + head) * smax * d;
+            let mut scores = Vec::with_capacity(len + 1);
+            for t in 0..len {
+                let krow = &k_cache[base + t * d..base + (t + 1) * d];
+                scores.push(dot(qh, krow) * scale);
+            }
+            scores.push(dot(qh, knh) * scale);
+            let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut l = 0.0f32;
+            for s in scores.iter_mut() {
+                *s = (*s - m).exp();
+                l += *s;
+            }
+            let oh = &mut o[i * h + head * d..i * h + (head + 1) * d];
+            for (t, p) in scores.iter().enumerate().take(len) {
+                let vrow = &v_cache[base + t * d..base + (t + 1) * d];
+                for (ov, &vv) in oh.iter_mut().zip(vrow) {
+                    *ov += p / l * vv;
+                }
+            }
+            let p_new = scores[len] / l;
+            for (ov, &vv) in oh.iter_mut().zip(vnh) {
+                *ov += p_new * vv;
+            }
+        }
+    }
+
+    // s_post: O-projection + residual + RMSNorm + gated MLP + residual.
+    let attn = matmul(&o, wo, b, h, h);
+    let x1: Vec<f32> = x.iter().zip(&attn).map(|(a, c)| a + c).collect();
+    let xn2 = rmsnorm(&x1, ln2, h);
+    let mlp = gated_mlp(&xn2, w_gate, w_up, w_down, h, ffn);
+    let y: Vec<f32> = x1.iter().zip(&mlp).map(|(a, c)| a + c).collect();
+    (y, k_new, v_new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn matmul_identity() {
+        let a = vec![1.0, 2.0, 3.0, 4.0]; // [2, 2]
+        let eye = vec![1.0, 0.0, 0.0, 1.0];
+        assert_eq!(matmul(&a, &eye, 2, 2, 2), a);
+    }
+
+    #[test]
+    fn matmul_known_product() {
+        // [1, 3] × [3, 2]
+        let a = vec![1.0, 2.0, 3.0];
+        let b = vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0];
+        assert_eq!(matmul(&a, &b, 1, 3, 2), vec![14.0, 32.0]);
+    }
+
+    #[test]
+    fn rmsnorm_unit_rows() {
+        let h = 4;
+        let x = vec![2.0; h];
+        let w = vec![1.0; h];
+        let y = rmsnorm(&x, &w, h);
+        // mean square = 4 → inv ≈ 0.5
+        for v in y {
+            assert!((v - 1.0).abs() < 1e-4, "{v}");
+        }
+    }
+
+    #[test]
+    fn silu_matches_definition() {
+        for x in [-3.0f32, -0.5, 0.0, 0.5, 3.0] {
+            let want = x * (1.0 / (1.0 + (-x).exp()));
+            assert!((silu(x) - want).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn tied_logits_matches_matmul_transpose() {
+        let (h, vocab) = (3, 5);
+        let mut rng = Rng::new(2);
+        let xn = rng.normal_vec(2 * h, 1.0);
+        let w = rng.normal_vec(vocab * h, 1.0);
+        let got = tied_logits(&xn, &w, h, vocab);
+        for i in 0..2 {
+            for v in 0..vocab {
+                let want: f32 = (0..h)
+                    .map(|j| xn[i * h + j] * w[v * h + j])
+                    .sum();
+                assert!((got[i * vocab + v] - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn argmax_picks_last_max_on_tie() {
+        assert_eq!(argmax_rows(&[1.0, 3.0, 3.0, 0.0], 4), vec![2]);
+    }
+
+    #[test]
+    fn embed_looks_up_rows() {
+        let w = vec![0.0, 0.1, 1.0, 1.1, 2.0, 2.1]; // vocab 3, h 2
+        assert_eq!(embed_rows(&[2, 0], &w, 3, 2), vec![2.0, 2.1, 0.0, 0.1]);
+    }
+
+    /// First decode step with an empty cache attends only the new token,
+    /// so o == v_new and the block reduces to plain residual MLP flow.
+    #[test]
+    fn fused_first_token_attends_itself() {
+        let (b, h, nh, smax, ffn) = (2, 8, 2, 4, 12);
+        let mut rng = Rng::new(9);
+        let x = rng.normal_vec(b * h, 0.5);
+        let kc = vec![0.0; b * nh * smax * (h / nh)];
+        let vc = kc.clone();
+        let ln = vec![1.0; h];
+        let wqkv = rng.normal_vec(h * 3 * h, 0.2);
+        let wo = rng.normal_vec(h * h, 0.2);
+        let w_gate = rng.normal_vec(h * ffn, 0.2);
+        let w_up = rng.normal_vec(h * ffn, 0.2);
+        let w_down = rng.normal_vec(ffn * h, 0.2);
+        let dims = FusedDims {
+            batch: b,
+            hidden: h,
+            n_heads: nh,
+            smax,
+            ffn,
+        };
+        let (y, k_new, v_new) = fused_block_step(
+            &x, &kc, &vc, &[0, 0], &ln, &wqkv, &wo, &ln, &w_gate, &w_up,
+            &w_down, dims,
+        );
+        assert_eq!(y.len(), b * h);
+        assert_eq!(k_new.len(), b * h);
+        // with len=0 the softmax has one entry: o == v_new exactly, so
+        // recomputing s_post from v_new must reproduce y
+        let attn = matmul(&v_new, &wo, b, h, h);
+        let x1: Vec<f32> = x.iter().zip(&attn).map(|(a, c)| a + c).collect();
+        let xn2 = rmsnorm(&x1, &ln, h);
+        let m = gated_mlp(&xn2, &w_gate, &w_up, &w_down, h, ffn);
+        for ((yv, x1v), mv) in y.iter().zip(&x1).zip(&m) {
+            assert!((yv - (x1v + mv)).abs() < 1e-5);
+        }
+    }
+}

@@ -38,6 +38,12 @@ pub const INFINIBAND: LinkModel = LinkModel {
     bandwidth: 25.0e9,
 };
 
+/// Sender-side injection overhead per additional message in a scatter
+/// wave (doorbell ring + DMA descriptor setup). Wire latency overlaps
+/// across concurrent messages; this per-message fixed cost does not —
+/// the NIC ingests descriptors one at a time.
+pub const MSG_INJECT_S: f64 = 0.5e-6;
+
 impl LinkModel {
     /// Wire time for `bytes` in one message.
     pub fn transfer_time(&self, bytes: usize) -> f64 {
@@ -45,11 +51,21 @@ impl LinkModel {
     }
 
     /// Wire time when the payload is split into `n` concurrent messages
-    /// to different peers sharing the link (scatter to 𝒫 sockets):
-    /// bandwidth is shared, per-message latency paid once.
+    /// to different peers sharing the link (scatter to 𝒫 sockets).
+    ///
+    /// Model: the link bandwidth is shared, so the payload term is
+    /// `total_bytes / bandwidth` regardless of `n`; the one-way wire
+    /// latency is paid once per concurrent wave (all messages are in
+    /// flight together); each message past the first adds the
+    /// sender-side injection overhead [`MSG_INJECT_S`]. At `n = 1` this
+    /// degenerates to [`LinkModel::transfer_time`], and the cost is
+    /// monotone in `n` — scattering to 𝒫 sockets is never priced below
+    /// a unicast of the same bytes.
     pub fn scatter_time(&self, total_bytes: usize, n: usize) -> f64 {
         assert!(n > 0);
-        self.latency_s + total_bytes as f64 / self.bandwidth
+        self.latency_s
+            + (n - 1) as f64 * MSG_INJECT_S
+            + total_bytes as f64 / self.bandwidth
     }
 }
 
@@ -119,6 +135,24 @@ mod tests {
         let act = qkv_message_bytes(m.hidden, 1024)
             + o_message_bytes(m.hidden, 1024);
         assert!(kv > 100 * act);
+    }
+
+    /// Regression: `scatter_time` used to ignore `n` entirely, pricing a
+    /// 𝒫-socket scatter identically to a unicast.
+    #[test]
+    fn scatter_accounts_per_message_cost() {
+        let b = 1 << 20;
+        for link in [PCIE4_X16, ROCE_100G, INFINIBAND] {
+            assert_eq!(link.scatter_time(b, 1), link.transfer_time(b));
+            assert!(link.scatter_time(b, 4) >= link.scatter_time(b, 1));
+            assert!(link.scatter_time(b, 8) > link.scatter_time(b, 2));
+            // exact increment: one injection per extra message
+            let d = link.scatter_time(b, 5) - link.scatter_time(b, 2);
+            assert!((d - 3.0 * MSG_INJECT_S).abs() < 1e-12);
+            // but a concurrent wave stays far cheaper than n sequential
+            // unicasts of the per-peer share (latency paid n times)
+            assert!(link.scatter_time(b, 4) < 4.0 * link.transfer_time(b / 4));
+        }
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! path (appending one token's K/V), which is off the per-step critical
 //! path.
 
-use once_cell::sync::Lazy;
+use std::sync::OnceLock;
 
 /// A 16-bit IEEE binary16 value stored as raw bits.
 #[derive(Clone, Copy, PartialEq, Eq, Default, Debug)]
@@ -16,8 +16,13 @@ use once_cell::sync::Lazy;
 pub struct F16(pub u16);
 
 /// Decode LUT: all 65536 bit patterns → f32. Built once, 256 KiB.
-static F16_TO_F32_LUT: Lazy<Vec<f32>> =
-    Lazy::new(|| (0..=u16::MAX).map(f16_bits_to_f32_slow).collect());
+static F16_TO_F32_LUT: OnceLock<Vec<f32>> = OnceLock::new();
+
+#[inline]
+fn decode_lut() -> &'static [f32] {
+    F16_TO_F32_LUT
+        .get_or_init(|| (0..=u16::MAX).map(f16_bits_to_f32_slow).collect())
+}
 
 /// Bit-exact fp16 → fp32 (reference path, no LUT).
 pub fn f16_bits_to_f32_slow(h: u16) -> f32 {
@@ -97,7 +102,7 @@ impl F16 {
     pub fn to_f32(self) -> f32 {
         // LUT path: one L2-resident load. Exact for every bit pattern
         // (incl. inf/nan); used off the vectorized hot loop.
-        unsafe { *F16_TO_F32_LUT.get_unchecked(self.0 as usize) }
+        unsafe { *decode_lut().get_unchecked(self.0 as usize) }
     }
 
     /// Branchless decode for FINITE values — shift the exponent+mantissa

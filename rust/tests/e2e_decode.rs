@@ -1,28 +1,21 @@
 //! End-to-end equivalence of the decomposed FastDecode pipeline.
 //!
-//! The paper's entire design rests on: s_pre (GPU) → attention near the
-//! KV-cache (CPU) → s_post (GPU) being THE SAME FUNCTION as the fused
-//! single-device block. We verify it numerically, multi-step, against
-//! the fused HLO graph (which embeds the Pallas attention kernel), using
-//! identical Rust-generated weights on both paths.
-
-use std::sync::Arc;
+//! The paper's entire design rests on: s_pre (S-worker) → attention near
+//! the KV-cache (R-workers) → s_post (S-worker) being THE SAME FUNCTION
+//! as the fused single-device block. We verify it numerically,
+//! multi-step, against the fused reference block (`sworker::ops`, the
+//! Rust mirror of the exported HLO graph), using identical synthetic
+//! weights on both paths. The decomposed side runs the REAL threaded
+//! pipeline: S-worker thread + R-socket threads, double-buffered
+//! mini-batches, scattered placement — none of which may change a token.
 
 use fastdecode::coordinator::real::{FastDecode, FastDecodeConfig};
 use fastdecode::model::{Precision, TINY};
-use fastdecode::runtime::{Engine, Tensor};
-use fastdecode::sworker::ModelWeights;
+use fastdecode::sworker::{ops, ModelWeights};
 use fastdecode::workload::fixed_batch;
 
-fn engine() -> Arc<Engine> {
-    Arc::new(Engine::load(fastdecode::artifacts_dir()).expect(
-        "artifacts missing — run `make artifacts` before `cargo test`",
-    ))
-}
-
-/// Mirror of the fused graph's KV state kept by the test.
+/// Mirror of the fused block's padded KV state kept by the test.
 struct FusedOracle {
-    engine: Arc<Engine>,
     weights: ModelWeights,
     /// per layer: k/v caches [B, H, S, D] + lengths [B]
     kc: Vec<Vec<f32>>,
@@ -33,13 +26,12 @@ struct FusedOracle {
 }
 
 impl FusedOracle {
-    fn new(engine: Arc<Engine>, weights: ModelWeights, batch: usize) -> Self {
+    fn new(weights: ModelWeights, batch: usize) -> Self {
         let spec = weights.spec;
         let smax = 128;
         let n = batch * spec.n_heads * smax * spec.head_dim();
         let layers = weights.layers();
         FusedOracle {
-            engine,
             weights,
             kc: vec![vec![0.0; n]; layers],
             vc: vec![vec![0.0; n]; layers],
@@ -49,110 +41,82 @@ impl FusedOracle {
         }
     }
 
-    /// One decode step through the fused graphs; returns x after all layers.
+    /// One decode step through the fused blocks; returns x after all
+    /// layers.
     fn step(&mut self, tokens: &[i32]) -> Vec<f32> {
         let spec = self.weights.spec;
-        let (b, h_dim) = (self.batch, spec.hidden);
+        let (b, h) = (self.batch, spec.hidden);
         let (heads, d) = (spec.n_heads, spec.head_dim());
-        let name = format!("{}_b{}_fused_s{}", spec.name, b, self.smax);
 
-        // embed
-        let mut x = self
-            .engine
-            .run(
-                &format!("{}_b{}_embed", spec.name, b),
-                &[
-                    Tensor::i32(&[b], tokens.to_vec()),
-                    self.weights.w_emb.clone(),
-                ],
-            )
-            .unwrap()
-            .remove(0);
-
+        let mut x = ops::embed_rows(
+            tokens,
+            self.weights.w_emb.as_f32().unwrap(),
+            spec.vocab,
+            h,
+        );
+        let dims = ops::FusedDims {
+            batch: b,
+            hidden: h,
+            n_heads: heads,
+            smax: self.smax,
+            ffn: spec.ffn,
+        };
         for layer in 0..self.weights.layers() {
             let w = &self.weights.blocks[layer];
-            let cache_shape = [b, heads, self.smax, d];
-            let outs = self
-                .engine
-                .run(
-                    &name,
-                    &[
-                        x.clone(),
-                        Tensor::f32(&cache_shape, self.kc[layer].clone()),
-                        Tensor::f32(&cache_shape, self.vc[layer].clone()),
-                        Tensor::i32(&[b], self.lengths.clone()),
-                        w.ln1.clone(),
-                        w.wqkv.clone(),
-                        w.wo.clone(),
-                        w.ln2.clone(),
-                        w.w_gate.clone(),
-                        w.w_up.clone(),
-                        w.w_down.clone(),
-                    ],
-                )
-                .unwrap();
-            let (y, k_new, v_new) = (&outs[0], &outs[1], &outs[2]);
+            let (y, kn, vn) = ops::fused_block_step(
+                &x,
+                &self.kc[layer],
+                &self.vc[layer],
+                &self.lengths,
+                w.ln1.as_f32().unwrap(),
+                w.wqkv.as_f32().unwrap(),
+                w.wo.as_f32().unwrap(),
+                w.ln2.as_f32().unwrap(),
+                w.w_gate.as_f32().unwrap(),
+                w.w_up.as_f32().unwrap(),
+                w.w_down.as_f32().unwrap(),
+                dims,
+            );
             // append k/v at each sequence's position
-            let kn = k_new.as_f32().unwrap();
-            let vn = v_new.as_f32().unwrap();
             for i in 0..b {
                 let pos = self.lengths[i] as usize;
                 for hh in 0..heads {
-                    let dst =
-                        ((i * heads + hh) * self.smax + pos) * d;
-                    let src = (i * heads + hh) * d;
+                    let dst = ((i * heads + hh) * self.smax + pos) * d;
+                    let src = i * h + hh * d;
                     self.kc[layer][dst..dst + d]
                         .copy_from_slice(&kn[src..src + d]);
                     self.vc[layer][dst..dst + d]
                         .copy_from_slice(&vn[src..src + d]);
                 }
             }
-            x = y.clone();
+            x = y;
         }
         for l in self.lengths.iter_mut() {
             *l += 1;
         }
-        let _ = h_dim;
-        x.into_f32().unwrap()
+        x
     }
 
     fn next_tokens(&self, x: Vec<f32>) -> Vec<i32> {
         let spec = self.weights.spec;
-        let logits = self
-            .engine
-            .run(
-                &format!("{}_b{}_logits", spec.name, self.batch),
-                &[
-                    Tensor::f32(&[self.batch, spec.hidden], x),
-                    self.weights.ln_f.clone(),
-                    self.weights.w_emb.clone(),
-                ],
-            )
-            .unwrap()
-            .remove(0);
-        logits
-            .as_f32()
-            .unwrap()
-            .chunks_exact(spec.vocab)
-            .map(|row| {
-                row.iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(i, _)| i as i32)
-                    .unwrap()
-            })
-            .collect()
+        let xn = ops::rmsnorm(&x, self.weights.ln_f.as_f32().unwrap(), spec.hidden);
+        let logits = ops::tied_logits(
+            &xn,
+            self.weights.w_emb.as_f32().unwrap(),
+            spec.hidden,
+            spec.vocab,
+        );
+        ops::argmax_rows(&logits, spec.vocab)
     }
 }
 
-/// Decomposed (FastDecode, f32 KV) ≡ fused (HLO + Pallas) for 12 steps.
+/// Decomposed (FastDecode: threaded pipeline, f32 KV, 3 sockets) ≡ fused
+/// reference block for 12 steps of greedy decode.
 #[test]
 fn decomposed_equals_fused_pipeline() {
-    let e = engine();
     let seed = 0xfa57;
     let batch = 8;
     let mut fd = FastDecode::new(
-        e.clone(),
         TINY,
         FastDecodeConfig {
             batch,
@@ -161,12 +125,13 @@ fn decomposed_equals_fused_pipeline() {
             capacity_per_seq: 128,
             weight_seed: seed,
             layers: 2,
+            ..Default::default()
         },
     )
     .unwrap();
     fd.start_batch(1);
     let weights = ModelWeights::random(TINY, 2, seed);
-    let mut oracle = FusedOracle::new(e, weights, batch);
+    let mut oracle = FusedOracle::new(weights, batch);
 
     let mut tokens: Vec<i32> = (0..batch as i32).map(|i| i * 3 + 1).collect();
     let mut oracle_tokens = tokens.clone();
@@ -185,10 +150,8 @@ fn decomposed_equals_fused_pipeline() {
 /// model.
 #[test]
 fn f16_kv_matches_f32_tokens() {
-    let e = engine();
     let run = |prec| {
         let mut fd = FastDecode::new(
-            e.clone(),
             TINY,
             FastDecodeConfig {
                 batch: 8,
@@ -197,6 +160,7 @@ fn f16_kv_matches_f32_tokens() {
                 capacity_per_seq: 64,
                 weight_seed: 7,
                 layers: 2,
+                ..Default::default()
             },
         )
         .unwrap();
@@ -218,13 +182,13 @@ fn f16_kv_matches_f32_tokens() {
     );
 }
 
-/// Socket count must not change results at all (placement invariance).
+/// Neither the socket count nor the pipeline overlap may change results
+/// at all (placement + double-buffering invariance: every transform is
+/// per-sequence).
 #[test]
-fn results_invariant_to_socket_count() {
-    let e = engine();
-    let run = |sockets| {
+fn results_invariant_to_sockets_and_pipelining() {
+    let run = |sockets, pipelined| {
         let mut fd = FastDecode::new(
-            e.clone(),
             TINY,
             FastDecodeConfig {
                 batch: 8,
@@ -233,22 +197,25 @@ fn results_invariant_to_socket_count() {
                 capacity_per_seq: 64,
                 weight_seed: 11,
                 layers: 2,
+                pipelined,
+                ..Default::default()
             },
         )
         .unwrap();
         let prompts = fixed_batch(8, 3, TINY.vocab, 5);
         fd.generate(&prompts, 10).unwrap().tokens
     };
-    assert_eq!(run(1), run(4));
+    let base = run(1, true);
+    assert_eq!(base, run(4, true));
+    assert_eq!(base, run(4, false));
+    assert_eq!(base, run(1, false));
 }
 
 /// Cache accounting: after generate, every socket holds prompt+steps
 /// tokens per sequence per layer.
 #[test]
 fn cache_token_accounting() {
-    let e = engine();
     let mut fd = FastDecode::new(
-        e,
         TINY,
         FastDecodeConfig {
             batch: 8,
@@ -257,6 +224,7 @@ fn cache_token_accounting() {
             capacity_per_seq: 64,
             weight_seed: 1,
             layers: 2,
+            ..Default::default()
         },
     )
     .unwrap();

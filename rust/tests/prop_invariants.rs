@@ -22,6 +22,7 @@ fn prop_pool_placement_balanced_under_churn() {
                 sockets,
                 capacity_per_seq: 8,
                 precision: Precision::F16,
+                ..Default::default()
             },
         );
         let mut live: Vec<u64> = Vec::new();
@@ -89,6 +90,7 @@ fn prop_attend_batch_split_invariant() {
                     sockets: 2,
                     capacity_per_seq: 4,
                     precision: Precision::F32,
+                    ..Default::default()
                 },
             );
             pool.add_seqs(&ids);
@@ -124,6 +126,7 @@ fn prop_loadctl_reproduces_sls_load() {
             seq,
             interval,
         );
+        assert!(sls.micro_batch_size() >= 1); // eq. 5 clamp contract
         let mut lc = LoadControl::new();
         let horizon = 3 * seq;
         let mut j = 0;
@@ -131,10 +134,9 @@ fn prop_loadctl_reproduces_sls_load() {
             lc.add(j * interval, m, seq);
             j += 1;
         }
-        // LoadControl's exact accounting == SlsSchedule's closed form
+        // LoadControl's exact accounting == a hand-rolled sum with the
+        // same per-micro-batch size m
         for step in 0..horizon {
-            let micro = sls.micro_batch_size().max(1);
-            // compare against a hand-rolled sum with the same m
             let mut want = 0usize;
             let mut jj = 0usize;
             while jj * interval <= step {
@@ -144,7 +146,6 @@ fn prop_loadctl_reproduces_sls_load() {
                 }
                 jj += 1;
             }
-            let _ = micro;
             assert_eq!(lc.load_at(step), want, "step {step}");
         }
     });

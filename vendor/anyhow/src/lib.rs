@@ -1,0 +1,216 @@
+//! Minimal API-compatible stand-in for the `anyhow` crate, vendored for
+//! the offline build (no crates.io access). Implements the subset this
+//! repository uses: [`Error`], [`Result`], the [`anyhow!`] / [`bail!`]
+//! macros, and the [`Context`] extension trait for `Result` and
+//! `Option`. Error state is a flat context stack of strings — enough for
+//! `{}`, `{:#}` and `{:?}` reporting; no downcasting or backtraces.
+
+use std::fmt;
+
+/// A string-chain error: `stack[0]` is the outermost context, the last
+/// element is the root cause.
+pub struct Error {
+    stack: Vec<String>,
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg(message: impl fmt::Display) -> Error {
+        Error {
+            stack: vec![message.to_string()],
+        }
+    }
+
+    fn from_std(err: &(dyn std::error::Error + 'static)) -> Error {
+        let mut stack = vec![err.to_string()];
+        let mut source = err.source();
+        while let Some(s) = source {
+            stack.push(s.to_string());
+            source = s.source();
+        }
+        Error { stack }
+    }
+
+    /// Push an outer context frame (what `.context(...)` does).
+    pub fn context(mut self, context: impl fmt::Display) -> Error {
+        self.stack.insert(0, context.to_string());
+        self
+    }
+
+    /// The full cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.stack.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` renders the whole chain, anyhow-style.
+            write!(f, "{}", self.stack.join(": "))
+        } else {
+            write!(f, "{}", self.stack[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.stack[0])?;
+        if self.stack.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, frame) in self.stack[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like the real anyhow: any std error converts into `Error`. Coherent
+// with the reflexive `From<T> for T` because `Error` itself does not
+// implement `std::error::Error`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Error {
+        Error::from_std(&err)
+    }
+}
+
+mod private {
+    /// Sealed unification of "a std error" and "already an [`Error`]"
+    /// so one `Context` impl covers both (the anyhow ext-trait trick).
+    pub trait IntoError {
+        fn into_error(self) -> super::Error;
+    }
+
+    impl<E> IntoError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_error(self) -> super::Error {
+            super::Error::from_std(&self)
+        }
+    }
+
+    impl IntoError for super::Error {
+        fn into_error(self) -> super::Error {
+            self
+        }
+    }
+}
+
+/// Attach context to errors, for both `Result` and `Option`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: private::IntoError> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any `Display` value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<usize> {
+        let n: usize = s.parse().context("not a number")?;
+        if n == 0 {
+            bail!("zero is not allowed (got {s:?})");
+        }
+        Ok(n)
+    }
+
+    #[test]
+    fn ok_path() {
+        assert_eq!(parse("7").unwrap(), 7);
+    }
+
+    #[test]
+    fn context_chain_renders() {
+        let e = parse("x").unwrap_err();
+        assert_eq!(format!("{e}"), "not a number");
+        let alt = format!("{e:#}");
+        assert!(alt.starts_with("not a number: "), "{alt}");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+    }
+
+    #[test]
+    fn bail_formats() {
+        let e = parse("0").unwrap_err();
+        assert!(format!("{e}").contains("\"0\""));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", "thing")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing thing");
+        assert_eq!(Some(3).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<i32> {
+            let n: i32 = "nope".parse()?;
+            Ok(n)
+        }
+        assert!(inner().is_err());
+    }
+}
