@@ -3,14 +3,19 @@
 //!   --fig8   : latency vs layer count (opt-175b)
 //!   --fig12  : Fig 11 with reduced sequence length 768 (7b)
 //!   --fig15  : per-op breakdown with synchronous communication (13b)
+//!   --real   : Fig 11's SLS-vs-naive comparison on the LIVE threaded
+//!              engine at reduced scale — fixed batch vs
+//!              `drive_arrivals` admission, both behind the
+//!              `Coordinator` trait, with the measured KV load W
 //!
-//! Run: `cargo bench --bench fig11_per_step [-- --fig8|--fig12|--fig15]`
+//! Run: `cargo bench --bench fig11_per_step [-- --fig8|--fig12|--fig15|--real]`
 
 use fastdecode::baselines::{vanilla, BaselineConfig};
-use fastdecode::bench::{record_result, Table};
+use fastdecode::bench::{real_flag, real_mini, record_result, sim_trace as simulate, Table};
+use fastdecode::coordinator::real::{Arrival, FastDecode, FastDecodeConfig};
 use fastdecode::coordinator::sim::steady_throughput;
-use fastdecode::coordinator::{simulate, SimConfig};
-use fastdecode::model::{ModelSpec, LLAMA_13B, LLAMA_7B, OPT_175B};
+use fastdecode::coordinator::{Coordinator, SimConfig};
+use fastdecode::model::{ModelSpec, LLAMA_13B, LLAMA_7B, OPT_175B, TINY};
 use fastdecode::perfmodel::{CpuModel, GpuModel, A10, EPYC_7452};
 use fastdecode::util::json::Json;
 
@@ -23,6 +28,74 @@ fn base(spec: ModelSpec, batch: usize, seq: usize, sockets: usize) -> SimConfig 
         batch,
         seq,
     )
+}
+
+/// Fig 11 on the live engine (reduced scale): the same naive-vs-SLS
+/// comparison with real wall-clock steps and the measured KV load.
+fn fig11_real() {
+    let (batch, sockets, seq) = (16usize, 2usize, 24usize);
+    let mut naive = real_mini(batch, sockets, 2, seq);
+    let naive_trace = naive.run_steps(seq).expect("naive run");
+
+    let mut fd = FastDecode::new(
+        TINY,
+        FastDecodeConfig {
+            batch,
+            sockets,
+            capacity_per_seq: seq + 2,
+            layers: 2,
+            depth: 2,
+            ..Default::default()
+        },
+    )
+    .expect("live engine");
+    // ℬ = 16 arrives as 8 micro-batches of m = 2; W_lim at eq. 6's
+    // steady-state peak ℬ(𝒮+F)/2 with F ≈ S/4
+    let arrivals: Vec<Arrival> = (0..8)
+        .map(|i| Arrival {
+            m: 2,
+            seq_len: seq,
+            first_token: (i * 13 + 5) as i32,
+        })
+        .collect();
+    let w_lim = batch * (seq + seq / 4) / 2;
+    fd.drive_arrivals(&arrivals, w_lim).expect("enqueue arrivals");
+    let c: &mut dyn Coordinator = &mut fd;
+    let sls_trace = c.run_steps(4 * seq).expect("sls run");
+
+    let mut t = Table::new(
+        &format!(
+            "Fig 11 (real, tiny, B={batch}, S={seq}, P={sockets}): naive vs \
+             SLS admission, measured W_lim={w_lim}"
+        ),
+        &["step", "naive ms", "+SLS ms", "+SLS W (measured)"],
+    );
+    for s in (0..sls_trace.len()).step_by(8) {
+        let n = naive_trace
+            .records
+            .get(s)
+            .map_or("-".to_string(), |r| format!("{:.2}", r.latency_s * 1e3));
+        let r = &sls_trace.records[s];
+        t.row(&[
+            s.to_string(),
+            n,
+            format!("{:.2}", r.latency_s * 1e3),
+            r.total_ctx.to_string(),
+        ]);
+    }
+    t.print();
+    let peak_w = sls_trace.records.iter().map(|r| r.total_ctx).max().unwrap();
+    println!(
+        "measured peak W = {peak_w} ≤ W_lim = {w_lim} (admission held); \
+         naive peak W = {}",
+        batch * seq
+    );
+    record_result(
+        "fig11_real",
+        Json::obj()
+            .set("w_lim", w_lim as f64)
+            .set("peak_w", peak_w as f64),
+    );
 }
 
 fn fig11(spec: ModelSpec, seq: usize) {
@@ -146,6 +219,8 @@ fn main() {
     let has = |f: &str| args.iter().any(|a| a == f);
     if has("--fig8") {
         fig8();
+    } else if real_flag() {
+        fig11_real();
     } else if has("--fig12") {
         // Fig 12: shorter sequences rebalance S/R (paper: gain 8%→13%)
         fig11(LLAMA_7B, 768);

@@ -5,13 +5,17 @@
 //! and REAL on this machine (thread-per-socket Rust attention over an
 //! actual fp16 KV-cache) to show the same saturation shape.
 //!
-//! Run: `cargo bench --bench fig13_scalability [-- --fig14]`
+//! Run: `cargo bench --bench fig13_scalability [-- --fig14|--real]`
+//!
+//! `--real` sweeps the socket count on the LIVE threaded engine
+//! (reduced scale, behind `Box<dyn Coordinator>`) instead of the
+//! virtual clock.
 
 use std::time::Instant;
 
-use fastdecode::bench::{record_result, Table};
+use fastdecode::bench::{real_flag, real_mini, record_result, sim_trace as simulate, Table};
 use fastdecode::coordinator::sim::steady_throughput;
-use fastdecode::coordinator::{simulate, SimConfig};
+use fastdecode::coordinator::{Coordinator, SimConfig};
 use fastdecode::kvcache::SeqKv;
 use fastdecode::model::{ModelSpec, Precision, LLAMA_13B, LLAMA_7B, OPT_175B};
 use fastdecode::perfmodel::{CpuModel, GpuModel, A10, EPYC_7452};
@@ -31,6 +35,34 @@ fn ours_tp(spec: ModelSpec, sockets: usize, seq: usize) -> f64 {
     cfg.sls_interval = Some((seq / 16).max(1));
     cfg.steps = 3 * seq;
     steady_throughput(&simulate(&cfg), seq)
+}
+
+/// Socket sweep on the live engine: same trait, real threads, tiny
+/// model (per-socket KV shards on this machine).
+fn fig13_real_engine() {
+    let (batch, steps) = (16usize, 32usize);
+    let mut t = Table::new(
+        "Fig 13 (real engine, tiny, B=16): throughput vs sockets",
+        &["sockets", "tok/s", "speedup"],
+    );
+    let mut base = 0.0;
+    let mut js = Vec::new();
+    for p in [1usize, 2, 4] {
+        let mut c = real_mini(batch, p, 2, steps);
+        let trace = c.run_steps(steps).expect("real sweep");
+        let tp = trace.throughput();
+        if p == 1 {
+            base = tp;
+        }
+        t.row(&[
+            p.to_string(),
+            format!("{tp:.0}"),
+            format!("{:.2}x", tp / base),
+        ]);
+        js.push(Json::obj().set("sockets", p).set("tok_per_s", tp));
+    }
+    t.print();
+    record_result("fig13_real_engine", Json::Arr(js));
 }
 
 fn fig13_virtual() {
@@ -212,9 +244,12 @@ fn main() {
     let args: Vec<String> = std::env::args().collect();
     if args.iter().any(|a| a == "--fig14") {
         fig14();
+    } else if real_flag() {
+        fig13_real_engine();
     } else {
         fig13_virtual();
         fig13_real();
+        fig13_real_engine();
         fig14();
     }
 }

@@ -2,12 +2,18 @@
 //! ℬ ∈ {128, 512, 1024} vs vLLM / TensorRT-LLM / FastLLM / vanilla, on
 //! the 7b and 13b models (S = 1024).
 //!
-//! Run: `cargo bench --bench fig9_throughput`
+//! "Ours" runs behind `Box<dyn Coordinator>`: the virtual-clock
+//! simulator regenerates the paper-scale figure, and the same trait
+//! drives the LIVE threaded engine at reduced scale — both backends are
+//! reported side by side at matched scale at the end. `--real` skips
+//! the paper-scale sim sweep and prints only the backend comparison.
+//!
+//! Run: `cargo bench --bench fig9_throughput [-- --real]`
 
 use fastdecode::baselines::{fastllm, tensorrt, vanilla, vllm, BaselineConfig};
-use fastdecode::bench::{record_result, Table};
+use fastdecode::bench::{real_flag, real_mini, record_result, sim_mini, Table};
 use fastdecode::coordinator::sim::steady_throughput;
-use fastdecode::coordinator::{simulate, SimConfig};
+use fastdecode::coordinator::{Coordinator, SimConfig, SimCoordinator};
 use fastdecode::model::{ModelSpec, LLAMA_13B, LLAMA_7B};
 use fastdecode::perfmodel::{CpuModel, GpuModel, A10, EPYC_7452};
 use fastdecode::util::json::Json;
@@ -22,47 +28,80 @@ fn ours(spec: ModelSpec, batch: usize, seq: usize, sockets: usize) -> f64 {
         seq,
     );
     cfg.sls_interval = Some((seq / 32).max(1));
-    cfg.steps = 3 * seq;
-    steady_throughput(&simulate(&cfg), seq)
+    let mut c: Box<dyn Coordinator> = Box::new(SimCoordinator::new(cfg));
+    let trace = c.run_steps(3 * seq).expect("sim never fails");
+    steady_throughput(&trace, seq)
+}
+
+/// Both backends through the SAME trait at matched reduced scale
+/// (tiny model, 2 layers): virtual clock vs live threaded pipeline.
+fn backend_cross_check(js: &mut Vec<Json>) {
+    let (batch, sockets, steps) = (16usize, 2usize, 48usize);
+    let mut t = Table::new(
+        "Fig 9 cross-check: sim vs live engine, matched reduced scale \
+         (tiny, B=16, P=2, D=2)",
+        &["backend", "tok/s", "mean step ms"],
+    );
+    for mut c in [sim_mini(batch, sockets, steps), real_mini(batch, sockets, 2, steps)]
+    {
+        let trace = c.run_steps(steps).expect("backend run");
+        t.row(&[
+            c.backend().into(),
+            format!("{:.0}", trace.throughput()),
+            format!("{:.3}", trace.steady_latency(0) * 1e3),
+        ]);
+        js.push(
+            Json::obj()
+                .set("backend", c.backend())
+                .set("tok_per_s", trace.throughput()),
+        );
+    }
+    t.print();
 }
 
 fn main() {
     let seq = 1024;
     let mut js = Vec::new();
-    for spec in [LLAMA_7B, LLAMA_13B] {
-        let mut t = Table::new(
-            &format!("Fig 9: throughput, {} (S=1024, A10 + 8 Epyc sockets)", spec.name),
-            &["system", "batch", "tok/s", "vs vLLM"],
-        );
-        let b_static = BaselineConfig::a10(spec, 1024, seq);
-        let tp_vllm = vllm(&b_static).throughput();
-        let b16 = BaselineConfig::a10(spec, 16, seq);
-        let mut add = |name: &str, batch: String, tp: f64| {
-            t.row(&[
-                name.into(),
-                batch,
-                format!("{tp:.0}"),
-                format!("{:.2}x", tp / tp_vllm),
-            ]);
-            js.push(
-                Json::obj()
-                    .set("model", spec.name)
-                    .set("system", name)
-                    .set("tok_per_s", tp),
+    if !real_flag() {
+        for spec in [LLAMA_7B, LLAMA_13B] {
+            let mut t = Table::new(
+                &format!(
+                    "Fig 9: throughput, {} (S=1024, A10 + 8 Epyc sockets)",
+                    spec.name
+                ),
+                &["system", "batch", "tok/s", "vs vLLM"],
             );
-        };
-        for b in [128usize, 512, 1024] {
-            add("ours", format!("{b}"), ours(spec, b, seq, 8));
+            let b_static = BaselineConfig::a10(spec, 1024, seq);
+            let tp_vllm = vllm(&b_static).throughput();
+            let b16 = BaselineConfig::a10(spec, 16, seq);
+            let mut add = |name: &str, batch: String, tp: f64| {
+                t.row(&[
+                    name.into(),
+                    batch,
+                    format!("{tp:.0}"),
+                    format!("{:.2}x", tp / tp_vllm),
+                ]);
+                js.push(
+                    Json::obj()
+                        .set("model", spec.name)
+                        .set("system", name)
+                        .set("tok_per_s", tp),
+                );
+            };
+            for b in [128usize, 512, 1024] {
+                add("ours", format!("{b}"), ours(spec, b, seq, 8));
+            }
+            add("vLLM", "dyn".into(), tp_vllm);
+            add("TensorRT-LLM", "16".into(), tensorrt(&b16).throughput());
+            add("FastLLM", "16".into(), fastllm(&b16).throughput());
+            add("vanilla", "16".into(), vanilla(&b16).throughput());
+            t.print();
         }
-        add("vLLM", "dyn".into(), tp_vllm);
-        add("TensorRT-LLM", "16".into(), tensorrt(&b16).throughput());
-        add("FastLLM", "16".into(), fastllm(&b16).throughput());
-        add("vanilla", "16".into(), vanilla(&b16).throughput());
-        t.print();
+        println!(
+            "paper shape: ours(1024) ≈ 4x vLLM ≈ 8.7x TRT on 7b; ours(1024) ≈ 4.12x vLLM on 13b;\n\
+             ours(128) ≈ 1.88–2.32x vLLM"
+        );
     }
-    println!(
-        "paper shape: ours(1024) ≈ 4x vLLM ≈ 8.7x TRT on 7b; ours(1024) ≈ 4.12x vLLM on 13b;\n\
-         ours(128) ≈ 1.88–2.32x vLLM"
-    );
+    backend_cross_check(&mut js);
     record_result("fig9", Json::Arr(js));
 }

@@ -156,6 +156,72 @@ pub fn record_result(bench: &str, payload: Json) {
     }
 }
 
+/// `--real` on a figure bench's command line swaps the virtual-clock
+/// simulator for the live threaded engine (at reduced scale) behind the
+/// same `Box<dyn Coordinator>`.
+pub fn real_flag() -> bool {
+    std::env::args().any(|a| a == "--real")
+}
+
+/// Live-engine coordinator at reduced scale for the figure benches: the
+/// real pipeline cannot hold LLAMA-7B-class weights on a bench box, so
+/// `--real` reruns a figure's sweep *shape* on this machine with the
+/// tiny model instead (2 layers, fp16 KV). The engine is primed and
+/// ready for `run_steps` up to `steps` (KV capacity is sized to it).
+pub fn real_mini(
+    batch: usize,
+    sockets: usize,
+    depth: usize,
+    steps: usize,
+) -> Box<dyn crate::coordinator::Coordinator> {
+    use crate::coordinator::real::{FastDecode, FastDecodeConfig};
+    let mut fd = FastDecode::new(
+        crate::model::TINY,
+        FastDecodeConfig {
+            batch,
+            sockets,
+            capacity_per_seq: steps + 2,
+            layers: 2,
+            depth,
+            ..Default::default()
+        },
+    )
+    .expect("mini live engine");
+    let prompts = crate::workload::fixed_batch(batch, 2, crate::model::TINY.vocab, 11);
+    fd.prime(&prompts, 1).expect("prime mini live engine");
+    Box::new(fd)
+}
+
+/// Run the virtual-clock simulator behind `Box<dyn Coordinator>` for
+/// `cfg.steps` steps — the figure benches' standard "ours" invocation.
+pub fn sim_trace(
+    cfg: &crate::coordinator::SimConfig,
+) -> crate::metrics::StepTrace {
+    use crate::coordinator::{Coordinator, SimCoordinator};
+    let mut c: Box<dyn Coordinator> = Box::new(SimCoordinator::new(*cfg));
+    c.run_steps(cfg.steps).expect("sim never fails")
+}
+
+/// Virtual-clock coordinator matched to [`real_mini`]'s scale, for
+/// side-by-side backend tables.
+pub fn sim_mini(
+    batch: usize,
+    sockets: usize,
+    seq: usize,
+) -> Box<dyn crate::coordinator::Coordinator> {
+    use crate::coordinator::{SimConfig, SimCoordinator};
+    use crate::perfmodel::{CpuModel, GpuModel, A10, EPYC_7452};
+    let cfg = SimConfig::new(
+        crate::model::TINY,
+        GpuModel::new(A10),
+        CpuModel::from_device(EPYC_7452),
+        sockets,
+        batch,
+        seq,
+    );
+    Box::new(SimCoordinator::new(cfg))
+}
+
 /// Human format for seconds.
 pub fn fmt_time(s: f64) -> String {
     if s >= 1.0 {

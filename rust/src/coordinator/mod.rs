@@ -4,9 +4,12 @@
 //! Two engines sit behind the [`Coordinator`] trait:
 //!
 //! * [`real`] — the live engine: native S-worker thread + threaded
-//!   R-worker pool joined by the token-level pipeline
-//!   (`runtime::pipeline`), tracing real wall-clock stage times. Used by
-//!   the examples, the integration tests and the pipeline smoke test.
+//!   R-worker pool joined by the depth-D token-level pipeline
+//!   (`runtime::pipeline`), tracing real wall-clock stage times, with
+//!   an optional SLS-admission mode (`FastDecode::drive_arrivals`)
+//!   that gates queued micro-batch arrivals through
+//!   `LoadControl::earliest_start`. Used by the examples, the
+//!   integration tests and the pipeline smoke/depth tests.
 //! * [`sim`] — the virtual-clock engine: same control flow priced by the
 //!   calibrated device/link models, used to regenerate the paper's
 //!   figures at A10/Epyc scale (DESIGN.md §2, timing modes).

@@ -6,10 +6,22 @@
 //!   append+attend near the cache → gather O → s_post → logits →
 //!   greedy sample.
 //! The KV-cache never exists on the S-worker; only activation vectors
-//! cross the S↔R boundary. The batch is split into two mini-batches that
-//! the S thread and the R sockets process in alternation
-//! (`runtime::pipeline`, Fig 5b), so each step's wall time approaches
-//! max(s, r) instead of s + r.
+//! cross the S↔R boundary. The batch is split into depth-D mini-batches
+//! that the S thread and the R sockets process as a rotating in-flight
+//! set (`runtime::pipeline`, Fig 5b generalized), so each step's wall
+//! time approaches max(s, r) instead of s + r.
+//!
+//! Two driving modes sit behind [`Coordinator::run_steps`]:
+//!
+//! * **primed fixed batch** ([`FastDecode::prime`]) — the paper's §6
+//!   throughput benchmark: all ℬ sequences start together.
+//! * **SLS admission** ([`FastDecode::drive_arrivals`]) — queued
+//!   micro-batch arrivals admitted per step by
+//!   [`LoadControl::earliest_start`] under an aggregate-KV limit W_lim
+//!   (§4.2, Algorithm 1), so SLS steady-state behavior is observable on
+//!   wall-clock traces and not just in the virtual-clock sim.
+
+use std::collections::VecDeque;
 
 use anyhow::{bail, Result};
 
@@ -17,6 +29,7 @@ use crate::metrics::{Histogram, StepRecord, StepTrace};
 use crate::model::{ModelSpec, Precision};
 use crate::runtime::{PipelineConfig, ThreadedPipeline};
 use crate::rworker::{RPool, RPoolConfig};
+use crate::sched::LoadControl;
 use crate::sworker::{ModelWeights, NativeSWorker};
 
 use super::Coordinator;
@@ -31,8 +44,13 @@ pub struct FastDecodeConfig {
     /// Number of instantiated layers (≤ spec.n_layers, like the paper's
     /// reduced-layer evaluation).
     pub layers: usize,
-    /// Overlap the two mini-batches (Fig 5b); false = serial (Fig 5a).
+    /// Overlap the in-flight mini-batches (Fig 5b); false = serial
+    /// (Fig 5a with the same mini-batch decomposition).
     pub pipelined: bool,
+    /// Number of in-flight mini-batches D (`PipelineConfig::depth`).
+    /// 2 is the paper's double buffer; deeper pipelines shrink the
+    /// fill/drain bubbles (§7.3).
+    pub depth: usize,
     /// Artificial stage dilation for pipeline calibration/smoke tests
     /// (see `PipelineConfig::s_pad` / `RPoolConfig::attend_pad`).
     pub s_pad: std::time::Duration,
@@ -49,10 +67,46 @@ impl Default for FastDecodeConfig {
             weight_seed: 0xfa57,
             layers: 2,
             pipelined: true,
+            depth: 2,
             s_pad: std::time::Duration::ZERO,
             r_pad: std::time::Duration::ZERO,
         }
     }
+}
+
+/// One queued request for the SLS-admitted live engine: a micro-batch
+/// of `m` sequences, each decoding `seq_len` tokens greedily from
+/// `first_token`.
+#[derive(Clone, Copy, Debug)]
+pub struct Arrival {
+    /// Micro-batch size m (sequences admitted together).
+    pub m: usize,
+    /// Tokens each sequence generates (its KV footprint peaks at
+    /// `m · seq_len` on its final step).
+    pub seq_len: usize,
+    /// Initial token each sequence decodes from.
+    pub first_token: i32,
+}
+
+/// A live SLS-admitted sequence.
+struct LiveSeq {
+    id: u64,
+    token: i32,
+    remaining: usize,
+}
+
+/// State of the SLS-admission driving mode.
+struct SlsState {
+    /// Aggregate KV-token limit W_lim enforced by admission.
+    w_lim: usize,
+    /// FIFO arrival queue (head-of-line: a deferred head is never
+    /// bypassed by a smaller later arrival).
+    queue: VecDeque<Arrival>,
+    live: Vec<LiveSeq>,
+    lc: LoadControl,
+    /// Global step counter across `run_steps` calls.
+    step: usize,
+    next_id: u64,
 }
 
 /// Output of a generation run.
@@ -72,6 +126,13 @@ pub struct FastDecode {
     ctx_len: Vec<usize>,
     /// Current tokens after `prime` (consumed by `Coordinator::run_steps`).
     current: Option<Vec<i32>>,
+    /// Some(_) once `drive_arrivals` switched the engine into SLS
+    /// admission mode.
+    sls: Option<SlsState>,
+    /// Next sequence id for SLS admissions, monotone across waves so a
+    /// second `drive_arrivals` can never collide with ids still placed
+    /// in the pool.
+    next_seq_id: u64,
 }
 
 impl FastDecode {
@@ -89,6 +150,9 @@ impl FastDecode {
                 spec.n_layers,
                 spec.name
             );
+        }
+        if cfg.depth == 0 {
+            bail!("pipeline depth must be ≥ 1");
         }
         // The R-pool sizes its per-sequence cache to the run's needs.
         let mut spec_l = spec;
@@ -109,6 +173,7 @@ impl FastDecode {
             rpool,
             PipelineConfig {
                 pipelined: cfg.pipelined,
+                depth: cfg.depth,
                 s_pad: cfg.s_pad,
                 ..Default::default()
             },
@@ -120,15 +185,36 @@ impl FastDecode {
             seq_ids: Vec::new(),
             ctx_len: Vec::new(),
             current: None,
+            sls: None,
+            next_seq_id: 1,
         })
     }
 
-    /// Register a fresh batch of sequences (drops any previous batch).
-    pub fn start_batch(&mut self, first_id: u64) {
+    /// Drop every sequence the engine currently holds — the primed
+    /// fixed batch and/or the SLS live set — and clear both driving
+    /// modes, so either mode can be (re)entered without colliding with
+    /// ids still placed in the pool.
+    fn release_all_sequences(&mut self) {
         if !self.seq_ids.is_empty() {
             let old = self.seq_ids.clone();
             self.pipeline.rpool_mut().drop_seqs(&old);
+            self.seq_ids.clear();
+            self.ctx_len.clear();
         }
+        if let Some(st) = self.sls.take() {
+            let live: Vec<u64> = st.live.iter().map(|s| s.id).collect();
+            if !live.is_empty() {
+                self.pipeline.rpool_mut().drop_seqs(&live);
+            }
+            self.next_seq_id = self.next_seq_id.max(st.next_id);
+        }
+        self.current = None;
+    }
+
+    /// Register a fresh batch of sequences (drops any previous batch
+    /// and leaves SLS mode if it was active).
+    pub fn start_batch(&mut self, first_id: u64) {
+        self.release_all_sequences();
         self.seq_ids = (0..self.cfg.batch as u64).map(|i| first_id + i).collect();
         self.ctx_len = vec![0; self.cfg.batch];
         let ids = self.seq_ids.clone();
@@ -250,24 +336,179 @@ impl FastDecode {
             .map(|s| s.total_tokens)
             .sum()
     }
+
+    /// Measured per-layer aggregate context across sockets — the live
+    /// counterpart of Algorithm 1's W (each sequence counts its cached
+    /// tokens once, not once per layer).
+    pub fn measured_kv_load(&self) -> usize {
+        self.cache_tokens() / self.cfg.layers
+    }
+
+    /// Switch the engine into SLS admission mode: `arrivals` queue FIFO
+    /// and `Coordinator::run_steps` then admits them per step via
+    /// [`LoadControl::earliest_start`] under `w_lim` (aggregate KV
+    /// tokens), decoding every live sequence each step. Any primed
+    /// fixed batch is dropped. Arrivals whose lone footprint
+    /// `m · seq_len` exceeds `w_lim` are rejected here — by
+    /// `earliest_start`'s Option contract they could never be admitted.
+    pub fn drive_arrivals(
+        &mut self,
+        arrivals: &[Arrival],
+        w_lim: usize,
+    ) -> Result<()> {
+        for a in arrivals {
+            if a.m == 0 || a.seq_len == 0 {
+                bail!("arrival must have m ≥ 1 and seq_len ≥ 1");
+            }
+            if a.m * a.seq_len > w_lim {
+                bail!(
+                    "arrival footprint m·S = {} alone exceeds W_lim = {w_lim}",
+                    a.m * a.seq_len
+                );
+            }
+            if a.seq_len > self.cfg.capacity_per_seq {
+                bail!(
+                    "arrival seq_len {} exceeds KV capacity {}",
+                    a.seq_len,
+                    self.cfg.capacity_per_seq
+                );
+            }
+            if a.first_token < 0 || a.first_token as usize >= self.spec.vocab {
+                bail!(
+                    "arrival first_token {} outside vocab {}",
+                    a.first_token,
+                    self.spec.vocab
+                );
+            }
+        }
+        self.release_all_sequences();
+        self.sls = Some(SlsState {
+            w_lim,
+            queue: arrivals.iter().copied().collect(),
+            live: Vec::new(),
+            lc: LoadControl::new(),
+            step: 0,
+            next_id: self.next_seq_id,
+        });
+        Ok(())
+    }
+
+    /// Arrivals not yet admitted (SLS mode only).
+    pub fn pending_arrivals(&self) -> usize {
+        self.sls.as_ref().map_or(0, |st| st.queue.len())
+    }
+
+    /// Sequences currently decoding (SLS mode only).
+    pub fn live_sequences(&self) -> usize {
+        self.sls.as_ref().map_or(0, |st| st.live.len())
+    }
+
+    /// One SLS-admitted step: retire finished micro-batches from the
+    /// controller, admit every arrival whose earliest feasible start is
+    /// now, decode all live sequences, and release finished caches.
+    fn sls_step(&mut self) -> Result<StepRecord> {
+        let mut st = self.sls.take().expect("sls state");
+        let res = self.sls_step_inner(&mut st);
+        self.sls = Some(st);
+        res
+    }
+
+    fn sls_step_inner(&mut self, st: &mut SlsState) -> Result<StepRecord> {
+        let t = st.step;
+        st.step += 1;
+        st.lc.retire_before(t);
+        while let Some(a) = st.queue.front().copied() {
+            let s = st
+                .lc
+                .earliest_start(t, a.m, a.seq_len, st.w_lim)
+                .expect("validated at enqueue: m·seq_len ≤ w_lim");
+            if s > t {
+                break; // head deferred; FIFO admission never skips it
+            }
+            st.queue.pop_front();
+            st.lc.add(t, a.m, a.seq_len);
+            let ids: Vec<u64> = (st.next_id..st.next_id + a.m as u64).collect();
+            st.next_id += a.m as u64;
+            self.pipeline.rpool_mut().add_seqs(&ids);
+            for &id in &ids {
+                st.live.push(LiveSeq {
+                    id,
+                    token: a.first_token,
+                    remaining: a.seq_len,
+                });
+            }
+        }
+        if st.live.is_empty() {
+            // only reachable once the queue has drained (an empty live
+            // set leaves the controller empty, so any queued head would
+            // have been admitted above): an idle step
+            return Ok(StepRecord {
+                step: t,
+                ..Default::default()
+            });
+        }
+        let tokens: Vec<i32> = st.live.iter().map(|s| s.token).collect();
+        let ids: Vec<u64> = st.live.iter().map(|s| s.id).collect();
+        let (next, timing) = self.pipeline.step(&tokens, &ids)?;
+        let served = st.live.len();
+        for (seq, &tok) in st.live.iter_mut().zip(&next) {
+            seq.token = tok;
+            seq.remaining -= 1;
+        }
+        // Measure the aggregate KV load this step actually processed,
+        // BEFORE finished sequences release their cache — this is what
+        // the admission limit W_lim must bound.
+        let kv_load = self.measured_kv_load();
+        let finished: Vec<u64> = st
+            .live
+            .iter()
+            .filter(|s| s.remaining == 0)
+            .map(|s| s.id)
+            .collect();
+        if !finished.is_empty() {
+            self.pipeline.rpool_mut().drop_seqs(&finished);
+            st.live.retain(|s| s.remaining > 0);
+        }
+        Ok(StepRecord {
+            step: t,
+            latency_s: timing.latency_s,
+            s_time: timing.s_time,
+            r_time: timing.r_time,
+            comm_time: timing.comm_time,
+            tokens: served,
+            total_ctx: kv_load,
+        })
+    }
 }
 
 impl Coordinator for FastDecode {
     fn backend(&self) -> &'static str {
         // the pipeline silently degrades to the serial schedule when the
-        // batch cannot be split into two mini-batches — report the mode
-        // that actually ran, not the requested one
-        if self.cfg.pipelined && self.cfg.batch >= 2 {
+        // batch cannot be split into at least two mini-batches — report
+        // the mode that actually ran, not the requested one
+        if self.sls.is_some() {
+            "real-threaded-sls"
+        } else if self.cfg.pipelined && self.cfg.batch >= 2 && self.cfg.depth >= 2
+        {
             "real-threaded-pipelined"
         } else {
             "real-threaded-serial"
         }
     }
 
-    /// Decode `steps` tokens from the primed state (see
-    /// [`FastDecode::prime`]), tracing every step with measured
-    /// wall-clock stage times.
+    /// Decode `steps` tokens, tracing every step with measured
+    /// wall-clock stage times. In SLS mode (see
+    /// [`FastDecode::drive_arrivals`]) each step first runs admission;
+    /// otherwise the primed fixed batch decodes (see
+    /// [`FastDecode::prime`]).
     fn run_steps(&mut self, steps: usize) -> Result<StepTrace> {
+        if self.sls.is_some() {
+            let mut trace = StepTrace::default();
+            for _ in 0..steps {
+                trace.push(self.sls_step()?);
+            }
+            return Ok(trace);
+        }
         let mut current = match self.current.take() {
             Some(c) => c,
             None => bail!("run_steps needs prime() first"),

@@ -1,9 +1,9 @@
 //! The execution runtime: host tensors, the AOT artifact manifest, and
 //! the threaded token-level pipeline.
 //!
-//! * [`pipeline`] — the real two-stage S/R pipeline (paper Fig 5b): the
-//!   S-worker thread and the R-worker sockets double-buffer two
-//!   mini-batches over `util::chan` channels.
+//! * [`pipeline`] — the real two-stage S/R pipeline (paper Fig 5b,
+//!   generalized to depth-D): the S-worker thread and the R-worker
+//!   sockets rotate D in-flight mini-batches over `util::chan` channels.
 //! * [`Tensor`] — f32/i32 host tensors crossing the S↔R boundary.
 //! * [`Manifest`] — the `artifacts/manifest.txt` format written by
 //!   `python/compile/aot.py`. The PJRT executor that consumed it was

@@ -1,25 +1,47 @@
-//! The REAL token-level two-stage pipeline (paper §4.1, Fig 5b) — the
-//! threaded runtime behind `coordinator::real`.
+//! The REAL token-level two-stage pipeline (paper §4.1, Fig 5), the
+//! threaded runtime behind `coordinator::real` — generalized from the
+//! paper's two-mini-batch double buffer (Fig 5b) to a configurable
+//! depth-D rotation.
 //!
 //! The S-worker runs on its own thread (owning the native S-Part
 //! executor); the R-workers are the `RPool` socket threads. One decode
-//! step splits the batch into two mini-batches, A and B, that the two
-//! sides process in alternation: while the R-sockets attend mini-batch
-//! A's layer, the S-thread runs mini-batch B's matmuls, and vice versa —
-//! so the steady-state step costs max(s, r) instead of s + r. QKV and O
-//! activations cross the S↔R boundary over `util::chan` channels, and
-//! [`crate::transport::LinkModel`] charges modeled wire time against the
-//! real byte counts (recorded as `comm_time`; wall latency is measured).
+//! step splits the batch into D = [`PipelineConfig::depth`] mini-batches
+//! driven as a rotating in-flight set: the R stage (attend) of one
+//! mini-batch overlaps the S stages (matmuls) of the others. The S
+//! thread and the R sockets are both FIFO servers, so the rotation is a
+//! static software-pipeline schedule — R stages run in the order
+//! (mb 0, layer 0), (mb 1, layer 0), …, (mb D−1, layer 0),
+//! (mb 0, layer 1), … while the S thread stays exactly one stage ahead
+//! of the mini-batch whose attend is in flight. In steady state the
+//! step costs ≈ max(Σs, Σr) instead of Σs + Σr, and deeper D shrinks
+//! the fill/drain bubbles at the step boundaries (paper §7.3 reports
+//! S-worker idle above 50 % with only two in-flight mini-batches).
 //!
-//! With `pipelined = false` the SAME two mini-batches run strictly
+//! D = 2 reproduces Fig 5b exactly. QKV and O activations cross the
+//! S↔R boundary over `util::chan` channels, and
+//! [`crate::transport::LinkModel`] charges modeled wire time against the
+//! real byte counts: the QKV leg as a 1-to-𝒫 scatter, the O leg as a
+//! 𝒫-to-1 gather/incast (recorded as `comm_time`; wall latency is
+//! measured).
+//!
+//! With `pipelined = false` the SAME D mini-batches run strictly
 //! serially (Fig 5a with an identical stage decomposition), which is
-//! what the smoke tests compare against.
+//! what the smoke and depth tests compare against. Splitting is
+//! per-row-independent math, so the generated tokens are bit-identical
+//! across every depth and both modes.
+//!
+//! Error handling: any S-Part failure is routed back over the response
+//! channel as `SResp::Err` (never a bare thread death), `step()`
+//! surfaces the root cause in its `Result`, and the in-flight attend is
+//! drained so the R-pool stays reusable for the next step. A failed
+//! step may leave partially-appended K/V for the poisoned step behind —
+//! the pool is *reusable*, not rolled back.
 
 use std::collections::HashMap;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context as _, Result};
 
 use crate::rworker::{PendingAttend, RPool, SeqTask};
 use crate::sworker::NativeSWorker;
@@ -30,12 +52,18 @@ use super::tensor::Tensor;
 
 #[derive(Clone, Copy, Debug)]
 pub struct PipelineConfig {
-    /// Overlap the two mini-batches (Fig 5b). When false the same
-    /// mini-batches run serially (Fig 5a).
+    /// Overlap the in-flight mini-batches (Fig 5b generalized). When
+    /// false the same mini-batches run serially (Fig 5a).
     pub pipelined: bool,
-    /// Artificial dilation of every S stage, slept on the S-thread and
-    /// counted in `s_time`. Zero in production; smoke tests use it to
-    /// pin stage latencies.
+    /// Number of in-flight mini-batches D (≥ 1). The batch is split
+    /// into min(D, batch) contiguous mini-batches in BOTH modes, so
+    /// pipelined and serial runs do identical per-stage work. D = 2 is
+    /// the paper's double buffer.
+    pub depth: usize,
+    /// Artificial dilation of every S stage, slept on the S-thread PER
+    /// ROW of the stage's mini-batch and counted in `s_time`. Zero in
+    /// production; smoke/depth tests use it to pin stage latencies
+    /// independently of how the batch is split.
     pub s_pad: Duration,
     /// Links used to price the activation traffic (GPU→host→sockets).
     pub pcie: LinkModel,
@@ -46,6 +74,7 @@ impl Default for PipelineConfig {
     fn default() -> Self {
         PipelineConfig {
             pipelined: true,
+            depth: 2,
             s_pad: Duration::ZERO,
             pcie: PCIE4_X16,
             net: ROCE_100G,
@@ -73,10 +102,15 @@ enum SReq {
     /// O gathered for (mb, layer): s_post, then s_pre(layer+1) — or the
     /// logits head if `layer` was the last.
     Advance { mb: usize, layer: usize, o: Vec<f32> },
+    /// Test hook: fail the `countdown`-th subsequent Start/Advance with
+    /// `msg` as the root cause (see [`ThreadedPipeline::poison_s_op`]).
+    Poison { countdown: usize, msg: String },
     Shutdown,
 }
 
-/// S-thread → coordinator.
+/// S-thread → coordinator. Every Start/Advance produces exactly one
+/// response (Qkv, Done or Err), which is what lets the coordinator
+/// drain a failed step deterministically.
 enum SResp {
     Qkv {
         mb: usize,
@@ -89,6 +123,20 @@ enum SResp {
         next: Vec<i32>,
         elapsed_s: f64,
     },
+    /// An S-Part op failed; `msg` carries the full cause chain.
+    Err { msg: String },
+}
+
+/// One attend scattered to the sockets but not yet gathered. At most
+/// one is in flight at a time (the sockets are shared by every
+/// mini-batch), so recovery after an S failure has exactly one handle
+/// to drain.
+struct Inflight {
+    mb: usize,
+    layer: usize,
+    lo: usize,
+    hi: usize,
+    pending: PendingAttend,
 }
 
 pub struct ThreadedPipeline {
@@ -100,6 +148,10 @@ pub struct ThreadedPipeline {
     hidden: usize,
     layers: usize,
     vocab: usize,
+    /// Start/Advance requests sent but not yet answered — what `recover`
+    /// must drain after a failed step.
+    s_outstanding: usize,
+    inflight: Option<Inflight>,
 }
 
 impl ThreadedPipeline {
@@ -114,8 +166,15 @@ impl ThreadedPipeline {
         let vocab = sworker.spec().vocab;
         let layers = sworker.layers();
         assert!(layers > 0, "pipeline needs at least one layer");
-        let (req_tx, req_rx) = bounded::<SReq>(8);
-        let (resp_tx, resp_rx) = bounded::<SResp>(8);
+        assert!(cfg.depth > 0, "pipeline depth must be ≥ 1");
+        // Capacity scales with depth: the prologue queues one Start per
+        // mini-batch, and the S thread may run up to a full channel of
+        // responses ahead. 2D+4 on both sides keeps every send in the
+        // steady-state schedule non-blocking (no req-full/resp-full
+        // deadlock cycle is reachable).
+        let cap = 2 * cfg.depth + 4;
+        let (req_tx, req_rx) = bounded::<SReq>(cap);
+        let (resp_tx, resp_rx) = bounded::<SResp>(cap);
         let pad = cfg.s_pad;
         let handle = std::thread::Builder::new()
             .name("sworker".into())
@@ -130,6 +189,8 @@ impl ThreadedPipeline {
             hidden,
             layers,
             vocab,
+            s_outstanding: 0,
+            inflight: None,
         }
     }
 
@@ -141,6 +202,12 @@ impl ThreadedPipeline {
         self.cfg.pipelined
     }
 
+    /// Configured pipeline depth D (a step over a batch of b < D rows
+    /// degrades to b mini-batches).
+    pub fn depth(&self) -> usize {
+        self.cfg.depth
+    }
+
     pub fn rpool(&self) -> &RPool {
         &self.rpool
     }
@@ -149,9 +216,26 @@ impl ThreadedPipeline {
         &mut self.rpool
     }
 
+    /// Test hook: make the S-thread fail the `nth` (0-based)
+    /// Start/Advance it processes from now on, reporting `msg` as the
+    /// root cause. Used by the error-path regression tests; production
+    /// code never calls it.
+    pub fn poison_s_op(&mut self, nth: usize, msg: &str) -> Result<()> {
+        self.req_tx
+            .send(SReq::Poison {
+                countdown: nth,
+                msg: msg.to_string(),
+            })
+            .map_err(|_| anyhow!("s-worker thread died"))
+    }
+
     /// One decode step: `tokens[i]` is the current token of sequence
     /// `seq_ids[i]`. Returns the greedily sampled next tokens in the
     /// same order, plus the measured stage timing.
+    ///
+    /// On error the step is drained (in-flight attend gathered, S
+    /// responses consumed) so the pipeline and pool stay reusable; the
+    /// returned error carries the underlying S-Part cause.
     pub fn step(
         &mut self,
         tokens: &[i32],
@@ -162,8 +246,9 @@ impl ThreadedPipeline {
         if b == 0 {
             bail!("empty decode step");
         }
-        // Validate here, at the Result-returning surface: once a bad id
-        // reaches the S-thread it can only surface as a thread death.
+        // Validate here, at the Result-returning surface, to keep bad
+        // ids out of the pipeline entirely (an S-thread failure is
+        // recoverable but costs a drained step).
         for &t in tokens {
             if t < 0 || t as usize >= self.vocab {
                 bail!("token id {t} outside vocab {}", self.vocab);
@@ -171,24 +256,27 @@ impl ThreadedPipeline {
         }
         let t0 = Instant::now();
         let mut timing = StepTiming::default();
-        // Two mini-batches whenever the batch allows, in BOTH modes, so
+        // D near-equal contiguous mini-batches in BOTH modes, so
         // pipelined and serial runs do identical per-stage work.
-        let ranges: Vec<(usize, usize)> = if b >= 2 {
-            vec![(0, b / 2), (b / 2, b)]
+        let d = self.cfg.depth.min(b);
+        let ranges: Vec<(usize, usize)> =
+            (0..d).map(|i| (i * b / d, (i + 1) * b / d)).collect();
+        let res = if self.cfg.pipelined && ranges.len() >= 2 {
+            self.step_pipelined(tokens, seq_ids, &ranges, &mut timing)
         } else {
-            vec![(0, b)]
+            self.step_serial(tokens, seq_ids, &ranges, &mut timing)
         };
-        let next = if self.cfg.pipelined && ranges.len() == 2 {
-            self.step_pipelined(tokens, seq_ids, &ranges, &mut timing)?
-        } else {
-            self.step_serial(tokens, seq_ids, &ranges, &mut timing)?
-        };
+        if res.is_err() {
+            self.recover();
+        }
+        let next = res?;
         timing.latency_s = t0.elapsed().as_secs_f64();
         Ok((next, timing))
     }
 
-    /// Fig 5b: strict two-mini-batch alternation. Every R stage of one
-    /// mini-batch runs concurrently with an S stage of the other.
+    /// Fig 5b generalized: D-mini-batch rotation. R stages run in
+    /// stage order (mb = k mod D, layer = k div D); every R stage
+    /// overlaps S stages of the other mini-batches.
     fn step_pipelined(
         &mut self,
         tokens: &[i32],
@@ -196,36 +284,37 @@ impl ThreadedPipeline {
         ranges: &[(usize, usize)],
         timing: &mut StepTiming,
     ) -> Result<Vec<i32>> {
-        let (ra, rb) = (ranges[0], ranges[1]);
+        let d = ranges.len();
         let layers = self.layers;
-        self.send_start(0, ra, tokens)?;
-        let qkv_a = self.expect_qkv(0, 0, timing)?;
-        let mut pend_a = self.dispatch(0, ra, ids, &qkv_a, timing);
-        self.send_start(1, rb, tokens)?; // S(B) ∥ R(A, 0)
-
-        let mut next_a = Vec::new();
-        let mut next_b = Vec::new();
-        for layer in 0..layers {
-            let qkv_b = self.expect_qkv(1, layer, timing)?;
-            let o_a = self.gather(pend_a, ra, ids, timing);
-            self.send_advance(0, layer, o_a)?;
-            let pend_b = self.dispatch(layer, rb, ids, &qkv_b, timing);
-            // now: S(A, layer→layer+1) ∥ R(B, layer)
-            if layer + 1 < layers {
-                let qkv_a = self.expect_qkv(0, layer + 1, timing)?;
-                let o_b = self.gather(pend_b, rb, ids, timing);
-                self.send_advance(1, layer, o_b)?;
-                pend_a = self.dispatch(layer + 1, ra, ids, &qkv_a, timing);
-                // next iteration: S(B, layer+1) ∥ R(A, layer+1)
-            } else {
-                next_a = self.expect_done(0, timing)?;
-                let o_b = self.gather(pend_b, rb, ids, timing);
-                self.send_advance(1, layer, o_b)?;
-                next_b = self.expect_done(1, timing)?;
-            }
+        // Prologue: queue every mini-batch's Start; the S thread fills
+        // the pipeline (its responses arrive FIFO in mb order).
+        for (mb, &range) in ranges.iter().enumerate() {
+            self.send_start(mb, range, tokens)?;
         }
-        next_a.extend(next_b);
-        Ok(next_a)
+        for k in 0..d * layers {
+            let (mb, layer) = (k % d, k / d);
+            let qkv = self.expect_qkv(mb, layer, timing)?;
+            // Hand the previous attend's O back to S before occupying
+            // the sockets with the next one: S(prev, layer+1) then runs
+            // concurrently with R(mb, layer).
+            if self.inflight.is_some() {
+                let (pmb, pl, o) = self.gather_inflight(ids, timing);
+                self.send_advance(pmb, pl, o)?;
+            }
+            self.dispatch(mb, layer, ranges[mb], ids, &qkv, timing);
+        }
+        // Epilogue: drain the last attend, then collect the per-mb
+        // sampled tokens (the logits-head Advances were sent in mb
+        // order, so the Dones arrive in mb order).
+        if self.inflight.is_some() {
+            let (pmb, pl, o) = self.gather_inflight(ids, timing);
+            self.send_advance(pmb, pl, o)?;
+        }
+        let mut next = Vec::with_capacity(tokens.len());
+        for mb in 0..d {
+            next.extend(self.expect_done(mb, timing)?);
+        }
+        Ok(next)
     }
 
     /// Fig 5a: the same mini-batches, strictly serial (no S/R overlap).
@@ -240,19 +329,33 @@ impl ThreadedPipeline {
         let mut next = Vec::with_capacity(tokens.len());
         for (mb, &range) in ranges.iter().enumerate() {
             self.send_start(mb, range, tokens)?;
-            let mut qkv = self.expect_qkv(mb, 0, timing)?;
             for layer in 0..layers {
-                let pend = self.dispatch(layer, range, ids, &qkv, timing);
-                let o = self.gather(pend, range, ids, timing);
-                self.send_advance(mb, layer, o)?;
-                if layer + 1 < layers {
-                    qkv = self.expect_qkv(mb, layer + 1, timing)?;
-                } else {
-                    next.extend(self.expect_done(mb, timing)?);
-                }
+                let qkv = self.expect_qkv(mb, layer, timing)?;
+                self.dispatch(mb, layer, range, ids, &qkv, timing);
+                let (pmb, pl, o) = self.gather_inflight(ids, timing);
+                self.send_advance(pmb, pl, o)?;
             }
+            next.extend(self.expect_done(mb, timing)?);
         }
         Ok(next)
+    }
+
+    /// Drain a failed step so the next one starts clean: gather the
+    /// in-flight attend (the R work itself succeeded — its K/V appends
+    /// stand) and consume every outstanding S response, including the
+    /// `SResp::Err` siblings of the one that surfaced the failure. The
+    /// S thread's leftover residuals are overwritten by the next step's
+    /// Starts.
+    fn recover(&mut self) {
+        if let Some(inf) = self.inflight.take() {
+            let _ = self.rpool.wait_attend(inf.pending);
+        }
+        while self.s_outstanding > 0 {
+            match self.resp_rx.recv() {
+                Ok(_) => self.s_outstanding -= 1,
+                Err(_) => break, // thread really died; nothing to drain
+            }
+        }
     }
 
     fn send_start(
@@ -266,26 +369,32 @@ impl ThreadedPipeline {
                 mb,
                 tokens: tokens[lo..hi].to_vec(),
             })
-            .map_err(|_| anyhow!("s-worker thread died"))
+            .map_err(|_| anyhow!("s-worker thread died"))?;
+        self.s_outstanding += 1;
+        Ok(())
     }
 
     fn send_advance(&mut self, mb: usize, layer: usize, o: Vec<f32>) -> Result<()> {
         self.req_tx
             .send(SReq::Advance { mb, layer, o })
-            .map_err(|_| anyhow!("s-worker thread died"))
+            .map_err(|_| anyhow!("s-worker thread died"))?;
+        self.s_outstanding += 1;
+        Ok(())
     }
 
     /// Split one mini-batch's fused QKV rows into per-sequence tasks,
     /// charge the modeled wire time for the real bytes, and scatter to
-    /// the sockets without waiting.
+    /// the sockets without waiting (the handle is held in `inflight`).
     fn dispatch(
         &mut self,
+        mb: usize,
         layer: usize,
         (lo, hi): (usize, usize),
         ids: &[u64],
         qkv: &[f32],
         timing: &mut StepTiming,
-    ) -> PendingAttend {
+    ) {
+        debug_assert!(self.inflight.is_none(), "attend already in flight");
         let h = self.hidden;
         debug_assert_eq!(qkv.len(), (hi - lo) * 3 * h);
         let tasks: Vec<SeqTask> = (lo..hi)
@@ -301,42 +410,57 @@ impl ThreadedPipeline {
             })
             .collect();
         // Modeled comm for the actual payload: QKV down over PCIe then
-        // scattered across the sockets; O back the same way.
+        // scattered across the sockets (1-to-𝒫); O back as a 𝒫-to-1
+        // incast at the S-worker's NIC, then up over PCIe.
         let qkv_bytes = qkv.len() * 4;
         let o_bytes = (hi - lo) * h * 4;
         let sockets = self.rpool.sockets();
         timing.comm_time += self.cfg.pcie.transfer_time(qkv_bytes)
             + self.cfg.net.scatter_time(qkv_bytes, sockets)
-            + self.cfg.net.scatter_time(o_bytes, sockets)
+            + self.cfg.net.gather_time(o_bytes, sockets)
             + self.cfg.pcie.transfer_time(o_bytes);
-        self.rpool.submit_attend(layer, tasks)
+        let pending = self.rpool.submit_attend(layer, tasks);
+        self.inflight = Some(Inflight {
+            mb,
+            layer,
+            lo,
+            hi,
+            pending,
+        });
     }
 
-    /// Gather one mini-batch's attention outputs in sequence order.
-    fn gather(
+    /// Gather the in-flight attend's outputs in sequence order,
+    /// returning `(mb, layer, o)` for the matching Advance.
+    fn gather_inflight(
         &mut self,
-        pending: PendingAttend,
-        (lo, hi): (usize, usize),
         ids: &[u64],
         timing: &mut StepTiming,
-    ) -> Vec<f32> {
-        let step = self.rpool.wait_attend(pending);
+    ) -> (usize, usize, Vec<f32>) {
+        let inf = self.inflight.take().expect("no attend in flight");
+        let step = self.rpool.wait_attend(inf.pending);
         timing.r_time += step.max_busy.as_secs_f64();
-        let mut o = Vec::with_capacity((hi - lo) * self.hidden);
-        for s in lo..hi {
+        let mut o = Vec::with_capacity((inf.hi - inf.lo) * self.hidden);
+        for s in inf.lo..inf.hi {
             o.extend_from_slice(&step.outputs[&ids[s]]);
         }
-        o
+        (inf.mb, inf.layer, o)
     }
 
     fn recv_s(&mut self, timing: &mut StepTiming) -> Result<SResp> {
         match self.resp_rx.recv() {
             Ok(resp) => {
-                timing.s_time += match &resp {
-                    SResp::Qkv { elapsed_s, .. } => *elapsed_s,
-                    SResp::Done { elapsed_s, .. } => *elapsed_s,
-                };
-                Ok(resp)
+                self.s_outstanding -= 1;
+                match resp {
+                    SResp::Err { msg } => bail!("s-worker step failed: {msg}"),
+                    other => {
+                        timing.s_time += match &other {
+                            SResp::Qkv { elapsed_s, .. } => *elapsed_s,
+                            SResp::Done { elapsed_s, .. } => *elapsed_s,
+                            SResp::Err { .. } => unreachable!(),
+                        };
+                        Ok(other)
+                    }
+                }
             }
             Err(_) => bail!("s-worker thread died"),
         }
@@ -359,9 +483,8 @@ impl ThreadedPipeline {
                 "pipeline protocol violation: got qkv({m}, {l}), \
                  wanted qkv({mb}, {layer})"
             ),
-            SResp::Done { mb: m, .. } => bail!(
-                "pipeline protocol violation: got done({m}), \
-                 wanted qkv({mb}, {layer})"
+            _ => bail!(
+                "pipeline protocol violation: wanted qkv({mb}, {layer})"
             ),
         }
     }
@@ -388,7 +511,10 @@ impl Drop for ThreadedPipeline {
 }
 
 /// S-worker thread body: serve Start/Advance requests FIFO, holding the
-/// per-mini-batch residual stream between phases.
+/// per-mini-batch residual stream between phases. Op failures are
+/// reported as `SResp::Err` with the full cause chain — the thread
+/// stays alive and keeps serving, so a poisoned step never strands the
+/// coordinator on a dead channel.
 fn s_worker_loop(
     sworker: NativeSWorker,
     pad: Duration,
@@ -398,52 +524,96 @@ fn s_worker_loop(
     let layers = sworker.layers();
     let h = sworker.spec().hidden;
     let mut resid: HashMap<usize, Tensor> = HashMap::new();
+    let mut poison: Option<(usize, String)> = None;
     while let Ok(req) = rx.recv() {
         let t0 = Instant::now();
         enum Payload {
-            Qkv(usize, usize, Vec<f32>),
-            Done(usize, Vec<i32>),
+            /// (mb, layer, qkv, rows)
+            Qkv(usize, usize, Vec<f32>, usize),
+            /// (mb, next tokens, rows)
+            Done(usize, Vec<i32>, usize),
         }
-        let payload = match req {
+        let (mb, is_start) = match &req {
             SReq::Shutdown => return,
-            SReq::Start { mb, tokens } => {
-                let x = sworker.embed(&tokens).expect("s-worker embed");
-                let qkv = sworker.s_pre(0, &x).expect("s-worker s_pre");
-                resid.insert(mb, x);
-                Payload::Qkv(mb, 0, qkv.into_f32().expect("qkv dtype"))
+            SReq::Poison { countdown, msg } => {
+                poison = Some((*countdown, msg.clone()));
+                continue;
             }
-            SReq::Advance { mb, layer, o } => {
-                let x = resid.remove(&mb).expect("no residual for mini-batch");
-                let n = o.len() / h;
-                let o_t = Tensor::f32(&[n, h], o);
-                let y = sworker.s_post(layer, &x, &o_t).expect("s-worker s_post");
-                if layer + 1 < layers {
-                    let qkv =
-                        sworker.s_pre(layer + 1, &y).expect("s-worker s_pre");
-                    resid.insert(mb, y);
-                    Payload::Qkv(mb, layer + 1, qkv.into_f32().expect("qkv"))
-                } else {
-                    let logits = sworker.logits(&y).expect("s-worker logits");
-                    let next = sworker.argmax(&logits).expect("argmax");
-                    Payload::Done(mb, next)
-                }
+            SReq::Start { mb, .. } => (*mb, true),
+            SReq::Advance { mb, .. } => (*mb, false),
+        };
+        let injected: Option<String> = match poison.take() {
+            Some((0, msg)) => Some(msg),
+            Some((n, msg)) => {
+                poison = Some((n - 1, msg));
+                None
+            }
+            None => None,
+        };
+        let result: Result<Payload> = if let Some(msg) = injected {
+            Err(anyhow!(msg)).with_context(|| {
+                format!(
+                    "injected fault on mb {mb} {}",
+                    if is_start { "start" } else { "advance" }
+                )
+            })
+        } else {
+            match req {
+                SReq::Start { mb, tokens } => (|| -> Result<Payload> {
+                    let rows = tokens.len();
+                    let x = sworker.embed(&tokens)?;
+                    let qkv = sworker.s_pre(0, &x)?;
+                    resid.insert(mb, x);
+                    Ok(Payload::Qkv(mb, 0, qkv.into_f32()?, rows))
+                })()
+                .with_context(|| format!("start of mini-batch {mb}")),
+                SReq::Advance { mb, layer, o } => (|| -> Result<Payload> {
+                    let x = resid
+                        .remove(&mb)
+                        .with_context(|| format!("no residual for mini-batch {mb}"))?;
+                    let n = o.len() / h;
+                    let o_t = Tensor::f32(&[n, h], o);
+                    let y = sworker.s_post(layer, &x, &o_t)?;
+                    if layer + 1 < layers {
+                        let qkv = sworker.s_pre(layer + 1, &y)?;
+                        resid.insert(mb, y);
+                        Ok(Payload::Qkv(mb, layer + 1, qkv.into_f32()?, n))
+                    } else {
+                        let logits = sworker.logits(&y)?;
+                        let next = sworker.argmax(&logits)?;
+                        Ok(Payload::Done(mb, next, n))
+                    }
+                })()
+                .with_context(|| format!("advance of mini-batch {mb} at layer {layer}")),
+                SReq::Poison { .. } | SReq::Shutdown => unreachable!(),
             }
         };
-        if !pad.is_zero() {
-            std::thread::sleep(pad);
-        }
-        let elapsed_s = t0.elapsed().as_secs_f64();
-        let resp = match payload {
-            Payload::Qkv(mb, layer, qkv) => SResp::Qkv {
-                mb,
-                layer,
-                qkv,
-                elapsed_s,
-            },
-            Payload::Done(mb, next) => SResp::Done {
-                mb,
-                next,
-                elapsed_s,
+        let resp = match result {
+            Ok(payload) => {
+                let rows = match &payload {
+                    Payload::Qkv(.., rows) => *rows,
+                    Payload::Done(.., rows) => *rows,
+                };
+                if !pad.is_zero() && rows > 0 {
+                    std::thread::sleep(pad * rows as u32);
+                }
+                let elapsed_s = t0.elapsed().as_secs_f64();
+                match payload {
+                    Payload::Qkv(mb, layer, qkv, _) => SResp::Qkv {
+                        mb,
+                        layer,
+                        qkv,
+                        elapsed_s,
+                    },
+                    Payload::Done(mb, next, _) => SResp::Done {
+                        mb,
+                        next,
+                        elapsed_s,
+                    },
+                }
+            }
+            Err(e) => SResp::Err {
+                msg: format!("{e:#}"),
             },
         };
         if tx.send(resp).is_err() {

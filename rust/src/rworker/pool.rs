@@ -20,9 +20,10 @@ pub struct RPoolConfig {
     pub sockets: usize,
     pub capacity_per_seq: usize,
     pub precision: Precision,
-    /// Artificial per-attend dilation, applied inside every socket and
-    /// counted in its busy time. Zero in production; pipeline smoke
-    /// tests use it to pin the R-stage latency (see `RWorker::spawn`).
+    /// Artificial dilation per sequence task of every attend, applied
+    /// inside every socket and counted in its busy time. Zero in
+    /// production; pipeline smoke/depth tests use it to pin the R-stage
+    /// latency (see `RWorker::spawn`).
     pub attend_pad: Duration,
 }
 

@@ -56,10 +56,12 @@ pub struct RWorker {
 }
 
 impl RWorker {
-    /// `attend_pad` artificially dilates every Attend by a fixed sleep
+    /// `attend_pad` artificially dilates every Attend by a sleep of
+    /// `pad × tasks` — per sequence task, so the total dilation of a
+    /// step is invariant to how the batch is split into mini-batches
     /// (counted in the reported busy time). Zero in production; the
-    /// pipeline smoke tests use it to pin the R-stage latency so the
-    /// max(s, r)-vs-(s + r) assertion is robust on any machine.
+    /// pipeline smoke/depth tests use it to pin the R-stage latency so
+    /// the max(s, r)-vs-(s + r) assertion is robust on any machine.
     #[allow(clippy::too_many_arguments)]
     pub fn spawn(
         socket_id: usize,
@@ -152,8 +154,8 @@ fn run_loop(
                     attend_one(kv, &task.q, &mut o, &mut scratch);
                     outs.push((task.seq_id, o));
                 }
-                if !attend_pad.is_zero() {
-                    std::thread::sleep(attend_pad);
+                if !attend_pad.is_zero() && !tasks.is_empty() {
+                    std::thread::sleep(attend_pad * tasks.len() as u32);
                 }
                 let busy = start.elapsed();
                 if tx.send(RResponse::Outputs { layer, outs, busy }).is_err() {

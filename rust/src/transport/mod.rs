@@ -44,6 +44,13 @@ pub const INFINIBAND: LinkModel = LinkModel {
 /// the NIC ingests descriptors one at a time.
 pub const MSG_INJECT_S: f64 = 0.5e-6;
 
+/// Receiver-side overhead per additional source in a gather wave (an
+/// n-to-1 incast): completion handling plus buffer reassembly all land
+/// on the single receiving NIC, which also absorbs the incast burst —
+/// strictly costlier than the sender-side injection of the matching
+/// scatter, where the fan-out work is amortized across idle peers.
+pub const MSG_INCAST_S: f64 = 1.2e-6;
+
 impl LinkModel {
     /// Wire time for `bytes` in one message.
     pub fn transfer_time(&self, bytes: usize) -> f64 {
@@ -67,6 +74,26 @@ impl LinkModel {
             + (n - 1) as f64 * MSG_INJECT_S
             + total_bytes as f64 / self.bandwidth
     }
+
+    /// Wire time when `n` peers each send a share of `total_bytes` to
+    /// ONE receiver (the O leg: a 𝒫-to-1 incast, the mirror of
+    /// [`LinkModel::scatter_time`] — NOT the same cost).
+    ///
+    /// Model: the receiver's NIC is the shared bottleneck, so the
+    /// payload serializes at `bandwidth` regardless of `n`; the one-way
+    /// wire latency is paid once per concurrent wave; each source past
+    /// the first adds the receiver-side incast overhead
+    /// [`MSG_INCAST_S`]. At `n = 1` this degenerates to
+    /// [`LinkModel::transfer_time`]; the cost is monotone in `n`, and
+    /// because `MSG_INCAST_S > MSG_INJECT_S` an n-source gather is
+    /// always priced above the matching n-peer scatter — incast
+    /// serialization has no idle peers to hide behind.
+    pub fn gather_time(&self, total_bytes: usize, n: usize) -> f64 {
+        assert!(n > 0);
+        self.latency_s
+            + (n - 1) as f64 * MSG_INCAST_S
+            + total_bytes as f64 / self.bandwidth
+    }
 }
 
 /// Byte counts of FastDecode's per-step messages for one block
@@ -80,7 +107,8 @@ pub fn o_message_bytes(hidden: usize, batch: usize) -> usize {
 }
 
 /// End-to-end activation round-trip for one block at batch `b`:
-/// GPU→host over PCIe, host→sockets over the network, and back.
+/// GPU→host over PCIe, QKV scattered 1-to-𝒫 over the network, O
+/// gathered 𝒫-to-1 (incast) back, then up over PCIe.
 pub fn activation_roundtrip_time(
     hidden: usize,
     b: usize,
@@ -92,7 +120,7 @@ pub fn activation_roundtrip_time(
     let back = o_message_bytes(hidden, b);
     pcie.transfer_time(out)
         + net.scatter_time(out, sockets)
-        + net.scatter_time(back, sockets)
+        + net.gather_time(back, sockets)
         + pcie.transfer_time(back)
 }
 
@@ -155,6 +183,40 @@ mod tests {
         }
     }
 
+    /// Regression: the pipeline's O leg used to be priced with
+    /// `scatter_time`, modeling the 𝒫-to-1 incast as a 1-to-𝒫 scatter.
+    /// The gather model must be monotone in source count and strictly
+    /// dearer than the matching scatter (incast asymmetry).
+    #[test]
+    fn gather_monotone_and_dearer_than_scatter() {
+        let b = 1 << 20;
+        for link in [PCIE4_X16, ROCE_100G, INFINIBAND] {
+            // n = 1 degenerates to a unicast
+            assert_eq!(link.gather_time(b, 1), link.transfer_time(b));
+            // monotone in the number of sources
+            assert!(link.gather_time(b, 4) >= link.gather_time(b, 1));
+            assert!(link.gather_time(b, 8) > link.gather_time(b, 2));
+            // exact increment: one incast charge per extra source
+            let d = link.gather_time(b, 5) - link.gather_time(b, 2);
+            assert!((d - 3.0 * MSG_INCAST_S).abs() < 1e-12);
+            // asymmetry: an n-source incast costs more than an n-peer
+            // scatter of the same bytes, and the gap grows with n
+            for n in 2..=8 {
+                assert!(
+                    link.gather_time(b, n) > link.scatter_time(b, n),
+                    "{}: gather({n}) not above scatter({n})",
+                    link.name
+                );
+            }
+            let gap2 = link.gather_time(b, 2) - link.scatter_time(b, 2);
+            let gap8 = link.gather_time(b, 8) - link.scatter_time(b, 8);
+            assert!(gap8 > gap2);
+            // but still far cheaper than n sequential unicasts of the
+            // per-source share (latency paid n times)
+            assert!(link.gather_time(b, 4) < 4.0 * link.transfer_time(b / 4));
+        }
+    }
+
     #[test]
     fn transfer_time_monotone() {
         for link in [PCIE4_X16, ROCE_100G, INFINIBAND] {
@@ -172,7 +234,7 @@ mod tests {
         let pcie = PCIE4_X16.transfer_time(qkv_message_bytes(LLAMA_13B.hidden, b))
             + PCIE4_X16.transfer_time(o_message_bytes(LLAMA_13B.hidden, b));
         let net = ROCE_100G.scatter_time(qkv_message_bytes(LLAMA_13B.hidden, b), 2)
-            + ROCE_100G.scatter_time(o_message_bytes(LLAMA_13B.hidden, b), 2);
+            + ROCE_100G.gather_time(o_message_bytes(LLAMA_13B.hidden, b), 2);
         // paper: copy 3 ms, network 7.4 ms (per token across 2 layers)
         assert!((1.0..=5.0).contains(&(pcie * 1e3)), "pcie {}", pcie * 1e3);
         assert!((3.0..=12.0).contains(&(net * 1e3)), "net {}", net * 1e3);

@@ -4,11 +4,12 @@
 //! steady-state step latency approaches max(s, r); with pipelining
 //! disabled the same stages cost s + r.
 //!
-//! All numbers are REAL wall-clock timestamps. The per-stage `s_pad` /
-//! `r_pad` dilation (a sleep inside each S stage / each socket attend)
-//! pins the stage durations well above scheduler noise, so the
-//! assertion bands hold on any machine; the measured s_time / r_time
-//! include the same dilation, keeping the comparison self-consistent.
+//! All numbers are REAL wall-clock timestamps. The `s_pad` / `r_pad`
+//! dilation (a per-row sleep inside each S stage / a per-task sleep
+//! inside each socket attend) pins the stage durations well above
+//! scheduler noise, so the assertion bands hold on any machine; the
+//! measured s_time / r_time include the same dilation, keeping the
+//! comparison self-consistent.
 
 use std::time::Duration;
 
@@ -17,11 +18,15 @@ use fastdecode::coordinator::Coordinator;
 use fastdecode::model::{Precision, TINY};
 use fastdecode::workload::fixed_batch;
 
-// 8 ms pads keep the 25 % assertion bands an order of magnitude above
-// scheduler noise even on a loaded 2-vCPU CI runner (the bands compare
-// wall latency against stage times measured inside the worker threads,
-// so contention-induced drift must stay under 25 % of ~50-80 ms).
-const PAD: Duration = Duration::from_millis(8);
+// Pads are per row (S) / per task (R): with batch 4 split into two
+// mini-batches of 2 rows over 2 sockets, each S stage sleeps 2×4 = 8 ms
+// and each socket attend sleeps 1×8 = 8 ms — an order of magnitude
+// above scheduler noise even on a loaded 2-vCPU CI runner (the bands
+// compare wall latency against stage times measured inside the worker
+// threads, so contention-induced drift must stay under 25 % of
+// ~50-80 ms).
+const S_PAD: Duration = Duration::from_millis(4);
+const R_PAD: Duration = Duration::from_millis(8);
 const STEPS: usize = 6;
 
 /// Mean (latency, s_time, r_time) over the measured steps, plus the
@@ -37,8 +42,9 @@ fn run(pipelined: bool) -> (f64, f64, f64, Vec<Vec<i32>>) {
             weight_seed: 3,
             layers: 2,
             pipelined,
-            s_pad: PAD,
-            r_pad: PAD,
+            depth: 2,
+            s_pad: S_PAD,
+            r_pad: R_PAD,
         },
     )
     .unwrap();
