@@ -1,108 +1,86 @@
-//! End-to-end serving driver (the DESIGN.md validation workload): a real
-//! small model served in batched waves against a synthetic online trace,
-//! through the full stack — Algorithm-1 admission, the threaded
-//! token-level pipeline (native S-Part thread + Rust R-workers over fp16
-//! KV) — reporting latency and throughput.
+//! End-to-end continuous-batching serving (the DESIGN.md validation
+//! workload): an open-loop Poisson trace with RAGGED prompt and target
+//! lengths served through the full stack — policy-driven admission
+//! under W_lim (Algorithm 1 with the batched-prefill init offset), one
+//! multi-row causal prefill pass per request, independent decode slots
+//! with backfill, per-request TTFT/ITL/E2E percentiles.
 //!
 //! Run: `cargo run --release --example serve_e2e`
-//! Results are recorded in EXPERIMENTS.md §End-to-end.
-
-use std::time::Instant;
+//! (CI runs this as a smoke step.) Results are recorded in
+//! EXPERIMENTS.md §End-to-end.
 
 use fastdecode::coordinator::real::{FastDecode, FastDecodeConfig};
-use fastdecode::metrics::Histogram;
 use fastdecode::model::{Precision, TINY};
-use fastdecode::server::AdmissionQueue;
+use fastdecode::serve::{
+    AdmissionPolicy, Fifo, PrefillMode, ServeConfig, ServeEngine,
+    ShortestJobFirst, SlsEarliestStart,
+};
 use fastdecode::workload::{generate_trace, TraceConfig};
 
 fn main() -> anyhow::Result<()> {
-    let batch = 8; // wave size
-    let gen_steps = 24; // tokens generated per request
-    let prompt_len = 4;
-
-    let mut fd = FastDecode::new(
-        TINY,
-        FastDecodeConfig {
-            batch,
-            sockets: 2,
-            precision: Precision::F16,
-            capacity_per_seq: 64,
-            ..Default::default()
-        },
-    )?;
-
-    // A 64-request online trace (Poisson arrivals, fixed shapes so waves
-    // batch cleanly — ragged shapes would need continuous batching).
+    let slots = 4;
     let trace = generate_trace(&TraceConfig {
         seed: 11,
         rate: 64.0,
-        prompt_len: (prompt_len, prompt_len),
-        target_len: (gen_steps, gen_steps),
+        prompt_len: (4, 12),
+        target_len: (8, 24),
         vocab: TINY.vocab,
-        count: 64,
+        count: 32,
     });
+    let w_lim = 96;
     println!(
-        "serving {} requests (prompt {prompt_len}, generate {gen_steps}) \
-         in waves of {batch}\n",
+        "serving {} open-loop requests (ragged prompts 4–12, targets 8–24) \
+         over {slots} slots, W_lim = {w_lim}\n",
         trace.len()
     );
 
-    // Admission: Algorithm 1 with a load limit sized for one wave in
-    // flight — requests queue at most one wave (F steps, not S steps).
-    let mut queue =
-        AdmissionQueue::new(batch * (prompt_len + gen_steps), batch, gen_steps);
-    let mut ttft = Histogram::new(); // time to first token (includes queue)
-    let mut per_token = Histogram::new();
-    let mut served = 0usize;
-    let mut tokens = 0u64;
-    let t0 = Instant::now();
-
-    let mut pending: Vec<_> = trace.iter().collect();
-    let mut virtual_step = 0usize;
-    while served < trace.len() {
-        // arrivals up to "now" join the queue (we replay the trace as
-        // fast as the engine can drain it; arrival_s orders admission)
-        while let Some(r) = pending.first() {
-            queue.push((*r).clone());
-            pending.remove(0);
-            if queue.waiting() >= batch {
-                break;
-            }
-        }
-        for wave in queue.admit(virtual_step) {
-            let wave_start = Instant::now();
-            let prompts: Vec<Vec<i32>> =
-                wave.iter().map(|r| r.prompt.clone()).collect();
-            fd.start_batch((served as u64 + 1) * 1000);
-            let result = fd.generate(&prompts, gen_steps)?;
-            let dt = wave_start.elapsed().as_secs_f64();
-
-            // first token lands after the prefill + 1 decode step
-            let first = result.trace.records.first().map(|r| r.latency_s);
-            for _ in &wave {
-                ttft.record_secs(first.unwrap_or(dt / gen_steps as f64));
-            }
-            for r in &result.trace.records {
-                per_token.record_secs(r.latency_s);
-            }
-            served += wave.len();
-            tokens += (wave.len() * gen_steps) as u64;
-            virtual_step += gen_steps;
-        }
+    let policies: Vec<Box<dyn AdmissionPolicy>> = vec![
+        Box::new(Fifo),
+        Box::new(ShortestJobFirst),
+        Box::new(SlsEarliestStart),
+    ];
+    for policy in policies {
+        let fd = FastDecode::new(
+            TINY,
+            FastDecodeConfig {
+                batch: slots,
+                sockets: 2,
+                precision: Precision::F16,
+                capacity_per_seq: 64,
+                ..Default::default()
+            },
+        )?;
+        let mut engine = ServeEngine::new(
+            fd,
+            ServeConfig {
+                w_lim,
+                steps_per_sec: 200.0,
+                prefill: PrefillMode::Batched,
+                max_steps: 50_000,
+            },
+            policy,
+        )?;
+        let outcome = engine.run(&trace)?;
+        println!("== {} ==", outcome.policy);
+        println!("{}\n", outcome.report.summary());
+        let peak_w = outcome
+            .trace
+            .records
+            .iter()
+            .map(|r| r.total_ctx)
+            .max()
+            .unwrap_or(0);
+        println!("peak measured W: {peak_w} (limit {w_lim})\n");
+        // the smoke contract CI relies on: every request served, the
+        // measured aggregate KV load bounded, percentiles ordered
+        assert_eq!(outcome.report.completed, trace.len());
+        assert!(peak_w <= w_lim, "measured W {peak_w} exceeded {w_lim}");
+        let (p50, p99) = (
+            outcome.report.e2e.percentile_us(0.50),
+            outcome.report.e2e.percentile_us(0.99),
+        );
+        assert!(p50 > 0.0 && p50 <= p99, "degenerate E2E percentiles");
     }
-    let elapsed = t0.elapsed().as_secs_f64();
-
-    println!("== serve_e2e report ==");
-    println!("requests served : {served}");
-    println!("tokens generated: {tokens}");
-    println!("wall time       : {elapsed:.2} s");
-    println!("throughput      : {:.1} tok/s", tokens as f64 / elapsed);
-    println!("per-step latency: {}", per_token.summary_ms());
-    println!("first-token     : {}", ttft.summary_ms());
-    println!(
-        "R-worker cache  : {} tokens live after the last wave",
-        fd.cache_tokens()
-    );
-    assert_eq!(served, trace.len(), "every request must be served");
+    println!("all policies served the full trace under W_lim");
     Ok(())
 }

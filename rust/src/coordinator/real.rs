@@ -14,12 +14,20 @@
 //! Two driving modes sit behind [`Coordinator::run_steps`]:
 //!
 //! * **primed fixed batch** ([`FastDecode::prime`]) — the paper's §6
-//!   throughput benchmark: all ℬ sequences start together.
-//! * **SLS admission** ([`FastDecode::drive_arrivals`]) — queued
-//!   micro-batch arrivals admitted per step by
-//!   [`LoadControl::earliest_start`] under an aggregate-KV limit W_lim
-//!   (§4.2, Algorithm 1), so SLS steady-state behavior is observable on
-//!   wall-clock traces and not just in the virtual-clock sim.
+//!   throughput benchmark: all ℬ sequences start together, prompts
+//!   prefilled in one batched multi-row pass (ragged lengths allowed).
+//! * **SLS admission** ([`FastDecode::drive_arrivals`], or
+//!   [`FastDecode::drive_arrivals_with`] for a non-FIFO
+//!   [`AdmissionPolicy`]) — queued micro-batch arrivals admitted per
+//!   step by [`LoadControl::earliest_start`] under an aggregate-KV
+//!   limit W_lim (§4.2, Algorithm 1), so SLS steady-state behavior is
+//!   observable on wall-clock traces and not just in the virtual-clock
+//!   sim.
+//!
+//! Request-level serving (continuous batching, per-request latencies)
+//! does not add a third mode: `serve::ServeEngine` drives the raw
+//! sequence-lifecycle API (`reset` / `alloc_seq_ids` / `register_seqs`
+//! / `forward_rows` / `retire_seqs`) directly.
 
 use std::collections::VecDeque;
 
@@ -27,9 +35,10 @@ use anyhow::{bail, Result};
 
 use crate::metrics::{Histogram, StepRecord, StepTrace};
 use crate::model::{ModelSpec, Precision};
-use crate::runtime::{PipelineConfig, ThreadedPipeline};
+use crate::runtime::{PipelineConfig, StepTiming, ThreadedPipeline};
 use crate::rworker::{RPool, RPoolConfig};
 use crate::sched::LoadControl;
+use crate::serve::{admit_one, AdmissionPolicy, Fifo, QueuedJob};
 use crate::sworker::{ModelWeights, NativeSWorker};
 
 use super::Coordinator;
@@ -99,9 +108,12 @@ struct LiveSeq {
 struct SlsState {
     /// Aggregate KV-token limit W_lim enforced by admission.
     w_lim: usize,
-    /// FIFO arrival queue (head-of-line: a deferred head is never
-    /// bypassed by a smaller later arrival).
-    queue: VecDeque<Arrival>,
+    /// Waiting arrivals, each paired with its admission-queue view.
+    /// Ordering is the policy's business: [`crate::serve::Fifo`]
+    /// reproduces the original head-of-line semantics, non-FIFO
+    /// policies may let later arrivals slip past a deferred head.
+    queue: VecDeque<(QueuedJob, Arrival)>,
+    policy: Box<dyn AdmissionPolicy>,
     live: Vec<LiveSeq>,
     lc: LoadControl,
     /// Global step counter across `run_steps` calls.
@@ -237,14 +249,16 @@ impl FastDecode {
         let b = self.cfg.batch;
         assert_eq!(tokens.len(), b);
         // Every step appends one token's K/V per sequence; refuse the
-        // step that would overflow the per-sequence cache instead of
+        // step that would overflow any sequence's cache instead of
         // asserting inside an R-worker thread.
-        if self.ctx_len.first().is_some_and(|&l| l >= self.cfg.capacity_per_seq)
+        if let Some(&l) = self
+            .ctx_len
+            .iter()
+            .find(|&&l| l >= self.cfg.capacity_per_seq)
         {
             bail!(
-                "KV capacity exhausted: {} tokens per sequence already \
-                 cached (capacity_per_seq = {})",
-                self.ctx_len[0],
+                "KV capacity exhausted: {l} tokens already cached for a \
+                 sequence (capacity_per_seq = {})",
                 self.cfg.capacity_per_seq
             );
         }
@@ -265,29 +279,44 @@ impl FastDecode {
     }
 
     /// Start a batch and run the prompt prefill, leaving the engine one
-    /// decode step away from its first generated token. All prompts must
-    /// have equal length.
+    /// decode step away from its first generated token. Prompts may be
+    /// RAGGED (any non-zero lengths): positions `0..len−1` of every
+    /// prompt cross the pipeline in ONE batched multi-row causal pass
+    /// (`ThreadedPipeline::forward`), and each prompt's last token is
+    /// left as the current token — the same contract, and bit-identical
+    /// cache state, as the old token-at-a-time prefill, at one round
+    /// trip per layer instead of one per prompt position.
     pub fn prime(&mut self, prompts: &[Vec<i32>], first_id: u64) -> Result<()> {
         let b = self.cfg.batch;
         if prompts.len() != b {
             bail!("need exactly batch={b} prompts, got {}", prompts.len());
         }
-        let plen = prompts[0].len();
-        if plen == 0 || prompts.iter().any(|p| p.len() != plen) {
-            bail!("prompts must be equal non-zero length");
+        if prompts.iter().any(|p| p.is_empty()) {
+            bail!("prompts must be non-empty");
         }
-        if plen > self.cfg.capacity_per_seq {
-            bail!("prompt length {plen} exceeds KV capacity");
+        let max_len = prompts.iter().map(Vec::len).max().unwrap_or(0);
+        if max_len > self.cfg.capacity_per_seq {
+            bail!("prompt length {max_len} exceeds KV capacity");
         }
         self.start_batch(first_id);
-        // Prefill one position at a time (token-batched across sequences,
-        // same code path as decode — correct but not prefill-optimized).
-        let mut current: Vec<i32> = prompts.iter().map(|p| p[0]).collect();
-        for pos in 1..plen {
-            self.decode_step(&current)?;
-            current = prompts.iter().map(|p| p[pos]).collect();
+        let mut tokens: Vec<i32> = Vec::new();
+        let mut rows: Vec<u64> = Vec::new();
+        for (i, p) in prompts.iter().enumerate() {
+            for &t in &p[..p.len() - 1] {
+                tokens.push(t);
+                rows.push(self.seq_ids[i]);
+            }
         }
-        self.current = Some(current);
+        if !tokens.is_empty() {
+            // prefill samples are discarded — only the cache state and
+            // the pending last tokens matter
+            self.pipeline.forward(&tokens, &rows)?;
+        }
+        for (l, p) in self.ctx_len.iter_mut().zip(prompts) {
+            *l = p.len() - 1;
+        }
+        self.current =
+            Some(prompts.iter().map(|p| *p.last().expect("non-empty")).collect());
         Ok(())
     }
 
@@ -299,7 +328,7 @@ impl FastDecode {
         steps: usize,
     ) -> Result<GenerationResult> {
         let b = self.cfg.batch;
-        let plen = prompts.first().map(Vec::len).unwrap_or(0);
+        let plen = prompts.iter().map(Vec::len).max().unwrap_or(0);
         if plen + steps > self.cfg.capacity_per_seq {
             bail!("prompt+steps exceeds KV capacity");
         }
@@ -344,17 +373,79 @@ impl FastDecode {
         self.cache_tokens() / self.cfg.layers
     }
 
-    /// Switch the engine into SLS admission mode: `arrivals` queue FIFO
-    /// and `Coordinator::run_steps` then admits them per step via
-    /// [`LoadControl::earliest_start`] under `w_lim` (aggregate KV
-    /// tokens), decoding every live sequence each step. Any primed
-    /// fixed batch is dropped. Arrivals whose lone footprint
-    /// `m · seq_len` exceeds `w_lim` are rejected here — by
-    /// `earliest_start`'s Option contract they could never be admitted.
+    // ── raw sequence-lifecycle API (used by `serve::ServeEngine`) ──
+    //
+    // The serving subsystem manages request lifecycles itself: it
+    // resets the engine's own driving modes once, then registers,
+    // decodes and retires sequences per request. Capacity accounting is
+    // the caller's job here — the R-workers still reject an overflowing
+    // append loudly.
+
+    /// Drop every held sequence and leave both driving modes (primed
+    /// fixed batch and SLS admission), so a caller can take manual
+    /// control of the sequence lifecycle.
+    pub fn reset(&mut self) {
+        self.release_all_sequences();
+    }
+
+    /// Allocate `n` fresh sequence ids — monotone across resets, waves
+    /// and serving runs, so a new lifetime can never collide with ids
+    /// still placed in the pool.
+    pub fn alloc_seq_ids(&mut self, n: usize) -> Vec<u64> {
+        let ids: Vec<u64> =
+            (self.next_seq_id..self.next_seq_id + n as u64).collect();
+        self.next_seq_id += n as u64;
+        ids
+    }
+
+    /// Register sequences with the socket pool (round-robin placement).
+    pub fn register_seqs(&mut self, ids: &[u64]) {
+        self.pipeline.rpool_mut().add_seqs(ids);
+    }
+
+    /// Drop finished sequences, freeing their KV across the pool.
+    pub fn retire_seqs(&mut self, ids: &[u64]) {
+        self.pipeline.rpool_mut().drop_seqs(ids);
+    }
+
+    /// One raw ragged forward pass (`ThreadedPipeline::forward`):
+    /// `row_seqs[i]` owns row `i`, a sequence may own several
+    /// consecutive rows (batched prefill), and decode rows of other
+    /// sequences may share the pass — continuous batching. Returns the
+    /// sampled next token of every row plus the measured stage timing.
+    pub fn forward_rows(
+        &mut self,
+        tokens: &[i32],
+        row_seqs: &[u64],
+    ) -> Result<(Vec<i32>, StepTiming)> {
+        self.pipeline.forward(tokens, row_seqs)
+    }
+
+    /// Switch the engine into SLS admission mode with FIFO ordering
+    /// (head-of-line: a deferred head is never bypassed) — see
+    /// [`FastDecode::drive_arrivals_with`] for pluggable policies.
     pub fn drive_arrivals(
         &mut self,
         arrivals: &[Arrival],
         w_lim: usize,
+    ) -> Result<()> {
+        self.drive_arrivals_with(arrivals, w_lim, Box::new(Fifo))
+    }
+
+    /// Switch the engine into SLS admission mode: `arrivals` queue up
+    /// and `Coordinator::run_steps` then admits them per step — the
+    /// given [`AdmissionPolicy`] picks WHICH waiting arrival starts,
+    /// [`LoadControl::earliest_start`] under `w_lim` (aggregate KV
+    /// tokens) decides WHETHER it may start now — decoding every live
+    /// sequence each step. Any primed fixed batch is dropped. Arrivals
+    /// whose lone footprint `m · seq_len` exceeds `w_lim` are rejected
+    /// here — by `earliest_start`'s Option contract they could never be
+    /// admitted.
+    pub fn drive_arrivals_with(
+        &mut self,
+        arrivals: &[Arrival],
+        w_lim: usize,
+        policy: Box<dyn AdmissionPolicy>,
     ) -> Result<()> {
         for a in arrivals {
             if a.m == 0 || a.seq_len == 0 {
@@ -384,7 +475,23 @@ impl FastDecode {
         self.release_all_sequences();
         self.sls = Some(SlsState {
             w_lim,
-            queue: arrivals.iter().copied().collect(),
+            queue: arrivals
+                .iter()
+                .enumerate()
+                .map(|(i, &a)| {
+                    (
+                        QueuedJob {
+                            id: i as u64,
+                            m: a.m,
+                            init_len: 0,
+                            grow_len: a.seq_len,
+                            arrive_step: 0,
+                        },
+                        a,
+                    )
+                })
+                .collect(),
+            policy,
             live: Vec::new(),
             lc: LoadControl::new(),
             step: 0,
@@ -417,16 +524,22 @@ impl FastDecode {
         let t = st.step;
         st.step += 1;
         st.lc.retire_before(t);
-        while let Some(a) = st.queue.front().copied() {
-            let s = st
-                .lc
-                .earliest_start(t, a.m, a.seq_len, st.w_lim)
-                .expect("validated at enqueue: m·seq_len ≤ w_lim");
-            if s > t {
-                break; // head deferred; FIFO admission never skips it
+        loop {
+            if st.queue.is_empty() {
+                break;
             }
-            st.queue.pop_front();
-            st.lc.add(t, a.m, a.seq_len);
+            let jobs: Vec<QueuedJob> =
+                st.queue.iter().map(|&(j, _)| j).collect();
+            // `admit_one` enforces the policy contract (bounds + the
+            // selected job must start exactly now) and charges the
+            // controller — the same machinery `serve::ServeEngine` uses
+            let Some(idx) =
+                admit_one(st.policy.as_ref(), t, &jobs, &mut st.lc, st.w_lim)?
+            else {
+                break; // nothing startable now under this policy
+            };
+            let (_, a) =
+                st.queue.remove(idx).expect("admit_one bounds-checked");
             let ids: Vec<u64> = (st.next_id..st.next_id + a.m as u64).collect();
             st.next_id += a.m as u64;
             self.pipeline.rpool_mut().add_seqs(&ids);
@@ -439,9 +552,10 @@ impl FastDecode {
             }
         }
         if st.live.is_empty() {
-            // only reachable once the queue has drained (an empty live
-            // set leaves the controller empty, so any queued head would
-            // have been admitted above): an idle step
+            // an idle step: either the queue has drained, or every
+            // waiting arrival is deferred (with an empty live set the
+            // controller is empty after retirement, so any feasible
+            // arrival is startable — a sane policy admits one)
             return Ok(StepRecord {
                 step: t,
                 ..Default::default()

@@ -87,6 +87,13 @@ impl SeqKv {
         self.len >= self.capacity
     }
 
+    /// Tokens that can still be appended before the cache is full (used
+    /// by the R-worker to reject a multi-row prefill that would overflow
+    /// before any of its appends land).
+    pub fn remaining(&self) -> usize {
+        self.capacity.saturating_sub(self.len)
+    }
+
     /// Append one token's K and V, each `[H * D]` f32 (head-major).
     /// Returns the token's position.
     pub fn append(&mut self, k: &[f32], v: &[f32]) -> usize {

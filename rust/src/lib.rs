@@ -8,7 +8,10 @@
 //! R-worker socket threads. The coordinator pipelines the two at token
 //! level — two mini-batches double-buffered over channels
 //! (`runtime::pipeline`) — and stabilizes R-Part load at sequence level
-//! (SLS + Algorithm 1). See DESIGN.md for the system inventory and the
+//! (SLS + Algorithm 1). The `serve` subsystem layers request-level
+//! continuous batching on top: open-loop arrivals, pluggable admission
+//! policies under W_lim, batched prefill, and per-request latency
+//! accounting. See DESIGN.md for the system inventory and the
 //! per-experiment index.
 
 pub mod baselines;
@@ -21,6 +24,7 @@ pub mod perfmodel;
 pub mod runtime;
 pub mod rworker;
 pub mod sched;
+pub mod serve;
 pub mod server;
 pub mod sworker;
 pub mod transport;

@@ -193,4 +193,52 @@ mod tests {
         assert_eq!(h.percentile_us(0.5), 0.0);
         assert_eq!(h.mean_us(), 0.0);
     }
+
+    /// Merge must fold EVERY moment, not just the bucket counts: after
+    /// `a.merge(&b)`, count, mean (exact — `sum_us` folds losslessly),
+    /// min, max and all percentiles equal those of the concatenated
+    /// stream. Disjoint value ranges make a count-only fold fail the
+    /// min/max/mean assertions (the satellite audit this test pins).
+    #[test]
+    fn merge_equals_concatenation_all_moments() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut all = Histogram::new();
+        let mut rng = Rng::new(7);
+        for _ in 0..500 {
+            let small = 1.0 + rng.next_f64() * 100.0; // [1, 101) µs
+            let big = 1e6 + rng.next_f64() * 1e6; // [1s, 2s) in µs
+            a.record_us(small);
+            b.record_us(big);
+            all.record_us(small);
+            all.record_us(big);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        // summation order differs, so allow f64 rounding in the mean
+        let (ma, mc) = (a.mean_us(), all.mean_us());
+        assert!((ma - mc).abs() / mc < 1e-12, "sum_us not folded: {ma} vs {mc}");
+        assert_eq!(a.min_us(), all.min_us(), "min_us not folded");
+        assert_eq!(a.max_us(), all.max_us(), "max_us not folded");
+        for q in [0.01, 0.5, 0.95, 0.99] {
+            assert_eq!(a.percentile_us(q), all.percentile_us(q), "p{q}");
+        }
+    }
+
+    /// Merging into (or from) an empty histogram is the identity.
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let mut a = Histogram::new();
+        a.record_us(42.0);
+        let before = (a.count(), a.mean_us(), a.min_us(), a.max_us());
+        a.merge(&Histogram::new());
+        assert_eq!(before, (a.count(), a.mean_us(), a.min_us(), a.max_us()));
+
+        let mut e = Histogram::new();
+        e.merge(&a);
+        assert_eq!(e.count(), 1);
+        assert_eq!(e.min_us(), 42.0);
+        assert_eq!(e.max_us(), 42.0);
+        assert_eq!(e.mean_us(), 42.0);
+    }
 }

@@ -30,6 +30,15 @@
 //! per-row-independent math, so the generated tokens are bit-identical
 //! across every depth and both modes.
 //!
+//! [`ThreadedPipeline::forward`] generalizes the decode step to RAGGED
+//! rows: a sequence may own several consecutive rows — consecutive
+//! token positions processed causally in one pass (the R-worker
+//! appends+attends them row by row near the cache). That is batched
+//! prefill: a whole prompt crosses the S↔R boundary in a single round
+//! trip per layer instead of one round trip per token, and it composes
+//! freely with one-row decode sequences in the same pass (continuous
+//! batching).
+//!
 //! Error handling: any S-Part failure is routed back over the response
 //! channel as `SResp::Err` (never a bare thread death), `step()`
 //! surfaces the root cause in its `Result`, and the in-flight attend is
@@ -230,8 +239,9 @@ impl ThreadedPipeline {
     }
 
     /// One decode step: `tokens[i]` is the current token of sequence
-    /// `seq_ids[i]`. Returns the greedily sampled next tokens in the
-    /// same order, plus the measured stage timing.
+    /// `seq_ids[i]` (ids unique — one row per sequence). Returns the
+    /// greedily sampled next tokens in the same order, plus the
+    /// measured stage timing.
     ///
     /// On error the step is drained (in-flight attend gathered, S
     /// responses consumed) so the pipeline and pool stay reusable; the
@@ -241,10 +251,32 @@ impl ThreadedPipeline {
         tokens: &[i32],
         seq_ids: &[u64],
     ) -> Result<(Vec<i32>, StepTiming)> {
-        assert_eq!(tokens.len(), seq_ids.len());
+        self.forward(tokens, seq_ids)
+    }
+
+    /// One forward pass over ragged rows: `row_seqs[i]` is the sequence
+    /// owning row `i`, and a sequence may own SEVERAL consecutive rows
+    /// — consecutive token positions fed in one causal multi-row pass
+    /// (batched prefill). Decode is the one-row-per-sequence special
+    /// case ([`ThreadedPipeline::step`]). Returns the greedily sampled
+    /// next token of every ROW in order; for a multi-row sequence only
+    /// its last row's token is meaningful (earlier rows' samples are
+    /// the model continuing the prompt mid-way).
+    ///
+    /// A sequence's rows must form exactly one contiguous run; rows of
+    /// different sequences may interleave freely at run granularity.
+    /// The mini-batch split is row-based, so a long prefill may span
+    /// mini-batches — causality holds because attends are gathered in
+    /// submission order and each socket serves FIFO.
+    pub fn forward(
+        &mut self,
+        tokens: &[i32],
+        row_seqs: &[u64],
+    ) -> Result<(Vec<i32>, StepTiming)> {
+        assert_eq!(tokens.len(), row_seqs.len());
         let b = tokens.len();
         if b == 0 {
-            bail!("empty decode step");
+            bail!("empty forward pass");
         }
         // Validate here, at the Result-returning surface, to keep bad
         // ids out of the pipeline entirely (an S-thread failure is
@@ -252,6 +284,16 @@ impl ThreadedPipeline {
         for &t in tokens {
             if t < 0 || t as usize >= self.vocab {
                 bail!("token id {t} outside vocab {}", self.vocab);
+            }
+        }
+        // one contiguous run per sequence (a second run would split the
+        // sequence across two tasks of one attend, colliding in the
+        // seq-keyed gather); allocation-free — this runs on every
+        // decode step, and run counts are small (≤ batch)
+        for (i, &id) in row_seqs.iter().enumerate() {
+            let run_start = i > 0 && row_seqs[i - 1] != id;
+            if run_start && row_seqs[..i].contains(&id) {
+                bail!("sequence {id} owns non-contiguous rows");
             }
         }
         let t0 = Instant::now();
@@ -262,9 +304,9 @@ impl ThreadedPipeline {
         let ranges: Vec<(usize, usize)> =
             (0..d).map(|i| (i * b / d, (i + 1) * b / d)).collect();
         let res = if self.cfg.pipelined && ranges.len() >= 2 {
-            self.step_pipelined(tokens, seq_ids, &ranges, &mut timing)
+            self.step_pipelined(tokens, row_seqs, &ranges, &mut timing)
         } else {
-            self.step_serial(tokens, seq_ids, &ranges, &mut timing)
+            self.step_serial(tokens, row_seqs, &ranges, &mut timing)
         };
         if res.is_err() {
             self.recover();
@@ -382,9 +424,11 @@ impl ThreadedPipeline {
         Ok(())
     }
 
-    /// Split one mini-batch's fused QKV rows into per-sequence tasks,
-    /// charge the modeled wire time for the real bytes, and scatter to
-    /// the sockets without waiting (the handle is held in `inflight`).
+    /// Split one mini-batch's fused QKV rows into per-sequence tasks
+    /// (consecutive rows of one sequence fuse into a single multi-row
+    /// prefill task), charge the modeled wire time for the real bytes,
+    /// and scatter to the sockets without waiting (the handle is held
+    /// in `inflight`).
     fn dispatch(
         &mut self,
         mb: usize,
@@ -397,18 +441,32 @@ impl ThreadedPipeline {
         debug_assert!(self.inflight.is_none(), "attend already in flight");
         let h = self.hidden;
         debug_assert_eq!(qkv.len(), (hi - lo) * 3 * h);
-        let tasks: Vec<SeqTask> = (lo..hi)
-            .enumerate()
-            .map(|(i, s)| {
-                let row = &qkv[i * 3 * h..(i + 1) * 3 * h];
-                SeqTask {
-                    seq_id: ids[s],
-                    q: row[..h].to_vec(),
-                    k_new: row[h..2 * h].to_vec(),
-                    v_new: row[2 * h..].to_vec(),
-                }
-            })
-            .collect();
+        let mut tasks: Vec<SeqTask> = Vec::new();
+        let mut i = lo;
+        while i < hi {
+            let id = ids[i];
+            let mut j = i + 1;
+            while j < hi && ids[j] == id {
+                j += 1;
+            }
+            let rows = j - i;
+            let mut q = Vec::with_capacity(rows * h);
+            let mut k_new = Vec::with_capacity(rows * h);
+            let mut v_new = Vec::with_capacity(rows * h);
+            for r in i..j {
+                let row = &qkv[(r - lo) * 3 * h..(r - lo + 1) * 3 * h];
+                q.extend_from_slice(&row[..h]);
+                k_new.extend_from_slice(&row[h..2 * h]);
+                v_new.extend_from_slice(&row[2 * h..]);
+            }
+            tasks.push(SeqTask {
+                seq_id: id,
+                q,
+                k_new,
+                v_new,
+            });
+            i = j;
+        }
         // Modeled comm for the actual payload: QKV down over PCIe then
         // scattered across the sockets (1-to-𝒫); O back as a 𝒫-to-1
         // incast at the S-worker's NIC, then up over PCIe.
@@ -429,8 +487,9 @@ impl ThreadedPipeline {
         });
     }
 
-    /// Gather the in-flight attend's outputs in sequence order,
-    /// returning `(mb, layer, o)` for the matching Advance.
+    /// Gather the in-flight attend's outputs in row order (a multi-row
+    /// task's output covers all of its rows at once), returning
+    /// `(mb, layer, o)` for the matching Advance.
     fn gather_inflight(
         &mut self,
         ids: &[u64],
@@ -440,9 +499,17 @@ impl ThreadedPipeline {
         let step = self.rpool.wait_attend(inf.pending);
         timing.r_time += step.max_busy.as_secs_f64();
         let mut o = Vec::with_capacity((inf.hi - inf.lo) * self.hidden);
-        for s in inf.lo..inf.hi {
-            o.extend_from_slice(&step.outputs[&ids[s]]);
+        let mut s = inf.lo;
+        while s < inf.hi {
+            let id = ids[s];
+            let mut j = s + 1;
+            while j < inf.hi && ids[j] == id {
+                j += 1;
+            }
+            o.extend_from_slice(&step.outputs[&id]);
+            s = j;
         }
+        debug_assert_eq!(o.len(), (inf.hi - inf.lo) * self.hidden);
         (inf.mb, inf.layer, o)
     }
 

@@ -20,7 +20,8 @@ pub struct RPoolConfig {
     pub sockets: usize,
     pub capacity_per_seq: usize,
     pub precision: Precision,
-    /// Artificial dilation per sequence task of every attend, applied
+    /// Artificial dilation per appended token row of every attend (a
+    /// decode task is one row, a prefill task is T rows), applied
     /// inside every socket and counted in its busy time. Zero in
     /// production; pipeline smoke/depth tests use it to pin the R-stage
     /// latency (see `RWorker::spawn`).
@@ -144,6 +145,12 @@ impl RPool {
     /// caller is free to do S-Part work for the other mini-batch before
     /// calling [`RPool::wait_attend`]. This split is what the threaded
     /// token-level pipeline (Fig 5b) is built on.
+    ///
+    /// At most one task per sequence per call: outputs are keyed by
+    /// `seq_id`, so a duplicate would silently collapse — `wait_attend`
+    /// counts outputs against tasks and panics if that happens. Multi-
+    /// token work for one sequence travels as ONE multi-row task (see
+    /// [`SeqTask`]).
     pub fn submit_attend(
         &mut self,
         layer: usize,

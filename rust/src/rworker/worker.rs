@@ -10,11 +10,20 @@ use crate::util::chan::{bounded, Receiver, Sender};
 
 use super::attention::{attend_one, AttnScratch};
 
-/// Per-sequence work item within one step: the activation vectors of the
-/// newest token (the only data FastDecode ships across the interconnect).
+/// Per-sequence work item within one step: the activation vectors of
+/// the newest token(s) — the only data FastDecode ships across the
+/// interconnect.
+///
+/// A decode task carries one token (T = 1). A batched-prefill task
+/// carries T consecutive positions of the SAME sequence: the worker
+/// appends and attends them in row order, so row p sees exactly
+/// positions 0..=p of the cache — a causal multi-token prefill in one
+/// round trip. At most one task per sequence may appear in a single
+/// `Attend` request (outputs are keyed by `seq_id`).
 pub struct SeqTask {
     pub seq_id: u64,
-    /// `[H*D]` each, head-major.
+    /// `[T * H * D]` each, row-major over T positions, head-major
+    /// within a row.
     pub q: Vec<f32>,
     pub k_new: Vec<f32>,
     pub v_new: Vec<f32>,
@@ -57,11 +66,12 @@ pub struct RWorker {
 
 impl RWorker {
     /// `attend_pad` artificially dilates every Attend by a sleep of
-    /// `pad × tasks` — per sequence task, so the total dilation of a
-    /// step is invariant to how the batch is split into mini-batches
-    /// (counted in the reported busy time). Zero in production; the
-    /// pipeline smoke/depth tests use it to pin the R-stage latency so
-    /// the max(s, r)-vs-(s + r) assertion is robust on any machine.
+    /// `pad × rows` — per appended token row (a decode task is one row,
+    /// a prefill task is T rows), so the total dilation of a step is
+    /// invariant to how the batch is split into mini-batches (counted
+    /// in the reported busy time). Zero in production; the pipeline
+    /// smoke/depth tests use it to pin the R-stage latency so the
+    /// max(s, r)-vs-(s + r) assertion is robust on any machine.
     #[allow(clippy::too_many_arguments)]
     pub fn spawn(
         socket_id: usize,
@@ -147,15 +157,51 @@ fn run_loop(
             RRequest::Attend { layer, tasks } => {
                 let start = std::time::Instant::now();
                 let mut outs = Vec::with_capacity(tasks.len());
+                let mut total_rows = 0usize;
                 for task in &tasks {
                     let kv = cache.get_mut(task.seq_id, layer);
-                    kv.append(&task.k_new, &task.v_new);
+                    let width = kv.n_heads * kv.head_dim;
+                    assert!(
+                        !task.q.is_empty()
+                            && task.q.len() % width == 0
+                            && task.k_new.len() == task.q.len()
+                            && task.v_new.len() == task.q.len(),
+                        "seq {}: malformed task (q {} k {} v {}, width {width})",
+                        task.seq_id,
+                        task.q.len(),
+                        task.k_new.len(),
+                        task.v_new.len(),
+                    );
+                    let rows = task.q.len() / width;
+                    assert!(
+                        rows <= kv.remaining(),
+                        "seq {}: {rows}-row prefill overflows KV cache \
+                         ({} of {} slots used)",
+                        task.seq_id,
+                        kv.len,
+                        kv.capacity,
+                    );
                     let mut o = vec![0.0f32; task.q.len()];
-                    attend_one(kv, &task.q, &mut o, &mut scratch);
+                    // append+attend row by row: row p attends positions
+                    // 0..=p — causal prefill (T > 1) and plain decode
+                    // (T = 1) are the same loop
+                    for r in 0..rows {
+                        let s = r * width..(r + 1) * width;
+                        kv.append(&task.k_new[s.clone()], &task.v_new[s.clone()]);
+                        attend_one(
+                            kv,
+                            &task.q[s.clone()],
+                            &mut o[s.clone()],
+                            &mut scratch,
+                        );
+                    }
+                    total_rows += rows;
                     outs.push((task.seq_id, o));
                 }
-                if !attend_pad.is_zero() && !tasks.is_empty() {
-                    std::thread::sleep(attend_pad * tasks.len() as u32);
+                // pad is charged PER ROW so a step's total dilation is
+                // invariant to how rows are split into mini-batches
+                if !attend_pad.is_zero() && total_rows > 0 {
+                    std::thread::sleep(attend_pad * total_rows as u32);
                 }
                 let busy = start.elapsed();
                 if tx.send(RResponse::Outputs { layer, outs, busy }).is_err() {
@@ -223,6 +269,112 @@ mod tests {
             RResponse::Stats(st) => assert_eq!(st.sequences, 1),
             _ => panic!(),
         }
+    }
+
+    /// A T-row prefill task is bit-identical to feeding the same T
+    /// positions as T single-row attends: same cache state, and the
+    /// multi-row outputs equal the concatenated single-row outputs.
+    #[test]
+    fn multi_row_prefill_equals_token_at_a_time() {
+        let (h, d, t_rows) = (2usize, 4usize, 5usize);
+        let width = h * d;
+        let mut rng = Rng::new(9);
+        let q: Vec<f32> = rng.normal_vec(t_rows * width, 1.0);
+        let k: Vec<f32> = rng.normal_vec(t_rows * width, 1.0);
+        let v: Vec<f32> = rng.normal_vec(t_rows * width, 1.0);
+        let probe_q = rng.normal_vec(width, 1.0);
+        let probe_k = rng.normal_vec(width, 1.0);
+        let probe_v = rng.normal_vec(width, 1.0);
+
+        let run = |multi: bool| -> (Vec<f32>, Vec<f32>) {
+            let w =
+                RWorker::spawn(0, h, d, 1, 16, Precision::F32, Duration::ZERO);
+            w.submit(RRequest::AddSeqs(vec![1]));
+            assert!(matches!(w.recv(), RResponse::Ack));
+            let mut prefill_out = Vec::new();
+            if multi {
+                w.submit(RRequest::Attend {
+                    layer: 0,
+                    tasks: vec![SeqTask {
+                        seq_id: 1,
+                        q: q.clone(),
+                        k_new: k.clone(),
+                        v_new: v.clone(),
+                    }],
+                });
+                match w.recv() {
+                    RResponse::Outputs { outs, .. } => {
+                        prefill_out = outs[0].1.clone()
+                    }
+                    _ => panic!("expected outputs"),
+                }
+            } else {
+                for r in 0..t_rows {
+                    let s = r * width..(r + 1) * width;
+                    w.submit(RRequest::Attend {
+                        layer: 0,
+                        tasks: vec![SeqTask {
+                            seq_id: 1,
+                            q: q[s.clone()].to_vec(),
+                            k_new: k[s.clone()].to_vec(),
+                            v_new: v[s.clone()].to_vec(),
+                        }],
+                    });
+                    match w.recv() {
+                        RResponse::Outputs { outs, .. } => {
+                            prefill_out.extend_from_slice(&outs[0].1)
+                        }
+                        _ => panic!("expected outputs"),
+                    }
+                }
+            }
+            // a probe decode step proves the cache state is identical
+            w.submit(RRequest::Attend {
+                layer: 0,
+                tasks: vec![SeqTask {
+                    seq_id: 1,
+                    q: probe_q.clone(),
+                    k_new: probe_k.clone(),
+                    v_new: probe_v.clone(),
+                }],
+            });
+            let probe_out = match w.recv() {
+                RResponse::Outputs { outs, .. } => outs[0].1.clone(),
+                _ => panic!("expected outputs"),
+            };
+            (prefill_out, probe_out)
+        };
+        let (multi_o, multi_probe) = run(true);
+        let (single_o, single_probe) = run(false);
+        assert_eq!(multi_o, single_o, "prefill outputs diverged");
+        assert_eq!(multi_probe, single_probe, "cache state diverged");
+    }
+
+    /// A multi-row task that would overflow the per-sequence capacity
+    /// kills the worker on the guard assertion (before any append
+    /// lands), which surfaces as a "thread died" panic at the next recv.
+    #[test]
+    fn multi_row_overflow_rejected_by_worker() {
+        let (h, d) = (1usize, 4usize);
+        let result = std::panic::catch_unwind(|| {
+            let w =
+                RWorker::spawn(0, h, d, 1, 4, Precision::F32, Duration::ZERO);
+            w.submit(RRequest::AddSeqs(vec![1]));
+            assert!(matches!(w.recv(), RResponse::Ack));
+            let mut rng = Rng::new(2);
+            let rows = 5; // capacity is 4
+            w.submit(RRequest::Attend {
+                layer: 0,
+                tasks: vec![SeqTask {
+                    seq_id: 1,
+                    q: rng.normal_vec(rows * h * d, 1.0),
+                    k_new: rng.normal_vec(rows * h * d, 1.0),
+                    v_new: rng.normal_vec(rows * h * d, 1.0),
+                }],
+            });
+            let _ = w.recv(); // the guard fired; the channel is dead
+        });
+        assert!(result.is_err(), "overflowing prefill must be rejected");
     }
 
     #[test]

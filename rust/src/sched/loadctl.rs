@@ -5,6 +5,15 @@
 //! `earliest_start` answers: given a load limit W_lim, what is the
 //! earliest step a new micro-batch of size m may start without pushing
 //! any of those peaks past the limit?
+//!
+//! The `*_init` variants generalize the paper's listing to requests
+//! that begin life with KV already cached: a batched prefill appends
+//! the whole prompt in the request's first step, so its per-sequence
+//! context is `init + age` rather than `age`. `init = 0` recovers
+//! Algorithm 1 exactly. The safety argument is unchanged by `init`:
+//! every batch's contribution is nondecreasing while it is alive, so
+//! the aggregate load at any step is bounded by some live batch's
+//! end-step peak, and bounding the peaks bounds every step.
 
 /// One live micro-batch.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -13,8 +22,11 @@ pub struct MicroBatch {
     pub size: usize,
     /// Step at which it started.
     pub start: usize,
-    /// Final step index (start + seq_len - 1 inclusive).
+    /// Final step index (start + grow_len - 1 inclusive).
     pub end: usize,
+    /// Context tokens per sequence already cached when the batch starts
+    /// (a batched prefill's bulk append); 0 for plain decode arrivals.
+    pub init: usize,
     /// Aggregate workload at step `end` counting all earlier-started
     /// batches plus later admissions (maintained by `add`).
     pub peak_load: usize,
@@ -47,11 +59,20 @@ impl LoadControl {
     /// newcomer's contribution (the paper's `W[i] += (E[i] - t) * m`,
     /// with 1-based lengths: age at step E[i] is E[i] - t + 1).
     pub fn add(&mut self, start: usize, m: usize, seq_len: usize) {
-        assert!(m > 0 && seq_len > 0);
-        let end = start + seq_len - 1;
-        // the newcomer's own peak: its full length × m, plus what every
+        self.add_init(start, m, 0, seq_len);
+    }
+
+    /// AddMicroBatch generalized to a bulk-prefilled batch: each of the
+    /// `m` sequences starts with `init` KV tokens already cached and
+    /// stays live for `grow_len` steps, appending one token per step —
+    /// its contribution at age a (1-based) is `m · (init + a)` and its
+    /// peak `m · (init + grow_len)`.
+    pub fn add_init(&mut self, start: usize, m: usize, init: usize, grow_len: usize) {
+        assert!(m > 0 && grow_len > 0);
+        let end = start + grow_len - 1;
+        // the newcomer's own peak: its full context × m, plus what every
         // other batch still contributes at `end`
-        let mut own_peak = m * seq_len;
+        let mut own_peak = m * (init + grow_len);
         for mb in &self.live {
             own_peak += Self::contribution(mb, end);
         }
@@ -60,13 +81,14 @@ impl LoadControl {
             // window (including after it retires) it contributes nothing
             if mb.end >= start && mb.end <= end {
                 let age_at_end = mb.end - start + 1;
-                mb.peak_load += age_at_end * m;
+                mb.peak_load += (init + age_at_end) * m;
             }
         }
         self.live.push(MicroBatch {
             size: m,
             start,
             end,
+            init,
             peak_load: own_peak,
         });
     }
@@ -76,7 +98,7 @@ impl LoadControl {
         if t < mb.start || t > mb.end {
             0
         } else {
-            (t - mb.start + 1) * mb.size
+            (mb.init + t - mb.start + 1) * mb.size
         }
     }
 
@@ -103,7 +125,25 @@ impl LoadControl {
         seq_len: usize,
         w_lim: usize,
     ) -> Option<usize> {
-        if m * seq_len > w_lim {
+        self.earliest_start_init(now, m, 0, seq_len, w_lim)
+    }
+
+    /// GetEarliestStep generalized to a bulk-prefilled batch (see
+    /// [`LoadControl::add_init`]): the newcomer's contribution at age a
+    /// is `m · (init + a)`, peaking at `m · (init + grow_len)`.
+    ///
+    /// Option contract: `None` if and only if
+    /// `m · (init + grow_len) > w_lim` (the newcomer alone can never
+    /// fit); every feasible request gets a finite start.
+    pub fn earliest_start_init(
+        &self,
+        now: usize,
+        m: usize,
+        init: usize,
+        grow_len: usize,
+        w_lim: usize,
+    ) -> Option<usize> {
+        if m * (init + grow_len) > w_lim {
             return None;
         }
         let mut r = now;
@@ -114,17 +154,25 @@ impl LoadControl {
                 r = r.max(mb.end + 1);
                 continue;
             }
-            // max age the newcomer may have at mb.end
+            // max (init + age) the newcomer may carry at mb.end
             let x = (w_lim - mb.peak_load) / m;
-            if x >= seq_len {
+            if x <= init {
+                // even age 1 overflows once the prefill bulk is counted
+                r = r.max(mb.end + 1);
+                continue;
+            }
+            let max_age = x - init;
+            if max_age >= grow_len {
                 continue; // even a full-length overlap fits
             }
-            // age at mb.end = mb.end - start + 1 ≤ x  ⇒  start ≥ end - x + 1
-            r = r.max(mb.end + 1 - x.min(mb.end + 1));
+            // age at mb.end = mb.end - start + 1 ≤ max_age
+            //   ⇒ start ≥ mb.end - max_age + 1
+            r = r.max(mb.end + 1 - max_age.min(mb.end + 1));
         }
-        // The newcomer's own peak must also fit: at its end step, the sum
-        // of older batches' contributions + m·seq_len ≤ w_lim. Scan
-        // forward (bounded: past every live batch's end all are gone).
+        // The newcomer's own peak must also fit: at its end step, the
+        // sum of older batches' contributions + m·(init + grow_len) ≤
+        // w_lim. Scan forward (bounded: past every live batch's end all
+        // are gone).
         let horizon = self
             .live
             .iter()
@@ -133,13 +181,13 @@ impl LoadControl {
             .unwrap_or(now);
         let mut start = r;
         loop {
-            let end = start + seq_len - 1;
+            let end = start + grow_len - 1;
             let others: usize = self
                 .live
                 .iter()
                 .map(|mb| Self::contribution(mb, end))
                 .sum();
-            if others + m * seq_len <= w_lim {
+            if others + m * (init + grow_len) <= w_lim {
                 // no intermediate violation is possible: every live
                 // batch's peak was bounded above via the per-batch
                 // constraint, and the newcomer's own end load fits
@@ -148,7 +196,8 @@ impl LoadControl {
             start += 1;
             if start > horizon {
                 // every live batch has ended before `start`, so the
-                // newcomer runs alone and m·seq_len ≤ w_lim suffices
+                // newcomer runs alone and m·(init+grow_len) ≤ w_lim
+                // suffices
                 return Some(start);
             }
         }
@@ -280,6 +329,87 @@ mod tests {
                     "peak mismatch for batch starting {}",
                     mb.start
                 );
+            }
+        });
+    }
+
+    /// A bulk-prefilled batch contributes `m·(init + age)` from its very
+    /// first step and peaks at `m·(init + grow_len)`.
+    #[test]
+    fn init_offset_shifts_contribution() {
+        let mut lc = LoadControl::new();
+        lc.add_init(0, 2, 5, 4); // prefill of 5, then 4 decode steps
+        assert_eq!(lc.load_at(0), 2 * 6); // init + age 1
+        assert_eq!(lc.load_at(3), 2 * 9); // init + age 4 (peak)
+        assert_eq!(lc.load_at(4), 0); // retired
+        assert_eq!(lc.live()[0].peak_load, 18);
+    }
+
+    /// `earliest_start_init` honest Option contract: None iff the
+    /// newcomer's own peak m·(init+grow) exceeds the limit.
+    #[test]
+    fn init_infeasible_returns_none() {
+        let lc = LoadControl::new();
+        assert_eq!(lc.earliest_start_init(0, 2, 10, 6, 31), None); // 32 > 31
+        assert_eq!(lc.earliest_start_init(0, 2, 10, 6, 32), Some(0));
+    }
+
+    /// The prefill bulk counts against existing peaks: a newcomer whose
+    /// init alone fills the elder's remaining headroom must wait for the
+    /// elder to end, even though its age-based growth would have fit.
+    #[test]
+    fn init_defers_admission_past_elder_peak() {
+        let mut lc = LoadControl::new();
+        lc.add(0, 2, 10); // peak 20 at step 9
+        // headroom 10 at the elder's peak; an (init=5, m=2) newcomer
+        // carries 2·(5+age) ≥ 12 at any overlap ⇒ must start at 10
+        let r = lc.earliest_start_init(0, 2, 5, 10, 30).unwrap();
+        assert_eq!(r, 10);
+        // with init 0 the same shape may overlap the elder's tail
+        let r0 = lc.earliest_start_init(0, 2, 0, 10, 30).unwrap();
+        assert_eq!(r0, 5);
+    }
+
+    /// Safety with heterogeneous init offsets: admitting at
+    /// `earliest_start_init` never violates w_lim at ANY step, checked
+    /// against a never-retiring shadow controller over the full history.
+    #[test]
+    fn prop_init_admission_never_violates_limit() {
+        prop::check("loadctl-init-safe", 80, |g| {
+            let w_lim = g.usize_in(12, 301);
+            let mut lc = LoadControl::new();
+            let mut shadow = LoadControl::new();
+            let mut now = 0usize;
+            for _ in 0..10 {
+                let m = g.usize_in(1, 5);
+                let init = g.usize_in(0, 12);
+                let grow = g.usize_in(1, 25);
+                if m * (init + grow) > w_lim {
+                    assert_eq!(
+                        lc.earliest_start_init(now, m, init, grow, w_lim),
+                        None
+                    );
+                    continue;
+                }
+                if g.usize_in(0, 4) == 0 {
+                    lc.retire_before(now);
+                }
+                let start = lc
+                    .earliest_start_init(now, m, init, grow, w_lim)
+                    .expect("feasible request must admit");
+                lc.add_init(start, m, init, grow);
+                shadow.add_init(start, m, init, grow);
+                now = start;
+            }
+            let horizon =
+                shadow.live().iter().map(|b| b.end).max().unwrap_or(0);
+            for t in 0..=horizon {
+                let l = shadow.load_at(t);
+                assert!(l <= w_lim, "load {l} > limit {w_lim} at step {t}");
+            }
+            // peak bookkeeping stays exact under init offsets
+            for mb in shadow.live() {
+                assert_eq!(mb.peak_load, shadow.load_at(mb.end));
             }
         });
     }

@@ -1,0 +1,422 @@
+//! The continuous-batching serving engine: drives the live
+//! [`FastDecode`] coordinator from an open-loop request trace.
+//!
+//! Per step: (1) trace requests whose arrival step has come join the
+//! waiting queue; (2) the [`AdmissionPolicy`] admits startable requests
+//! into free slots under the aggregate-KV limit W_lim (Algorithm 1 via
+//! [`LoadControl`], with the batched prefill's bulk append modeled as
+//! an `init` offset); (3) every occupied slot contributes rows to ONE
+//! ragged forward pass — freshly admitted requests their (multi-row)
+//! prefill, decoding requests one row each; (4) finished requests drop
+//! their KV ([`FastDecode::retire_seqs`]) and free their slot for
+//! backfill, without disturbing in-flight neighbors.
+//!
+//! All latencies are real wall-clock seconds measured from the run's
+//! start; the step clock is virtual (`steps_per_sec` maps the trace's
+//! arrival times onto it), so a faster engine drains the same trace in
+//! less wall time at identical step-level admission decisions.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::real::FastDecode;
+use crate::metrics::{Histogram, StepRecord, StepTrace};
+use crate::sched::LoadControl;
+use crate::workload::Request;
+
+use super::policy::{admit_one, AdmissionPolicy, QueuedJob};
+use super::report::{Completion, ServeReport};
+use super::slots::{ActiveRequest, SlotManager};
+
+/// How a newly admitted request's prompt enters the engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrefillMode {
+    /// The whole prompt crosses the pipeline as one multi-row causal
+    /// pass in the admission step (one round trip per layer) — the
+    /// production mode.
+    Batched,
+    /// One prompt token per step through the decode path (the repo's
+    /// historical prefill; kept as the TTFT comparison baseline).
+    TokenAtATime,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Aggregate KV-token limit enforced by admission (Algorithm 1's
+    /// W_lim).
+    pub w_lim: usize,
+    /// Virtual step rate mapping `Request::arrival_s` onto the step
+    /// clock: a request arrives at step ⌊arrival_s · steps_per_sec⌋.
+    pub steps_per_sec: f64,
+    pub prefill: PrefillMode,
+    /// Hard cap on driven steps — exceeded means the configuration
+    /// cannot drain the trace (an error, never an infinite loop).
+    pub max_steps: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            w_lim: 4096,
+            steps_per_sec: 100.0,
+            prefill: PrefillMode::Batched,
+            max_steps: 100_000,
+        }
+    }
+}
+
+/// Everything a serving run produced.
+pub struct ServeOutcome {
+    pub report: ServeReport,
+    /// Finished requests, sorted by request id.
+    pub completions: Vec<Completion>,
+    /// Per-step engine trace (measured stage times, tokens per pass,
+    /// and the MEASURED aggregate KV load in `total_ctx`).
+    pub trace: StepTrace,
+    /// Name of the admission policy that ran.
+    pub policy: &'static str,
+}
+
+/// A request waiting for admission.
+struct WaitingReq {
+    /// Index into the trace slice.
+    idx: usize,
+    arrive_step: usize,
+    wall_arrive_s: f64,
+}
+
+/// Continuous-batching serving engine over the live coordinator.
+pub struct ServeEngine {
+    fd: FastDecode,
+    cfg: ServeConfig,
+    policy: Box<dyn AdmissionPolicy>,
+}
+
+impl ServeEngine {
+    pub fn new(
+        fd: FastDecode,
+        cfg: ServeConfig,
+        policy: Box<dyn AdmissionPolicy>,
+    ) -> Result<ServeEngine> {
+        if cfg.w_lim == 0 {
+            bail!("W_lim must be ≥ 1");
+        }
+        if !cfg.steps_per_sec.is_finite() || cfg.steps_per_sec <= 0.0 {
+            bail!("steps_per_sec must be positive and finite");
+        }
+        if cfg.max_steps == 0 {
+            bail!("max_steps must be ≥ 1");
+        }
+        Ok(ServeEngine { fd, cfg, policy })
+    }
+
+    /// Decode slots (the engine's configured batch width).
+    pub fn slots(&self) -> usize {
+        self.fd.cfg.batch
+    }
+
+    /// Hand the coordinator back (e.g. to re-prime it for a fixed-batch
+    /// run).
+    pub fn into_engine(self) -> FastDecode {
+        self.fd
+    }
+
+    /// The admission queue's KV growth model for one request: batched
+    /// prefill bulk-appends `plen` tokens in the admission step (the
+    /// same step also produces the first token, so `init = plen − 1`
+    /// and the job lives `target_len` steps); token-at-a-time grows by
+    /// one token for `plen + target_len − 1` steps.
+    fn job_for(&self, r: &Request, arrive_step: usize) -> QueuedJob {
+        match self.cfg.prefill {
+            PrefillMode::Batched => QueuedJob {
+                id: r.id,
+                m: 1,
+                init_len: r.prompt.len() - 1,
+                grow_len: r.target_len,
+                arrive_step,
+            },
+            PrefillMode::TokenAtATime => QueuedJob {
+                id: r.id,
+                m: 1,
+                init_len: 0,
+                grow_len: r.prompt.len() + r.target_len - 1,
+                arrive_step,
+            },
+        }
+    }
+
+    /// Serve every request of `trace` to completion (open loop: the
+    /// engine never waits for a client). Returns the per-request
+    /// completions, the latency report, and the per-step trace.
+    pub fn run(&mut self, trace: &[Request]) -> Result<ServeOutcome> {
+        let cap = self.fd.cfg.capacity_per_seq;
+        for r in trace {
+            if r.prompt.is_empty() {
+                bail!("request {}: empty prompt", r.id);
+            }
+            if r.target_len == 0 {
+                bail!("request {}: target_len must be ≥ 1", r.id);
+            }
+            let peak = r.prompt.len() + r.target_len - 1;
+            if peak > cap {
+                bail!(
+                    "request {}: prompt + target ({peak} KV tokens) exceeds \
+                     per-sequence capacity {cap}",
+                    r.id
+                );
+            }
+            if peak > self.cfg.w_lim {
+                bail!(
+                    "request {}: peak KV footprint {peak} alone exceeds \
+                     W_lim {} — it could never be admitted",
+                    r.id,
+                    self.cfg.w_lim
+                );
+            }
+            for &t in &r.prompt {
+                if t < 0 || t as usize >= self.fd.spec.vocab {
+                    bail!(
+                        "request {}: prompt token {t} outside vocab {}",
+                        r.id,
+                        self.fd.spec.vocab
+                    );
+                }
+            }
+        }
+        // take manual control of the sequence lifecycle
+        self.fd.reset();
+
+        // arrivals in time order (stable on the trace's own order for
+        // simultaneous arrivals)
+        let mut order: Vec<usize> = (0..trace.len()).collect();
+        order.sort_by(|&a, &b| trace[a].arrival_s.total_cmp(&trace[b].arrival_s));
+        let arrival_step = |r: &Request| -> usize {
+            // clamp so a pathological arrival time cannot overflow the
+            // step clock; max_steps then reports the real problem
+            (r.arrival_s * self.cfg.steps_per_sec)
+                .floor()
+                .min(self.cfg.max_steps as f64) as usize
+        };
+
+        let mut next_arrival = 0usize;
+        // one queue: a job's KV profile travels WITH its trace index
+        // and arrival times, so they can never be paired up wrongly
+        let mut waiting: Vec<(QueuedJob, WaitingReq)> = Vec::new();
+        let mut lc = LoadControl::new();
+        let mut slots = SlotManager::new(self.slots());
+        let mut completions: Vec<Completion> = Vec::new();
+        let mut steps = StepTrace::default();
+        let mut ttft_h = Histogram::new();
+        let mut itl_h = Histogram::new();
+        let mut e2e_h = Histogram::new();
+        let mut total_wait_steps = 0usize;
+        let mut total_tokens = 0u64;
+        let t0 = Instant::now();
+        let mut t = 0usize;
+
+        while completions.len() < trace.len() {
+            if t >= self.cfg.max_steps {
+                bail!(
+                    "serve exceeded max_steps = {} with {} of {} requests \
+                     completed (policy {})",
+                    self.cfg.max_steps,
+                    completions.len(),
+                    trace.len(),
+                    self.policy.name()
+                );
+            }
+            // 1. arrivals visible at step t join the queue
+            while next_arrival < trace.len() {
+                let r = &trace[order[next_arrival]];
+                let astep = arrival_step(r);
+                if astep > t {
+                    break;
+                }
+                waiting.push((
+                    self.job_for(r, astep),
+                    WaitingReq {
+                        idx: order[next_arrival],
+                        arrive_step: astep,
+                        wall_arrive_s: t0.elapsed().as_secs_f64(),
+                    },
+                ));
+                next_arrival += 1;
+            }
+            // 2. admission into free slots under W_lim (`admit_one`
+            // enforces the policy contract and charges the controller)
+            lc.retire_before(t);
+            while slots.free_count() > 0 && !waiting.is_empty() {
+                let jobs: Vec<QueuedJob> =
+                    waiting.iter().map(|&(j, _)| j).collect();
+                let Some(sel) = admit_one(
+                    self.policy.as_ref(),
+                    t,
+                    &jobs,
+                    &mut lc,
+                    self.cfg.w_lim,
+                )?
+                else {
+                    break;
+                };
+                let (_, meta) = waiting.remove(sel);
+                let r = &trace[meta.idx];
+                let seq_id = self.fd.alloc_seq_ids(1)[0];
+                self.fd.register_seqs(&[seq_id]);
+                let slot = slots.free_slot().expect("free slot checked");
+                total_wait_steps += t - meta.arrive_step;
+                slots.place(
+                    slot,
+                    ActiveRequest {
+                        request_id: r.id,
+                        seq_id,
+                        prompt: r.prompt.clone(),
+                        target_len: r.target_len,
+                        fed: 0,
+                        produced: Vec::new(),
+                        next_token: 0,
+                        arrive_step: meta.arrive_step,
+                        admit_step: t,
+                        wall_arrive_s: meta.wall_arrive_s,
+                        wall_last_token_s: 0.0,
+                        ttft_s: 0.0,
+                    },
+                );
+            }
+            // 3. assemble one ragged pass over every occupied slot
+            struct PassSeg {
+                slot: usize,
+                rows: usize,
+                prefill: bool,
+            }
+            let mut tokens: Vec<i32> = Vec::new();
+            let mut row_seqs: Vec<u64> = Vec::new();
+            let mut segs: Vec<PassSeg> = Vec::new();
+            for (slot, req) in slots.iter_active() {
+                if req.decoding() {
+                    tokens.push(req.next_token);
+                    row_seqs.push(req.seq_id);
+                    segs.push(PassSeg {
+                        slot,
+                        rows: 1,
+                        prefill: false,
+                    });
+                } else {
+                    let rows = match self.cfg.prefill {
+                        PrefillMode::Batched => req.prompt.len() - req.fed,
+                        PrefillMode::TokenAtATime => 1,
+                    };
+                    for &tok in &req.prompt[req.fed..req.fed + rows] {
+                        tokens.push(tok);
+                        row_seqs.push(req.seq_id);
+                    }
+                    segs.push(PassSeg {
+                        slot,
+                        rows,
+                        prefill: true,
+                    });
+                }
+            }
+            if tokens.is_empty() {
+                // idle step: nothing active yet (arrivals still ahead on
+                // the step clock, or the policy deferred everything) —
+                // spin the virtual clock
+                steps.push(StepRecord {
+                    step: t,
+                    ..Default::default()
+                });
+                t += 1;
+                continue;
+            }
+            // 4. one pipeline pass; then per-request bookkeeping
+            let (next, timing) = self.fd.forward_rows(&tokens, &row_seqs)?;
+            let now_s = t0.elapsed().as_secs_f64();
+            // measure the aggregate KV load this pass actually held,
+            // BEFORE finished sequences release their caches — this is
+            // what W_lim must bound
+            let kv_load = self.fd.measured_kv_load();
+            let mut finished_seqs: Vec<u64> = Vec::new();
+            let mut row = 0usize;
+            for seg in &segs {
+                let last = next[row + seg.rows - 1];
+                row += seg.rows;
+                let done = {
+                    let req = slots.get_mut(seg.slot).expect("active slot");
+                    if seg.prefill {
+                        req.fed += seg.rows;
+                        if req.decoding() {
+                            // the row that consumed the prompt's last
+                            // token produced the first generated token
+                            req.ttft_s = now_s - req.wall_arrive_s;
+                            ttft_h.record_secs(req.ttft_s);
+                            req.produced.push(last);
+                            req.next_token = last;
+                            req.wall_last_token_s = now_s;
+                            total_tokens += 1;
+                        }
+                        // earlier prefill rows' samples are discarded
+                    } else {
+                        itl_h.record_secs(now_s - req.wall_last_token_s);
+                        req.produced.push(last);
+                        req.next_token = last;
+                        req.wall_last_token_s = now_s;
+                        total_tokens += 1;
+                    }
+                    req.done()
+                };
+                if done {
+                    let req = slots.take(seg.slot);
+                    finished_seqs.push(req.seq_id);
+                    let e2e_s = now_s - req.wall_arrive_s;
+                    e2e_h.record_secs(e2e_s);
+                    completions.push(Completion {
+                        request_id: req.request_id,
+                        tokens: req.produced,
+                        arrive_step: req.arrive_step,
+                        admit_step: req.admit_step,
+                        finish_step: t,
+                        ttft_s: req.ttft_s,
+                        e2e_s,
+                    });
+                }
+            }
+            if !finished_seqs.is_empty() {
+                self.fd.retire_seqs(&finished_seqs);
+            }
+            steps.push(StepRecord {
+                step: t,
+                latency_s: timing.latency_s,
+                s_time: timing.s_time,
+                r_time: timing.r_time,
+                comm_time: timing.comm_time,
+                tokens: tokens.len(),
+                total_ctx: kv_load,
+            });
+            t += 1;
+        }
+
+        completions.sort_by_key(|c| c.request_id);
+        let elapsed_s = t0.elapsed().as_secs_f64();
+        let report = ServeReport {
+            requests: trace.len(),
+            completed: completions.len(),
+            tokens: total_tokens,
+            elapsed_s,
+            steps: t,
+            mean_wait_steps: if completions.is_empty() {
+                0.0
+            } else {
+                total_wait_steps as f64 / completions.len() as f64
+            },
+            ttft: ttft_h,
+            itl: itl_h,
+            e2e: e2e_h,
+        };
+        Ok(ServeOutcome {
+            report,
+            completions,
+            trace: steps,
+            policy: self.policy.name(),
+        })
+    }
+}

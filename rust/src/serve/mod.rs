@@ -1,0 +1,53 @@
+//! Request-level continuous-batching serving over the live engine —
+//! the subsystem that turns the fixed-batch decoder into a server.
+//!
+//! # Request lifecycle
+//!
+//! ```text
+//! arrival ──▶ admission queue ──▶ prefill ──▶ decode slot ──▶ retire
+//!  (trace)    (AdmissionPolicy     (one multi-  (one row per    (KV drop +
+//!             under W_lim via      row causal    step until      slot
+//!             Algorithm 1)         pass)         target_len)     backfill)
+//! ```
+//!
+//! * **Arrival** — an open-loop trace ([`crate::workload::generate_trace`])
+//!   replayed on a virtual step clock; requests become visible at
+//!   ⌊arrival_s · steps_per_sec⌋ and queue until admitted.
+//! * **Admission** — a pluggable [`AdmissionPolicy`] ([`Fifo`],
+//!   [`ShortestJobFirst`], [`SlsEarliestStart`]) picks which waiting
+//!   request starts each step, constrained by Algorithm 1's load
+//!   controller so the aggregate KV load never exceeds W_lim; the
+//!   batched prefill's bulk append is modeled as an `init` offset
+//!   ([`crate::sched::LoadControl::add_init`]).
+//! * **Prefill** — the whole prompt crosses the S↔R pipeline as one
+//!   multi-row causal pass ([`PrefillMode::Batched`]); the row that
+//!   consumes the prompt's last token produces the first generated
+//!   token (TTFT). Token-at-a-time prefill survives as a comparison
+//!   baseline.
+//! * **Decode slots** — the engine's batch is B independent slots
+//!   ([`SlotManager`]); sequences of different lengths finish
+//!   independently, and prefill and decode rows share one ragged pass
+//!   per step (continuous batching).
+//! * **Retire** — a finished sequence frees its KV across the socket
+//!   pool and its slot is backfilled next step without disturbing
+//!   in-flight neighbors.
+//!
+//! Per-request TTFT, inter-token latency and end-to-end latency land in
+//! a [`ServeReport`] (p50/p95/p99 + throughput/goodput); the per-step
+//! engine trace carries the measured aggregate KV load. The open-loop
+//! sweep lives in `benches/serve_openloop.rs`, the end-to-end example
+//! in `examples/serve_e2e.rs`, and the acceptance suite in
+//! `tests/serve_continuous.rs`.
+
+mod engine;
+mod policy;
+mod report;
+mod slots;
+
+pub use engine::{PrefillMode, ServeConfig, ServeEngine, ServeOutcome};
+pub(crate) use policy::admit_one;
+pub use policy::{
+    AdmissionPolicy, Fifo, QueuedJob, ShortestJobFirst, SlsEarliestStart,
+};
+pub use report::{Completion, ServeReport};
+pub use slots::{ActiveRequest, SlotManager};

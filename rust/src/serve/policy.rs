@@ -1,0 +1,314 @@
+//! Pluggable admission policies over Algorithm 1's load controller.
+//!
+//! Every policy answers one question each step: *which waiting job, if
+//! any, may start NOW?* The serving engine (`serve::engine`) and the
+//! live coordinator's SLS mode (`FastDecode::drive_arrivals_with`) call
+//! [`AdmissionPolicy::select`] in a loop until it returns `None` (or
+//! slots run out), so a policy expresses ordering only — the W_lim
+//! safety invariant is enforced by [`LoadControl`] regardless of the
+//! policy, and the callers re-verify the contract before committing.
+
+use anyhow::{bail, Result};
+
+use crate::sched::LoadControl;
+
+/// One admission-queue entry, reduced to what a policy may legitimately
+/// look at: size, KV growth profile, and arrival order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QueuedJob {
+    /// Request (or arrival) id — informational, for error messages.
+    pub id: u64,
+    /// Sequences admitted together (1 for a single request).
+    pub m: usize,
+    /// KV tokens per sequence already present when the job's first step
+    /// runs (a batched prefill appends the whole prompt at once); 0 for
+    /// plain decode arrivals and token-at-a-time prefill.
+    pub init_len: usize,
+    /// Steps the job stays live, growing by `m` KV tokens per step.
+    pub grow_len: usize,
+    /// Step at which the job joined the queue.
+    pub arrive_step: usize,
+}
+
+impl QueuedJob {
+    /// Aggregate KV tokens at the job's final step — what W_lim must
+    /// absorb.
+    pub fn peak_tokens(&self) -> usize {
+        self.m * (self.init_len + self.grow_len)
+    }
+
+    /// Total per-sequence tokens processed over the job's lifetime —
+    /// the "job size" shortest-job-first orders by.
+    pub fn total_work(&self) -> usize {
+        self.init_len + self.grow_len
+    }
+}
+
+/// An admission ordering over the waiting queue.
+///
+/// Contract: `select` may only return the index of a job whose
+/// [`LoadControl::earliest_start_init`] at `now` is exactly `now` — a
+/// job that can start this step without pushing any live batch's peak
+/// past `w_lim`. Returning `None` defers admission to a later step.
+pub trait AdmissionPolicy: Send {
+    /// Short name for reports and error messages.
+    fn name(&self) -> &'static str;
+
+    /// Index into `waiting` of the job to admit at step `now`, or
+    /// `None` to admit nothing this step.
+    fn select(
+        &self,
+        now: usize,
+        waiting: &[QueuedJob],
+        lc: &LoadControl,
+        w_lim: usize,
+    ) -> Option<usize>;
+}
+
+/// One admission round, shared by the serving engine and the live SLS
+/// mode so the policy contract is enforced in exactly one place: ask
+/// the policy for a startable job, bounds-check the returned index,
+/// re-verify the startable-now contract, and commit the job to the
+/// load controller. `Ok(Some(idx))` means `waiting[idx]` was admitted
+/// and charged — the caller removes it from its queue; `Ok(None)`
+/// means nothing can start this step.
+pub(crate) fn admit_one(
+    policy: &dyn AdmissionPolicy,
+    now: usize,
+    waiting: &[QueuedJob],
+    lc: &mut LoadControl,
+    w_lim: usize,
+) -> Result<Option<usize>> {
+    let Some(idx) = policy.select(now, waiting, lc, w_lim) else {
+        return Ok(None);
+    };
+    let Some(job) = waiting.get(idx) else {
+        bail!(
+            "admission policy {} returned index {idx} for a queue of {}",
+            policy.name(),
+            waiting.len()
+        );
+    };
+    if lc.earliest_start_init(now, job.m, job.init_len, job.grow_len, w_lim)
+        != Some(now)
+    {
+        bail!(
+            "admission policy {} selected job {} which cannot start at \
+             step {now}",
+            policy.name(),
+            job.id
+        );
+    }
+    lc.add_init(now, job.m, job.init_len, job.grow_len);
+    Ok(Some(idx))
+}
+
+/// Can `job` start at exactly `now` under `w_lim`?
+fn startable_now(
+    now: usize,
+    job: &QueuedJob,
+    lc: &LoadControl,
+    w_lim: usize,
+) -> bool {
+    lc.earliest_start_init(now, job.m, job.init_len, job.grow_len, w_lim)
+        == Some(now)
+}
+
+/// Strict arrival order with head-of-line blocking: the head of the
+/// queue is admitted as soon as it can start, and NO later job may
+/// overtake a deferred head (the semantics the live SLS mode shipped
+/// with before policies were pluggable).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Fifo;
+
+impl AdmissionPolicy for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn select(
+        &self,
+        now: usize,
+        waiting: &[QueuedJob],
+        lc: &LoadControl,
+        w_lim: usize,
+    ) -> Option<usize> {
+        let head = waiting.first()?;
+        startable_now(now, head, lc, w_lim).then_some(0)
+    }
+}
+
+/// Shortest job first: among the jobs that can start now, the one with
+/// the least total work (ties broken by arrival order). Minimizes mean
+/// wait under bursty arrivals at the cost of possible long-job
+/// starvation — the classic trade-off, observable in the open-loop
+/// bench.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShortestJobFirst;
+
+impl AdmissionPolicy for ShortestJobFirst {
+    fn name(&self) -> &'static str {
+        "sjf"
+    }
+
+    fn select(
+        &self,
+        now: usize,
+        waiting: &[QueuedJob],
+        lc: &LoadControl,
+        w_lim: usize,
+    ) -> Option<usize> {
+        waiting
+            .iter()
+            .enumerate()
+            .filter(|(_, j)| startable_now(now, j, lc, w_lim))
+            .min_by_key(|(i, j)| (j.total_work(), *i))
+            .map(|(i, _)| i)
+    }
+}
+
+/// SLS-aware earliest start: the job whose feasible start step under
+/// W_lim is soonest goes first (ties broken by arrival order), and it
+/// is admitted once that start arrives. Unlike FIFO this lets a small
+/// job slip past a deferred large head, keeping the engine busy — at
+/// the cost that each admission re-tightens the head's own earliest
+/// start, so a large job can be delayed repeatedly under sustained
+/// small-job pressure (the same starvation trade-off as SJF, bounded
+/// here by W_lim draining between admissions).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SlsEarliestStart;
+
+impl AdmissionPolicy for SlsEarliestStart {
+    fn name(&self) -> &'static str {
+        "sls-earliest-start"
+    }
+
+    fn select(
+        &self,
+        now: usize,
+        waiting: &[QueuedJob],
+        lc: &LoadControl,
+        w_lim: usize,
+    ) -> Option<usize> {
+        let (start, idx) = waiting
+            .iter()
+            .enumerate()
+            .filter_map(|(i, j)| {
+                lc.earliest_start_init(now, j.m, j.init_len, j.grow_len, w_lim)
+                    .map(|s| (s, i))
+            })
+            .min()?;
+        (start == now).then_some(idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(id: u64, init: usize, grow: usize) -> QueuedJob {
+        QueuedJob {
+            id,
+            m: 1,
+            init_len: init,
+            grow_len: grow,
+            arrive_step: 0,
+        }
+    }
+
+    #[test]
+    fn fifo_blocks_behind_deferred_head() {
+        let mut lc = LoadControl::new();
+        lc.add(0, 1, 10); // peak 10 at step 9
+        // the head's prefill bulk (init 8) exceeds the headroom left at
+        // the elder's peak under w_lim 16, so it must wait for step 10
+        // — and FIFO then admits NOTHING this step, even though the
+        // tiny second job would fit now
+        let waiting = [job(0, 8, 8), job(1, 0, 2)];
+        let fifo = Fifo;
+        assert_eq!(fifo.select(0, &waiting, &lc, 16), None);
+        let sjf = ShortestJobFirst;
+        assert_eq!(sjf.select(0, &waiting, &lc, 16), Some(1));
+    }
+
+    #[test]
+    fn sjf_prefers_least_work_breaking_ties_by_arrival() {
+        let lc = LoadControl::new();
+        let waiting = [job(0, 0, 8), job(1, 2, 2), job(2, 0, 4), job(3, 0, 4)];
+        let sjf = ShortestJobFirst;
+        assert_eq!(sjf.select(0, &waiting, &lc, 100), Some(1)); // work 4
+        let tie = [job(0, 0, 4), job(1, 0, 4)];
+        assert_eq!(sjf.select(0, &tie, &lc, 100), Some(0));
+    }
+
+    #[test]
+    fn sls_admits_soonest_feasible_start() {
+        let mut lc = LoadControl::new();
+        lc.add(0, 2, 10); // peak 20 at step 9
+        // job 0 can only start after the elder ends; job 1 fits now
+        let waiting = [job(0, 10, 10), job(1, 0, 5)];
+        let sls = SlsEarliestStart;
+        assert_eq!(sls.select(0, &waiting, &lc, 25), Some(1));
+        // once nothing can start now, nothing is admitted
+        let deferred = [job(0, 10, 10)];
+        assert_eq!(sls.select(0, &deferred, &lc, 25), None);
+    }
+
+    #[test]
+    fn infeasible_jobs_are_never_selected() {
+        let lc = LoadControl::new();
+        let waiting = [job(0, 50, 60)]; // peak 110 > any tested limit
+        assert_eq!(Fifo.select(0, &waiting, &lc, 100), None);
+        assert_eq!(ShortestJobFirst.select(0, &waiting, &lc, 100), None);
+        assert_eq!(SlsEarliestStart.select(0, &waiting, &lc, 100), None);
+    }
+
+    #[test]
+    fn empty_queue_selects_nothing() {
+        let lc = LoadControl::new();
+        assert_eq!(Fifo.select(3, &[], &lc, 10), None);
+        assert_eq!(ShortestJobFirst.select(3, &[], &lc, 10), None);
+        assert_eq!(SlsEarliestStart.select(3, &[], &lc, 10), None);
+    }
+
+    #[test]
+    fn admit_one_commits_selected_job() {
+        let mut lc = LoadControl::new();
+        let waiting = [job(0, 2, 4)];
+        let idx = admit_one(&Fifo, 0, &waiting, &mut lc, 100).unwrap();
+        assert_eq!(idx, Some(0));
+        assert_eq!(lc.load_at(0), 3, "job not charged to the controller");
+        // infeasible job: nothing admitted, nothing charged
+        let deferred = [job(1, 0, 200)];
+        assert_eq!(admit_one(&Fifo, 0, &deferred, &mut lc, 100).unwrap(), None);
+    }
+
+    /// A policy violating the index or startable-now contract is an
+    /// error, never a panic or a silent W_lim breach.
+    #[test]
+    fn admit_one_rejects_contract_violations() {
+        struct Bad(usize);
+        impl AdmissionPolicy for Bad {
+            fn name(&self) -> &'static str {
+                "bad"
+            }
+            fn select(
+                &self,
+                _: usize,
+                _: &[QueuedJob],
+                _: &LoadControl,
+                _: usize,
+            ) -> Option<usize> {
+                Some(self.0)
+            }
+        }
+        let mut lc = LoadControl::new();
+        let waiting = [job(0, 0, 4)];
+        // out-of-range index
+        assert!(admit_one(&Bad(7), 0, &waiting, &mut lc, 100).is_err());
+        // in-range but not startable now: job 0 can only start later
+        lc.add(0, 1, 10); // peak 10 at step 9
+        let blocked = [job(0, 8, 8)]; // init 8 exceeds headroom 6
+        assert!(admit_one(&Bad(0), 0, &blocked, &mut lc, 16).is_err());
+    }
+}

@@ -1,0 +1,139 @@
+//! Per-request serving metrics: TTFT, inter-token latency, end-to-end
+//! latency (each a log-bucketed [`Histogram`] with p50/p95/p99), plus
+//! throughput and goodput counters — the numbers an open-loop
+//! rate-vs-latency sweep plots.
+
+use crate::metrics::Histogram;
+
+/// One finished request, with its generated tokens and latencies.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub request_id: u64,
+    /// Generated tokens (exactly `target_len` of them; the prompt is
+    /// not echoed).
+    pub tokens: Vec<i32>,
+    pub arrive_step: usize,
+    pub admit_step: usize,
+    pub finish_step: usize,
+    /// Wall time from arrival (queue included) to the first generated
+    /// token, seconds.
+    pub ttft_s: f64,
+    /// Wall time from arrival to the last generated token, seconds.
+    pub e2e_s: f64,
+}
+
+impl Completion {
+    /// Steps spent in the admission queue.
+    pub fn wait_steps(&self) -> usize {
+        self.admit_step - self.arrive_step
+    }
+}
+
+/// Summary of one serving run.
+#[derive(Clone, Debug, Default)]
+pub struct ServeReport {
+    /// Requests offered by the trace.
+    pub requests: usize,
+    /// Requests served to completion.
+    pub completed: usize,
+    /// Generated tokens across all requests.
+    pub tokens: u64,
+    /// Wall time of the whole run, seconds.
+    pub elapsed_s: f64,
+    /// Engine steps driven (including idle steps waiting on arrivals).
+    pub steps: usize,
+    /// Mean steps spent waiting in the admission queue.
+    pub mean_wait_steps: f64,
+    /// Time to first token, per request.
+    pub ttft: Histogram,
+    /// Gap between consecutive generated tokens, per token.
+    pub itl: Histogram,
+    /// End-to-end latency, per request.
+    pub e2e: Histogram,
+}
+
+impl ServeReport {
+    /// Generated tokens per second of wall time.
+    pub fn throughput(&self) -> f64 {
+        if self.elapsed_s == 0.0 {
+            0.0
+        } else {
+            self.tokens as f64 / self.elapsed_s
+        }
+    }
+
+    /// Completed requests per second of wall time.
+    pub fn goodput(&self) -> f64 {
+        if self.elapsed_s == 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / self.elapsed_s
+        }
+    }
+
+    /// Multi-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests {}/{} · {} tokens in {:.2} s \
+             ({:.1} tok/s, {:.2} req/s)\n\
+             wait     : {:.1} steps mean\n\
+             ttft     : {}\n\
+             itl      : {}\n\
+             e2e      : {}",
+            self.completed,
+            self.requests,
+            self.tokens,
+            self.elapsed_s,
+            self.throughput(),
+            self.goodput(),
+            self.mean_wait_steps,
+            self.ttft.summary_ms(),
+            self.itl.summary_ms(),
+            self.e2e.summary_ms(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates_handle_zero_elapsed() {
+        let r = ServeReport::default();
+        assert_eq!(r.throughput(), 0.0);
+        assert_eq!(r.goodput(), 0.0);
+    }
+
+    #[test]
+    fn summary_carries_counts() {
+        let mut r = ServeReport {
+            requests: 4,
+            completed: 4,
+            tokens: 32,
+            elapsed_s: 2.0,
+            steps: 10,
+            mean_wait_steps: 1.5,
+            ..Default::default()
+        };
+        r.ttft.record_secs(0.01);
+        let s = r.summary();
+        assert!(s.contains("4/4"));
+        assert!(s.contains("16.0 tok/s"));
+        assert!((r.goodput() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn completion_wait_steps() {
+        let c = Completion {
+            request_id: 0,
+            tokens: vec![1],
+            arrive_step: 3,
+            admit_step: 8,
+            finish_step: 9,
+            ttft_s: 0.1,
+            e2e_s: 0.2,
+        };
+        assert_eq!(c.wait_steps(), 5);
+    }
+}

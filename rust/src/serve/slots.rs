@@ -1,0 +1,174 @@
+//! Slot-based sequence manager: the engine's fixed batch of B rows
+//! becomes B independent decode slots.
+//!
+//! A slot holds one in-flight request from admission to retirement.
+//! Sequences finish independently (per-request `target_len`), free
+//! their slot, and the freed slot is backfilled from the admission
+//! queue on the next step WITHOUT disturbing in-flight neighbors —
+//! continuous batching at request granularity, in contrast to the
+//! wave-at-a-time `server::AdmissionQueue` front-end.
+
+/// One admitted, in-flight request occupying a slot.
+#[derive(Clone, Debug)]
+pub struct ActiveRequest {
+    pub request_id: u64,
+    /// Engine sequence id (KV-cache key across the socket pool).
+    pub seq_id: u64,
+    pub prompt: Vec<i32>,
+    /// Tokens to generate (the request retires after producing exactly
+    /// this many).
+    pub target_len: usize,
+    /// Prompt tokens already fed to the engine. `== prompt.len()` once
+    /// the request is decoding; smaller only mid-prefill in
+    /// token-at-a-time mode (batched prefill feeds the whole prompt in
+    /// the admission step).
+    pub fed: usize,
+    /// Generated tokens so far (the first is produced by the row that
+    /// consumes the prompt's last token).
+    pub produced: Vec<i32>,
+    /// Input token of the next decode row (the last produced token).
+    pub next_token: i32,
+    pub arrive_step: usize,
+    pub admit_step: usize,
+    /// Wall-clock offsets from the serve run's start, seconds.
+    pub wall_arrive_s: f64,
+    pub wall_last_token_s: f64,
+    /// Time to first token, recorded when `produced` gains its first
+    /// entry; 0 until then.
+    pub ttft_s: f64,
+}
+
+impl ActiveRequest {
+    /// Prefill is done; every pass row for this request is now a decode
+    /// row.
+    pub fn decoding(&self) -> bool {
+        self.fed == self.prompt.len()
+    }
+
+    /// The request has produced its full target and can retire.
+    pub fn done(&self) -> bool {
+        self.produced.len() >= self.target_len
+    }
+}
+
+/// Fixed set of B slots with first-free backfill.
+pub struct SlotManager {
+    slots: Vec<Option<ActiveRequest>>,
+}
+
+impl SlotManager {
+    pub fn new(slots: usize) -> SlotManager {
+        assert!(slots > 0, "need at least one slot");
+        SlotManager {
+            slots: (0..slots).map(|_| None).collect(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.capacity() - self.active_count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.iter().all(|s| s.is_none())
+    }
+
+    /// Lowest-index free slot, if any.
+    pub fn free_slot(&self) -> Option<usize> {
+        self.slots.iter().position(|s| s.is_none())
+    }
+
+    /// Place a request into an empty slot.
+    pub fn place(&mut self, slot: usize, req: ActiveRequest) {
+        assert!(
+            self.slots[slot].is_none(),
+            "slot {slot} already occupied by request {}",
+            self.slots[slot].as_ref().unwrap().request_id
+        );
+        self.slots[slot] = Some(req);
+    }
+
+    pub fn get_mut(&mut self, slot: usize) -> Option<&mut ActiveRequest> {
+        self.slots[slot].as_mut()
+    }
+
+    /// Retire the request in `slot`, freeing it for backfill.
+    pub fn take(&mut self, slot: usize) -> ActiveRequest {
+        self.slots[slot].take().expect("taking an empty slot")
+    }
+
+    /// Occupied slots in slot order (stable row order across steps for
+    /// sequences that stay put).
+    pub fn iter_active(&self) -> impl Iterator<Item = (usize, &ActiveRequest)> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|r| (i, r)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> ActiveRequest {
+        ActiveRequest {
+            request_id: id,
+            seq_id: 100 + id,
+            prompt: vec![1, 2, 3],
+            target_len: 4,
+            fed: 0,
+            produced: Vec::new(),
+            next_token: 0,
+            arrive_step: 0,
+            admit_step: 0,
+            wall_arrive_s: 0.0,
+            wall_last_token_s: 0.0,
+            ttft_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn backfill_reuses_freed_slot_without_disturbing_neighbors() {
+        let mut sm = SlotManager::new(3);
+        for id in 0..3 {
+            let s = sm.free_slot().unwrap();
+            sm.place(s, req(id));
+        }
+        assert_eq!(sm.free_count(), 0);
+        assert_eq!(sm.free_slot(), None);
+        // request 1 (slot 1) finishes; neighbors keep their slots
+        let finished = sm.take(1);
+        assert_eq!(finished.request_id, 1);
+        assert_eq!(sm.free_slot(), Some(1));
+        sm.place(1, req(9));
+        let ids: Vec<u64> =
+            sm.iter_active().map(|(_, r)| r.request_id).collect();
+        assert_eq!(ids, vec![0, 9, 2]); // slot order, neighbors untouched
+    }
+
+    #[test]
+    fn lifecycle_predicates() {
+        let mut r = req(0);
+        assert!(!r.decoding() && !r.done());
+        r.fed = 3;
+        assert!(r.decoding());
+        r.produced = vec![5, 6, 7, 8];
+        assert!(r.done());
+    }
+
+    #[test]
+    #[should_panic(expected = "already occupied")]
+    fn double_place_panics() {
+        let mut sm = SlotManager::new(1);
+        sm.place(0, req(0));
+        sm.place(0, req(1));
+    }
+}

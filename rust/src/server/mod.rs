@@ -1,15 +1,38 @@
-//! Minimal serving front-end: an admission queue driven by Algorithm 1
-//! feeding the engine in micro-batches (the online-serving story of
-//! §4.2's "extra benefit": a request waits at most F steps, not S).
+//! Wave-based serving front-end: the LEGACY micro-batch admission
+//! queue, kept for the Algorithm-1 wave experiments.
+//!
+//! # Where requests actually live now
+//!
+//! The request lifecycle — *arrival → admission → prefill → decode
+//! slots → retire* — is owned by the [`crate::serve`] subsystem:
+//! open-loop traces replay on a virtual step clock, a pluggable
+//! [`crate::serve::AdmissionPolicy`] admits requests into decode slots
+//! under W_lim, prompts prefill in one batched multi-row pass, and
+//! finished sequences free their KV and their slot independently
+//! (continuous batching, per-request TTFT/ITL/E2E metrics in a
+//! [`ServeReport`]).
+//!
+//! [`AdmissionQueue`] predates that subsystem and stays useful where
+//! requests are served in uniform micro-batch WAVES of exactly
+//! `micro_size` equal-length jobs (§4.2's "a request waits at most F
+//! steps, not S"): it schedules whole waves onto the step clock via
+//! [`crate::sched::LoadControl::earliest_start`]. Because `admit` only
+//! forms full waves, a trace tail smaller than `micro_size` would wait
+//! forever — call [`AdmissionQueue::close`] once the trace is exhausted
+//! and the final partial wave drains through the same load-control
+//! path.
 //!
 //! This is deliberately a library-level loop, not a network server —
 //! the offline environment has no async runtime; the public API is
-//! [`AdmissionQueue`] + [`ServeReport`], exercised by examples/serve_e2e.
+//! exercised by `examples/serve_e2e.rs` (which now drives
+//! `serve::ServeEngine`) and the tests below.
 
 use std::collections::VecDeque;
 
 use crate::sched::LoadControl;
 use crate::workload::Request;
+
+pub use crate::serve::ServeReport;
 
 /// Admission decision state over a virtual step clock.
 pub struct AdmissionQueue {
@@ -18,6 +41,8 @@ pub struct AdmissionQueue {
     pub seq_len: usize,
     waiting: VecDeque<Request>,
     ctl: LoadControl,
+    /// No more arrivals: the final partial wave may drain.
+    closed: bool,
     /// (start_step, requests) pairs already admitted but not started.
     pub scheduled: VecDeque<(usize, Vec<Request>)>,
 }
@@ -31,11 +56,13 @@ impl AdmissionQueue {
             seq_len,
             waiting: VecDeque::new(),
             ctl: LoadControl::new(),
+            closed: false,
             scheduled: VecDeque::new(),
         }
     }
 
     pub fn push(&mut self, r: Request) {
+        assert!(!self.closed, "push after close");
         self.waiting.push_back(r);
     }
 
@@ -43,60 +70,67 @@ impl AdmissionQueue {
         self.waiting.len()
     }
 
-    /// Try to admit full micro-batches at `now`; returns batches whose
-    /// start step equals `now` (the engine starts them this step).
+    /// Declare the trace exhausted: from the next `admit` on, a final
+    /// partial wave (fewer than `micro_size` requests) is admitted
+    /// through the same load-control path instead of starving forever.
+    pub fn close(&mut self) {
+        self.closed = true;
+    }
+
+    /// Try to admit micro-batches at `now`; returns batches whose start
+    /// step has come (the engine starts them this step). Full waves
+    /// only, unless [`AdmissionQueue::close`] was called — then the
+    /// final partial wave drains too.
     pub fn admit(&mut self, now: usize) -> Vec<Vec<Request>> {
         self.ctl.retire_before(now);
         while self.waiting.len() >= self.micro_size {
-            match self.ctl.earliest_start(
-                now,
-                self.micro_size,
-                self.seq_len,
-                self.w_lim,
-            ) {
-                Some(start) => {
-                    let batch: Vec<Request> = (0..self.micro_size)
-                        .map(|_| self.waiting.pop_front().unwrap())
-                        .collect();
-                    self.ctl.add(start, self.micro_size, self.seq_len);
-                    self.scheduled.push_back((start, batch));
-                }
-                None => break,
-            }
-        }
-        let mut due = Vec::new();
-        while let Some(&(start, _)) = self.scheduled.front() {
-            if start <= now {
-                due.push(self.scheduled.pop_front().unwrap().1);
-            } else {
+            if !self.schedule_wave(now, self.micro_size) {
                 break;
             }
         }
+        // the partial tail: strictly fewer than micro_size requests can
+        // never form a full wave — drain them once the queue is closed
+        if self.closed && !self.waiting.is_empty() {
+            let m = self.waiting.len().min(self.micro_size);
+            self.schedule_wave(now, m);
+        }
+        // collect due waves; a partial tail may have been scheduled
+        // EARLIER than a previously deferred full wave, so scan the
+        // whole list rather than popping a sorted front
+        let mut due = Vec::new();
+        let mut rest = VecDeque::new();
+        while let Some((start, batch)) = self.scheduled.pop_front() {
+            if start <= now {
+                due.push(batch);
+            } else {
+                rest.push_back((start, batch));
+            }
+        }
+        self.scheduled = rest;
         due
+    }
+
+    /// Schedule one wave of `m` requests at its earliest feasible start
+    /// ≥ `now`; false if the load controller can never fit it
+    /// (m·S > W_lim). Identical shapes make successive waves' starts
+    /// monotone, so FIFO wave order emerges from the controller itself.
+    fn schedule_wave(&mut self, now: usize, m: usize) -> bool {
+        match self.ctl.earliest_start(now, m, self.seq_len, self.w_lim) {
+            Some(start) => {
+                let batch: Vec<Request> = (0..m)
+                    .map(|_| self.waiting.pop_front().expect("m ≤ waiting"))
+                    .collect();
+                self.ctl.add(start, m, self.seq_len);
+                self.scheduled.push_back((start, batch));
+                true
+            }
+            None => false,
+        }
     }
 
     /// Current aggregate-context commitment at `step`.
     pub fn load_at(&self, step: usize) -> usize {
         self.ctl.load_at(step)
-    }
-}
-
-/// Summary of a serving run.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct ServeReport {
-    pub requests: usize,
-    pub tokens: u64,
-    pub elapsed_s: f64,
-    pub mean_wait_steps: f64,
-}
-
-impl ServeReport {
-    pub fn throughput(&self) -> f64 {
-        if self.elapsed_s == 0.0 {
-            0.0
-        } else {
-            self.tokens as f64 / self.elapsed_s
-        }
     }
 }
 
@@ -152,5 +186,53 @@ mod tests {
         assert_eq!(q.load_at(0), 2);
         assert_eq!(q.load_at(7), 16);
         assert_eq!(q.load_at(8), 0);
+    }
+
+    /// Regression for the tail-starvation bug: requests fewer than
+    /// `micro_size` were never admitted (the full-wave loop skipped
+    /// them forever). After `close`, the partial tail drains through
+    /// the same earliest-start path.
+    #[test]
+    fn partial_tail_drains_after_close() {
+        let mut q = AdmissionQueue::new(1000, 4, 8);
+        for i in 0..6 {
+            q.push(req(i));
+        }
+        let due = q.admit(0);
+        assert_eq!(due.len(), 1, "one full wave of 4");
+        assert_eq!(due[0].len(), 4);
+        assert_eq!(q.waiting(), 2);
+        // without close, the 2-request tail starves at any step
+        assert!(q.admit(50).is_empty());
+        assert_eq!(q.waiting(), 2);
+        q.close();
+        let tail = q.admit(50);
+        assert_eq!(tail.len(), 1);
+        assert_eq!(tail[0].len(), 2, "partial tail admitted");
+        assert_eq!(q.waiting(), 0);
+    }
+
+    /// The drained tail still honors W_lim: with zero headroom it is
+    /// scheduled after the in-flight wave ends, not on top of it.
+    #[test]
+    fn partial_tail_respects_load_limit() {
+        // w_lim fits exactly one full wave (2 × 8 = 16)
+        let mut q = AdmissionQueue::new(16, 2, 8);
+        for i in 0..3 {
+            q.push(req(i));
+        }
+        assert_eq!(q.admit(0).len(), 1); // full wave in flight
+        q.close();
+        assert!(q.admit(0).is_empty(), "tail must wait for headroom");
+        assert_eq!(q.scheduled.len(), 1);
+        let start = q.scheduled.front().unwrap().0;
+        assert!(start >= 8, "tail scheduled after the wave ends");
+        let tail = q.admit(start);
+        assert_eq!(tail.len(), 1);
+        assert_eq!(tail[0].len(), 1);
+        // and the commitment never exceeded the limit
+        for t in 0..=start + 8 {
+            assert!(q.load_at(t) <= 16, "load at {t}");
+        }
     }
 }

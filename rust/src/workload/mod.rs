@@ -79,6 +79,28 @@ pub fn fixed_batch(
         .collect()
 }
 
+/// Degenerate trace for lockstep tests: `count` equal-shape requests
+/// all arriving at t = 0 (continuous batching over this trace must be
+/// bit-identical to a fixed-batch `generate` run).
+pub fn lockstep_trace(
+    count: usize,
+    prompt_len: usize,
+    target_len: usize,
+    vocab: usize,
+    seed: u64,
+) -> Vec<Request> {
+    fixed_batch(count, prompt_len, vocab, seed)
+        .into_iter()
+        .enumerate()
+        .map(|(i, prompt)| Request {
+            id: i as u64,
+            arrival_s: 0.0,
+            prompt,
+            target_len,
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -126,5 +148,60 @@ mod tests {
         assert_eq!(b.len(), 4);
         assert!(b.iter().all(|p| p.len() == 7));
         assert_ne!(b[0], b[1]); // prompts differ
+    }
+
+    /// The MEAN INTER-ARRIVAL GAP itself (not just count/span) matches
+    /// 1/rate, and the gaps are genuinely exponential-ish: strictly
+    /// positive with substantial spread (a constant-gap generator would
+    /// fail the variance floor).
+    #[test]
+    fn mean_inter_arrival_matches_inverse_rate() {
+        let cfg = TraceConfig {
+            rate: 50.0,
+            count: 4000,
+            seed: 7,
+            ..Default::default()
+        };
+        let trace = generate_trace(&cfg);
+        let gaps: Vec<f64> = std::iter::once(trace[0].arrival_s)
+            .chain(trace.windows(2).map(|w| w[1].arrival_s - w[0].arrival_s))
+            .collect();
+        assert!(gaps.iter().all(|&g| g >= 0.0));
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let want = 1.0 / cfg.rate;
+        assert!(
+            (mean / want - 1.0).abs() < 0.1,
+            "mean gap {mean} vs 1/rate {want}"
+        );
+        // exponential: std ≈ mean (coefficient of variation ≈ 1)
+        let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>()
+            / gaps.len() as f64;
+        let cv = var.sqrt() / mean;
+        assert!((cv - 1.0).abs() < 0.15, "coefficient of variation {cv}");
+    }
+
+    /// Different seeds must generate different traces (the generator
+    /// actually consumes its seed).
+    #[test]
+    fn different_seeds_differ() {
+        let a = generate_trace(&TraceConfig {
+            seed: 1,
+            ..Default::default()
+        });
+        let b = generate_trace(&TraceConfig {
+            seed: 2,
+            ..Default::default()
+        });
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn lockstep_trace_is_uniform_and_simultaneous() {
+        let t = lockstep_trace(5, 3, 8, 100, 9);
+        assert_eq!(t.len(), 5);
+        assert!(t.iter().all(|r| r.arrival_s == 0.0));
+        assert!(t.iter().all(|r| r.prompt.len() == 3 && r.target_len == 8));
+        assert_eq!(t[2].id, 2);
+        assert_ne!(t[0].prompt, t[1].prompt);
     }
 }

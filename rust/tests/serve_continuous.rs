@@ -1,0 +1,281 @@
+//! Acceptance tests for the `serve/` continuous-batching subsystem
+//! (ISSUE 4): request-level serving over the live engine.
+//!
+//! (a) every traced request completes — no starvation, including a
+//!     partial tail smaller than the slot count;
+//! (b) the MEASURED aggregate KV load (counted from the sockets'
+//!     caches) never exceeds W_lim under the SLS-aware policy;
+//! (c) for a lockstep trace, continuous-batching tokens are
+//!     bit-identical to a fixed-batch `generate()` run;
+//! (d) `ServeReport` percentiles are finite and ordered, and batched
+//!     prefill beats token-at-a-time prefill on TTFT for prompts ≥ 16.
+
+use fastdecode::coordinator::real::{FastDecode, FastDecodeConfig};
+use fastdecode::model::{Precision, TINY};
+use fastdecode::serve::{
+    AdmissionPolicy, Fifo, PrefillMode, ServeConfig, ServeEngine,
+    ServeOutcome, SlsEarliestStart,
+};
+use fastdecode::workload::{generate_trace, lockstep_trace, TraceConfig};
+
+fn engine(
+    slots: usize,
+    capacity: usize,
+    cfg: ServeConfig,
+    policy: Box<dyn AdmissionPolicy>,
+) -> ServeEngine {
+    let fd = FastDecode::new(
+        TINY,
+        FastDecodeConfig {
+            batch: slots,
+            sockets: 2,
+            precision: Precision::F16,
+            capacity_per_seq: capacity,
+            weight_seed: 0xfa57,
+            layers: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    ServeEngine::new(fd, cfg, policy).unwrap()
+}
+
+/// (a) An open-loop ragged trace whose size is NOT a multiple of the
+/// slot count completes in full: the final partial "wave" of requests
+/// backfills freed slots instead of starving (the failure mode the
+/// wave-based AdmissionQueue had).
+#[test]
+fn every_request_completes_including_partial_tail() {
+    let slots = 4;
+    let trace = generate_trace(&TraceConfig {
+        seed: 3,
+        rate: 80.0,
+        prompt_len: (2, 6),
+        target_len: (4, 9),
+        vocab: TINY.vocab,
+        count: 10, // 10 = 2·4 + 2: a partial tail of 2
+    });
+    let mut eng = engine(
+        slots,
+        32,
+        ServeConfig {
+            w_lim: 30, // < 4 concurrent peaks (peak ≤ 14): forces queueing
+            steps_per_sec: 400.0,
+            prefill: PrefillMode::Batched,
+            max_steps: 10_000,
+        },
+        Box::new(Fifo),
+    );
+    let out = eng.run(&trace).unwrap();
+    assert_eq!(out.report.completed, trace.len(), "requests starved");
+    assert_eq!(out.completions.len(), trace.len());
+    for (c, r) in out.completions.iter().zip(&trace) {
+        assert_eq!(c.request_id, r.id);
+        assert_eq!(
+            c.tokens.len(),
+            r.target_len,
+            "request {} produced a wrong token count",
+            r.id
+        );
+        assert!(c.ttft_s > 0.0 && c.ttft_s <= c.e2e_s);
+    }
+    // the engine's KV is fully released at the end
+    let fd = eng.into_engine();
+    assert_eq!(fd.cache_tokens(), 0, "finished caches not released");
+}
+
+/// (b) Under the SLS-aware policy the measured per-layer aggregate KV
+/// load — counted from the sockets' caches after every pass, NOT from
+/// the schedule — stays within W_lim at every step, while admission
+/// still overlaps requests (the limit binds, the bound holds).
+#[test]
+fn sls_policy_bounds_measured_kv_load() {
+    let slots = 6;
+    let trace = generate_trace(&TraceConfig {
+        seed: 5,
+        rate: 300.0, // near-simultaneous arrivals: maximal pressure
+        prompt_len: (3, 8),
+        target_len: (6, 12),
+        vocab: TINY.vocab,
+        count: 14,
+    });
+    let w_lim = 40; // single peak ≤ 19, six concurrent would be ~90
+    let mut eng = engine(
+        slots,
+        32,
+        ServeConfig {
+            w_lim,
+            steps_per_sec: 400.0,
+            prefill: PrefillMode::Batched,
+            max_steps: 10_000,
+        },
+        Box::new(SlsEarliestStart),
+    );
+    let out = eng.run(&trace).unwrap();
+    assert_eq!(out.report.completed, trace.len());
+    assert_eq!(out.policy, "sls-earliest-start");
+    let peak = out
+        .trace
+        .records
+        .iter()
+        .map(|r| r.total_ctx)
+        .max()
+        .unwrap();
+    for r in &out.trace.records {
+        assert!(
+            r.total_ctx <= w_lim,
+            "step {}: measured KV load {} exceeds W_lim {w_lim}",
+            r.step,
+            r.total_ctx
+        );
+    }
+    // admission actually overlapped requests rather than serializing
+    let max_single = trace
+        .iter()
+        .map(|r| r.prompt.len() + r.target_len - 1)
+        .max()
+        .unwrap();
+    assert!(
+        peak > max_single,
+        "requests never overlapped (peak W = {peak})"
+    );
+}
+
+/// (c) Lockstep trace (equal arrivals, equal lengths, as many requests
+/// as slots): the continuous-batching engine must produce BIT-IDENTICAL
+/// tokens to a fixed-batch `generate()` run on the same prompts — slot
+/// assembly, batched prefill and per-request retirement change nothing.
+#[test]
+fn lockstep_serve_matches_fixed_batch_generate() {
+    let (slots, plen, tlen) = (4, 3, 6);
+    let trace = lockstep_trace(slots, plen, tlen, TINY.vocab, 21);
+    let mut eng = engine(
+        slots,
+        32,
+        ServeConfig {
+            w_lim: 1024, // non-binding: all start at step 0
+            steps_per_sec: 100.0,
+            prefill: PrefillMode::Batched,
+            max_steps: 1000,
+        },
+        Box::new(Fifo),
+    );
+    let out = eng.run(&trace).unwrap();
+    assert_eq!(out.report.completed, slots);
+
+    // the reference: same weights, same prompts, fixed batch
+    let mut fd = FastDecode::new(
+        TINY,
+        FastDecodeConfig {
+            batch: slots,
+            sockets: 2,
+            precision: Precision::F16,
+            capacity_per_seq: 32,
+            weight_seed: 0xfa57,
+            layers: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let prompts: Vec<Vec<i32>> =
+        trace.iter().map(|r| r.prompt.clone()).collect();
+    let reference = fd.generate(&prompts, tlen).unwrap();
+    for (i, c) in out.completions.iter().enumerate() {
+        assert_eq!(
+            c.tokens, reference.tokens[i],
+            "request {i}: continuous batching changed tokens"
+        );
+    }
+}
+
+/// Continuous batching must also be insensitive to ARRIVAL order when
+/// shapes are equal: a staggered trace produces the same per-request
+/// tokens as the lockstep one (prefill/decode interleaving in shared
+/// passes never leaks across sequences).
+#[test]
+fn staggered_arrivals_produce_same_tokens() {
+    let (slots, plen, tlen) = (3, 4, 5);
+    let lockstep = lockstep_trace(slots, plen, tlen, TINY.vocab, 8);
+    let mut staggered = lockstep.clone();
+    for (i, r) in staggered.iter_mut().enumerate() {
+        r.arrival_s = i as f64 * 0.02; // steps 0, 2, 4 at 100 steps/s
+    }
+    let run = |trace: &[fastdecode::workload::Request]| -> ServeOutcome {
+        let mut eng = engine(
+            slots,
+            32,
+            ServeConfig {
+                w_lim: 1024,
+                steps_per_sec: 100.0,
+                prefill: PrefillMode::Batched,
+                max_steps: 1000,
+            },
+            Box::new(Fifo),
+        );
+        eng.run(trace).unwrap()
+    };
+    let a = run(&lockstep);
+    let b = run(&staggered);
+    for (x, y) in a.completions.iter().zip(&b.completions) {
+        assert_eq!(x.request_id, y.request_id);
+        assert_eq!(x.tokens, y.tokens, "arrival order changed tokens");
+    }
+}
+
+/// (d) Percentiles are finite, positive and ordered; batched prefill
+/// strictly beats token-at-a-time prefill on TTFT for long prompts
+/// (one pipeline round trip per layer instead of one per prompt token).
+#[test]
+fn report_percentiles_ordered_and_batched_prefill_wins_ttft() {
+    let slots = 4;
+    let plen = 24; // ≥ 16 per the acceptance bar
+    let trace = lockstep_trace(8, plen, 4, TINY.vocab, 13);
+    let run = |mode: PrefillMode| {
+        let mut eng = engine(
+            slots,
+            64,
+            ServeConfig {
+                w_lim: 256,
+                steps_per_sec: 100.0,
+                prefill: mode,
+                max_steps: 10_000,
+            },
+            Box::new(Fifo),
+        );
+        eng.run(&trace).unwrap()
+    };
+    let batched = run(PrefillMode::Batched);
+    let token_at_a_time = run(PrefillMode::TokenAtATime);
+
+    for out in [&batched, &token_at_a_time] {
+        assert_eq!(out.report.completed, trace.len());
+        for h in [&out.report.ttft, &out.report.e2e, &out.report.itl] {
+            let (p50, p95, p99) = (
+                h.percentile_us(0.50),
+                h.percentile_us(0.95),
+                h.percentile_us(0.99),
+            );
+            assert!(
+                p50.is_finite() && p95.is_finite() && p99.is_finite(),
+                "non-finite percentile"
+            );
+            assert!(p50 > 0.0, "degenerate percentile");
+            assert!(p50 <= p95 && p95 <= p99, "percentiles out of order");
+        }
+        // both modes produce identical tokens — prefill batching is a
+        // latency optimization, not a different computation
+        assert_eq!(
+            batched.completions[0].tokens,
+            out.completions[0].tokens
+        );
+    }
+    let (b, t) = (
+        batched.report.ttft.mean_us(),
+        token_at_a_time.report.ttft.mean_us(),
+    );
+    assert!(
+        b < t,
+        "batched prefill TTFT {b} µs not below token-at-a-time {t} µs \
+         for {plen}-token prompts"
+    );
+}
