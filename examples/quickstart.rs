@@ -37,7 +37,7 @@ fn main() -> anyhow::Result<()> {
     }
     println!(
         "\nKV-cache now holds {} tokens across 2 sockets (never on the S-worker)",
-        fd.cache_tokens()
+        fd.cache_tokens()?
     );
     Ok(())
 }

@@ -5,19 +5,27 @@
 //! and REAL on this machine (thread-per-socket Rust attention over an
 //! actual fp16 KV-cache) to show the same saturation shape.
 //!
-//! Run: `cargo bench --bench fig13_scalability [-- --fig14|--real]`
+//! Run: `cargo bench --bench fig13_scalability [-- --fig14|--real|--tcp]`
 //!
 //! `--real` sweeps the socket count on the LIVE threaded engine
 //! (reduced scale, behind `Box<dyn Coordinator>`) instead of the
-//! virtual clock.
+//! virtual clock. `--tcp` sweeps the NODE count over real localhost
+//! sockets: one `rnode` process per node, activations f16-framed by
+//! the wire codec (`net/`), the engine driving them through
+//! `RemotePool` — the multi-node R-Part deployment of the paper's §4,
+//! collapsed onto one machine.
 
 use std::time::Instant;
 
 use fastdecode::bench::{real_flag, real_mini, record_result, sim_trace as simulate, Table};
+use fastdecode::coordinator::real::{FastDecode, FastDecodeConfig};
+use fastdecode::net::{
+    spawn_rnode_process, NodeConfig, RemotePool, RnodeProcess, WireMode,
+};
 use fastdecode::coordinator::sim::steady_throughput;
 use fastdecode::coordinator::{Coordinator, SimConfig};
 use fastdecode::kvcache::SeqKv;
-use fastdecode::model::{ModelSpec, Precision, LLAMA_13B, LLAMA_7B, OPT_175B};
+use fastdecode::model::{ModelSpec, Precision, LLAMA_13B, LLAMA_7B, OPT_175B, TINY};
 use fastdecode::perfmodel::{CpuModel, GpuModel, A10, EPYC_7452};
 use fastdecode::rworker::{attend_one, AttnScratch};
 use fastdecode::util::json::Json;
@@ -63,6 +71,71 @@ fn fig13_real_engine() {
     }
     t.print();
     record_result("fig13_real_engine", Json::Arr(js));
+}
+
+/// One spawned `rnode` process (killed + reaped on drop).
+/// `CARGO_BIN_EXE_*` is provided to bench targets at compile time.
+fn spawn_rnode() -> RnodeProcess {
+    spawn_rnode_process(env!("CARGO_BIN_EXE_rnode")).expect("spawning rnode")
+}
+
+/// Node-count sweep over REAL localhost TCP: per node count P, spawn P
+/// `rnode` processes, shard the batch across them (f16 wire), and
+/// measure decode throughput — Fig 13's strong-scaling axis with the
+/// S↔R boundary as a genuine network boundary.
+fn fig13_tcp() {
+    let (batch, steps) = (16usize, 32usize);
+    let mut t = Table::new(
+        "Fig 13 (--tcp, tiny, B=16): throughput vs rnode processes (f16 wire)",
+        &["nodes", "tok/s", "speedup"],
+    );
+    let mut base = 0.0;
+    let mut js = Vec::new();
+    for p in [1usize, 2, 4] {
+        let nodes: Vec<RnodeProcess> = (0..p).map(|_| spawn_rnode()).collect();
+        let addrs: Vec<String> =
+            nodes.iter().map(|n| n.addr.clone()).collect();
+        let pool = RemotePool::connect_tcp(
+            &addrs,
+            NodeConfig::from_spec(
+                &TINY,
+                steps + 4,
+                Precision::F16,
+                WireMode::F16,
+            ),
+        )
+        .expect("connecting rnodes");
+        let mut fd = FastDecode::with_backend(
+            TINY,
+            FastDecodeConfig {
+                batch,
+                capacity_per_seq: steps + 4,
+                layers: 2,
+                ..Default::default()
+            },
+            Box::new(pool),
+        )
+        .expect("engine over tcp");
+        let prompts =
+            fastdecode::workload::fixed_batch(batch, 2, TINY.vocab, 11);
+        fd.prime(&prompts, 1).expect("prime over tcp");
+        let start = Instant::now();
+        let trace = fd.run_steps(steps).expect("tcp sweep");
+        let wall = start.elapsed().as_secs_f64();
+        let tp = trace.total_tokens() as f64 / wall;
+        if p == 1 {
+            base = tp;
+        }
+        t.row(&[
+            p.to_string(),
+            format!("{tp:.0}"),
+            format!("{:.2}x", tp / base),
+        ]);
+        js.push(Json::obj().set("nodes", p).set("tok_per_s", tp));
+        drop(fd); // disconnects before the rnode processes are killed
+    }
+    t.print();
+    record_result("fig13_tcp", Json::Arr(js));
 }
 
 fn fig13_virtual() {
@@ -244,6 +317,8 @@ fn main() {
     let args: Vec<String> = std::env::args().collect();
     if args.iter().any(|a| a == "--fig14") {
         fig14();
+    } else if args.iter().any(|a| a == "--tcp") {
+        fig13_tcp();
     } else if real_flag() {
         fig13_real_engine();
     } else {

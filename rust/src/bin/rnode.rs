@@ -1,0 +1,59 @@
+//! `rnode` — a standalone R-worker host process.
+//!
+//! Binds a TCP listener and serves one R-socket per accepted
+//! connection (`net::serve_listener`): the remote end of FastDecode's
+//! S↔R boundary, letting the KV-bound R-Part run on CPUs of OTHER
+//! machines (paper abstract / §4 — aggregated memory capacity and
+//! compute of CPUs across multiple nodes).
+//!
+//! The node is dimensionless at startup: every connection begins with
+//! a `Configure` frame that provisions its `SocketCache` (heads, head
+//! dim, layers, KV capacity, cache precision, wire mode), so one rnode
+//! binary serves any model the client drives.
+//!
+//! Usage:
+//!   rnode [--listen HOST:PORT]
+//!
+//! `--listen` defaults to `127.0.0.1:0` (ephemeral port). The resolved
+//! address is announced on stdout as `rnode listening on HOST:PORT` —
+//! machine-readable, parsed by `tests/net_remote.rs` and the
+//! `fig13_scalability --tcp` sweep to discover ephemeral ports.
+
+use anyhow::{bail, Result};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("rnode: error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut listen = "127.0.0.1:0".to_string();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--listen" => {
+                i += 1;
+                match args.get(i) {
+                    Some(a) => listen = a.clone(),
+                    None => bail!("--listen needs HOST:PORT"),
+                }
+            }
+            "--help" | "-h" => {
+                println!(
+                    "rnode — FastDecode remote R-worker host\n\n\
+                     USAGE: rnode [--listen HOST:PORT]\n\n\
+                     Serves one R-socket per TCP connection; each \
+                     connection self-provisions via its Configure frame. \
+                     Announces `rnode listening on HOST:PORT` on stdout."
+                );
+                return Ok(());
+            }
+            other => bail!("unknown argument {other:?} (see --help)"),
+        }
+        i += 1;
+    }
+    fastdecode::net::run_rnode(listen.as_str())
+}

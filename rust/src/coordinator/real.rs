@@ -36,7 +36,7 @@ use anyhow::{bail, Result};
 use crate::metrics::{Histogram, StepRecord, StepTrace};
 use crate::model::{ModelSpec, Precision};
 use crate::runtime::{PipelineConfig, StepTiming, ThreadedPipeline};
-use crate::rworker::{RPool, RPoolConfig};
+use crate::rworker::{AttendBackend, RPool, RPoolConfig};
 use crate::sched::LoadControl;
 use crate::serve::{admit_one, AdmissionPolicy, Fifo, QueuedJob};
 use crate::sworker::{ModelWeights, NativeSWorker};
@@ -149,9 +149,6 @@ pub struct FastDecode {
 
 impl FastDecode {
     pub fn new(spec: ModelSpec, cfg: FastDecodeConfig) -> Result<FastDecode> {
-        if cfg.batch == 0 {
-            bail!("batch must be > 0");
-        }
         if cfg.sockets == 0 {
             bail!("sockets must be > 0");
         }
@@ -162,9 +159,6 @@ impl FastDecode {
                 spec.n_layers,
                 spec.name
             );
-        }
-        if cfg.depth == 0 {
-            bail!("pipeline depth must be ≥ 1");
         }
         // The R-pool sizes its per-sequence cache to the run's needs.
         let mut spec_l = spec;
@@ -178,11 +172,43 @@ impl FastDecode {
                 attend_pad: cfg.r_pad,
             },
         );
+        FastDecode::with_backend(spec, cfg, Box::new(rpool))
+    }
+
+    /// Build the engine over ANY R-Part backend — in-process socket
+    /// threads, wire loopback, or TCP connections to remote `rnode`
+    /// processes (`crate::net::RemotePool`). The backend must already
+    /// be provisioned for `cfg.layers` layers and
+    /// `cfg.capacity_per_seq` KV slots per sequence;
+    /// `cfg.sockets` is overwritten with the backend's socket count.
+    pub fn with_backend(
+        spec: ModelSpec,
+        mut cfg: FastDecodeConfig,
+        pool: Box<dyn AttendBackend>,
+    ) -> Result<FastDecode> {
+        if cfg.batch == 0 {
+            bail!("batch must be > 0");
+        }
+        if pool.sockets() == 0 {
+            bail!("backend must expose at least one socket");
+        }
+        if cfg.layers == 0 || cfg.layers > spec.n_layers {
+            bail!(
+                "layers {} outside 1..={} for {}",
+                cfg.layers,
+                spec.n_layers,
+                spec.name
+            );
+        }
+        if cfg.depth == 0 {
+            bail!("pipeline depth must be ≥ 1");
+        }
+        cfg.sockets = pool.sockets();
         let weights = ModelWeights::random(spec, cfg.layers, cfg.weight_seed);
         let sworker = NativeSWorker::new(weights);
-        let pipeline = ThreadedPipeline::new(
+        let pipeline = ThreadedPipeline::with_backend(
             sworker,
-            rpool,
+            pool,
             PipelineConfig {
                 pipelined: cfg.pipelined,
                 depth: cfg.depth,
@@ -207,16 +233,19 @@ impl FastDecode {
     /// modes, so either mode can be (re)entered without colliding with
     /// ids still placed in the pool.
     fn release_all_sequences(&mut self) {
+        // best-effort on the reset path: a dead socket must not block
+        // leaving a driving mode (the backend unplaces dead-socket
+        // sequences locally either way)
         if !self.seq_ids.is_empty() {
             let old = self.seq_ids.clone();
-            self.pipeline.rpool_mut().drop_seqs(&old);
+            let _ = self.pipeline.pool_mut().drop_seqs(&old);
             self.seq_ids.clear();
             self.ctx_len.clear();
         }
         if let Some(st) = self.sls.take() {
             let live: Vec<u64> = st.live.iter().map(|s| s.id).collect();
             if !live.is_empty() {
-                self.pipeline.rpool_mut().drop_seqs(&live);
+                let _ = self.pipeline.pool_mut().drop_seqs(&live);
             }
             self.next_seq_id = self.next_seq_id.max(st.next_id);
         }
@@ -225,13 +254,14 @@ impl FastDecode {
 
     /// Register a fresh batch of sequences (drops any previous batch
     /// and leaves SLS mode if it was active).
-    pub fn start_batch(&mut self, first_id: u64) {
+    pub fn start_batch(&mut self, first_id: u64) -> Result<()> {
         self.release_all_sequences();
         self.seq_ids = (0..self.cfg.batch as u64).map(|i| first_id + i).collect();
         self.ctx_len = vec![0; self.cfg.batch];
         let ids = self.seq_ids.clone();
-        self.pipeline.rpool_mut().add_seqs(&ids);
+        self.pipeline.pool_mut().add_seqs(&ids)?;
         self.current = None;
+        Ok(())
     }
 
     /// One decode step: current tokens `[B]` in → next tokens `[B]` out.
@@ -298,7 +328,7 @@ impl FastDecode {
         if max_len > self.cfg.capacity_per_seq {
             bail!("prompt length {max_len} exceeds KV capacity");
         }
-        self.start_batch(first_id);
+        self.start_batch(first_id)?;
         let mut tokens: Vec<i32> = Vec::new();
         let mut rows: Vec<u64> = Vec::new();
         for (i, p) in prompts.iter().enumerate() {
@@ -356,21 +386,29 @@ impl FastDecode {
         })
     }
 
-    /// Aggregate KV tokens currently held across sockets.
-    pub fn cache_tokens(&self) -> usize {
-        self.pipeline
-            .rpool()
-            .stats()
+    /// Aggregate KV tokens currently held across sockets (remote
+    /// backends answer over the wire, hence fallible and `&mut`).
+    pub fn cache_tokens(&mut self) -> Result<usize> {
+        Ok(self
+            .pipeline
+            .pool_mut()
+            .stats()?
             .iter()
             .map(|s| s.total_tokens)
-            .sum()
+            .sum())
     }
 
     /// Measured per-layer aggregate context across sockets — the live
     /// counterpart of Algorithm 1's W (each sequence counts its cached
     /// tokens once, not once per layer).
-    pub fn measured_kv_load(&self) -> usize {
-        self.cache_tokens() / self.cfg.layers
+    pub fn measured_kv_load(&mut self) -> Result<usize> {
+        Ok(self.cache_tokens()? / self.cfg.layers)
+    }
+
+    /// The attend backend this engine is running over (for traces and
+    /// bench tables).
+    pub fn pool_name(&self) -> &'static str {
+        self.pipeline.pool().name()
     }
 
     // ── raw sequence-lifecycle API (used by `serve::ServeEngine`) ──
@@ -399,13 +437,13 @@ impl FastDecode {
     }
 
     /// Register sequences with the socket pool (round-robin placement).
-    pub fn register_seqs(&mut self, ids: &[u64]) {
-        self.pipeline.rpool_mut().add_seqs(ids);
+    pub fn register_seqs(&mut self, ids: &[u64]) -> Result<()> {
+        self.pipeline.pool_mut().add_seqs(ids)
     }
 
     /// Drop finished sequences, freeing their KV across the pool.
-    pub fn retire_seqs(&mut self, ids: &[u64]) {
-        self.pipeline.rpool_mut().drop_seqs(ids);
+    pub fn retire_seqs(&mut self, ids: &[u64]) -> Result<()> {
+        self.pipeline.pool_mut().drop_seqs(ids)
     }
 
     /// One raw ragged forward pass (`ThreadedPipeline::forward`):
@@ -542,7 +580,7 @@ impl FastDecode {
                 st.queue.remove(idx).expect("admit_one bounds-checked");
             let ids: Vec<u64> = (st.next_id..st.next_id + a.m as u64).collect();
             st.next_id += a.m as u64;
-            self.pipeline.rpool_mut().add_seqs(&ids);
+            self.pipeline.pool_mut().add_seqs(&ids)?;
             for &id in &ids {
                 st.live.push(LiveSeq {
                     id,
@@ -572,7 +610,7 @@ impl FastDecode {
         // Measure the aggregate KV load this step actually processed,
         // BEFORE finished sequences release their cache — this is what
         // the admission limit W_lim must bound.
-        let kv_load = self.measured_kv_load();
+        let kv_load = self.measured_kv_load()?;
         let finished: Vec<u64> = st
             .live
             .iter()
@@ -580,7 +618,7 @@ impl FastDecode {
             .map(|s| s.id)
             .collect();
         if !finished.is_empty() {
-            self.pipeline.rpool_mut().drop_seqs(&finished);
+            self.pipeline.pool_mut().drop_seqs(&finished)?;
             st.live.retain(|s| s.remaining > 0);
         }
         Ok(StepRecord {

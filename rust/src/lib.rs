@@ -11,8 +11,11 @@
 //! (SLS + Algorithm 1). The `serve` subsystem layers request-level
 //! continuous batching on top: open-loop arrivals, pluggable admission
 //! policies under W_lim, batched prefill, and per-request latency
-//! accounting. See DESIGN.md for the system inventory and the
-//! per-experiment index.
+//! accounting. R-Part runs behind the pluggable
+//! `rworker::AttendBackend` trait: in-process socket threads, or REAL
+//! wire transport (`net`) to `rnode` host processes over loopback/TCP
+//! with a length-prefixed fp16/fp32 activation codec. See DESIGN.md
+//! for the system inventory and the per-experiment index.
 
 pub mod baselines;
 pub mod bench;
@@ -20,6 +23,7 @@ pub mod coordinator;
 pub mod kvcache;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod perfmodel;
 pub mod runtime;
 pub mod rworker;

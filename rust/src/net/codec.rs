@@ -1,0 +1,681 @@
+//! Hand-rolled length-prefixed binary wire codec for the S↔R boundary
+//! (no serde in the offline build).
+//!
+//! A frame is the body encoded here; the [`super::Transport`] adds the
+//! `u32` little-endian length prefix on the wire. Bodies are
+//! `[u8 tag][fields…]` with fixed-width little-endian integers and
+//! `u32`-counted vectors.
+//!
+//! Activation payloads (`q`/`k_new`/`v_new`/`o`) are encoded per the
+//! connection's [`WireMode`]:
+//!
+//! * `F32` — raw `f32::to_bits` little-endian (4 B/elem). Decode is
+//!   bit-identical to what an in-process backend would have passed by
+//!   reference, which is what pins loopback == threads.
+//! * `F16` — `util::f16::f32_to_f16_bits` little-endian (2 B/elem),
+//!   the paper's fp16 intermediate-vector format (Table 3): the frame
+//!   payload is byte-for-byte the size `transport::qkv_message_bytes` /
+//!   `o_message_bytes` charge, so modeled cost and shipped bytes
+//!   cannot drift (pinned in `tests/net_remote.rs`).
+//!
+//! Every decoder is total: truncated buffers, unknown tags, absurd
+//! counts and trailing garbage return `Err` (→ a routed error at the
+//! pool/node layer), never a panic or an out-of-bounds read.
+
+use std::time::Duration;
+
+use anyhow::{bail, Context as _, Result};
+
+use crate::kvcache::CacheStats;
+use crate::model::Precision;
+use crate::rworker::SeqTask;
+use crate::util::f16::{f16_bits_to_f32_slow, f32_to_f16_bits, F16};
+
+/// Hard ceiling on one frame body — a length prefix above this is a
+/// malformed (or hostile) frame, not an allocation request.
+pub const MAX_FRAME_BYTES: usize = 1 << 28; // 256 MiB
+
+/// How activation vectors are packed on the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireMode {
+    /// Raw f32 bits — bit-identical to in-process hand-off.
+    F32,
+    /// IEEE binary16 — the paper's fp16 intermediate vectors; halves
+    /// the activation bytes at ≤ 2⁻¹¹ relative rounding per element.
+    F16,
+}
+
+impl WireMode {
+    pub fn bytes_per_elem(self) -> usize {
+        match self {
+            WireMode::F32 => 4,
+            WireMode::F16 => 2,
+        }
+    }
+
+    fn to_u8(self) -> u8 {
+        match self {
+            WireMode::F32 => 0,
+            WireMode::F16 => 1,
+        }
+    }
+
+    fn from_u8(b: u8) -> Result<WireMode> {
+        match b {
+            0 => Ok(WireMode::F32),
+            1 => Ok(WireMode::F16),
+            other => bail!("unknown wire mode {other}"),
+        }
+    }
+}
+
+/// Encoded payload bytes of one activation vector of `elems` f32
+/// elements (excluding its `u32` length header) — the codec-side
+/// ground truth the `LinkModel` byte accounting is pinned against.
+pub fn vec_payload_bytes(elems: usize, mode: WireMode) -> usize {
+    elems * mode.bytes_per_elem()
+}
+
+/// Everything an `rnode` needs to provision one R-socket. Sent as the
+/// first frame on every connection; the node replies `Ack` and the
+/// connection's wire mode is fixed from then on.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NodeConfig {
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub n_layers: usize,
+    pub capacity_per_seq: usize,
+    /// KV-cache storage precision ON the node (independent of the wire
+    /// mode the activations travel in).
+    pub precision: Precision,
+    pub wire: WireMode,
+}
+
+impl NodeConfig {
+    /// Node provisioning matching an in-process `RPool::spawn` for
+    /// `spec` (whose `n_layers` must already be the instantiated layer
+    /// count, as `FastDecode` does).
+    pub fn from_spec(
+        spec: &crate::model::ModelSpec,
+        capacity_per_seq: usize,
+        precision: Precision,
+        wire: WireMode,
+    ) -> NodeConfig {
+        NodeConfig {
+            n_heads: spec.n_heads,
+            head_dim: spec.head_dim(),
+            n_layers: spec.n_layers,
+            capacity_per_seq,
+            precision,
+            wire,
+        }
+    }
+}
+
+/// Client → node. Mirrors `rworker::RRequest` plus the connection
+/// handshake.
+#[derive(Clone, Debug, PartialEq)]
+pub enum NetRequest {
+    Configure(NodeConfig),
+    AddSeqs(Vec<u64>),
+    DropSeqs(Vec<u64>),
+    Attend { layer: usize, tasks: Vec<SeqTask> },
+    Stats,
+    Shutdown,
+}
+
+/// Node → client. Mirrors `rworker::RResponse` plus the routed error
+/// variant: a node that refuses a request (unknown sequence, capacity
+/// overflow, malformed frame) answers `Err` and KEEPS SERVING — the
+/// remote counterpart of PR 3's `SResp::Err` discipline.
+#[derive(Clone, Debug, PartialEq)]
+pub enum NetResponse {
+    Ack,
+    Outputs {
+        layer: usize,
+        outs: Vec<(u64, Vec<f32>)>,
+        busy: Duration,
+    },
+    Stats(CacheStats),
+    Err(String),
+}
+
+// ── request/response tags ────────────────────────────────────────────
+
+const REQ_CONFIGURE: u8 = 1;
+const REQ_ADD_SEQS: u8 = 2;
+const REQ_DROP_SEQS: u8 = 3;
+const REQ_ATTEND: u8 = 4;
+const REQ_STATS: u8 = 5;
+const REQ_SHUTDOWN: u8 = 6;
+
+const RESP_ACK: u8 = 1;
+const RESP_OUTPUTS: u8 = 2;
+const RESP_STATS: u8 = 3;
+const RESP_ERR: u8 = 4;
+
+fn precision_to_u8(p: Precision) -> u8 {
+    match p {
+        Precision::F32 => 0,
+        Precision::F16 => 1,
+        Precision::Int8 => 2,
+        Precision::Int4 => 3,
+    }
+}
+
+fn precision_from_u8(b: u8) -> Result<Precision> {
+    match b {
+        0 => Ok(Precision::F32),
+        1 => Ok(Precision::F16),
+        2 => Ok(Precision::Int8),
+        3 => Ok(Precision::Int4),
+        other => bail!("unknown precision {other}"),
+    }
+}
+
+// ── little-endian primitives ─────────────────────────────────────────
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Bounds-checked cursor over a frame body.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.buf.len());
+        match end {
+            Some(end) => {
+                let s = &self.buf[self.pos..end];
+                self.pos = end;
+                Ok(s)
+            }
+            None => bail!(
+                "truncated frame: wanted {n} bytes at offset {} of {}",
+                self.pos,
+                self.buf.len()
+            ),
+        }
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A `u32` element count that still has to fit in the remaining
+    /// bytes at `min_elem_bytes` each — rejects absurd counts before
+    /// any allocation.
+    fn count(&mut self, min_elem_bytes: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        let remaining = self.buf.len() - self.pos;
+        if n.saturating_mul(min_elem_bytes) > remaining {
+            bail!(
+                "malformed frame: count {n} needs ≥ {} bytes, {} remain",
+                n * min_elem_bytes,
+                remaining
+            );
+        }
+        Ok(n)
+    }
+
+    fn finish(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!(
+                "malformed frame: {} trailing bytes",
+                self.buf.len() - self.pos
+            );
+        }
+        Ok(())
+    }
+}
+
+// ── f32 vectors in the connection's wire mode ────────────────────────
+
+fn put_f32_vec(buf: &mut Vec<u8>, v: &[f32], mode: WireMode) {
+    put_u32(buf, v.len() as u32);
+    match mode {
+        WireMode::F32 => {
+            for &x in v {
+                buf.extend_from_slice(&x.to_bits().to_le_bytes());
+            }
+        }
+        WireMode::F16 => {
+            for &x in v {
+                buf.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+            }
+        }
+    }
+}
+
+fn get_f32_vec(c: &mut Cursor, mode: WireMode) -> Result<Vec<f32>> {
+    let n = c.count(mode.bytes_per_elem())?;
+    let raw = c.take(n * mode.bytes_per_elem())?;
+    Ok(match mode {
+        WireMode::F32 => raw
+            .chunks_exact(4)
+            .map(|b| f32::from_bits(u32::from_le_bytes(b.try_into().unwrap())))
+            .collect(),
+        WireMode::F16 => raw
+            .chunks_exact(2)
+            .map(|b| {
+                // LUT-free decode: frames may legally carry inf/nan
+                // (an upstream overflow), which `to_f32_finite` would
+                // mangle
+                f16_bits_to_f32_slow(u16::from_le_bytes(
+                    b.try_into().unwrap(),
+                ))
+            })
+            .collect(),
+    })
+}
+
+fn put_u64_vec(buf: &mut Vec<u8>, v: &[u64]) {
+    put_u32(buf, v.len() as u32);
+    for &x in v {
+        put_u64(buf, x);
+    }
+}
+
+fn get_u64_vec(c: &mut Cursor) -> Result<Vec<u64>> {
+    let n = c.count(8)?;
+    (0..n).map(|_| c.u64()).collect()
+}
+
+// ── requests ─────────────────────────────────────────────────────────
+
+/// Encode one request body (the transport adds the length prefix).
+pub fn encode_request(req: &NetRequest, mode: WireMode) -> Vec<u8> {
+    let mut buf = Vec::new();
+    match req {
+        NetRequest::Configure(c) => {
+            buf.push(REQ_CONFIGURE);
+            put_u32(&mut buf, c.n_heads as u32);
+            put_u32(&mut buf, c.head_dim as u32);
+            put_u32(&mut buf, c.n_layers as u32);
+            put_u32(&mut buf, c.capacity_per_seq as u32);
+            buf.push(precision_to_u8(c.precision));
+            buf.push(c.wire.to_u8());
+        }
+        NetRequest::AddSeqs(ids) => {
+            buf.push(REQ_ADD_SEQS);
+            put_u64_vec(&mut buf, ids);
+        }
+        NetRequest::DropSeqs(ids) => {
+            buf.push(REQ_DROP_SEQS);
+            put_u64_vec(&mut buf, ids);
+        }
+        NetRequest::Attend { layer, tasks } => {
+            buf.push(REQ_ATTEND);
+            put_u32(&mut buf, *layer as u32);
+            put_u32(&mut buf, tasks.len() as u32);
+            for t in tasks {
+                put_u64(&mut buf, t.seq_id);
+                put_f32_vec(&mut buf, &t.q, mode);
+                put_f32_vec(&mut buf, &t.k_new, mode);
+                put_f32_vec(&mut buf, &t.v_new, mode);
+            }
+        }
+        NetRequest::Stats => buf.push(REQ_STATS),
+        NetRequest::Shutdown => buf.push(REQ_SHUTDOWN),
+    }
+    buf
+}
+
+/// Decode one request body. `mode` governs the activation payloads
+/// (fixed per connection by the `Configure` handshake, which itself
+/// carries no activations and decodes identically under either mode).
+pub fn decode_request(buf: &[u8], mode: WireMode) -> Result<NetRequest> {
+    let mut c = Cursor::new(buf);
+    let req = match c.u8().context("empty frame")? {
+        REQ_CONFIGURE => NetRequest::Configure(NodeConfig {
+            n_heads: c.u32()? as usize,
+            head_dim: c.u32()? as usize,
+            n_layers: c.u32()? as usize,
+            capacity_per_seq: c.u32()? as usize,
+            precision: precision_from_u8(c.u8()?)?,
+            wire: WireMode::from_u8(c.u8()?)?,
+        }),
+        REQ_ADD_SEQS => NetRequest::AddSeqs(get_u64_vec(&mut c)?),
+        REQ_DROP_SEQS => NetRequest::DropSeqs(get_u64_vec(&mut c)?),
+        REQ_ATTEND => {
+            let layer = c.u32()? as usize;
+            // a task is ≥ 8 (seq id) + 3 × 4 (vector headers) bytes
+            let n = c.count(20)?;
+            let mut tasks = Vec::with_capacity(n);
+            for _ in 0..n {
+                tasks.push(SeqTask {
+                    seq_id: c.u64()?,
+                    q: get_f32_vec(&mut c, mode)?,
+                    k_new: get_f32_vec(&mut c, mode)?,
+                    v_new: get_f32_vec(&mut c, mode)?,
+                });
+            }
+            NetRequest::Attend { layer, tasks }
+        }
+        REQ_STATS => NetRequest::Stats,
+        REQ_SHUTDOWN => NetRequest::Shutdown,
+        tag => bail!("unknown request tag {tag}"),
+    };
+    c.finish()?;
+    Ok(req)
+}
+
+// ── responses ────────────────────────────────────────────────────────
+
+/// Encode one response body.
+pub fn encode_response(resp: &NetResponse, mode: WireMode) -> Vec<u8> {
+    let mut buf = Vec::new();
+    match resp {
+        NetResponse::Ack => buf.push(RESP_ACK),
+        NetResponse::Outputs { layer, outs, busy } => {
+            buf.push(RESP_OUTPUTS);
+            put_u32(&mut buf, *layer as u32);
+            put_u64(&mut buf, busy.as_nanos() as u64);
+            put_u32(&mut buf, outs.len() as u32);
+            for (id, o) in outs {
+                put_u64(&mut buf, *id);
+                put_f32_vec(&mut buf, o, mode);
+            }
+        }
+        NetResponse::Stats(st) => {
+            buf.push(RESP_STATS);
+            put_u64(&mut buf, st.sequences as u64);
+            put_u64(&mut buf, st.total_tokens as u64);
+            put_u64(&mut buf, st.allocated_bytes as u64);
+        }
+        NetResponse::Err(msg) => {
+            buf.push(RESP_ERR);
+            let bytes = msg.as_bytes();
+            put_u32(&mut buf, bytes.len() as u32);
+            buf.extend_from_slice(bytes);
+        }
+    }
+    buf
+}
+
+/// Decode one response body.
+pub fn decode_response(buf: &[u8], mode: WireMode) -> Result<NetResponse> {
+    let mut c = Cursor::new(buf);
+    let resp = match c.u8().context("empty frame")? {
+        RESP_ACK => NetResponse::Ack,
+        RESP_OUTPUTS => {
+            let layer = c.u32()? as usize;
+            let busy = Duration::from_nanos(c.u64()?);
+            // an output is ≥ 8 (seq id) + 4 (vector header) bytes
+            let n = c.count(12)?;
+            let mut outs = Vec::with_capacity(n);
+            for _ in 0..n {
+                let id = c.u64()?;
+                outs.push((id, get_f32_vec(&mut c, mode)?));
+            }
+            NetResponse::Outputs { layer, outs, busy }
+        }
+        RESP_STATS => NetResponse::Stats(CacheStats {
+            sequences: c.u64()? as usize,
+            total_tokens: c.u64()? as usize,
+            allocated_bytes: c.u64()? as usize,
+        }),
+        RESP_ERR => {
+            let n = c.count(1)?;
+            let msg = String::from_utf8_lossy(c.take(n)?).into_owned();
+            NetResponse::Err(msg)
+        }
+        tag => bail!("unknown response tag {tag}"),
+    };
+    c.finish()?;
+    Ok(resp)
+}
+
+/// What one f32 value becomes after an f16 wire crossing — the exact
+/// lossy map `WireMode::F16` applies, for tests that predict decoded
+/// payloads.
+pub fn f16_wire_roundtrip(x: f32) -> f32 {
+    F16(f32_to_f16_bits(x)).to_f32()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn task(g: &mut prop::Gen, seq_id: u64, rows: usize, width: usize) -> SeqTask {
+        SeqTask {
+            seq_id,
+            q: g.vec_normal(rows * width, 1.0),
+            k_new: g.vec_normal(rows * width, 1.0),
+            v_new: g.vec_normal(rows * width, 1.0),
+        }
+    }
+
+    fn req_roundtrip(req: &NetRequest, mode: WireMode) -> NetRequest {
+        decode_request(&encode_request(req, mode), mode).expect("decode")
+    }
+
+    fn resp_roundtrip(resp: &NetResponse, mode: WireMode) -> NetResponse {
+        decode_response(&encode_response(resp, mode), mode).expect("decode")
+    }
+
+    /// Property: EVERY request variant round-trips bit-identically in
+    /// f32 wire mode, over ragged multi-row tasks (decode rows, T > 1
+    /// prefill rows, empty task lists) and extreme sequence ids.
+    #[test]
+    fn prop_request_roundtrip_f32_exact() {
+        prop::check("net-req-roundtrip-f32", 40, |g| {
+            let width = *g.pick(&[4usize, 8, 24]);
+            let n_tasks = g.usize_in(0, 5);
+            let tasks: Vec<SeqTask> = (0..n_tasks)
+                .map(|i| {
+                    let id = if g.bool() {
+                        g.u64_in(0, 1 << 40)
+                    } else {
+                        u64::MAX - i as u64 // max-range ids must survive
+                    };
+                    let rows = g.usize_in(1, 7); // ragged: 1..=6 rows
+                    task(g, id, rows, width)
+                })
+                .collect();
+            let reqs = [
+                NetRequest::Attend {
+                    layer: g.usize_in(0, 1 << 16),
+                    tasks,
+                },
+                NetRequest::AddSeqs(vec![0, 7, u64::MAX]),
+                NetRequest::DropSeqs(vec![]),
+                NetRequest::Stats,
+                NetRequest::Shutdown,
+                NetRequest::Configure(NodeConfig {
+                    n_heads: g.usize_in(1, 64),
+                    head_dim: g.usize_in(1, 256),
+                    n_layers: g.usize_in(1, 80),
+                    capacity_per_seq: g.usize_in(1, 1 << 20),
+                    precision: *g.pick(&[
+                        Precision::F32,
+                        Precision::F16,
+                        Precision::Int8,
+                        Precision::Int4,
+                    ]),
+                    wire: *g.pick(&[WireMode::F32, WireMode::F16]),
+                }),
+            ];
+            for req in &reqs {
+                assert_eq!(&req_roundtrip(req, WireMode::F32), req);
+            }
+        });
+    }
+
+    /// Property: f16 wire mode loses exactly `f16_wire_roundtrip` per
+    /// element — no more (the codec adds no error of its own), and a
+    /// second crossing is the identity (f16 values are f16-exact).
+    #[test]
+    fn prop_request_roundtrip_f16_is_f16_quantization() {
+        prop::check("net-req-roundtrip-f16", 40, |g| {
+            let width = *g.pick(&[4usize, 16]);
+            let rows = g.usize_in(1, 5);
+            let id = g.u64_in(0, u64::MAX);
+            let t = task(g, id, rows, width);
+            let req = NetRequest::Attend {
+                layer: 3,
+                tasks: vec![t.clone()],
+            };
+            let once = req_roundtrip(&req, WireMode::F16);
+            let NetRequest::Attend { tasks, .. } = &once else {
+                panic!("variant changed");
+            };
+            for (wire, orig) in [
+                (&tasks[0].q, &t.q),
+                (&tasks[0].k_new, &t.k_new),
+                (&tasks[0].v_new, &t.v_new),
+            ] {
+                assert_eq!(wire.len(), orig.len());
+                for (w, o) in wire.iter().zip(orig) {
+                    assert_eq!(*w, f16_wire_roundtrip(*o));
+                }
+            }
+            // idempotent: crossing the wire again changes nothing
+            assert_eq!(req_roundtrip(&once, WireMode::F16), once);
+        });
+    }
+
+    /// Property: every response variant round-trips, incl. `Err` (the
+    /// routed-error path) and multi-row outputs.
+    #[test]
+    fn prop_response_roundtrip() {
+        prop::check("net-resp-roundtrip", 40, |g| {
+            let n = g.usize_in(0, 4);
+            let outs: Vec<(u64, Vec<f32>)> = (0..n)
+                .map(|_| {
+                    (
+                        g.u64_in(0, u64::MAX),
+                        g.vec_normal(g.usize_in(1, 4) * 8, 1.0),
+                    )
+                })
+                .collect();
+            let resps = [
+                NetResponse::Ack,
+                NetResponse::Outputs {
+                    layer: g.usize_in(0, 100),
+                    outs,
+                    busy: Duration::from_nanos(g.u64_in(0, u64::MAX >> 1)),
+                },
+                NetResponse::Stats(CacheStats {
+                    sequences: g.usize_in(0, 1 << 30),
+                    total_tokens: g.usize_in(0, 1 << 40),
+                    allocated_bytes: g.usize_in(0, 1 << 40),
+                }),
+                NetResponse::Err(
+                    "node 1 refused: seq 9 not placed \u{1F4A3}".into(),
+                ),
+            ];
+            for resp in &resps {
+                assert_eq!(&resp_roundtrip(resp, WireMode::F32), resp);
+            }
+        });
+    }
+
+    /// Property: mutilated frames (truncation at every length, tag
+    /// corruption, trailing garbage, hostile counts) decode to `Err`,
+    /// never a panic.
+    #[test]
+    fn prop_malformed_frames_error_cleanly() {
+        prop::check("net-malformed", 30, |g| {
+            let t = task(g, 42, 2, 8);
+            let frame = encode_request(
+                &NetRequest::Attend {
+                    layer: 1,
+                    tasks: vec![t],
+                },
+                WireMode::F16,
+            );
+            // every proper prefix is truncated → must error (empty
+            // frame included)
+            let cut = g.usize_in(0, frame.len());
+            assert!(decode_request(&frame[..cut], WireMode::F16).is_err());
+            // unknown tag
+            let mut bad = frame.clone();
+            bad[0] = 0xee;
+            assert!(decode_request(&bad, WireMode::F16).is_err());
+            // trailing garbage after a valid body
+            let mut long = frame.clone();
+            long.push(0);
+            assert!(decode_request(&long, WireMode::F16).is_err());
+            // hostile count: patch the task count to u32::MAX
+            let mut hostile = frame;
+            hostile[5..9].copy_from_slice(&u32::MAX.to_le_bytes());
+            assert!(decode_request(&hostile, WireMode::F16).is_err());
+        });
+    }
+
+    /// Decoding a frame under the WRONG wire mode must error — never
+    /// panic. Fixed payload of 1.0s: read as f32, the first misaligned
+    /// vector header becomes 0x3C003C00 (two fp16 1.0s), an absurd
+    /// count the cursor rejects before allocating.
+    #[test]
+    fn wrong_mode_decode_is_an_error_not_a_panic() {
+        let t = SeqTask {
+            seq_id: 1,
+            q: vec![1.0; 8],
+            k_new: vec![1.0; 8],
+            v_new: vec![1.0; 8],
+        };
+        let f16_frame = encode_request(
+            &NetRequest::Attend {
+                layer: 0,
+                tasks: vec![t],
+            },
+            WireMode::F16,
+        );
+        assert!(decode_request(&f16_frame, WireMode::F32).is_err());
+    }
+
+    /// The f16 payload sizing the byte-accounting pin builds on.
+    #[test]
+    fn payload_bytes_by_mode() {
+        assert_eq!(vec_payload_bytes(100, WireMode::F32), 400);
+        assert_eq!(vec_payload_bytes(100, WireMode::F16), 200);
+        // an Attend's activation payload is exactly 3 vectors of
+        // rows×width elements: frame growth per element is 3× the
+        // per-elem wire size
+        let mk = |elems: usize, mode| {
+            encode_request(
+                &NetRequest::Attend {
+                    layer: 0,
+                    tasks: vec![SeqTask {
+                        seq_id: 1,
+                        q: vec![0.5; elems],
+                        k_new: vec![0.5; elems],
+                        v_new: vec![0.5; elems],
+                    }],
+                },
+                mode,
+            )
+            .len()
+        };
+        for mode in [WireMode::F32, WireMode::F16] {
+            let overhead = mk(0, mode);
+            assert_eq!(
+                mk(64, mode),
+                overhead + 3 * vec_payload_bytes(64, mode)
+            );
+        }
+    }
+}

@@ -1,0 +1,50 @@
+//! REAL wire transport for multi-node R-workers (paper abstract, §4:
+//! "the aggregated memory capacity and compute of CPUs across multiple
+//! nodes" absorb the KV-bound R-Part).
+//!
+//! This module is the counterpart of `crate::transport`, and the two
+//! deliberately split one concern:
+//!
+//! * [`crate::transport`] **models** the wire — `LinkModel` prices
+//!   latency+bandwidth for the byte counts a deployment WOULD ship, so
+//!   offline benches reproduce Table 3 / Fig 15 without a cluster.
+//!   Nothing crosses a socket there.
+//! * `net` (this module) **is** the wire — activation vectors are
+//!   length-prefix framed by a hand-rolled binary codec
+//!   ([`codec`]), cross a [`Transport`] (in-process [`Loopback`] or
+//!   real localhost [`Tcp`]), and are served by `rnode` hosts
+//!   ([`rnode`], plus the `rnode` binary target) that own the remote
+//!   `SocketCache`s. [`RemotePool`] is the client side: it shards
+//!   sequences round-robin across nodes and implements
+//!   [`crate::rworker::AttendBackend`], so `ThreadedPipeline`,
+//!   `FastDecode` and `serve::ServeEngine` run unchanged over
+//!   in-process threads, loopback, or TCP nodes.
+//!
+//! The codec's [`WireMode::F16`] packs the q/k/v/o payloads as IEEE
+//! binary16 via `util::f16` — the paper's fp16 intermediate vectors
+//! (Table 3), and exactly the byte counts `transport::
+//! qkv_message_bytes` / `o_message_bytes` charge (pinned by test).
+//! [`WireMode::F32`] ships raw bits and is pinned bit-identical to the
+//! in-process thread backend.
+//!
+//! Fault handling extends PR 3's `SResp::Err` discipline to the R
+//! side: a node death, a refused request or a malformed frame comes
+//! back as a routed error with the root cause — never a hang, never a
+//! bare thread death — and the surviving nodes stay usable.
+
+pub mod codec;
+pub mod remote;
+pub mod rnode;
+pub mod transport;
+
+pub use codec::{
+    decode_request, decode_response, encode_request, encode_response,
+    vec_payload_bytes, NetRequest, NetResponse, NodeConfig, WireMode,
+    MAX_FRAME_BYTES,
+};
+pub use remote::RemotePool;
+pub use rnode::{
+    run_rnode, serve_connection, serve_listener, spawn_local_listener,
+    spawn_rnode_process, LocalRnode, RnodeProcess,
+};
+pub use transport::{loopback_pair, Loopback, Tcp, Transport};

@@ -1,0 +1,620 @@
+//! `RemotePool`: the client side of the wire — shards sequences
+//! round-robin across remote R-sockets and speaks the codec over any
+//! [`Transport`]. Implements [`AttendBackend`], so the threaded
+//! pipeline, `FastDecode` and `serve::ServeEngine` drive remote nodes
+//! exactly as they drive in-process threads.
+//!
+//! Fault model: a node whose transport fails (killed process, dropped
+//! loopback peer, desynced stream) is marked DEAD with its root cause.
+//! The failing call returns a routed error — after draining every
+//! other node involved in the same scatter, so replies can never cross
+//! into the next step — and the pool itself stays usable: sequences on
+//! dead nodes can be dropped (their cache died with the node), new
+//! sequences place onto live nodes only, and attends touching only
+//! live nodes keep working. A node that merely REFUSES a request
+//! (`NetResponse::Err`) is still alive and in sync: the error is
+//! routed up without marking the node dead.
+
+use std::collections::{HashMap, HashSet};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context as _, Result};
+
+use crate::kvcache::CacheStats;
+use crate::rworker::{AttendBackend, PendingAttend, PoolStep, SeqTask};
+
+use super::codec::{
+    decode_response, encode_request, NetRequest, NetResponse, NodeConfig,
+    WireMode, MAX_FRAME_BYTES,
+};
+use super::rnode;
+use super::transport::{loopback_pair, Tcp, Transport};
+
+struct Node {
+    /// `None` once the node is dead (with the cause in `fate`).
+    transport: Option<Box<dyn Transport>>,
+    label: String,
+    /// Root cause of death, kept so later touches of the node still
+    /// name the original failure.
+    fate: Option<String>,
+}
+
+pub struct RemotePool {
+    nodes: Vec<Node>,
+    wire: WireMode,
+    placement: HashMap<u64, usize>,
+    next_node: usize,
+    name: &'static str,
+    /// Loopback server threads, joined on drop.
+    servers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl RemotePool {
+    /// Configure one already-connected transport per node: sends
+    /// `Configure` and awaits the `Ack`.
+    pub fn from_transports(
+        transports: Vec<Box<dyn Transport>>,
+        cfg: NodeConfig,
+        name: &'static str,
+    ) -> Result<RemotePool> {
+        if transports.is_empty() {
+            bail!("remote pool needs at least one node");
+        }
+        let mut nodes = Vec::with_capacity(transports.len());
+        for (i, mut t) in transports.into_iter().enumerate() {
+            let label = format!("node {i} ({})", t.peer());
+            t.send(&encode_request(&NetRequest::Configure(cfg), cfg.wire))
+                .with_context(|| format!("configuring {label}"))?;
+            let frame = t
+                .recv()
+                .with_context(|| format!("awaiting Configure ack from {label}"))?;
+            match decode_response(&frame, cfg.wire)? {
+                NetResponse::Ack => {}
+                NetResponse::Err(msg) => {
+                    bail!("{label} refused configuration: {msg}")
+                }
+                other => bail!(
+                    "{label} answered Configure with {other:?} instead of Ack"
+                ),
+            }
+            nodes.push(Node {
+                transport: Some(t),
+                label,
+                fate: None,
+            });
+        }
+        Ok(RemotePool {
+            nodes,
+            wire: cfg.wire,
+            placement: HashMap::new(),
+            next_node: 0,
+            name,
+            servers: Vec::new(),
+        })
+    }
+
+    /// An all-in-process pool: `n` rnode serving loops on background
+    /// threads, one loopback transport each. Every message round-trips
+    /// through the codec byte-for-byte as TCP would ship it.
+    pub fn loopback(cfg: NodeConfig, n: usize) -> Result<RemotePool> {
+        let mut transports: Vec<Box<dyn Transport>> = Vec::with_capacity(n);
+        let mut servers = Vec::with_capacity(n);
+        for i in 0..n {
+            let (server, client) = loopback_pair(&format!("rnode{i}"));
+            let h = std::thread::Builder::new()
+                .name(format!("rnode-loopback-{i}"))
+                .spawn(move || {
+                    if let Err(e) = rnode::serve_connection(server) {
+                        eprintln!("loopback rnode {i}: {e:#}");
+                    }
+                })
+                .context("spawning loopback rnode")?;
+            servers.push(h);
+            transports.push(Box::new(client));
+        }
+        let mut pool =
+            RemotePool::from_transports(transports, cfg, "net-loopback")?;
+        pool.servers = servers;
+        Ok(pool)
+    }
+
+    /// Connect to already-running rnode listeners (`host:port` each) —
+    /// one R-socket per address; several addresses may share one rnode
+    /// process (it serves each connection independently).
+    pub fn connect_tcp(addrs: &[String], cfg: NodeConfig) -> Result<RemotePool> {
+        let mut transports: Vec<Box<dyn Transport>> =
+            Vec::with_capacity(addrs.len());
+        for a in addrs {
+            transports.push(Box::new(Tcp::connect(a.as_str())?));
+        }
+        RemotePool::from_transports(transports, cfg, "net-tcp")
+    }
+
+    /// Live (non-dead) node count.
+    pub fn live_nodes(&self) -> usize {
+        self.nodes.iter().filter(|n| n.transport.is_some()).count()
+    }
+
+    fn mark_dead(&mut self, i: usize, cause: &anyhow::Error) {
+        let node = &mut self.nodes[i];
+        if node.transport.take().is_some() {
+            node.fate = Some(format!("{cause:#}"));
+        }
+    }
+
+    fn dead_error(&self, i: usize) -> anyhow::Error {
+        anyhow!(
+            "{} is dead: {}",
+            self.nodes[i].label,
+            self.nodes[i]
+                .fate
+                .as_deref()
+                .unwrap_or("unknown cause")
+        )
+    }
+
+    fn send_to(&mut self, i: usize, req: &NetRequest) -> Result<()> {
+        let frame = encode_request(req, self.wire);
+        if frame.len() > MAX_FRAME_BYTES {
+            // local validation failure: nothing touched the stream, the
+            // node is alive and in sync — a routed error, NOT a death
+            bail!(
+                "frame of {} bytes to {} exceeds the {} byte wire limit \
+                 (split the batch)",
+                frame.len(),
+                self.nodes[i].label,
+                MAX_FRAME_BYTES
+            );
+        }
+        let res = match self.nodes[i].transport.as_mut() {
+            None => return Err(self.dead_error(i)),
+            Some(t) => t.send(&frame),
+        };
+        if let Err(e) = res {
+            self.mark_dead(i, &e);
+            return Err(e.context(format!("sending to {}", self.nodes[i].label)));
+        }
+        Ok(())
+    }
+
+    /// Receive and decode one response from node `i`. Transport and
+    /// decode failures kill the node (the stream can no longer be
+    /// trusted); a `NetResponse::Err` does NOT — the node answered in
+    /// protocol and stays usable.
+    fn recv_from(&mut self, i: usize) -> Result<NetResponse> {
+        let res = match self.nodes[i].transport.as_mut() {
+            None => return Err(self.dead_error(i)),
+            Some(t) => t.recv(),
+        };
+        let frame = match res {
+            Ok(f) => f,
+            Err(e) => {
+                self.mark_dead(i, &e);
+                return Err(
+                    e.context(format!("receiving from {}", self.nodes[i].label))
+                );
+            }
+        };
+        match decode_response(&frame, self.wire) {
+            Ok(resp) => Ok(resp),
+            Err(e) => {
+                self.mark_dead(i, &e);
+                Err(e.context(format!(
+                    "malformed frame from {}",
+                    self.nodes[i].label
+                )))
+            }
+        }
+    }
+
+    /// One request → one reply, expecting `Ack`.
+    fn rpc_ack(&mut self, i: usize, req: &NetRequest) -> Result<()> {
+        self.send_to(i, req)?;
+        match self.recv_from(i)? {
+            NetResponse::Ack => Ok(()),
+            NetResponse::Err(msg) => {
+                bail!("{} refused: {msg}", self.nodes[i].label)
+            }
+            other => bail!(
+                "{} answered with {other:?} instead of Ack",
+                self.nodes[i].label
+            ),
+        }
+    }
+}
+
+impl AttendBackend for RemotePool {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn sockets(&self) -> usize {
+        self.nodes.len()
+    }
+
+    fn socket_of(&self, seq_id: u64) -> Option<usize> {
+        self.placement.get(&seq_id).copied()
+    }
+
+    /// Round-robin placement over LIVE nodes only — after a node
+    /// death, new sequences keep landing on the survivors.
+    /// All-or-nothing: the placement map commits only after EVERY node
+    /// acked its group; a mid-loop failure rolls the acked nodes back
+    /// (best effort), so no sequence is ever locally "placed" on a
+    /// node that never registered it, and the pool stays usable.
+    fn add_seqs(&mut self, seq_ids: &[u64]) -> Result<()> {
+        if self.live_nodes() == 0 {
+            bail!("no live nodes left in the remote pool");
+        }
+        let mut seen = HashSet::with_capacity(seq_ids.len());
+        let mut per_node: Vec<Vec<u64>> = vec![vec![]; self.nodes.len()];
+        for &id in seq_ids {
+            assert!(
+                !self.placement.contains_key(&id) && seen.insert(id),
+                "sequence {id} already placed"
+            );
+            // advance past dead nodes (live_nodes > 0 ⇒ terminates)
+            while self.nodes[self.next_node].transport.is_none() {
+                self.next_node = (self.next_node + 1) % self.nodes.len();
+            }
+            let n = self.next_node;
+            self.next_node = (self.next_node + 1) % self.nodes.len();
+            per_node[n].push(id);
+        }
+        let mut acked: Vec<usize> = Vec::new();
+        let mut first_err: Option<anyhow::Error> = None;
+        for (n, ids) in per_node.iter().enumerate() {
+            if ids.is_empty() {
+                continue;
+            }
+            match self.rpc_ack(n, &NetRequest::AddSeqs(ids.clone())) {
+                Ok(()) => acked.push(n),
+                Err(e) => {
+                    first_err = Some(e);
+                    break;
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            for n in acked {
+                // roll back so the registration is all-or-nothing
+                let _ = self
+                    .rpc_ack(n, &NetRequest::DropSeqs(per_node[n].clone()));
+            }
+            return Err(e.context("registering sequences"));
+        }
+        for (n, ids) in per_node.into_iter().enumerate() {
+            for id in ids {
+                self.placement.insert(id, n);
+            }
+        }
+        Ok(())
+    }
+
+    fn drop_seqs(&mut self, seq_ids: &[u64]) -> Result<()> {
+        let mut per_node: Vec<Vec<u64>> = vec![vec![]; self.nodes.len()];
+        for &id in seq_ids {
+            if let Some(n) = self.placement.remove(&id) {
+                per_node[n].push(id);
+            }
+        }
+        for (n, ids) in per_node.into_iter().enumerate() {
+            if ids.is_empty() || self.nodes[n].transport.is_none() {
+                // dead node: its cache died with it — unplacing locally
+                // IS the drop
+                continue;
+            }
+            self.rpc_ack(n, &NetRequest::DropSeqs(ids))
+                .context("dropping sequences")?;
+        }
+        Ok(())
+    }
+
+    fn submit_attend(
+        &mut self,
+        layer: usize,
+        tasks: Vec<SeqTask>,
+    ) -> Result<PendingAttend> {
+        let n_tasks = tasks.len();
+        let mut per_node: Vec<Vec<SeqTask>> =
+            (0..self.nodes.len()).map(|_| Vec::new()).collect();
+        for task in tasks {
+            match self.placement.get(&task.seq_id) {
+                Some(&n) => per_node[n].push(task),
+                None => bail!("sequence {} not placed", task.seq_id),
+            }
+        }
+        let mut active = Vec::new();
+        let mut first_err: Option<anyhow::Error> = None;
+        for (n, tasks) in per_node.into_iter().enumerate() {
+            if tasks.is_empty() {
+                continue;
+            }
+            match self.send_to(n, &NetRequest::Attend { layer, tasks }) {
+                Ok(()) => active.push(n),
+                Err(e) => {
+                    first_err = Some(e);
+                    break;
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            // drain what was already scattered so no reply crosses into
+            // the next attend
+            for n in active {
+                let _ = self.recv_from(n);
+            }
+            return Err(e.context("scattering attend to remote nodes"));
+        }
+        Ok(PendingAttend {
+            active,
+            layer,
+            n: n_tasks,
+        })
+    }
+
+    fn wait_attend(&mut self, pending: PendingAttend) -> Result<PoolStep> {
+        let mut outputs = HashMap::with_capacity(pending.n);
+        let mut max_busy = Duration::ZERO;
+        let mut total_busy = Duration::ZERO;
+        let mut first_err: Option<anyhow::Error> = None;
+        for n in pending.active {
+            match self.recv_from(n) {
+                Ok(NetResponse::Outputs { layer, outs, busy }) => {
+                    if layer != pending.layer {
+                        // a crossed reply means the client waited out of
+                        // submission order — a programming error, same
+                        // discipline as the in-process pool
+                        panic!(
+                            "{} replied for layer {layer}, handle is for \
+                             layer {}: attends gathered out of submission \
+                             order",
+                            self.nodes[n].label, pending.layer
+                        );
+                    }
+                    max_busy = max_busy.max(busy);
+                    total_busy += busy;
+                    for (id, o) in outs {
+                        outputs.insert(id, o);
+                    }
+                }
+                Ok(NetResponse::Err(msg)) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow!(
+                            "{} refused attend: {msg}",
+                            self.nodes[n].label
+                        ));
+                    }
+                }
+                Ok(other) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow!(
+                            "{} answered attend with {other:?}",
+                            self.nodes[n].label
+                        ));
+                    }
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e.context("gathering attend from remote nodes"));
+        }
+        if outputs.len() != pending.n {
+            bail!(
+                "attend returned {} outputs for {} tasks",
+                outputs.len(),
+                pending.n
+            );
+        }
+        Ok(PoolStep {
+            outputs,
+            max_busy,
+            total_busy,
+        })
+    }
+
+    /// Stats of LIVE nodes (dead nodes hold no cache anymore).
+    /// Scattered to every node before gathering any reply, so the
+    /// latency is one round trip, not one per node — this sits on the
+    /// serving hot path (`measured_kv_load` runs every step).
+    fn stats(&mut self) -> Result<Vec<CacheStats>> {
+        let live: Vec<usize> = (0..self.nodes.len())
+            .filter(|&i| self.nodes[i].transport.is_some())
+            .collect();
+        let mut sent: Vec<usize> = Vec::new();
+        let mut first_err: Option<anyhow::Error> = None;
+        for &i in &live {
+            match self.send_to(i, &NetRequest::Stats) {
+                Ok(()) => sent.push(i),
+                Err(e) => {
+                    first_err = Some(e);
+                    break;
+                }
+            }
+        }
+        let mut all = Vec::new();
+        for &i in &sent {
+            match self.recv_from(i) {
+                Ok(NetResponse::Stats(st)) => all.push(st),
+                Ok(NetResponse::Err(msg)) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow!(
+                            "{} refused stats: {msg}",
+                            self.nodes[i].label
+                        ));
+                    }
+                }
+                Ok(other) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow!(
+                            "{} answered stats with {other:?}",
+                            self.nodes[i].label
+                        ));
+                    }
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e.context("gathering stats from remote nodes"));
+        }
+        Ok(all)
+    }
+}
+
+impl Drop for RemotePool {
+    fn drop(&mut self) {
+        for i in 0..self.nodes.len() {
+            let _ = self.send_to(i, &NetRequest::Shutdown);
+        }
+        // loopback servers exit on Shutdown (or their peer dropping)
+        for h in self.servers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Precision, TINY};
+    use crate::util::Rng;
+
+    fn cfg(wire: WireMode) -> NodeConfig {
+        NodeConfig::from_spec(&TINY, 8, Precision::F32, wire)
+    }
+
+    fn mk_task(rng: &mut Rng, id: u64, n: usize) -> SeqTask {
+        SeqTask {
+            seq_id: id,
+            q: rng.normal_vec(n, 1.0),
+            k_new: rng.normal_vec(n, 1.0),
+            v_new: rng.normal_vec(n, 1.0),
+        }
+    }
+
+    /// Loopback pool (f32 wire) computes exactly what the in-process
+    /// thread pool computes, node count = socket count.
+    #[test]
+    fn loopback_matches_thread_pool_bitwise() {
+        use crate::rworker::{RPool, RPoolConfig};
+        let n = TINY.hidden;
+        let ids: Vec<u64> = (0..5).collect();
+        let run_remote = || {
+            let mut pool = RemotePool::loopback(cfg(WireMode::F32), 3).unwrap();
+            pool.add_seqs(&ids).unwrap();
+            let mut rng = Rng::new(42);
+            let mut last = HashMap::new();
+            for _ in 0..3 {
+                let tasks: Vec<SeqTask> =
+                    ids.iter().map(|&i| mk_task(&mut rng, i, n)).collect();
+                last = pool.attend(0, tasks).unwrap().outputs;
+            }
+            last
+        };
+        let run_threads = || {
+            let mut pool = RPool::spawn(
+                &TINY,
+                RPoolConfig {
+                    sockets: 3,
+                    capacity_per_seq: 8,
+                    precision: Precision::F32,
+                    ..Default::default()
+                },
+            );
+            pool.add_seqs(&ids).unwrap();
+            let mut rng = Rng::new(42);
+            let mut last = HashMap::new();
+            for _ in 0..3 {
+                let tasks: Vec<SeqTask> =
+                    ids.iter().map(|&i| mk_task(&mut rng, i, n)).collect();
+                last = pool.attend(0, tasks).unwrap().outputs;
+            }
+            last
+        };
+        let remote = run_remote();
+        let threads = run_threads();
+        assert_eq!(remote.len(), threads.len());
+        for (id, o) in &threads {
+            assert_eq!(&remote[id], o, "seq {id} diverged over the wire");
+        }
+    }
+
+    /// A node that refuses a request reports a routed error and stays
+    /// alive (not marked dead).
+    #[test]
+    fn refused_request_keeps_node_alive() {
+        let mut pool = RemotePool::loopback(cfg(WireMode::F16), 2).unwrap();
+        pool.add_seqs(&[1, 2]).unwrap();
+        let mut rng = Rng::new(3);
+        // seq 3 is unknown on the node: bypass placement to force the
+        // remote-side refusal
+        pool.placement.insert(3, 0);
+        let err = pool
+            .attend(0, vec![mk_task(&mut rng, 3, TINY.hidden)])
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("not placed"), "{err:#}");
+        assert_eq!(pool.live_nodes(), 2, "a refusal must not kill the node");
+        pool.placement.remove(&3);
+        // and the pool keeps attending
+        let step = pool
+            .attend(
+                0,
+                vec![
+                    mk_task(&mut rng, 1, TINY.hidden),
+                    mk_task(&mut rng, 2, TINY.hidden),
+                ],
+            )
+            .unwrap();
+        assert_eq!(step.outputs.len(), 2);
+    }
+
+    /// Killed loopback node: routed error with the disconnect as root
+    /// cause; survivors keep serving; new sequences place on live
+    /// nodes only.
+    #[test]
+    fn killed_loopback_node_routes_error_and_pool_survives() {
+        let mut pool = RemotePool::loopback(cfg(WireMode::F32), 2).unwrap();
+        // 1,3 → node 0; 2,4 → node 1
+        pool.add_seqs(&[1, 2, 3, 4]).unwrap();
+        let mut rng = Rng::new(9);
+        // kill node 0's server loop
+        pool.send_to(0, &NetRequest::Shutdown).unwrap();
+        let err = pool
+            .attend(
+                0,
+                (1..=4).map(|i| mk_task(&mut rng, i, TINY.hidden)).collect(),
+            )
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("disconnected"), "{err:#}");
+        assert_eq!(pool.live_nodes(), 1);
+        // retiring the dead node's sequences succeeds locally
+        pool.drop_seqs(&[1, 3]).unwrap();
+        // new sequences go to the survivor, and attends work
+        pool.add_seqs(&[10]).unwrap();
+        assert_eq!(pool.socket_of(10), Some(1));
+        let step = pool
+            .attend(
+                0,
+                vec![
+                    mk_task(&mut rng, 2, TINY.hidden),
+                    mk_task(&mut rng, 4, TINY.hidden),
+                    mk_task(&mut rng, 10, TINY.hidden),
+                ],
+            )
+            .unwrap();
+        assert_eq!(step.outputs.len(), 3);
+        // dead-node touches keep naming the original cause
+        let err2 = pool.rpc_ack(0, &NetRequest::Stats).unwrap_err();
+        assert!(format!("{err2:#}").contains("dead"), "{err2:#}");
+    }
+}

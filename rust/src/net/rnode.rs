@@ -1,0 +1,468 @@
+//! The `rnode` host: serves R-sockets over a [`Transport`].
+//!
+//! One connection = one R-socket. The first frame must be
+//! `Configure`; the node provisions a `SocketCache` for it and then
+//! serves `AddSeqs` / `DropSeqs` / `Attend` / `Stats` until the client
+//! sends `Shutdown` or disconnects. A listener serves any number of
+//! connections concurrently (one thread each), so a single `rnode`
+//! process can host several sockets — or several processes can host
+//! one each (the multi-node deployment the paper's §4 aggregates).
+//!
+//! Fault discipline (the remote counterpart of PR 3's `SResp::Err`):
+//! a request the node cannot honor — unknown sequence, capacity
+//! overflow, malformed task shapes, undecodable frame — is answered
+//! with `NetResponse::Err` carrying the cause, WITHOUT touching the
+//! cache (an invalid `Attend` appends nothing) and WITHOUT killing the
+//! connection: framing is length-prefixed, so the stream stays
+//! synchronized and the node keeps serving. Only a transport failure
+//! (client gone) ends the loop.
+
+use std::net::{TcpListener, ToSocketAddrs};
+use std::time::Instant;
+
+use anyhow::{bail, Context as _, Result};
+
+use crate::kvcache::SocketCache;
+use crate::rworker::{attend_one, AttnScratch, SeqTask};
+
+use super::codec::{
+    decode_request, encode_response, NetRequest, NetResponse, WireMode,
+};
+use super::transport::{Tcp, Transport};
+
+/// Serve one R-socket connection to completion. Returns `Ok` on a
+/// clean end (client `Shutdown` or disconnect after configuration),
+/// `Err` if the connection violated the protocol before it was even
+/// configured or the transport failed mid-reply.
+pub fn serve_connection<T: Transport>(mut t: T) -> Result<()> {
+    // handshake: Configure fixes dimensions and the wire mode.
+    // Configure frames carry no activations, so the decode mode is
+    // immaterial here.
+    let first = t.recv().context("awaiting Configure")?;
+    let cfg = match decode_request(&first, WireMode::F32) {
+        Ok(NetRequest::Configure(cfg)) => cfg,
+        Ok(other) => {
+            let msg = format!(
+                "protocol violation: first frame must be Configure, got \
+                 {other:?}"
+            );
+            let _ = t.send(&encode_response(
+                &NetResponse::Err(msg.clone()),
+                WireMode::F32,
+            ));
+            bail!(msg);
+        }
+        Err(e) => {
+            let msg = format!("malformed Configure frame: {e:#}");
+            let _ = t.send(&encode_response(
+                &NetResponse::Err(msg.clone()),
+                WireMode::F32,
+            ));
+            bail!(msg);
+        }
+    };
+    if cfg.n_heads == 0
+        || cfg.head_dim == 0
+        || cfg.n_layers == 0
+        || cfg.capacity_per_seq == 0
+    {
+        let msg = format!("degenerate NodeConfig {cfg:?}");
+        let _ = t
+            .send(&encode_response(&NetResponse::Err(msg.clone()), cfg.wire));
+        bail!(msg);
+    }
+    let wire = cfg.wire;
+    let mut cache = SocketCache::new(
+        cfg.n_heads,
+        cfg.head_dim,
+        cfg.n_layers,
+        cfg.capacity_per_seq,
+        cfg.precision,
+    );
+    let mut scratch = AttnScratch::new(cfg.head_dim);
+    t.send(&encode_response(&NetResponse::Ack, wire))
+        .context("acking Configure")?;
+
+    loop {
+        let frame = match t.recv() {
+            Ok(f) => f,
+            Err(_) => return Ok(()), // client gone: normal end of life
+        };
+        let resp = match decode_request(&frame, wire) {
+            Err(e) => NetResponse::Err(format!("malformed frame: {e:#}")),
+            Ok(NetRequest::Shutdown) => return Ok(()),
+            Ok(NetRequest::Configure(_)) => NetResponse::Err(
+                "protocol violation: connection already configured".into(),
+            ),
+            Ok(NetRequest::AddSeqs(ids)) => add_seqs(&mut cache, &ids),
+            Ok(NetRequest::DropSeqs(ids)) => {
+                for id in ids {
+                    cache.drop_seq(id);
+                }
+                NetResponse::Ack
+            }
+            Ok(NetRequest::Attend { layer, tasks }) => {
+                attend(&mut cache, &mut scratch, layer, tasks)
+            }
+            Ok(NetRequest::Stats) => NetResponse::Stats(cache.stats()),
+        };
+        t.send(&encode_response(&resp, wire))
+            .context("sending reply")?;
+    }
+}
+
+fn add_seqs(cache: &mut SocketCache, ids: &[u64]) -> NetResponse {
+    // validate-then-apply: a refused request must not mutate
+    for &id in ids {
+        if cache.contains(id) {
+            return NetResponse::Err(format!(
+                "sequence {id} already placed on this node"
+            ));
+        }
+    }
+    for &id in ids {
+        cache.add_seq(id);
+    }
+    NetResponse::Ack
+}
+
+/// The node-side attend: validate EVERY task, then append+attend row
+/// by row exactly like the in-process `RWorker` loop — same math, same
+/// causal row order, so loopback f32 is bit-identical to threads.
+fn attend(
+    cache: &mut SocketCache,
+    scratch: &mut AttnScratch,
+    layer: usize,
+    tasks: Vec<SeqTask>,
+) -> NetResponse {
+    if layer >= cache.n_layers {
+        return NetResponse::Err(format!(
+            "layer {layer} out of range ({} layers)",
+            cache.n_layers
+        ));
+    }
+    let width = cache.n_heads * cache.head_dim;
+    let mut seen = std::collections::HashSet::with_capacity(tasks.len());
+    for task in &tasks {
+        if !cache.contains(task.seq_id) {
+            return NetResponse::Err(format!(
+                "sequence {} not placed on this node",
+                task.seq_id
+            ));
+        }
+        if !seen.insert(task.seq_id) {
+            return NetResponse::Err(format!(
+                "duplicate task for sequence {} in one attend",
+                task.seq_id
+            ));
+        }
+        if task.q.is_empty()
+            || task.q.len() % width != 0
+            || task.k_new.len() != task.q.len()
+            || task.v_new.len() != task.q.len()
+        {
+            return NetResponse::Err(format!(
+                "seq {}: malformed task (q {} k {} v {}, width {width})",
+                task.seq_id,
+                task.q.len(),
+                task.k_new.len(),
+                task.v_new.len(),
+            ));
+        }
+        let kv = cache.get(task.seq_id, layer);
+        let rows = task.q.len() / width;
+        if rows > kv.remaining() {
+            return NetResponse::Err(format!(
+                "seq {}: {rows}-row prefill overflows KV cache \
+                 ({} of {} slots used)",
+                task.seq_id, kv.len, kv.capacity,
+            ));
+        }
+    }
+    // all valid: apply (identical loop to rworker::worker::run_loop)
+    let start = Instant::now();
+    let mut outs = Vec::with_capacity(tasks.len());
+    for task in &tasks {
+        let kv = cache.get_mut(task.seq_id, layer);
+        let rows = task.q.len() / width;
+        let mut o = vec![0.0f32; task.q.len()];
+        for r in 0..rows {
+            let s = r * width..(r + 1) * width;
+            kv.append(&task.k_new[s.clone()], &task.v_new[s.clone()]);
+            attend_one(kv, &task.q[s.clone()], &mut o[s.clone()], scratch);
+        }
+        outs.push((task.seq_id, o));
+    }
+    NetResponse::Outputs {
+        layer,
+        outs,
+        busy: start.elapsed(),
+    }
+}
+
+/// Accept loop: every connection gets its own serving thread (one
+/// R-socket each). Runs until the listener errors (or forever).
+pub fn serve_listener(listener: TcpListener) -> Result<()> {
+    for conn in listener.incoming() {
+        match conn.and_then(|s| {
+            s.peer_addr().map(|a| (s, a)) // name the thread after the peer
+        }) {
+            Ok((stream, peer)) => {
+                std::thread::Builder::new()
+                    .name(format!("rnode-{peer}"))
+                    .spawn(move || match Tcp::from_stream(stream) {
+                        Ok(t) => {
+                            if let Err(e) = serve_connection(t) {
+                                eprintln!("rnode: connection {peer}: {e:#}");
+                            }
+                        }
+                        Err(e) => {
+                            eprintln!("rnode: accepting {peer}: {e:#}")
+                        }
+                    })
+                    .context("spawning connection thread")?;
+            }
+            Err(e) => eprintln!("rnode: accept failed: {e}"),
+        }
+    }
+    Ok(())
+}
+
+/// An in-process rnode listening on a real localhost TCP port — the
+/// zero-process way to exercise the full wire path (benches, tests).
+/// The accept thread is detached; it lives until process exit.
+pub struct LocalRnode {
+    pub addr: std::net::SocketAddr,
+}
+
+/// Bind `127.0.0.1:0` (ephemeral port) and serve connections on a
+/// background thread. Real sockets, real frames — only the process
+/// boundary is elided; the `rnode` binary is the same loop behind a
+/// CLI.
+pub fn spawn_local_listener() -> Result<LocalRnode> {
+    let listener = TcpListener::bind(("127.0.0.1", 0))
+        .context("binding rnode listener on localhost")?;
+    let addr = listener.local_addr().context("resolving bound address")?;
+    std::thread::Builder::new()
+        .name(format!("rnode-listener-{addr}"))
+        .spawn(move || {
+            let _ = serve_listener(listener);
+        })
+        .context("spawning rnode listener thread")?;
+    Ok(LocalRnode { addr })
+}
+
+/// A spawned `rnode` CHILD PROCESS (killed and reaped on drop) plus
+/// its announced listen address — the shared process-management helper
+/// behind `tests/net_remote.rs` and the fig13 `--tcp` sweep.
+///
+/// The executable path comes from the caller
+/// (`env!("CARGO_BIN_EXE_rnode")`): cargo only sets that variable when
+/// compiling integration tests and benches, so the library cannot read
+/// it itself.
+pub struct RnodeProcess {
+    pub child: std::process::Child,
+    pub addr: String,
+}
+
+impl Drop for RnodeProcess {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Launch `exe --listen 127.0.0.1:0` and parse the announced ephemeral
+/// address from its stdout handshake line.
+pub fn spawn_rnode_process(exe: &str) -> Result<RnodeProcess> {
+    use std::io::BufRead as _;
+    let mut child = std::process::Command::new(exe)
+        .args(["--listen", "127.0.0.1:0"])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .with_context(|| format!("spawning rnode at {exe}"))?;
+    let stdout = child.stdout.take().context("rnode stdout not piped")?;
+    let mut line = String::new();
+    std::io::BufReader::new(stdout)
+        .read_line(&mut line)
+        .context("reading the rnode announce line")?;
+    if !line.contains("rnode listening on") {
+        let _ = child.kill();
+        bail!("unexpected rnode announce line: {line:?}");
+    }
+    let addr = line
+        .trim()
+        .rsplit(' ')
+        .next()
+        .context("address missing from announce line")?
+        .to_string();
+    Ok(RnodeProcess { child, addr })
+}
+
+/// Bind-and-serve entry point shared by the `rnode` binary: binds
+/// `addr`, announces the resolved address on stdout (so callers that
+/// asked for port 0 learn the real port), then serves forever.
+pub fn run_rnode<A: ToSocketAddrs + std::fmt::Debug>(addr: A) -> Result<()> {
+    let listener = TcpListener::bind(&addr)
+        .with_context(|| format!("binding rnode listener on {addr:?}"))?;
+    let local = listener.local_addr().context("resolving bound address")?;
+    // the "listening on" line is the machine-readable handshake the
+    // tests and the fig13 --tcp sweep parse — keep the format stable
+    println!("rnode listening on {local}");
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+    serve_listener(listener)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Precision;
+    use crate::net::codec::{encode_request, NodeConfig};
+    use crate::net::transport::loopback_pair;
+
+    fn cfg(wire: WireMode) -> NodeConfig {
+        NodeConfig {
+            n_heads: 2,
+            head_dim: 4,
+            n_layers: 1,
+            capacity_per_seq: 8,
+            precision: Precision::F32,
+            wire,
+        }
+    }
+
+    fn rpc(t: &mut impl Transport, req: &NetRequest, wire: WireMode) -> NetResponse {
+        t.send(&encode_request(req, wire)).unwrap();
+        super::super::codec::decode_response(&t.recv().unwrap(), wire).unwrap()
+    }
+
+    /// A node answers Err to a refused request and KEEPS SERVING —
+    /// including after an undecodable frame (length-prefix framing
+    /// keeps the stream synchronized).
+    #[test]
+    fn node_survives_refusals_and_malformed_frames() {
+        let (server, mut client) = loopback_pair("rnode-test");
+        let h = std::thread::spawn(move || serve_connection(server));
+        let wire = WireMode::F32;
+        assert_eq!(
+            rpc(&mut client, &NetRequest::Configure(cfg(wire)), wire),
+            NetResponse::Ack
+        );
+        // attend for an unplaced sequence → routed Err, nothing cached
+        let bad = NetRequest::Attend {
+            layer: 0,
+            tasks: vec![SeqTask {
+                seq_id: 7,
+                q: vec![1.0; 8],
+                k_new: vec![1.0; 8],
+                v_new: vec![1.0; 8],
+            }],
+        };
+        let NetResponse::Err(msg) = rpc(&mut client, &bad, wire) else {
+            panic!("expected a routed error");
+        };
+        assert!(msg.contains("not placed"), "{msg}");
+        // raw garbage → routed Err, still serving
+        client.send(&[0xde, 0xad, 0xbe, 0xef]).unwrap();
+        let resp = super::super::codec::decode_response(
+            &client.recv().unwrap(),
+            wire,
+        )
+        .unwrap();
+        assert!(matches!(resp, NetResponse::Err(m) if m.contains("malformed")));
+        // the node still works end to end
+        assert_eq!(
+            rpc(&mut client, &NetRequest::AddSeqs(vec![7]), wire),
+            NetResponse::Ack
+        );
+        let NetResponse::Outputs { outs, .. } = rpc(&mut client, &bad, wire)
+        else {
+            panic!("expected outputs after placing the sequence");
+        };
+        assert_eq!(outs.len(), 1);
+        // first token ⇒ o == v_new exactly (f32 cache, f32 wire)
+        assert_eq!(outs[0].1, vec![1.0; 8]);
+        // a rejected overflow appends NOTHING: capacity 8, one row used,
+        // a 9-row task must leave the cache at 1 token
+        let huge = NetRequest::Attend {
+            layer: 0,
+            tasks: vec![SeqTask {
+                seq_id: 7,
+                q: vec![1.0; 9 * 8],
+                k_new: vec![1.0; 9 * 8],
+                v_new: vec![1.0; 9 * 8],
+            }],
+        };
+        assert!(matches!(
+            rpc(&mut client, &huge, wire),
+            NetResponse::Err(m) if m.contains("overflows")
+        ));
+        let NetResponse::Stats(st) =
+            rpc(&mut client, &NetRequest::Stats, wire)
+        else {
+            panic!("expected stats");
+        };
+        assert_eq!(st.total_tokens, 1);
+        rpc_shutdown(&mut client, wire);
+        h.join().unwrap().unwrap();
+    }
+
+    fn rpc_shutdown(t: &mut impl Transport, wire: WireMode) {
+        t.send(&encode_request(&NetRequest::Shutdown, wire)).unwrap();
+    }
+
+    /// One in-process TCP listener ([`spawn_local_listener`]) serves
+    /// SEVERAL R-sockets — one per connection — through a full
+    /// `RemotePool` round trip over real localhost sockets.
+    #[test]
+    fn local_listener_serves_multiple_sockets_per_listener() {
+        use crate::net::remote::RemotePool;
+        use crate::rworker::AttendBackend;
+        let node = spawn_local_listener().unwrap();
+        let addr = node.addr.to_string();
+        let mut pool = RemotePool::connect_tcp(
+            &[addr.clone(), addr],
+            cfg(WireMode::F32),
+        )
+        .unwrap();
+        // 1,3 → connection 0; 2,4 → connection 1 — two independent
+        // SocketCaches behind ONE listener
+        pool.add_seqs(&[1, 2, 3, 4]).unwrap();
+        let tasks: Vec<SeqTask> = (1..=4)
+            .map(|id| SeqTask {
+                seq_id: id,
+                q: vec![1.0; 8],
+                k_new: vec![1.0; 8],
+                v_new: vec![1.0; 8],
+            })
+            .collect();
+        let step = pool.attend(0, tasks).unwrap();
+        assert_eq!(step.outputs.len(), 4);
+        // first token ⇒ o == v_new exactly (f32 cache, f32 wire)
+        assert_eq!(step.outputs[&1], vec![1.0; 8]);
+        let stats = pool.stats().unwrap();
+        assert_eq!(stats.len(), 2);
+        assert!(stats.iter().all(|s| s.sequences == 2), "{stats:?}");
+    }
+
+    /// First frame must be Configure; anything else is refused and the
+    /// connection is torn down with the cause.
+    #[test]
+    fn unconfigured_connection_is_refused() {
+        let (server, mut client) = loopback_pair("rnode-test");
+        let h = std::thread::spawn(move || serve_connection(server));
+        client
+            .send(&encode_request(&NetRequest::Stats, WireMode::F32))
+            .unwrap();
+        let resp = super::super::codec::decode_response(
+            &client.recv().unwrap(),
+            WireMode::F32,
+        )
+        .unwrap();
+        assert!(matches!(resp, NetResponse::Err(m) if m.contains("Configure")));
+        let err = h.join().unwrap().unwrap_err();
+        assert!(format!("{err:#}").contains("Configure"), "{err:#}");
+    }
+}

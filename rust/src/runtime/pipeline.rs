@@ -39,10 +39,19 @@
 //! freely with one-row decode sequences in the same pass (continuous
 //! batching).
 //!
+//! R-Part runs behind the pluggable [`AttendBackend`] trait: the same
+//! pipeline drives in-process socket threads (`RPool`), an in-process
+//! wire loopback, or real TCP connections to `rnode` processes
+//! (`crate::net::RemotePool`) — the backend is chosen at construction
+//! ([`ThreadedPipeline::with_backend`]) and the schedule never knows
+//! the difference.
+//!
 //! Error handling: any S-Part failure is routed back over the response
-//! channel as `SResp::Err` (never a bare thread death), `step()`
+//! channel as `SResp::Err` (never a bare thread death), and any R-Part
+//! failure — a dead socket thread, a killed remote node, a malformed
+//! frame — comes back as a routed `Err` from the backend. `step()`
 //! surfaces the root cause in its `Result`, and the in-flight attend is
-//! drained so the R-pool stays reusable for the next step. A failed
+//! drained so the backend stays reusable for the next step. A failed
 //! step may leave partially-appended K/V for the poisoned step behind —
 //! the pool is *reusable*, not rolled back.
 
@@ -52,7 +61,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context as _, Result};
 
-use crate::rworker::{PendingAttend, RPool, SeqTask};
+use crate::rworker::{AttendBackend, PendingAttend, RPool, SeqTask};
 use crate::sworker::NativeSWorker;
 use crate::transport::{LinkModel, PCIE4_X16, ROCE_100G};
 use crate::util::chan::{bounded, Receiver, Sender};
@@ -152,7 +161,7 @@ pub struct ThreadedPipeline {
     req_tx: Sender<SReq>,
     resp_rx: Receiver<SResp>,
     handle: Option<JoinHandle<()>>,
-    rpool: RPool,
+    pool: Box<dyn AttendBackend>,
     cfg: PipelineConfig,
     hidden: usize,
     layers: usize,
@@ -165,10 +174,25 @@ pub struct ThreadedPipeline {
 
 impl ThreadedPipeline {
     /// Spawn the S-worker thread around `sworker`; `rpool`'s socket
-    /// threads are already running.
+    /// threads are already running. Shorthand for
+    /// [`ThreadedPipeline::with_backend`] over the in-process thread
+    /// pool.
     pub fn new(
         sworker: NativeSWorker,
         rpool: RPool,
+        cfg: PipelineConfig,
+    ) -> ThreadedPipeline {
+        ThreadedPipeline::with_backend(sworker, Box::new(rpool), cfg)
+    }
+
+    /// Spawn the S-worker thread around `sworker`, running R-Part over
+    /// ANY [`AttendBackend`]: in-process socket threads (`RPool`), or
+    /// `crate::net::RemotePool` speaking the wire codec over loopback
+    /// or TCP to `rnode` hosts. The backend must already hold the
+    /// model's layer count and KV capacity.
+    pub fn with_backend(
+        sworker: NativeSWorker,
+        pool: Box<dyn AttendBackend>,
         cfg: PipelineConfig,
     ) -> ThreadedPipeline {
         let hidden = sworker.spec().hidden;
@@ -193,7 +217,7 @@ impl ThreadedPipeline {
             req_tx,
             resp_rx,
             handle: Some(handle),
-            rpool,
+            pool,
             cfg,
             hidden,
             layers,
@@ -217,12 +241,12 @@ impl ThreadedPipeline {
         self.cfg.depth
     }
 
-    pub fn rpool(&self) -> &RPool {
-        &self.rpool
+    pub fn pool(&self) -> &dyn AttendBackend {
+        self.pool.as_ref()
     }
 
-    pub fn rpool_mut(&mut self) -> &mut RPool {
-        &mut self.rpool
+    pub fn pool_mut(&mut self) -> &mut dyn AttendBackend {
+        self.pool.as_mut()
     }
 
     /// Test hook: make the S-thread fail the `nth` (0-based)
@@ -340,16 +364,16 @@ impl ThreadedPipeline {
             // the sockets with the next one: S(prev, layer+1) then runs
             // concurrently with R(mb, layer).
             if self.inflight.is_some() {
-                let (pmb, pl, o) = self.gather_inflight(ids, timing);
+                let (pmb, pl, o) = self.gather_inflight(ids, timing)?;
                 self.send_advance(pmb, pl, o)?;
             }
-            self.dispatch(mb, layer, ranges[mb], ids, &qkv, timing);
+            self.dispatch(mb, layer, ranges[mb], ids, &qkv, timing)?;
         }
         // Epilogue: drain the last attend, then collect the per-mb
         // sampled tokens (the logits-head Advances were sent in mb
         // order, so the Dones arrive in mb order).
         if self.inflight.is_some() {
-            let (pmb, pl, o) = self.gather_inflight(ids, timing);
+            let (pmb, pl, o) = self.gather_inflight(ids, timing)?;
             self.send_advance(pmb, pl, o)?;
         }
         let mut next = Vec::with_capacity(tokens.len());
@@ -373,8 +397,8 @@ impl ThreadedPipeline {
             self.send_start(mb, range, tokens)?;
             for layer in 0..layers {
                 let qkv = self.expect_qkv(mb, layer, timing)?;
-                self.dispatch(mb, layer, range, ids, &qkv, timing);
-                let (pmb, pl, o) = self.gather_inflight(ids, timing);
+                self.dispatch(mb, layer, range, ids, &qkv, timing)?;
+                let (pmb, pl, o) = self.gather_inflight(ids, timing)?;
                 self.send_advance(pmb, pl, o)?;
             }
             next.extend(self.expect_done(mb, timing)?);
@@ -390,7 +414,7 @@ impl ThreadedPipeline {
     /// Starts.
     fn recover(&mut self) {
         if let Some(inf) = self.inflight.take() {
-            let _ = self.rpool.wait_attend(inf.pending);
+            let _ = self.pool.wait_attend(inf.pending);
         }
         while self.s_outstanding > 0 {
             match self.resp_rx.recv() {
@@ -437,7 +461,7 @@ impl ThreadedPipeline {
         ids: &[u64],
         qkv: &[f32],
         timing: &mut StepTiming,
-    ) {
+    ) -> Result<()> {
         debug_assert!(self.inflight.is_none(), "attend already in flight");
         let h = self.hidden;
         debug_assert_eq!(qkv.len(), (hi - lo) * 3 * h);
@@ -472,12 +496,15 @@ impl ThreadedPipeline {
         // incast at the S-worker's NIC, then up over PCIe.
         let qkv_bytes = qkv.len() * 4;
         let o_bytes = (hi - lo) * h * 4;
-        let sockets = self.rpool.sockets();
+        let sockets = self.pool.sockets();
         timing.comm_time += self.cfg.pcie.transfer_time(qkv_bytes)
             + self.cfg.net.scatter_time(qkv_bytes, sockets)
             + self.cfg.net.gather_time(o_bytes, sockets)
             + self.cfg.pcie.transfer_time(o_bytes);
-        let pending = self.rpool.submit_attend(layer, tasks);
+        let pending = self
+            .pool
+            .submit_attend(layer, tasks)
+            .context("scattering attend to the r-pool")?;
         self.inflight = Some(Inflight {
             mb,
             layer,
@@ -485,6 +512,7 @@ impl ThreadedPipeline {
             hi,
             pending,
         });
+        Ok(())
     }
 
     /// Gather the in-flight attend's outputs in row order (a multi-row
@@ -494,9 +522,12 @@ impl ThreadedPipeline {
         &mut self,
         ids: &[u64],
         timing: &mut StepTiming,
-    ) -> (usize, usize, Vec<f32>) {
+    ) -> Result<(usize, usize, Vec<f32>)> {
         let inf = self.inflight.take().expect("no attend in flight");
-        let step = self.rpool.wait_attend(inf.pending);
+        let step = self
+            .pool
+            .wait_attend(inf.pending)
+            .context("gathering attend from the r-pool")?;
         timing.r_time += step.max_busy.as_secs_f64();
         let mut o = Vec::with_capacity((inf.hi - inf.lo) * self.hidden);
         let mut s = inf.lo;
@@ -510,7 +541,7 @@ impl ThreadedPipeline {
             s = j;
         }
         debug_assert_eq!(o.len(), (inf.hi - inf.lo) * self.hidden);
-        (inf.mb, inf.layer, o)
+        Ok((inf.mb, inf.layer, o))
     }
 
     fn recv_s(&mut self, timing: &mut StepTiming) -> Result<SResp> {

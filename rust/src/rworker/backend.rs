@@ -1,0 +1,97 @@
+//! The pluggable attend backend: the surface `ThreadedPipeline` (and
+//! through it `FastDecode` / `serve::ServeEngine`) needs from an R-Part
+//! worker pool, extracted from `RPool` so the S↔R boundary can be an
+//! in-process channel, an in-process wire loopback, or a real TCP
+//! connection to `rnode` processes (`crate::net`) without the pipeline
+//! knowing the difference.
+//!
+//! Contract shared by every implementation:
+//!
+//! * `add_seqs` places each new sequence on a socket (round-robin over
+//!   live sockets) before its first attend; `drop_seqs` releases the
+//!   KV and the placement.
+//! * `submit_attend` scatters ONE layer's tasks (at most one task per
+//!   sequence) and returns without waiting; `wait_attend` gathers the
+//!   matching outputs. Replies are FIFO per socket, so pending handles
+//!   must be waited in submission order; at most one attend may be in
+//!   flight per backend in the current pipeline (see
+//!   `runtime::pipeline`).
+//! * Failures — a dead worker thread, a killed remote node, a malformed
+//!   frame — surface as `Err` with the root cause, never as a hang or a
+//!   bare panic inside the backend. After an error the backend must
+//!   stay usable for sequences placed on its surviving sockets.
+
+use anyhow::Result;
+use std::collections::HashMap;
+use std::time::Duration;
+
+use crate::kvcache::CacheStats;
+
+use super::worker::SeqTask;
+
+/// Handle to an attend that has been scattered to the sockets but not
+/// yet gathered (returned by [`AttendBackend::submit_attend`]).
+pub struct PendingAttend {
+    /// Socket indices that received tasks, in scatter order.
+    pub(crate) active: Vec<usize>,
+    /// Echoed layer tag (out-of-order gathers fail loudly).
+    pub(crate) layer: usize,
+    /// Total task count (outputs are counted against it).
+    pub(crate) n: usize,
+}
+
+/// Outputs of one pooled attend call.
+pub struct PoolStep {
+    /// seq_id → attention output `[T*H*D]` (row-major over the task's
+    /// rows).
+    pub outputs: HashMap<u64, Vec<f32>>,
+    /// Max busy time across sockets (the pipeline-visible R latency).
+    pub max_busy: Duration,
+    /// Sum of busy times (for utilization accounting).
+    pub total_busy: Duration,
+}
+
+/// R-Part worker pool abstraction: in-process threads (`RPool`), wire
+/// loopback or TCP remote nodes (`crate::net::RemotePool`).
+pub trait AttendBackend: Send {
+    /// Short backend label for traces and bench tables.
+    fn name(&self) -> &'static str;
+
+    /// Number of sockets (including dead ones — indices stay stable).
+    fn sockets(&self) -> usize;
+
+    /// Socket a sequence is placed on, if any.
+    fn socket_of(&self, seq_id: u64) -> Option<usize>;
+
+    /// Place and register new sequences (round-robin over live sockets).
+    fn add_seqs(&mut self, seq_ids: &[u64]) -> Result<()>;
+
+    /// Drop finished sequences and free their cache. Sequences placed
+    /// on a dead socket are unplaced locally (their cache died with the
+    /// socket) — dropping them is not an error.
+    fn drop_seqs(&mut self, seq_ids: &[u64]) -> Result<()>;
+
+    /// Scatter one layer's tasks to their sockets WITHOUT waiting for
+    /// the results. At most one task per sequence per call (outputs are
+    /// keyed by `seq_id`). On error, sockets that already received
+    /// tasks are drained before returning so the backend stays in sync.
+    fn submit_attend(
+        &mut self,
+        layer: usize,
+        tasks: Vec<SeqTask>,
+    ) -> Result<PendingAttend>;
+
+    /// Gather one in-flight attend. On a socket failure the remaining
+    /// sockets are still drained (no crossed replies for the next
+    /// step), then the first root cause is returned.
+    fn wait_attend(&mut self, pending: PendingAttend) -> Result<PoolStep>;
+
+    /// Aggregate cache statistics, one entry per live socket.
+    fn stats(&mut self) -> Result<Vec<CacheStats>>;
+
+    /// Scatter one layer's tasks, attend in parallel, gather.
+    fn attend(&mut self, layer: usize, tasks: Vec<SeqTask>) -> Result<PoolStep> {
+        let pending = self.submit_attend(layer, tasks)?;
+        self.wait_attend(pending)
+    }
+}

@@ -7,11 +7,13 @@
 //! it in a thread + channels; `pool` fans a batch out across sockets.
 
 mod attention;
+mod backend;
 mod pool;
 mod worker;
 
 pub use attention::{
     attend_one, attend_one_f32, stream_bandwidth_probe, AttnScratch,
 };
-pub use pool::{PendingAttend, PoolStep, RPool, RPoolConfig};
+pub use backend::{AttendBackend, PendingAttend, PoolStep};
+pub use pool::{RPool, RPoolConfig};
 pub use worker::{RRequest, RResponse, RWorker, SeqTask};

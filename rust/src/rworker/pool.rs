@@ -7,12 +7,22 @@
 //! preserving; round-robin keeps per-socket total sequence length
 //! balanced when combined with the SLS schedule (sequences of mixed ages
 //! land on every socket).
+//!
+//! `RPool` is the in-process implementation of
+//! [`AttendBackend`] — the same surface `crate::net::RemotePool`
+//! provides over wire loopback or TCP. A dead socket thread surfaces as
+//! a routed error carrying its panic payload ([`RWorker::recv`]); on a
+//! mid-gather failure the surviving sockets are still drained so the
+//! pool stays reusable for the sequences they hold.
 
 use std::collections::HashMap;
 use std::time::Duration;
 
+use anyhow::{bail, Result};
+
 use crate::model::{ModelSpec, Precision};
 
+pub use super::backend::{AttendBackend, PendingAttend, PoolStep};
 use super::worker::{RRequest, RResponse, RWorker, SeqTask};
 
 #[derive(Clone, Copy, Debug)]
@@ -37,24 +47,6 @@ impl Default for RPoolConfig {
             attend_pad: Duration::ZERO,
         }
     }
-}
-
-/// Handle to an attend that has been scattered to the sockets but not
-/// yet gathered (returned by [`RPool::submit_attend`]).
-pub struct PendingAttend {
-    active: Vec<usize>,
-    layer: usize,
-    n: usize,
-}
-
-/// Outputs of one pooled attend call.
-pub struct PoolStep {
-    /// seq_id → attention output `[H*D]`.
-    pub outputs: HashMap<u64, Vec<f32>>,
-    /// Max busy time across sockets (the pipeline-visible R latency).
-    pub max_busy: Duration,
-    /// Sum of busy times (for utilization accounting).
-    pub total_busy: Duration,
 }
 
 pub struct RPool {
@@ -94,34 +86,78 @@ impl RPool {
         self.placement.get(&seq_id).copied()
     }
 
-    /// Place and register new sequences (round-robin).
-    pub fn add_seqs(&mut self, seq_ids: &[u64]) {
+    /// Fault-injection hook: shut socket `s` down so its thread exits
+    /// with the pool still holding placements on it — the next request
+    /// touching it surfaces a disconnect error. Used by the killed-node
+    /// regression tests; production code never calls it.
+    pub fn kill_socket_for_test(&mut self, s: usize) {
+        let _ = self.workers[s].submit(RRequest::Shutdown);
+    }
+
+    /// Place and register new sequences (round-robin). All-or-nothing:
+    /// the placement map is committed only after EVERY socket acked its
+    /// group — a mid-loop socket failure rolls the acked sockets back
+    /// (best effort), so no sequence is ever locally "placed" on a
+    /// socket that never registered it, and the pool stays usable.
+    pub fn add_seqs(&mut self, seq_ids: &[u64]) -> Result<()> {
+        let mut seen = std::collections::HashSet::with_capacity(seq_ids.len());
         let mut per_socket: Vec<Vec<u64>> = vec![vec![]; self.workers.len()];
         for &id in seq_ids {
             assert!(
-                !self.placement.contains_key(&id),
+                !self.placement.contains_key(&id) && seen.insert(id),
                 "sequence {id} already placed"
             );
             let s = self.next_socket;
             self.next_socket = (self.next_socket + 1) % self.workers.len();
-            self.placement.insert(id, s);
             per_socket[s].push(id);
         }
-        for (s, ids) in per_socket.into_iter().enumerate() {
-            if !ids.is_empty() {
-                self.workers[s].submit(RRequest::AddSeqs(ids));
-            } else {
+        let mut acked: Vec<usize> = Vec::new();
+        let mut first_err: Option<anyhow::Error> = None;
+        for (s, ids) in per_socket.iter().enumerate() {
+            if ids.is_empty() {
                 continue;
             }
-            match self.workers[s].recv() {
-                RResponse::Ack => {}
-                _ => panic!("expected ack from socket {s}"),
+            let res = (|| -> Result<()> {
+                self.workers[s].submit(RRequest::AddSeqs(ids.clone()))?;
+                match self.workers[s].recv()? {
+                    RResponse::Ack => Ok(()),
+                    _ => bail!("expected ack from socket {s}"),
+                }
+            })();
+            match res {
+                Ok(()) => acked.push(s),
+                Err(e) => {
+                    first_err = Some(e);
+                    break;
+                }
             }
         }
+        if let Some(e) = first_err {
+            for s in acked {
+                // roll back so the registration is all-or-nothing
+                if self
+                    .workers[s]
+                    .submit(RRequest::DropSeqs(per_socket[s].clone()))
+                    .is_ok()
+                {
+                    let _ = self.workers[s].recv();
+                }
+            }
+            return Err(e);
+        }
+        for (s, ids) in per_socket.into_iter().enumerate() {
+            for id in ids {
+                self.placement.insert(id, s);
+            }
+        }
+        Ok(())
     }
 
-    /// Drop finished sequences and free their cache.
-    pub fn drop_seqs(&mut self, seq_ids: &[u64]) {
+    /// Drop finished sequences and free their cache. Sequences placed
+    /// on a DEAD socket are unplaced locally without error — their
+    /// cache died with the socket, and retiring them is exactly how a
+    /// caller makes the pool reusable after a socket failure.
+    pub fn drop_seqs(&mut self, seq_ids: &[u64]) -> Result<()> {
         let mut per_socket: Vec<Vec<u64>> = vec![vec![]; self.workers.len()];
         for &id in seq_ids {
             if let Some(s) = self.placement.remove(&id) {
@@ -132,12 +168,16 @@ impl RPool {
             if ids.is_empty() {
                 continue;
             }
-            self.workers[s].submit(RRequest::DropSeqs(ids));
+            if self.workers[s].submit(RRequest::DropSeqs(ids)).is_err() {
+                continue; // dead socket: placement removal is the effect
+            }
             match self.workers[s].recv() {
-                RResponse::Ack => {}
-                _ => panic!("expected ack from socket {s}"),
+                Ok(RResponse::Ack) => {}
+                Ok(_) => bail!("expected ack from socket {s}"),
+                Err(_) => continue, // died mid-drop: same as above
             }
         }
+        Ok(())
     }
 
     /// Scatter one layer's tasks to their sockets WITHOUT waiting for
@@ -151,42 +191,59 @@ impl RPool {
     /// counts outputs against tasks and panics if that happens. Multi-
     /// token work for one sequence travels as ONE multi-row task (see
     /// [`SeqTask`]).
+    ///
+    /// On error (unplaced sequence, dead socket) the sockets that were
+    /// already handed tasks are drained before returning, so no stale
+    /// reply can cross into the next attend.
     pub fn submit_attend(
         &mut self,
         layer: usize,
         tasks: Vec<SeqTask>,
-    ) -> PendingAttend {
+    ) -> Result<PendingAttend> {
         let n = tasks.len();
         let mut per_socket: Vec<Vec<SeqTask>> =
             (0..self.workers.len()).map(|_| Vec::new()).collect();
         for task in tasks {
-            let s = *self
-                .placement
-                .get(&task.seq_id)
-                .unwrap_or_else(|| panic!("sequence {} not placed", task.seq_id));
-            per_socket[s].push(task);
+            match self.placement.get(&task.seq_id) {
+                Some(&s) => per_socket[s].push(task),
+                None => bail!("sequence {} not placed", task.seq_id),
+            }
         }
         let mut active = Vec::new();
         for (s, tasks) in per_socket.into_iter().enumerate() {
-            if !tasks.is_empty() {
-                self.workers[s].submit(RRequest::Attend { layer, tasks });
-                active.push(s);
+            if tasks.is_empty() {
+                continue;
             }
+            if let Err(e) = self.workers[s].submit(RRequest::Attend {
+                layer,
+                tasks,
+            }) {
+                // drain what was already scattered, then surface the
+                // root cause
+                for &a in &active {
+                    let _ = self.workers[a].recv();
+                }
+                return Err(e);
+            }
+            active.push(s);
         }
-        PendingAttend { active, layer, n }
+        Ok(PendingAttend { active, layer, n })
     }
 
     /// Gather one in-flight attend. Replies are FIFO per socket, so
     /// pending handles must be waited in submission order; the echoed
     /// layer tag and output count turn an out-of-order wait into a
-    /// panic instead of silently crossed activations.
-    pub fn wait_attend(&mut self, pending: PendingAttend) -> PoolStep {
+    /// panic instead of silently crossed activations. A dead socket
+    /// surfaces as an error AFTER the surviving sockets are drained, so
+    /// the pool stays in sync for the next step.
+    pub fn wait_attend(&mut self, pending: PendingAttend) -> Result<PoolStep> {
         let mut outputs = HashMap::with_capacity(pending.n);
         let mut max_busy = Duration::ZERO;
         let mut total_busy = Duration::ZERO;
+        let mut first_err: Option<anyhow::Error> = None;
         for s in pending.active {
             match self.workers[s].recv() {
-                RResponse::Outputs { layer, outs, busy } => {
+                Ok(RResponse::Outputs { layer, outs, busy }) => {
                     assert_eq!(
                         layer, pending.layer,
                         "socket {s} replied for layer {layer}, \
@@ -200,8 +257,22 @@ impl RPool {
                         outputs.insert(id, o);
                     }
                 }
-                _ => panic!("expected outputs from socket {s}"),
+                Ok(_) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow::anyhow!(
+                            "expected outputs from socket {s}"
+                        ));
+                    }
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
             }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
         }
         assert_eq!(
             outputs.len(),
@@ -210,11 +281,11 @@ impl RPool {
             outputs.len(),
             pending.n
         );
-        PoolStep {
+        Ok(PoolStep {
             outputs,
             max_busy,
             total_busy,
-        }
+        })
     }
 
     /// Scatter one layer's tasks to sockets, attend in parallel, gather.
@@ -222,22 +293,57 @@ impl RPool {
     /// All sockets compute concurrently; the returned `max_busy` is what
     /// the token-level pipeline sees as R-Part latency (Fig 15's
     /// "performance variance across nodes makes some workers wait").
-    pub fn attend(&mut self, layer: usize, tasks: Vec<SeqTask>) -> PoolStep {
-        let pending = self.submit_attend(layer, tasks);
+    pub fn attend(
+        &mut self,
+        layer: usize,
+        tasks: Vec<SeqTask>,
+    ) -> Result<PoolStep> {
+        let pending = self.submit_attend(layer, tasks)?;
         self.wait_attend(pending)
     }
 
     /// Aggregate cache statistics across sockets.
-    pub fn stats(&self) -> Vec<crate::kvcache::CacheStats> {
+    pub fn stats(&mut self) -> Result<Vec<crate::kvcache::CacheStats>> {
         let mut all = Vec::new();
-        for w in &self.workers {
-            w.submit(RRequest::Stats);
-            match w.recv() {
+        for w in &mut self.workers {
+            w.submit(RRequest::Stats)?;
+            match w.recv()? {
                 RResponse::Stats(st) => all.push(st),
-                _ => panic!("expected stats"),
+                _ => bail!("expected stats"),
             }
         }
-        all
+        Ok(all)
+    }
+}
+
+impl AttendBackend for RPool {
+    fn name(&self) -> &'static str {
+        "rpool-threads"
+    }
+    fn sockets(&self) -> usize {
+        RPool::sockets(self)
+    }
+    fn socket_of(&self, seq_id: u64) -> Option<usize> {
+        RPool::socket_of(self, seq_id)
+    }
+    fn add_seqs(&mut self, seq_ids: &[u64]) -> Result<()> {
+        RPool::add_seqs(self, seq_ids)
+    }
+    fn drop_seqs(&mut self, seq_ids: &[u64]) -> Result<()> {
+        RPool::drop_seqs(self, seq_ids)
+    }
+    fn submit_attend(
+        &mut self,
+        layer: usize,
+        tasks: Vec<SeqTask>,
+    ) -> Result<PendingAttend> {
+        RPool::submit_attend(self, layer, tasks)
+    }
+    fn wait_attend(&mut self, pending: PendingAttend) -> Result<PoolStep> {
+        RPool::wait_attend(self, pending)
+    }
+    fn stats(&mut self) -> Result<Vec<crate::kvcache::CacheStats>> {
+        RPool::stats(self)
     }
 }
 
@@ -267,7 +373,7 @@ mod tests {
                 ..Default::default()
             },
         );
-        pool.add_seqs(&[0, 1, 2, 3, 4, 5]);
+        pool.add_seqs(&[0, 1, 2, 3, 4, 5]).unwrap();
         let mut counts = [0usize; 3];
         for id in 0..6u64 {
             counts[pool.socket_of(id).unwrap()] += 1;
@@ -290,13 +396,13 @@ mod tests {
                 },
             );
             let ids: Vec<u64> = (0..5).collect();
-            pool.add_seqs(&ids);
+            pool.add_seqs(&ids).unwrap();
             let mut rng = Rng::new(42);
             let mut last = HashMap::new();
             for _ in 0..3 {
                 let tasks: Vec<SeqTask> =
                     ids.iter().map(|&i| mk_task(&mut rng, i, n)).collect();
-                last = pool.attend(0, tasks).outputs;
+                last = pool.attend(0, tasks).unwrap().outputs;
             }
             last
         };
@@ -322,20 +428,58 @@ mod tests {
                 ..Default::default()
             },
         );
-        pool.add_seqs(&[1, 2, 3, 4]);
-        let before: usize = pool.stats().iter().map(|s| s.sequences).sum();
+        pool.add_seqs(&[1, 2, 3, 4]).unwrap();
+        let before: usize =
+            pool.stats().unwrap().iter().map(|s| s.sequences).sum();
         assert_eq!(before, 4);
-        pool.drop_seqs(&[2, 3]);
-        let after: usize = pool.stats().iter().map(|s| s.sequences).sum();
+        pool.drop_seqs(&[2, 3]).unwrap();
+        let after: usize =
+            pool.stats().unwrap().iter().map(|s| s.sequences).sum();
         assert_eq!(after, 2);
         assert_eq!(pool.socket_of(2), None);
     }
 
     #[test]
-    #[should_panic(expected = "not placed")]
-    fn attend_unplaced_panics() {
+    fn attend_unplaced_is_routed_error() {
         let mut pool = RPool::spawn(&TINY, RPoolConfig::default());
         let mut rng = Rng::new(1);
-        pool.attend(0, vec![mk_task(&mut rng, 99, TINY.hidden)]);
+        let err = pool
+            .attend(0, vec![mk_task(&mut rng, 99, TINY.hidden)])
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("not placed"), "{err:#}");
+    }
+
+    /// Killed-node regression (in-proc backend): a socket that dies
+    /// with placements still on it surfaces a routed error on the next
+    /// attend — not a hang — and the surviving socket keeps serving its
+    /// own sequences through the SAME pool.
+    #[test]
+    fn killed_socket_errors_and_pool_survives() {
+        let n = TINY.hidden;
+        let mut pool = RPool::spawn(
+            &TINY,
+            RPoolConfig {
+                sockets: 2,
+                capacity_per_seq: 8,
+                precision: Precision::F32,
+                ..Default::default()
+            },
+        );
+        // round-robin: 0,2 → socket 0; 1,3 → socket 1
+        pool.add_seqs(&[0, 1, 2, 3]).unwrap();
+        let mut rng = Rng::new(7);
+        pool.kill_socket_for_test(0);
+        let tasks: Vec<SeqTask> =
+            (0..4).map(|i| mk_task(&mut rng, i, n)).collect();
+        let err = pool.attend(0, tasks).unwrap_err();
+        assert!(format!("{err:#}").contains("died"), "{err:#}");
+        // sequences on the dead socket drop locally; the survivor still
+        // attends its own (the failed gather drained it, so replies
+        // cannot cross)
+        pool.drop_seqs(&[0, 2]).unwrap();
+        let step = pool
+            .attend(0, vec![mk_task(&mut rng, 1, n), mk_task(&mut rng, 3, n)])
+            .unwrap();
+        assert_eq!(step.outputs.len(), 2);
     }
 }

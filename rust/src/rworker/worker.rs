@@ -4,6 +4,8 @@
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use anyhow::{anyhow, Result};
+
 use crate::kvcache::{CacheStats, SocketCache};
 use crate::model::Precision;
 use crate::util::chan::{bounded, Receiver, Sender};
@@ -20,6 +22,7 @@ use super::attention::{attend_one, AttnScratch};
 /// positions 0..=p of the cache — a causal multi-token prefill in one
 /// round trip. At most one task per sequence may appear in a single
 /// `Attend` request (outputs are keyed by `seq_id`).
+#[derive(Clone, Debug, PartialEq)]
 pub struct SeqTask {
     pub seq_id: u64,
     /// `[T * H * D]` each, row-major over T positions, head-major
@@ -110,16 +113,56 @@ impl RWorker {
         }
     }
 
-    /// Fire a request (does not wait for the reply).
-    pub fn submit(&self, req: RRequest) {
+    /// Fire a request (does not wait for the reply). Fails — with the
+    /// worker's panic payload as the root cause — if the socket thread
+    /// has died.
+    pub fn submit(&mut self, req: RRequest) -> Result<()> {
         if self.tx.send(req).is_err() {
-            panic!("rworker thread died");
+            let cause = self.death_cause();
+            return Err(anyhow!(
+                "r-worker socket {} died: {cause}",
+                self.socket_id
+            ));
+        }
+        Ok(())
+    }
+
+    /// Wait for the next reply. A dead peer surfaces as an error
+    /// carrying the root cause (the thread's panic payload), never as
+    /// a hang or a bare "thread died": the worker drops its response
+    /// sender on ANY exit path, so a disconnect is always observable.
+    pub fn recv(&mut self) -> Result<RResponse> {
+        match self.rx.recv() {
+            Ok(resp) => Ok(resp),
+            Err(_) => {
+                let cause = self.death_cause();
+                Err(anyhow!(
+                    "r-worker socket {} died: {cause}",
+                    self.socket_id
+                ))
+            }
         }
     }
 
-    /// Wait for the next reply.
-    pub fn recv(&self) -> RResponse {
-        self.rx.recv().expect("rworker thread died")
+    /// Reap the dead thread and extract why it exited. Joining here is
+    /// safe: the response channel only disconnects once the thread body
+    /// has returned or begun unwinding.
+    fn death_cause(&mut self) -> String {
+        match self.handle.take() {
+            Some(h) => match h.join() {
+                Ok(()) => "worker exited (shutdown) with requests \
+                           outstanding"
+                    .to_string(),
+                Err(payload) => payload
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| {
+                        payload.downcast_ref::<&str>().map(|s| s.to_string())
+                    })
+                    .unwrap_or_else(|| "worker panicked".to_string()),
+            },
+            None => "worker already reaped".to_string(),
+        }
     }
 }
 
@@ -224,9 +267,10 @@ mod tests {
     #[test]
     fn worker_appends_and_attends() {
         let (h, d) = (2, 4);
-        let w = RWorker::spawn(0, h, d, 1, 16, Precision::F32, Duration::ZERO);
-        w.submit(RRequest::AddSeqs(vec![1, 2]));
-        assert!(matches!(w.recv(), RResponse::Ack));
+        let mut w =
+            RWorker::spawn(0, h, d, 1, 16, Precision::F32, Duration::ZERO);
+        w.submit(RRequest::AddSeqs(vec![1, 2])).unwrap();
+        assert!(matches!(w.recv().unwrap(), RResponse::Ack));
 
         let mut rng = Rng::new(3);
         let mk = |rng: &mut Rng, id| SeqTask {
@@ -240,8 +284,9 @@ mod tests {
         w.submit(RRequest::Attend {
             layer: 0,
             tasks: vec![t1, mk(&mut rng, 2)],
-        });
-        match w.recv() {
+        })
+        .unwrap();
+        match w.recv().unwrap() {
             RResponse::Outputs { outs, .. } => {
                 assert_eq!(outs.len(), 2);
                 assert_eq!(outs[0].0, 1);
@@ -253,8 +298,8 @@ mod tests {
             _ => panic!("expected outputs"),
         }
 
-        w.submit(RRequest::Stats);
-        match w.recv() {
+        w.submit(RRequest::Stats).unwrap();
+        match w.recv().unwrap() {
             RResponse::Stats(st) => {
                 assert_eq!(st.sequences, 2);
                 assert_eq!(st.total_tokens, 2);
@@ -262,10 +307,10 @@ mod tests {
             _ => panic!("expected stats"),
         }
 
-        w.submit(RRequest::DropSeqs(vec![1]));
-        assert!(matches!(w.recv(), RResponse::Ack));
-        w.submit(RRequest::Stats);
-        match w.recv() {
+        w.submit(RRequest::DropSeqs(vec![1])).unwrap();
+        assert!(matches!(w.recv().unwrap(), RResponse::Ack));
+        w.submit(RRequest::Stats).unwrap();
+        match w.recv().unwrap() {
             RResponse::Stats(st) => assert_eq!(st.sequences, 1),
             _ => panic!(),
         }
@@ -287,10 +332,10 @@ mod tests {
         let probe_v = rng.normal_vec(width, 1.0);
 
         let run = |multi: bool| -> (Vec<f32>, Vec<f32>) {
-            let w =
+            let mut w =
                 RWorker::spawn(0, h, d, 1, 16, Precision::F32, Duration::ZERO);
-            w.submit(RRequest::AddSeqs(vec![1]));
-            assert!(matches!(w.recv(), RResponse::Ack));
+            w.submit(RRequest::AddSeqs(vec![1])).unwrap();
+            assert!(matches!(w.recv().unwrap(), RResponse::Ack));
             let mut prefill_out = Vec::new();
             if multi {
                 w.submit(RRequest::Attend {
@@ -301,8 +346,9 @@ mod tests {
                         k_new: k.clone(),
                         v_new: v.clone(),
                     }],
-                });
-                match w.recv() {
+                })
+                .unwrap();
+                match w.recv().unwrap() {
                     RResponse::Outputs { outs, .. } => {
                         prefill_out = outs[0].1.clone()
                     }
@@ -319,8 +365,9 @@ mod tests {
                             k_new: k[s.clone()].to_vec(),
                             v_new: v[s.clone()].to_vec(),
                         }],
-                    });
-                    match w.recv() {
+                    })
+                    .unwrap();
+                    match w.recv().unwrap() {
                         RResponse::Outputs { outs, .. } => {
                             prefill_out.extend_from_slice(&outs[0].1)
                         }
@@ -337,8 +384,9 @@ mod tests {
                     k_new: probe_k.clone(),
                     v_new: probe_v.clone(),
                 }],
-            });
-            let probe_out = match w.recv() {
+            })
+            .unwrap();
+            let probe_out = match w.recv().unwrap() {
                 RResponse::Outputs { outs, .. } => outs[0].1.clone(),
                 _ => panic!("expected outputs"),
             };
@@ -352,37 +400,46 @@ mod tests {
 
     /// A multi-row task that would overflow the per-sequence capacity
     /// kills the worker on the guard assertion (before any append
-    /// lands), which surfaces as a "thread died" panic at the next recv.
+    /// lands). Regression (killed-peer discipline): the next `recv`
+    /// must return an error CARRYING the guard's message as the root
+    /// cause — not hang, not panic with a bare "thread died".
     #[test]
-    fn multi_row_overflow_rejected_by_worker() {
+    fn multi_row_overflow_surfaces_root_cause() {
         let (h, d) = (1usize, 4usize);
-        let result = std::panic::catch_unwind(|| {
-            let w =
-                RWorker::spawn(0, h, d, 1, 4, Precision::F32, Duration::ZERO);
-            w.submit(RRequest::AddSeqs(vec![1]));
-            assert!(matches!(w.recv(), RResponse::Ack));
-            let mut rng = Rng::new(2);
-            let rows = 5; // capacity is 4
-            w.submit(RRequest::Attend {
-                layer: 0,
-                tasks: vec![SeqTask {
-                    seq_id: 1,
-                    q: rng.normal_vec(rows * h * d, 1.0),
-                    k_new: rng.normal_vec(rows * h * d, 1.0),
-                    v_new: rng.normal_vec(rows * h * d, 1.0),
-                }],
-            });
-            let _ = w.recv(); // the guard fired; the channel is dead
-        });
-        assert!(result.is_err(), "overflowing prefill must be rejected");
+        let mut w =
+            RWorker::spawn(0, h, d, 1, 4, Precision::F32, Duration::ZERO);
+        w.submit(RRequest::AddSeqs(vec![1])).unwrap();
+        assert!(matches!(w.recv().unwrap(), RResponse::Ack));
+        let mut rng = Rng::new(2);
+        let rows = 5; // capacity is 4
+        w.submit(RRequest::Attend {
+            layer: 0,
+            tasks: vec![SeqTask {
+                seq_id: 1,
+                q: rng.normal_vec(rows * h * d, 1.0),
+                k_new: rng.normal_vec(rows * h * d, 1.0),
+                v_new: rng.normal_vec(rows * h * d, 1.0),
+            }],
+        })
+        .unwrap();
+        let err = w.recv().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("overflows KV cache"),
+            "disconnect lost the root cause: {msg}"
+        );
+        // a second use keeps erroring instead of hanging
+        let err2 = w.submit(RRequest::Stats).unwrap_err();
+        assert!(format!("{err2:#}").contains("died"), "{err2:#}");
     }
 
     #[test]
     fn growing_sequence_is_consistent() {
         let (h, d) = (1, 8);
-        let w = RWorker::spawn(0, h, d, 2, 32, Precision::F16, Duration::ZERO);
-        w.submit(RRequest::AddSeqs(vec![7]));
-        w.recv();
+        let mut w =
+            RWorker::spawn(0, h, d, 2, 32, Precision::F16, Duration::ZERO);
+        w.submit(RRequest::AddSeqs(vec![7])).unwrap();
+        w.recv().unwrap();
         let mut rng = Rng::new(4);
         for step in 0..10 {
             for layer in 0..2 {
@@ -394,8 +451,9 @@ mod tests {
                         k_new: rng.normal_vec(h * d, 1.0),
                         v_new: rng.normal_vec(h * d, 1.0),
                     }],
-                });
-                match w.recv() {
+                })
+                .unwrap();
+                match w.recv().unwrap() {
                     RResponse::Outputs { outs, .. } => {
                         assert!(outs[0].1.iter().all(|x| x.is_finite()),
                             "step {step}");
@@ -404,8 +462,8 @@ mod tests {
                 }
             }
         }
-        w.submit(RRequest::Stats);
-        match w.recv() {
+        w.submit(RRequest::Stats).unwrap();
+        match w.recv().unwrap() {
             RResponse::Stats(st) => assert_eq!(st.total_tokens, 20),
             _ => panic!(),
         }

@@ -262,7 +262,7 @@ impl ServeEngine {
                 let (_, meta) = waiting.remove(sel);
                 let r = &trace[meta.idx];
                 let seq_id = self.fd.alloc_seq_ids(1)[0];
-                self.fd.register_seqs(&[seq_id]);
+                self.fd.register_seqs(&[seq_id])?;
                 let slot = slots.free_slot().expect("free slot checked");
                 total_wait_steps += t - meta.arrive_step;
                 slots.place(
@@ -334,7 +334,7 @@ impl ServeEngine {
             // measure the aggregate KV load this pass actually held,
             // BEFORE finished sequences release their caches — this is
             // what W_lim must bound
-            let kv_load = self.fd.measured_kv_load();
+            let kv_load = self.fd.measured_kv_load()?;
             let mut finished_seqs: Vec<u64> = Vec::new();
             let mut row = 0usize;
             for seg in &segs {
@@ -381,7 +381,7 @@ impl ServeEngine {
                 }
             }
             if !finished_seqs.is_empty() {
-                self.fd.retire_seqs(&finished_seqs);
+                self.fd.retire_seqs(&finished_seqs)?;
             }
             steps.push(StepRecord {
                 step: t,

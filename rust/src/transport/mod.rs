@@ -1,11 +1,25 @@
-//! Interconnect models (paper Table 3) and the activation message format.
+//! MODELED interconnects (paper Table 3) and the activation message
+//! byte accounting — the pricing side of the wire, not the wire itself.
 //!
 //! The paper's testbed ships QKV/O vectors over PCIe + 100 Gb RoCE /
-//! Infiniband. Offline we carry the *actual tensors* over in-process
-//! channels and charge *modeled* wire time for the real byte counts —
-//! comm cost is bandwidth-dominated, so latency+bandwidth over true
-//! message sizes preserves Table 3 and Fig 15's ~25 % overhead
-//! (DESIGN.md §2).
+//! Infiniband. This module answers "what WOULD that traffic cost":
+//! [`LinkModel`] charges latency+bandwidth (plus scatter/gather
+//! per-message overheads) against true byte counts, so the offline
+//! benches reproduce Table 3 and Fig 15's ~25 % comm overhead without
+//! a cluster — comm cost is bandwidth-dominated, so the model is
+//! faithful at message sizes that matter (DESIGN.md §2).
+//!
+//! The REAL wire lives in `crate::net`: a length-prefixed binary codec
+//! actually framing `RRequest`/`RResponse` over loopback or TCP to
+//! `rnode` host processes. The two stay pinned to each other:
+//! [`qkv_message_bytes`] / [`o_message_bytes`] (fp16, Table 3
+//! "Intermediate Vectors") equal the codec's encoded f16 payload sizes
+//! byte-for-byte (`tests/net_remote.rs::
+//! modeled_bytes_match_f16_frame_payloads`), so the cost model can
+//! never silently drift from what the transport ships. Use `net` when
+//! bytes must actually move; use this module when a bench needs the
+//! priced wire time of a deployment-scale link that this machine does
+//! not have.
 
 /// A point-to-point link: fixed latency + bandwidth.
 #[derive(Clone, Copy, Debug, PartialEq)]

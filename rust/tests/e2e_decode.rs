@@ -129,7 +129,7 @@ fn decomposed_equals_fused_pipeline() {
         },
     )
     .unwrap();
-    fd.start_batch(1);
+    fd.start_batch(1).unwrap();
     let weights = ModelWeights::random(TINY, 2, seed);
     let mut oracle = FusedOracle::new(weights, batch);
 
@@ -234,5 +234,5 @@ fn cache_token_accounting() {
     // last prompt token is consumed by the first generation step) + 6
     // generation steps = 9 per sequence per layer. The newest token's
     // K/V lands on the NEXT step, so it is not yet cached.
-    assert_eq!(fd.cache_tokens(), 9 * 8 * 2);
+    assert_eq!(fd.cache_tokens().unwrap(), 9 * 8 * 2);
 }

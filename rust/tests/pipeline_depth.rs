@@ -152,7 +152,7 @@ fn live_sls_admission_bounds_measured_kv_load() {
     assert_eq!(trace.total_tokens(), 6 * 2 * 8);
     assert_eq!(fd.pending_arrivals(), 0);
     assert_eq!(fd.live_sequences(), 0);
-    assert_eq!(fd.cache_tokens(), 0, "finished caches not released");
+    assert_eq!(fd.cache_tokens().unwrap(), 0, "finished caches not released");
     // and admission actually overlapped micro-batches (SLS steady
     // state), rather than trivially serializing them
     let peak = trace.records.iter().map(|r| r.total_ctx).max().unwrap();
@@ -201,7 +201,7 @@ fn second_arrival_wave_resets_cleanly() {
     assert_eq!(fd.live_sequences(), 0, "wave 1 not released");
     let trace = fd.run_steps(6).unwrap();
     assert_eq!(trace.total_tokens(), 2 * 4);
-    assert_eq!(fd.cache_tokens(), 0);
+    assert_eq!(fd.cache_tokens().unwrap(), 0);
 }
 
 /// Rejecting an arrival that could never be admitted is part of
@@ -252,7 +252,7 @@ fn s_failure_surfaces_cause_and_pipeline_stays_usable() {
         },
     );
     let ids: Vec<u64> = (1..=6).collect();
-    rpool.add_seqs(&ids);
+    rpool.add_seqs(&ids).unwrap();
     let mut p = ThreadedPipeline::new(
         sworker,
         rpool,

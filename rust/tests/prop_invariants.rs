@@ -32,12 +32,12 @@ fn prop_pool_placement_balanced_under_churn() {
                 let n = g.usize_in(1, 6);
                 let ids: Vec<u64> = (0..n).map(|i| next_id + i as u64).collect();
                 next_id += n as u64;
-                pool.add_seqs(&ids);
+                pool.add_seqs(&ids).unwrap();
                 live.extend(&ids);
             } else {
                 let k = g.usize_in(1, live.len() + 1).min(live.len());
                 let dropped: Vec<u64> = live.drain(..k).collect();
-                pool.drop_seqs(&dropped);
+                pool.drop_seqs(&dropped).unwrap();
                 for id in &dropped {
                     assert_eq!(pool.socket_of(*id), None);
                 }
@@ -47,7 +47,7 @@ fn prop_pool_placement_balanced_under_churn() {
             let s = pool.socket_of(*id).expect("live sequence unplaced");
             assert!(s < sockets);
         }
-        let stats = pool.stats();
+        let stats = pool.stats().unwrap();
         let total: usize = stats.iter().map(|s| s.sequences).sum();
         assert_eq!(total, live.len(), "socket caches out of sync");
     });
@@ -93,14 +93,14 @@ fn prop_attend_batch_split_invariant() {
                     ..Default::default()
                 },
             );
-            pool.add_seqs(&ids);
+            pool.add_seqs(&ids).unwrap();
             match split {
-                None => pool.attend(0, tasks).outputs,
+                None => pool.attend(0, tasks).unwrap().outputs,
                 Some(k) => {
                     let mut rest = tasks;
                     let tail = rest.split_off(k);
-                    let mut out = pool.attend(0, rest).outputs;
-                    out.extend(pool.attend(0, tail).outputs);
+                    let mut out = pool.attend(0, rest).unwrap().outputs;
+                    out.extend(pool.attend(0, tail).unwrap().outputs);
                     out
                 }
             }

@@ -80,8 +80,8 @@ fn every_request_completes_including_partial_tail() {
         assert!(c.ttft_s > 0.0 && c.ttft_s <= c.e2e_s);
     }
     // the engine's KV is fully released at the end
-    let fd = eng.into_engine();
-    assert_eq!(fd.cache_tokens(), 0, "finished caches not released");
+    let mut fd = eng.into_engine();
+    assert_eq!(fd.cache_tokens().unwrap(), 0, "finished caches not released");
 }
 
 /// (b) Under the SLS-aware policy the measured per-layer aggregate KV
