@@ -17,6 +17,7 @@
 
 use std::time::Instant;
 
+use fastdecode::bench::snapshot::Snapshot;
 use fastdecode::bench::{real_flag, real_mini, record_result, sim_trace as simulate, Table};
 use fastdecode::coordinator::real::{FastDecode, FastDecodeConfig};
 use fastdecode::net::{
@@ -82,8 +83,10 @@ fn spawn_rnode() -> RnodeProcess {
 /// Node-count sweep over REAL localhost TCP: per node count P, spawn P
 /// `rnode` processes, shard the batch across them (f16 wire), and
 /// measure decode throughput — Fig 13's strong-scaling axis with the
-/// S↔R boundary as a genuine network boundary.
-fn fig13_tcp() {
+/// S↔R boundary as a genuine network boundary. `max_nodes` caps the
+/// sweep (CI runs `--max-nodes 2` to stay within small runners); the
+/// largest run's trace becomes the `BENCH_fig13_tcp.json` snapshot.
+fn fig13_tcp(max_nodes: usize) {
     let (batch, steps) = (16usize, 32usize);
     let mut t = Table::new(
         "Fig 13 (--tcp, tiny, B=16): throughput vs rnode processes (f16 wire)",
@@ -91,7 +94,12 @@ fn fig13_tcp() {
     );
     let mut base = 0.0;
     let mut js = Vec::new();
-    for p in [1usize, 2, 4] {
+    let mut last: Option<(usize, fastdecode::metrics::StepTrace)> = None;
+    let counts: Vec<usize> = [1usize, 2, 4]
+        .into_iter()
+        .filter(|&p| p <= max_nodes.max(1))
+        .collect();
+    for p in counts {
         let nodes: Vec<RnodeProcess> = (0..p).map(|_| spawn_rnode()).collect();
         let addrs: Vec<String> =
             nodes.iter().map(|n| n.addr.clone()).collect();
@@ -132,10 +140,27 @@ fn fig13_tcp() {
             format!("{:.2}x", tp / base),
         ]);
         js.push(Json::obj().set("nodes", p).set("tok_per_s", tp));
+        last = Some((p, trace));
         drop(fd); // disconnects before the rnode processes are killed
     }
     t.print();
-    record_result("fig13_tcp", Json::Arr(js));
+    record_result("fig13_tcp", Json::Arr(js.clone()));
+    if let Some((p, trace)) = last {
+        let snap = Snapshot::from_trace(
+            "fig13_tcp",
+            Json::obj()
+                .set("mode", "tcp")
+                .set("model", "tiny")
+                .set("batch", batch)
+                .set("nodes", p)
+                .set("steps", steps)
+                .set("wire", "f16"),
+            &trace,
+        )
+        .with_extra(Json::Arr(js));
+        let path = snap.write().expect("writing BENCH_fig13_tcp.json");
+        println!("snapshot: {}", path.display());
+    }
 }
 
 fn fig13_virtual() {
@@ -315,10 +340,16 @@ fn fig14() {
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
+    let max_nodes = args
+        .iter()
+        .position(|a| a == "--max-nodes")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(4);
     if args.iter().any(|a| a == "--fig14") {
         fig14();
     } else if args.iter().any(|a| a == "--tcp") {
-        fig13_tcp();
+        fig13_tcp(max_nodes);
     } else if real_flag() {
         fig13_real_engine();
     } else {

@@ -11,8 +11,10 @@
 //! Run: `cargo bench --bench fig9_throughput [-- --real]`
 
 use fastdecode::baselines::{fastllm, tensorrt, vanilla, vllm, BaselineConfig};
+use fastdecode::bench::snapshot::Snapshot;
 use fastdecode::bench::{real_flag, real_mini, record_result, sim_mini, Table};
 use fastdecode::coordinator::sim::steady_throughput;
+use fastdecode::metrics::StepTrace;
 use fastdecode::coordinator::{Coordinator, SimConfig, SimCoordinator};
 use fastdecode::model::{ModelSpec, LLAMA_13B, LLAMA_7B};
 use fastdecode::perfmodel::{CpuModel, GpuModel, A10, EPYC_7452};
@@ -35,15 +37,18 @@ fn ours(spec: ModelSpec, batch: usize, seq: usize, sockets: usize) -> f64 {
 
 /// Both backends through the SAME trait at matched reduced scale
 /// (tiny model, 2 layers): virtual clock vs live threaded pipeline.
-fn backend_cross_check(js: &mut Vec<Json>) {
+/// Returns the LIVE engine's trace for the `BENCH_fig9.json` snapshot.
+fn backend_cross_check(js: &mut Vec<Json>) -> StepTrace {
     let (batch, sockets, steps) = (16usize, 2usize, 48usize);
     let mut t = Table::new(
         "Fig 9 cross-check: sim vs live engine, matched reduced scale \
          (tiny, B=16, P=2, D=2)",
         &["backend", "tok/s", "mean step ms"],
     );
-    for mut c in [sim_mini(batch, sockets, steps), real_mini(batch, sockets, 2, steps)]
-    {
+    let mut live = StepTrace::default();
+    let backends =
+        [sim_mini(batch, sockets, steps), real_mini(batch, sockets, 2, steps)];
+    for (i, mut c) in backends.into_iter().enumerate() {
         let trace = c.run_steps(steps).expect("backend run");
         t.row(&[
             c.backend().into(),
@@ -55,8 +60,12 @@ fn backend_cross_check(js: &mut Vec<Json>) {
                 .set("backend", c.backend())
                 .set("tok_per_s", trace.throughput()),
         );
+        if i == 1 {
+            live = trace;
+        }
     }
     t.print();
+    live
 }
 
 fn main() {
@@ -102,6 +111,20 @@ fn main() {
              ours(128) ≈ 1.88–2.32x vLLM"
         );
     }
-    backend_cross_check(&mut js);
-    record_result("fig9", Json::Arr(js));
+    let live = backend_cross_check(&mut js);
+    record_result("fig9", Json::Arr(js.clone()));
+    let snap = Snapshot::from_trace(
+        "fig9",
+        Json::obj()
+            .set("mode", "real_mini")
+            .set("model", "tiny")
+            .set("batch", 16usize)
+            .set("sockets", 2usize)
+            .set("layers", 2usize)
+            .set("steps", 48usize),
+        &live,
+    )
+    .with_extra(Json::Arr(js));
+    let path = snap.write().expect("writing BENCH_fig9.json");
+    println!("snapshot: {}", path.display());
 }

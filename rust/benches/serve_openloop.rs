@@ -5,6 +5,7 @@
 //!
 //! Run: `cargo bench --bench serve_openloop`
 
+use fastdecode::bench::snapshot::Snapshot;
 use fastdecode::bench::{fmt_time, record_result, Table};
 use fastdecode::coordinator::real::{FastDecode, FastDecodeConfig};
 use fastdecode::model::{Precision, TINY};
@@ -45,6 +46,8 @@ fn main() -> anyhow::Result<()> {
         ],
     );
     let mut results = Vec::new();
+    // snapshot the highest-rate FIFO run: the most loaded configuration
+    let mut snap_run = None;
     for &rate in &rates {
         let trace = generate_trace(&TraceConfig {
             seed: 42,
@@ -99,10 +102,29 @@ fn main() -> anyhow::Result<()> {
                     .set("e2e_p99_us", rep.e2e.percentile_us(0.99))
                     .set("mean_wait_steps", rep.mean_wait_steps),
             );
+            if name == "fifo" && rate == rates[rates.len() - 1] {
+                snap_run = Some((rate, out.report.to_json(), out.trace));
+            }
         }
     }
     table.print();
     record_result("serve_openloop", Json::obj().set("rows", results));
+    if let Some((rate, report, trace)) = snap_run {
+        let snap = Snapshot::from_trace(
+            "serve_openloop",
+            Json::obj()
+                .set("model", "tiny")
+                .set("policy", "fifo")
+                .set("rate_req_s", rate)
+                .set("slots", SLOTS)
+                .set("w_lim", W_LIM)
+                .set("steps_per_sec", STEPS_PER_SEC),
+            &trace,
+        )
+        .with_extra(Json::obj().set("serve", report));
+        let path = snap.write()?;
+        println!("snapshot: {}", path.display());
+    }
     println!(
         "\nhigher arrival rates deepen the queue: p99 TTFT grows with \
          rate while throughput saturates at the engine's decode rate"

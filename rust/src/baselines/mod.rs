@@ -127,6 +127,8 @@ pub fn gpu_only(cfg: &BaselineConfig, tier: &str) -> StepTrace {
             comm_time: 0.0,
             tokens: b,
             total_ctx: b * ctx,
+            // modeled steps have no measured wait/skew breakdown
+            ..Default::default()
         });
     }
     trace
@@ -197,6 +199,7 @@ pub fn vllm(cfg: &BaselineConfig) -> StepTrace {
             comm_time: swap,
             tokens: cap,
             total_ctx: cap * ctx,
+            ..Default::default()
         });
         step += 1;
         if step > 4 * cfg.seq_len * b_total {

@@ -5,6 +5,8 @@
 //! are also appended as JSON lines to `target/bench_results.jsonl` so
 //! EXPERIMENTS.md numbers are reproducible.
 
+pub mod snapshot;
+
 use std::io::Write as _;
 use std::time::Instant;
 

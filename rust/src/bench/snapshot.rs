@@ -1,0 +1,335 @@
+//! Machine-readable benchmark snapshots — `BENCH_<name>.json`.
+//!
+//! A [`Snapshot`] condenses one benchmark run (a [`StepTrace`] plus the
+//! run's configuration) into a single JSON document written to
+//! [`crate::artifacts_dir`]`()/BENCH_<name>.json`, so CI and
+//! EXPERIMENTS.md can diff numbers across commits without scraping
+//! stdout tables.
+//!
+//! # Schema (version 1)
+//!
+//! ```json
+//! {
+//!   "schema_version": 1,
+//!   "name": "fig9",                  // snapshot name (file is BENCH_<name>.json)
+//!   "commit": "ac1bb66",             // git rev-parse --short HEAD, or "unknown"
+//!   "config": { ... },               // free-form run configuration
+//!   "tok_per_s": 1234.5,             // generated tokens / wall second
+//!   "steps": {                       // per-step latency percentiles
+//!     "count": 128, "mean_ms": ..., "p50_ms": ..., "p95_ms": ...,
+//!     "p99_ms": ..., "max_ms": ...
+//!   },
+//!   "breakdown": {                   // mean per-step stage times, ms
+//!     "s_ms": ..., "r_ms": ..., "comm_ms": ..., "queue_wait_ms": ...,
+//!     "gather_wait_ms": ..., "dispatch_ms": ..., "skew_ms": ...
+//!   },
+//!   "extra": { ... }                 // bench-specific payload (optional)
+//! }
+//! ```
+//!
+//! [`validate`] is the CI gate: it rejects documents that are missing
+//! fields, carry the wrong schema version, or describe an empty run
+//! (zero steps / zero throughput) — a bench that silently produced
+//! nothing must fail the pipeline, not archive an empty file.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::metrics::{Histogram, StepTrace};
+use crate::util::json::Json;
+
+/// Bump when the JSON layout changes incompatibly.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Mean per-step stage times in milliseconds (the breakdown block).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Breakdown {
+    pub s_ms: f64,
+    pub r_ms: f64,
+    pub comm_ms: f64,
+    pub queue_wait_ms: f64,
+    pub gather_wait_ms: f64,
+    pub dispatch_ms: f64,
+    pub skew_ms: f64,
+}
+
+/// One benchmark run, ready to serialize.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub name: String,
+    pub config: Json,
+    pub tok_per_s: f64,
+    /// Per-step latency distribution over productive (token-carrying)
+    /// steps.
+    pub steps: Histogram,
+    pub breakdown: Breakdown,
+    /// Bench-specific payload (e.g. the serve report); `Json::Null`
+    /// when absent.
+    pub extra: Json,
+}
+
+impl Snapshot {
+    /// Build a snapshot from a finished run's step trace. Throughput
+    /// uses the whole trace; percentiles and breakdown means use only
+    /// productive steps (tokens > 0) so idle polling steps don't skew
+    /// the latency picture.
+    pub fn from_trace(name: &str, config: Json, trace: &StepTrace) -> Snapshot {
+        let mut steps = Histogram::new();
+        let mut sums = [0.0f64; 7];
+        let mut n = 0usize;
+        for rec in trace.records.iter().filter(|r| r.tokens > 0) {
+            steps.record_secs(rec.latency_s);
+            sums[0] += rec.s_time;
+            sums[1] += rec.r_time;
+            sums[2] += rec.comm_time;
+            sums[3] += rec.queue_wait_s;
+            sums[4] += rec.gather_wait_s;
+            sums[5] += rec.dispatch_s;
+            sums[6] += rec.skew_s;
+            n += 1;
+        }
+        let mean_ms = |sum: f64| {
+            if n == 0 {
+                0.0
+            } else {
+                sum / n as f64 * 1e3
+            }
+        };
+        Snapshot {
+            name: name.to_string(),
+            config,
+            tok_per_s: trace.throughput(),
+            steps,
+            breakdown: Breakdown {
+                s_ms: mean_ms(sums[0]),
+                r_ms: mean_ms(sums[1]),
+                comm_ms: mean_ms(sums[2]),
+                queue_wait_ms: mean_ms(sums[3]),
+                gather_wait_ms: mean_ms(sums[4]),
+                dispatch_ms: mean_ms(sums[5]),
+                skew_ms: mean_ms(sums[6]),
+            },
+            extra: Json::Null,
+        }
+    }
+
+    /// Attach a bench-specific payload (builder style).
+    pub fn with_extra(mut self, extra: Json) -> Snapshot {
+        self.extra = extra;
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        let b = &self.breakdown;
+        Json::obj()
+            .set("schema_version", SCHEMA_VERSION)
+            .set("name", self.name.as_str())
+            .set("commit", git_commit())
+            .set("config", self.config.clone())
+            .set("tok_per_s", self.tok_per_s)
+            .set("steps", self.steps.to_json_ms())
+            .set(
+                "breakdown",
+                Json::obj()
+                    .set("s_ms", b.s_ms)
+                    .set("r_ms", b.r_ms)
+                    .set("comm_ms", b.comm_ms)
+                    .set("queue_wait_ms", b.queue_wait_ms)
+                    .set("gather_wait_ms", b.gather_wait_ms)
+                    .set("dispatch_ms", b.dispatch_ms)
+                    .set("skew_ms", b.skew_ms),
+            )
+            .set("extra", self.extra.clone())
+    }
+
+    /// Write `BENCH_<name>.json` under [`crate::artifacts_dir`],
+    /// returning the path.
+    pub fn write(&self) -> Result<PathBuf> {
+        let dir = crate::artifacts_dir();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        let mut body = self.to_json().render();
+        body.push('\n');
+        std::fs::write(&path, body)
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(path)
+    }
+}
+
+/// Short commit hash of HEAD, best-effort ("unknown" outside git).
+fn git_commit() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+fn req_num(j: &Json, ctx: &str, key: &str) -> Result<f64> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .with_context(|| format!("{ctx}: missing numeric field '{key}'"))
+}
+
+/// Validate a parsed snapshot document against schema version 1.
+/// Rejects wrong versions, missing/mistyped fields, and empty runs.
+pub fn validate(doc: &Json) -> Result<()> {
+    let version = req_num(doc, "snapshot", "schema_version")?;
+    if version != SCHEMA_VERSION as f64 {
+        bail!("unsupported schema_version {version} (want {SCHEMA_VERSION})");
+    }
+    let name = doc
+        .get("name")
+        .and_then(Json::as_str)
+        .context("snapshot: missing string field 'name'")?;
+    if name.is_empty() {
+        bail!("snapshot: empty name");
+    }
+    doc.get("commit")
+        .and_then(Json::as_str)
+        .context("snapshot: missing string field 'commit'")?;
+    if !matches!(doc.get("config"), Some(Json::Obj(_))) {
+        bail!("snapshot: 'config' must be an object");
+    }
+    let tok_per_s = req_num(doc, "snapshot", "tok_per_s")?;
+    if tok_per_s <= 0.0 {
+        bail!("snapshot: tok_per_s {tok_per_s} is not positive — empty run?");
+    }
+    let steps = doc.get("steps").context("snapshot: missing 'steps'")?;
+    let count = req_num(steps, "steps", "count")?;
+    if count < 1.0 {
+        bail!("snapshot: steps.count {count} — empty run");
+    }
+    let p50 = req_num(steps, "steps", "p50_ms")?;
+    let p95 = req_num(steps, "steps", "p95_ms")?;
+    let p99 = req_num(steps, "steps", "p99_ms")?;
+    req_num(steps, "steps", "mean_ms")?;
+    req_num(steps, "steps", "max_ms")?;
+    if !(p50 <= p95 && p95 <= p99) {
+        bail!("snapshot: percentiles not monotone: p50 {p50} p95 {p95} p99 {p99}");
+    }
+    let breakdown = doc
+        .get("breakdown")
+        .context("snapshot: missing 'breakdown'")?;
+    for key in [
+        "s_ms",
+        "r_ms",
+        "comm_ms",
+        "queue_wait_ms",
+        "gather_wait_ms",
+        "dispatch_ms",
+        "skew_ms",
+    ] {
+        let v = req_num(breakdown, "breakdown", key)?;
+        if v < 0.0 {
+            bail!("breakdown: {key} is negative ({v})");
+        }
+    }
+    Ok(())
+}
+
+/// Read, parse and [`validate`] a `BENCH_*.json` file.
+pub fn validate_file(path: &Path) -> Result<()> {
+    let body = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let doc = Json::parse(&body)
+        .with_context(|| format!("parsing {}", path.display()))?;
+    validate(&doc).with_context(|| format!("validating {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::StepRecord;
+
+    fn synthetic_trace() -> StepTrace {
+        let mut trace = StepTrace::default();
+        for step in 0..32 {
+            trace.push(StepRecord {
+                step,
+                latency_s: 2e-3 + step as f64 * 1e-5,
+                s_time: 1e-3,
+                r_time: 8e-4,
+                comm_time: 1e-4,
+                queue_wait_s: 5e-5,
+                gather_wait_s: 4e-4,
+                dispatch_s: 2e-5,
+                skew_s: 1e-4,
+                socket_busy: vec![7e-4, 8e-4],
+                tokens: 16,
+                total_ctx: 16 * (step + 1),
+            });
+        }
+        // an idle step must not pollute the latency percentiles
+        trace.push(StepRecord {
+            step: 32,
+            latency_s: 5.0,
+            ..Default::default()
+        });
+        trace
+    }
+
+    #[test]
+    fn snapshot_roundtrips_and_validates() {
+        let trace = synthetic_trace();
+        let cfg = Json::obj().set("batch", 16usize).set("sockets", 2usize);
+        let snap = Snapshot::from_trace("unit", cfg, &trace)
+            .with_extra(Json::obj().set("note", "test"));
+        let doc = Json::parse(&snap.to_json().render()).unwrap();
+        validate(&doc).unwrap();
+        assert_eq!(doc.get("name").and_then(Json::as_str), Some("unit"));
+        assert_eq!(
+            doc.get("steps").and_then(|s| s.get("count")).and_then(Json::as_f64),
+            Some(32.0) // the idle step is excluded
+        );
+        let tok = doc.get("tok_per_s").and_then(Json::as_f64).unwrap();
+        assert!((tok - trace.throughput()).abs() / trace.throughput() < 1e-9);
+        let b = doc.get("breakdown").unwrap();
+        let s_ms = b.get("s_ms").and_then(Json::as_f64).unwrap();
+        assert!((s_ms - 1.0).abs() < 1e-9, "s_ms {s_ms}");
+    }
+
+    #[test]
+    fn validate_rejects_malformed() {
+        let trace = synthetic_trace();
+        let good = Snapshot::from_trace("unit", Json::obj(), &trace).to_json();
+        validate(&good).unwrap();
+
+        // wrong schema version
+        let bad = good.clone();
+        let mut fields = match bad {
+            Json::Obj(f) => f,
+            _ => unreachable!(),
+        };
+        fields[0].1 = Json::Num(99.0);
+        assert!(validate(&Json::Obj(fields)).is_err());
+
+        // empty run: no productive steps → count 0, tok_per_s 0
+        let empty = Snapshot::from_trace("unit", Json::obj(), &StepTrace::default());
+        assert!(validate(&empty.to_json()).is_err());
+
+        // missing field
+        let partial = Json::obj().set("schema_version", SCHEMA_VERSION);
+        assert!(validate(&partial).is_err());
+
+        // not even an object
+        assert!(validate(&Json::Num(3.0)).is_err());
+    }
+
+    #[test]
+    fn validate_file_reports_unreadable_and_garbage() {
+        let dir = std::env::temp_dir().join("fastdecode_snapshot_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let missing = dir.join("nope.json");
+        assert!(validate_file(&missing).is_err());
+        let garbage = dir.join("garbage.json");
+        std::fs::write(&garbage, "not json").unwrap();
+        assert!(validate_file(&garbage).is_err());
+    }
+}

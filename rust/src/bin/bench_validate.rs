@@ -1,0 +1,33 @@
+//! CI gate for benchmark snapshots: validate each `BENCH_*.json` path
+//! on the command line against the `bench::snapshot` schema. Exits
+//! non-zero (with a message per offending file) on any missing, empty
+//! or malformed snapshot.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use fastdecode::bench::snapshot;
+
+fn main() -> ExitCode {
+    let paths: Vec<PathBuf> =
+        std::env::args_os().skip(1).map(PathBuf::from).collect();
+    if paths.is_empty() {
+        eprintln!("usage: bench_validate <BENCH_*.json>...");
+        return ExitCode::FAILURE;
+    }
+    let mut failed = false;
+    for path in &paths {
+        match snapshot::validate_file(path) {
+            Ok(()) => println!("OK {}", path.display()),
+            Err(e) => {
+                eprintln!("FAIL {}: {e:#}", path.display());
+                failed = true;
+            }
+        }
+    }
+    if failed {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}

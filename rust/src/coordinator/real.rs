@@ -35,6 +35,7 @@ use anyhow::{bail, Result};
 
 use crate::metrics::{Histogram, StepRecord, StepTrace};
 use crate::model::{ModelSpec, Precision};
+use crate::obs::{NetStats, Tracer};
 use crate::runtime::{PipelineConfig, StepTiming, ThreadedPipeline};
 use crate::rworker::{AttendBackend, RPool, RPoolConfig};
 use crate::sched::LoadControl;
@@ -183,8 +184,20 @@ impl FastDecode {
     /// `cfg.sockets` is overwritten with the backend's socket count.
     pub fn with_backend(
         spec: ModelSpec,
+        cfg: FastDecodeConfig,
+        pool: Box<dyn AttendBackend>,
+    ) -> Result<FastDecode> {
+        FastDecode::with_backend_traced(spec, cfg, pool, Tracer::from_env())
+    }
+
+    /// [`FastDecode::with_backend`] with an explicit tracer — tests and
+    /// benches inject [`Tracer::enabled`] to capture a Chrome trace of
+    /// a live run regardless of `FASTDECODE_TRACE`.
+    pub fn with_backend_traced(
+        spec: ModelSpec,
         mut cfg: FastDecodeConfig,
         pool: Box<dyn AttendBackend>,
+        tracer: Tracer,
     ) -> Result<FastDecode> {
         if cfg.batch == 0 {
             bail!("batch must be > 0");
@@ -206,7 +219,7 @@ impl FastDecode {
         cfg.sockets = pool.sockets();
         let weights = ModelWeights::random(spec, cfg.layers, cfg.weight_seed);
         let sworker = NativeSWorker::new(weights);
-        let pipeline = ThreadedPipeline::with_backend(
+        let pipeline = ThreadedPipeline::with_backend_traced(
             sworker,
             pool,
             PipelineConfig {
@@ -215,6 +228,7 @@ impl FastDecode {
                 s_pad: cfg.s_pad,
                 ..Default::default()
             },
+            tracer,
         );
         Ok(FastDecode {
             spec,
@@ -302,6 +316,11 @@ impl FastDecode {
             s_time: t.s_time,
             r_time: t.r_time,
             comm_time: t.comm_time,
+            queue_wait_s: t.queue_wait_s,
+            gather_wait_s: t.gather_wait_s,
+            dispatch_s: t.dispatch_s,
+            skew_s: t.skew_s,
+            socket_busy: t.socket_busy,
             tokens: b,
             total_ctx: self.ctx_len.iter().sum(),
         };
@@ -409,6 +428,19 @@ impl FastDecode {
     /// bench tables).
     pub fn pool_name(&self) -> &'static str {
         self.pipeline.pool().name()
+    }
+
+    /// The tracer this engine runs under — flush it with
+    /// `tracer().write_chrome_trace(..)` after a traced run.
+    pub fn tracer(&self) -> &Tracer {
+        self.pipeline.tracer()
+    }
+
+    /// Wire-level counters of the attend backend, one entry per remote
+    /// node (empty for in-process backends). Includes the
+    /// modeled-vs-measured payload drift detector.
+    pub fn net_stats(&self) -> Vec<NetStats> {
+        self.pipeline.pool().net_stats()
     }
 
     // ── raw sequence-lifecycle API (used by `serve::ServeEngine`) ──
@@ -578,6 +610,16 @@ impl FastDecode {
             };
             let (_, a) =
                 st.queue.remove(idx).expect("admit_one bounds-checked");
+            // admission decisions land as instants on the coordinator
+            // track, between the surrounding steps' scatter/gather spans
+            self.pipeline.track().instant(
+                "admit",
+                &[
+                    ("step", t as f64),
+                    ("m", a.m as f64),
+                    ("seq_len", a.seq_len as f64),
+                ],
+            );
             let ids: Vec<u64> = (st.next_id..st.next_id + a.m as u64).collect();
             st.next_id += a.m as u64;
             self.pipeline.pool_mut().add_seqs(&ids)?;
@@ -627,6 +669,11 @@ impl FastDecode {
             s_time: timing.s_time,
             r_time: timing.r_time,
             comm_time: timing.comm_time,
+            queue_wait_s: timing.queue_wait_s,
+            gather_wait_s: timing.gather_wait_s,
+            dispatch_s: timing.dispatch_s,
+            skew_s: timing.skew_s,
+            socket_busy: timing.socket_busy,
             tokens: served,
             total_ctx: kv_load,
         })

@@ -24,6 +24,7 @@ pub mod kvcache;
 pub mod metrics;
 pub mod model;
 pub mod net;
+pub mod obs;
 pub mod perfmodel;
 pub mod runtime;
 pub mod rworker;

@@ -1,6 +1,27 @@
-//! Serving metrics: latency histograms with percentiles (Fig 10's
-//! P.01/.5/.99 bars), per-step latency traces (Figs 8, 11, 12), and
-//! throughput counters. No external deps — log-bucketed histogram.
+//! Serving metrics — the trace → breakdown → snapshot flow.
+//!
+//! Every run (live or modeled) produces a [`StepTrace`]: one
+//! [`StepRecord`] per decode step carrying both the headline latency
+//! and its measured breakdown — S-compute (`s_time`), R-attend
+//! (`r_time`), activation transfer (`comm_time`), and the coordinator
+//! wait terms added for observability (`queue_wait_s`,
+//! `gather_wait_s`, `dispatch_s`) plus the cross-socket straggler skew
+//! (`skew_s`, max−min socket busy time) and the raw per-socket busy
+//! vector. `StepRecord::accounted_s` / `residual_s` let tests assert
+//! the identity `s + r + comm + wait ≈ latency`.
+//!
+//! Downstream consumers:
+//! * [`StepTrace::to_json`] emits the full breakdown as column arrays
+//!   for plotting (Figs 8, 11, 12).
+//! * [`Histogram`] (log-bucketed, no external deps) condenses any
+//!   latency stream into p50/p95/p99 (Fig 10's P.01/.5/.99 bars).
+//! * `bench::snapshot` folds a trace + config into the machine-readable
+//!   `BENCH_<name>.json` artifacts that CI validates (see its module
+//!   doc for the schema).
+//!
+//! Span-level timing (who was running *when*, on which thread/socket/
+//! node) lives in [`crate::obs`]; this module is the per-step
+//! aggregate view of the same events.
 
 mod histogram;
 mod trace;

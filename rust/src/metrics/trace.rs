@@ -4,7 +4,25 @@
 use crate::util::json::Json;
 
 /// One generation step of the whole system.
-#[derive(Clone, Copy, Debug, Default, PartialEq)]
+///
+/// Two families of fields coexist:
+///
+/// * the *attributed* model times `s_time`/`r_time`/`comm_time` (S-Part
+///   compute, R-Part busy max over sockets, modeled activation
+///   transfer) — these can overlap in a pipelined step, so they do NOT
+///   sum to `latency_s`;
+/// * the *measured* coordinator-thread segments `queue_wait_s`
+///   (blocked on the S-thread channel), `gather_wait_s` (O-gather
+///   incast: `wait_attend` + output reassembly) and `dispatch_s` (QKV
+///   split + scatter submit) — these are disjoint wall-clock intervals
+///   on the coordinator, so [`accounted_s`](StepRecord::accounted_s)
+///   tiles `latency_s` up to a small [`residual_s`](StepRecord::residual_s)
+///   (validation, range bookkeeping, channel sends). That identity is
+///   asserted per-step by `tests/obs_trace.rs`.
+///
+/// `socket_busy` / `skew_s` decompose `r_time` per socket/node so
+/// stragglers are visible in the trace, not just the max.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct StepRecord {
     pub step: usize,
     /// Wall (or virtual) time of the step, seconds.
@@ -15,10 +33,38 @@ pub struct StepRecord {
     pub r_time: f64,
     /// Time attributable to activation transfer.
     pub comm_time: f64,
+    /// Measured coordinator wait on S-thread responses (queue-wait).
+    pub queue_wait_s: f64,
+    /// Measured O-gather incast wait (attend gather + reassembly).
+    pub gather_wait_s: f64,
+    /// Measured QKV split + scatter-submit time on the coordinator.
+    pub dispatch_s: f64,
+    /// Straggler skew: Σ over gathers of (max − min) socket busy time.
+    pub skew_s: f64,
+    /// Per-socket (or per-node) R-Part busy seconds, indexed by socket.
+    pub socket_busy: Vec<f64>,
     /// Tokens generated in this step.
     pub tokens: usize,
     /// Aggregate context length processed this step (R-Part load W).
     pub total_ctx: usize,
+}
+
+impl StepRecord {
+    /// Total measured wait (queue-wait + incast gather wait).
+    pub fn wait_s(&self) -> f64 {
+        self.queue_wait_s + self.gather_wait_s
+    }
+
+    /// Sum of the disjoint measured coordinator segments; tiles
+    /// `latency_s` (`accounted_s() ≲ latency_s`, small residual).
+    pub fn accounted_s(&self) -> f64 {
+        self.queue_wait_s + self.gather_wait_s + self.dispatch_s
+    }
+
+    /// Wall time not captured by any measured segment.
+    pub fn residual_s(&self) -> f64 {
+        self.latency_s - self.accounted_s()
+    }
 }
 
 /// An append-only trace of steps.
@@ -80,32 +126,31 @@ impl StepTrace {
         }
         let stride = (self.records.len() - 1) as f64 / (n - 1) as f64;
         (0..n)
-            .map(|i| self.records[(i as f64 * stride).round() as usize])
+            .map(|i| self.records[(i as f64 * stride).round() as usize].clone())
             .collect()
     }
 
-    /// Serialize the latency series for plotting.
+    /// Serialize the full per-step series for plotting: latency plus
+    /// the complete breakdown (attributed s/r/comm and measured
+    /// queue-wait/gather-wait/dispatch/skew), all column-aligned with
+    /// `step`.
     pub fn to_json(&self, name: &str) -> Json {
+        fn col(records: &[StepRecord], f: impl Fn(&StepRecord) -> f64) -> Json {
+            Json::Arr(records.iter().map(|r| Json::Num(f(r))).collect())
+        }
+        let r = &self.records;
         Json::obj()
             .set("name", name)
-            .set(
-                "step",
-                self.records.iter().map(|r| r.step as f64).collect::<Vec<_>>(),
-            )
-            .set(
-                "latency_ms",
-                self.records
-                    .iter()
-                    .map(|r| r.latency_s * 1e3)
-                    .collect::<Vec<_>>(),
-            )
-            .set(
-                "total_ctx",
-                self.records
-                    .iter()
-                    .map(|r| r.total_ctx as f64)
-                    .collect::<Vec<_>>(),
-            )
+            .set("step", col(r, |x| x.step as f64))
+            .set("latency_ms", col(r, |x| x.latency_s * 1e3))
+            .set("s_ms", col(r, |x| x.s_time * 1e3))
+            .set("r_ms", col(r, |x| x.r_time * 1e3))
+            .set("comm_ms", col(r, |x| x.comm_time * 1e3))
+            .set("queue_wait_ms", col(r, |x| x.queue_wait_s * 1e3))
+            .set("gather_wait_ms", col(r, |x| x.gather_wait_s * 1e3))
+            .set("dispatch_ms", col(r, |x| x.dispatch_s * 1e3))
+            .set("skew_ms", col(r, |x| x.skew_s * 1e3))
+            .set("total_ctx", col(r, |x| x.total_ctx as f64))
     }
 }
 
@@ -161,5 +206,96 @@ mod tests {
         let s = t.to_json("fig11").render();
         assert!(s.contains("\"fig11\""));
         assert!(s.contains("latency_ms"));
+    }
+
+    #[test]
+    fn json_emits_full_breakdown_series() {
+        let mut t = StepTrace::default();
+        t.push(StepRecord {
+            step: 0,
+            latency_s: 0.004,
+            s_time: 0.001,
+            r_time: 0.002,
+            comm_time: 0.0005,
+            queue_wait_s: 0.0011,
+            gather_wait_s: 0.0021,
+            dispatch_s: 0.0003,
+            skew_s: 0.0002,
+            tokens: 4,
+            ..Default::default()
+        });
+        let j = t.to_json("bd");
+        for key in [
+            "s_ms",
+            "r_ms",
+            "comm_ms",
+            "queue_wait_ms",
+            "gather_wait_ms",
+            "dispatch_ms",
+            "skew_ms",
+        ] {
+            let col = j.get(key).and_then(Json::as_arr).unwrap_or_else(|| {
+                panic!("missing breakdown column {key}")
+            });
+            assert_eq!(col.len(), 1, "{key} misaligned");
+        }
+        assert_eq!(
+            j.get("r_ms").and_then(Json::as_arr).unwrap()[0].as_f64(),
+            Some(2.0)
+        );
+    }
+
+    #[test]
+    fn downsample_keeps_endpoints_and_breakdown_alignment() {
+        let mut t = StepTrace::default();
+        for i in 0..97 {
+            // encode the step index into every breakdown field so any
+            // row shuffle or column slip is detectable after sampling
+            t.push(StepRecord {
+                step: i,
+                latency_s: i as f64,
+                s_time: i as f64 * 2.0,
+                r_time: i as f64 * 3.0,
+                comm_time: i as f64 * 4.0,
+                queue_wait_s: i as f64 * 5.0,
+                gather_wait_s: i as f64 * 6.0,
+                dispatch_s: i as f64 * 7.0,
+                skew_s: i as f64 * 8.0,
+                socket_busy: vec![i as f64; 2],
+                tokens: 1,
+                total_ctx: i,
+            });
+        }
+        let d = t.downsample(10);
+        assert_eq!(d.len(), 10);
+        assert_eq!(d[0].step, 0, "first endpoint dropped");
+        assert_eq!(d[9].step, 96, "last endpoint dropped");
+        for r in &d {
+            let i = r.step as f64;
+            assert_eq!(r.latency_s, i);
+            assert_eq!(r.s_time, i * 2.0);
+            assert_eq!(r.r_time, i * 3.0);
+            assert_eq!(r.comm_time, i * 4.0);
+            assert_eq!(r.queue_wait_s, i * 5.0);
+            assert_eq!(r.gather_wait_s, i * 6.0);
+            assert_eq!(r.dispatch_s, i * 7.0);
+            assert_eq!(r.skew_s, i * 8.0);
+            assert_eq!(r.socket_busy, vec![i; 2]);
+            assert_eq!(r.total_ctx, r.step);
+        }
+    }
+
+    #[test]
+    fn breakdown_identity_helpers() {
+        let r = StepRecord {
+            latency_s: 0.010,
+            queue_wait_s: 0.004,
+            gather_wait_s: 0.003,
+            dispatch_s: 0.002,
+            ..Default::default()
+        };
+        assert!((r.wait_s() - 0.007).abs() < 1e-12);
+        assert!((r.accounted_s() - 0.009).abs() < 1e-12);
+        assert!((r.residual_s() - 0.001).abs() < 1e-12);
     }
 }

@@ -76,6 +76,21 @@ pub fn vec_payload_bytes(elems: usize, mode: WireMode) -> usize {
     elems * mode.bytes_per_elem()
 }
 
+/// Framing bytes of an `Attend` request with `n_tasks` tasks —
+/// everything in the frame that is NOT activation payload (tag, layer,
+/// task count, per-task seq id + three vector headers). Frame length −
+/// this = payload bytes, which is what the `RemotePool` drift detector
+/// compares against the `LinkModel`-modeled bytes.
+pub fn attend_request_overhead_bytes(n_tasks: usize) -> usize {
+    1 + 4 + 4 + n_tasks * (8 + 3 * 4)
+}
+
+/// Framing bytes of an `Outputs` response with `n_outs` outputs (tag,
+/// layer, busy nanos, out count, per-output seq id + vector header).
+pub fn outputs_response_overhead_bytes(n_outs: usize) -> usize {
+    1 + 4 + 8 + 4 + n_outs * (8 + 4)
+}
+
 /// Everything an `rnode` needs to provision one R-socket. Sent as the
 /// first frame on every connection; the node replies `Ack` and the
 /// connection's wire mode is fixed from then on.
@@ -676,6 +691,51 @@ mod tests {
                 mk(64, mode),
                 overhead + 3 * vec_payload_bytes(64, mode)
             );
+        }
+    }
+
+    /// The deterministic framing-overhead formulas the runtime drift
+    /// detector subtracts are pinned against the actual encoders: for
+    /// any task/output count, frame length = overhead + payload.
+    #[test]
+    fn framing_overhead_matches_encoders() {
+        for mode in [WireMode::F32, WireMode::F16] {
+            for n in [0usize, 1, 3, 7] {
+                let elems = 24;
+                let tasks: Vec<SeqTask> = (0..n)
+                    .map(|i| SeqTask {
+                        seq_id: i as u64,
+                        q: vec![0.25; elems],
+                        k_new: vec![0.25; elems],
+                        v_new: vec![0.25; elems],
+                    })
+                    .collect();
+                let frame =
+                    encode_request(&NetRequest::Attend { layer: 2, tasks }, mode);
+                assert_eq!(
+                    frame.len(),
+                    attend_request_overhead_bytes(n)
+                        + n * 3 * vec_payload_bytes(elems, mode),
+                    "attend overhead, {mode:?} n={n}"
+                );
+
+                let outs: Vec<(u64, Vec<f32>)> =
+                    (0..n).map(|i| (i as u64, vec![0.25f32; elems])).collect();
+                let frame = encode_response(
+                    &NetResponse::Outputs {
+                        layer: 2,
+                        outs,
+                        busy: std::time::Duration::from_micros(5),
+                    },
+                    mode,
+                );
+                assert_eq!(
+                    frame.len(),
+                    outputs_response_overhead_bytes(n)
+                        + n * vec_payload_bytes(elems, mode),
+                    "outputs overhead, {mode:?} n={n}"
+                );
+            }
         }
     }
 }

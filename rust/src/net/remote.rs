@@ -16,19 +16,37 @@
 //! routed up without marking the node dead.
 
 use std::collections::{HashMap, HashSet};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context as _, Result};
 
 use crate::kvcache::CacheStats;
+use crate::obs::{NetStats, Tracer, Track, TransportCounters};
 use crate::rworker::{AttendBackend, PendingAttend, PoolStep, SeqTask};
 
 use super::codec::{
-    decode_response, encode_request, NetRequest, NetResponse, NodeConfig,
-    WireMode, MAX_FRAME_BYTES,
+    attend_request_overhead_bytes, decode_response, encode_request,
+    outputs_response_overhead_bytes, vec_payload_bytes, NetRequest,
+    NetResponse, NodeConfig, WireMode, MAX_FRAME_BYTES,
 };
 use super::rnode;
 use super::transport::{loopback_pair, Tcp, Transport};
+
+/// Per-node wire accounting: attend ops, errors, and the
+/// modeled-vs-measured payload drift detector (see `obs::counters`).
+#[derive(Clone, Copy, Debug, Default)]
+struct NodeWire {
+    attend_ops: u64,
+    errors: u64,
+    modeled_sent: u64,
+    measured_sent: u64,
+    modeled_recv: u64,
+    measured_recv: u64,
+    drift_events: u64,
+    /// Transport counters snapshotted at death; live nodes read their
+    /// transport directly.
+    final_transport: TransportCounters,
+}
 
 struct Node {
     /// `None` once the node is dead (with the cause in `fate`).
@@ -37,6 +55,7 @@ struct Node {
     /// Root cause of death, kept so later touches of the node still
     /// name the original failure.
     fate: Option<String>,
+    wire_stats: NodeWire,
 }
 
 pub struct RemotePool {
@@ -47,6 +66,9 @@ pub struct RemotePool {
     name: &'static str,
     /// Loopback server threads, joined on drop.
     servers: Vec<std::thread::JoinHandle<()>>,
+    /// One trace track per node ("r-node{i}"), empty until a tracer is
+    /// installed.
+    tracks: Vec<Track>,
 }
 
 impl RemotePool {
@@ -81,6 +103,7 @@ impl RemotePool {
                 transport: Some(t),
                 label,
                 fate: None,
+                wire_stats: NodeWire::default(),
             });
         }
         Ok(RemotePool {
@@ -90,6 +113,7 @@ impl RemotePool {
             next_node: 0,
             name,
             servers: Vec::new(),
+            tracks: Vec::new(),
         })
     }
 
@@ -105,7 +129,7 @@ impl RemotePool {
                 .name(format!("rnode-loopback-{i}"))
                 .spawn(move || {
                     if let Err(e) = rnode::serve_connection(server) {
-                        eprintln!("loopback rnode {i}: {e:#}");
+                        crate::obs::log!(Warn, "loopback rnode {i}: {e:#}");
                     }
                 })
                 .context("spawning loopback rnode")?;
@@ -137,7 +161,9 @@ impl RemotePool {
 
     fn mark_dead(&mut self, i: usize, cause: &anyhow::Error) {
         let node = &mut self.nodes[i];
-        if node.transport.take().is_some() {
+        if let Some(t) = node.transport.take() {
+            // last chance to read the connection's counters
+            node.wire_stats.final_transport = t.counters();
             node.fate = Some(format!("{cause:#}"));
         }
     }
@@ -166,13 +192,53 @@ impl RemotePool {
                 MAX_FRAME_BYTES
             );
         }
+        // Drift detector, sent leg: the LinkModel-modeled QKV payload
+        // bytes vs. what the codec actually framed (frame minus the
+        // deterministic framing overhead). Mismatch = the codec and the
+        // perf model disagree about message shape.
+        let attend_payload = match req {
+            NetRequest::Attend { tasks, .. } => {
+                let modeled: usize = tasks
+                    .iter()
+                    .map(|t| {
+                        vec_payload_bytes(t.q.len(), self.wire)
+                            + vec_payload_bytes(t.k_new.len(), self.wire)
+                            + vec_payload_bytes(t.v_new.len(), self.wire)
+                    })
+                    .sum();
+                let measured = frame
+                    .len()
+                    .saturating_sub(attend_request_overhead_bytes(tasks.len()));
+                Some((modeled as u64, measured as u64))
+            }
+            _ => None,
+        };
         let res = match self.nodes[i].transport.as_mut() {
             None => return Err(self.dead_error(i)),
             Some(t) => t.send(&frame),
         };
         if let Err(e) = res {
+            self.nodes[i].wire_stats.errors += 1;
             self.mark_dead(i, &e);
             return Err(e.context(format!("sending to {}", self.nodes[i].label)));
+        }
+        if let Some((modeled, measured)) = attend_payload {
+            let w = &mut self.nodes[i].wire_stats;
+            w.attend_ops += 1;
+            w.modeled_sent += modeled;
+            w.measured_sent += measured;
+            let drift = modeled != measured;
+            if drift {
+                w.drift_events += 1;
+            }
+            if drift {
+                crate::obs::log!(
+                    Warn,
+                    "payload drift sending to {}: modeled {modeled} B, \
+                     measured {measured} B",
+                    self.nodes[i].label
+                );
+            }
         }
         Ok(())
     }
@@ -189,6 +255,7 @@ impl RemotePool {
         let frame = match res {
             Ok(f) => f,
             Err(e) => {
+                self.nodes[i].wire_stats.errors += 1;
                 self.mark_dead(i, &e);
                 return Err(
                     e.context(format!("receiving from {}", self.nodes[i].label))
@@ -196,8 +263,35 @@ impl RemotePool {
             }
         };
         match decode_response(&frame, self.wire) {
-            Ok(resp) => Ok(resp),
+            Ok(resp) => {
+                // Drift detector, received leg: modeled O payload vs.
+                // measured (frame minus framing overhead).
+                if let NetResponse::Outputs { outs, .. } = &resp {
+                    let modeled: usize = outs
+                        .iter()
+                        .map(|(_, o)| vec_payload_bytes(o.len(), self.wire))
+                        .sum();
+                    let measured = frame.len().saturating_sub(
+                        outputs_response_overhead_bytes(outs.len()),
+                    );
+                    let drift = modeled != measured;
+                    let w = &mut self.nodes[i].wire_stats;
+                    w.modeled_recv += modeled as u64;
+                    w.measured_recv += measured as u64;
+                    if drift {
+                        w.drift_events += 1;
+                        crate::obs::log!(
+                            Warn,
+                            "payload drift receiving from {}: modeled \
+                             {modeled} B, measured {measured} B",
+                            self.nodes[i].label
+                        );
+                    }
+                }
+                Ok(resp)
+            }
             Err(e) => {
+                self.nodes[i].wire_stats.errors += 1;
                 self.mark_dead(i, &e);
                 Err(e.context(format!(
                     "malformed frame from {}",
@@ -350,6 +444,7 @@ impl AttendBackend for RemotePool {
             active,
             layer,
             n: n_tasks,
+            submitted: Instant::now(),
         })
     }
 
@@ -357,6 +452,7 @@ impl AttendBackend for RemotePool {
         let mut outputs = HashMap::with_capacity(pending.n);
         let mut max_busy = Duration::ZERO;
         let mut total_busy = Duration::ZERO;
+        let mut socket_busy: Vec<(usize, Duration)> = Vec::new();
         let mut first_err: Option<anyhow::Error> = None;
         for n in pending.active {
             match self.recv_from(n) {
@@ -374,11 +470,25 @@ impl AttendBackend for RemotePool {
                     }
                     max_busy = max_busy.max(busy);
                     total_busy += busy;
+                    socket_busy.push((n, busy));
+                    if let Some(track) = self.tracks.get(n) {
+                        track.record(
+                            "attend",
+                            pending.submitted,
+                            Instant::now(),
+                            &[
+                                ("node", n as f64),
+                                ("layer", pending.layer as f64),
+                                ("busy_us", busy.as_secs_f64() * 1e6),
+                            ],
+                        );
+                    }
                     for (id, o) in outs {
                         outputs.insert(id, o);
                     }
                 }
                 Ok(NetResponse::Err(msg)) => {
+                    self.nodes[n].wire_stats.errors += 1;
                     if first_err.is_none() {
                         first_err = Some(anyhow!(
                             "{} refused attend: {msg}",
@@ -387,6 +497,7 @@ impl AttendBackend for RemotePool {
                     }
                 }
                 Ok(other) => {
+                    self.nodes[n].wire_stats.errors += 1;
                     if first_err.is_none() {
                         first_err = Some(anyhow!(
                             "{} answered attend with {other:?}",
@@ -415,6 +526,7 @@ impl AttendBackend for RemotePool {
             outputs,
             max_busy,
             total_busy,
+            socket_busy,
         })
     }
 
@@ -468,6 +580,41 @@ impl AttendBackend for RemotePool {
             return Err(e.context("gathering stats from remote nodes"));
         }
         Ok(all)
+    }
+
+    /// One trace track per node; subsequent attends record submit→reply
+    /// spans on the owning node's track.
+    fn install_tracer(&mut self, tracer: Tracer) {
+        self.tracks = (0..self.nodes.len())
+            .map(|i| tracer.track(&format!("r-node{i}")))
+            .collect();
+    }
+
+    /// Wire accounting for EVERY node, dead ones included (their
+    /// counters are snapshotted at death).
+    fn net_stats(&self) -> Vec<NetStats> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .map(|(i, node)| {
+                let transport = match &node.transport {
+                    Some(t) => t.counters(),
+                    None => node.wire_stats.final_transport,
+                };
+                NetStats {
+                    node: i,
+                    label: node.label.clone(),
+                    transport,
+                    attend_ops: node.wire_stats.attend_ops,
+                    errors: node.wire_stats.errors,
+                    modeled_payload_sent: node.wire_stats.modeled_sent,
+                    measured_payload_sent: node.wire_stats.measured_sent,
+                    modeled_payload_recv: node.wire_stats.modeled_recv,
+                    measured_payload_recv: node.wire_stats.measured_recv,
+                    drift_events: node.wire_stats.drift_events,
+                }
+            })
+            .collect()
     }
 }
 
@@ -616,5 +763,42 @@ mod tests {
         // dead-node touches keep naming the original cause
         let err2 = pool.rpc_ack(0, &NetRequest::Stats).unwrap_err();
         assert!(format!("{err2:#}").contains("dead"), "{err2:#}");
+        // the dead node's counters survive as a snapshot
+        let stats = pool.net_stats();
+        assert_eq!(stats.len(), 2);
+        assert!(stats[0].transport.frames_sent > 0, "{:?}", stats[0]);
+        assert_eq!(stats[0].errors, 1, "{:?}", stats[0]);
+    }
+
+    /// Live wire traffic measures exactly what the LinkModel models:
+    /// the runtime drift detector stays at zero across attends on both
+    /// wire modes, and the counters actually count.
+    #[test]
+    fn net_stats_count_wire_traffic_without_drift() {
+        for wire in [WireMode::F32, WireMode::F16] {
+            let mut pool = RemotePool::loopback(cfg(wire), 2).unwrap();
+            pool.install_tracer(Tracer::enabled());
+            pool.add_seqs(&[1, 2, 3]).unwrap();
+            let mut rng = Rng::new(7);
+            for _ in 0..2 {
+                let tasks: Vec<SeqTask> = [1u64, 2, 3]
+                    .iter()
+                    .map(|&i| mk_task(&mut rng, i, TINY.hidden))
+                    .collect();
+                pool.attend(0, tasks).unwrap();
+            }
+            let stats = pool.net_stats();
+            assert_eq!(stats.len(), 2);
+            for s in &stats {
+                assert!(s.drift_free(), "{wire:?} node {}: {s:?}", s.node);
+                assert_eq!(s.attend_ops, 2, "{s:?}");
+                assert_eq!(s.errors, 0, "{s:?}");
+                assert!(s.modeled_payload_sent > 0, "{s:?}");
+                assert!(s.modeled_payload_recv > 0, "{s:?}");
+                assert!(s.transport.frames_sent >= 3, "{s:?}"); // cfg + 2 attends
+                assert!(s.transport.bytes_sent > s.modeled_payload_sent, "{s:?}");
+                assert!(s.transport.frames_recv >= 3, "{s:?}");
+            }
+        }
     }
 }

@@ -213,16 +213,19 @@ pub fn serve_listener(listener: TcpListener) -> Result<()> {
                     .spawn(move || match Tcp::from_stream(stream) {
                         Ok(t) => {
                             if let Err(e) = serve_connection(t) {
-                                eprintln!("rnode: connection {peer}: {e:#}");
+                                crate::obs::log!(
+                                    Warn,
+                                    "connection {peer}: {e:#}"
+                                );
                             }
                         }
                         Err(e) => {
-                            eprintln!("rnode: accepting {peer}: {e:#}")
+                            crate::obs::log!(Warn, "accepting {peer}: {e:#}")
                         }
                     })
                     .context("spawning connection thread")?;
             }
-            Err(e) => eprintln!("rnode: accept failed: {e}"),
+            Err(e) => crate::obs::log!(Error, "accept failed: {e}"),
         }
     }
     Ok(())

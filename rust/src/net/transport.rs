@@ -21,6 +21,7 @@ use std::net::{TcpStream, ToSocketAddrs};
 
 use anyhow::{anyhow, bail, Context as _, Result};
 
+use crate::obs::TransportCounters;
 use crate::util::chan::{bounded, Receiver, Sender};
 
 use super::codec::MAX_FRAME_BYTES;
@@ -36,6 +37,12 @@ pub trait Transport: Send {
     fn peer(&self) -> &str;
     /// Transport kind label for backend names.
     fn kind(&self) -> &'static str;
+    /// Frame/byte totals for this connection (frame bodies, excluding
+    /// stream framing). Default: a transport that doesn't count
+    /// reports zeros.
+    fn counters(&self) -> TransportCounters {
+        TransportCounters::default()
+    }
 }
 
 /// In-process transport endpoint: frames travel as `Vec<u8>` over
@@ -44,6 +51,7 @@ pub struct Loopback {
     tx: Sender<Vec<u8>>,
     rx: Receiver<Vec<u8>>,
     peer: String,
+    counters: TransportCounters,
 }
 
 /// Create a connected pair of loopback endpoints `(server, client)` —
@@ -57,11 +65,13 @@ pub fn loopback_pair(label: &str) -> (Loopback, Loopback) {
             tx: a_tx,
             rx: b_rx,
             peer: format!("loopback:{label}:client"),
+            counters: TransportCounters::default(),
         },
         Loopback {
             tx: b_tx,
             rx: a_rx,
             peer: format!("loopback:{label}:server"),
+            counters: TransportCounters::default(),
         },
     )
 }
@@ -79,13 +89,18 @@ impl Transport for Loopback {
         }
         self.tx
             .send(frame.to_vec())
-            .map_err(|_| anyhow!("{} disconnected", self.peer))
+            .map_err(|_| anyhow!("{} disconnected", self.peer))?;
+        self.counters.on_send(frame.len());
+        Ok(())
     }
 
     fn recv(&mut self) -> Result<Vec<u8>> {
-        self.rx
+        let frame = self
+            .rx
             .recv()
-            .map_err(|_| anyhow!("{} disconnected", self.peer))
+            .map_err(|_| anyhow!("{} disconnected", self.peer))?;
+        self.counters.on_recv(frame.len());
+        Ok(frame)
     }
 
     fn peer(&self) -> &str {
@@ -95,6 +110,10 @@ impl Transport for Loopback {
     fn kind(&self) -> &'static str {
         "loopback"
     }
+
+    fn counters(&self) -> TransportCounters {
+        self.counters
+    }
 }
 
 /// TCP transport: `u32` little-endian length prefix + frame body per
@@ -102,6 +121,7 @@ impl Transport for Loopback {
 pub struct Tcp {
     stream: TcpStream,
     peer: String,
+    counters: TransportCounters,
 }
 
 impl Tcp {
@@ -119,7 +139,11 @@ impl Tcp {
             .peer_addr()
             .map(|a| a.to_string())
             .unwrap_or_else(|_| "<unknown peer>".to_string());
-        Ok(Tcp { stream, peer })
+        Ok(Tcp {
+            stream,
+            peer,
+            counters: TransportCounters::default(),
+        })
     }
 }
 
@@ -137,7 +161,9 @@ impl Transport for Tcp {
             .write_all(&len)
             .and_then(|_| self.stream.write_all(frame))
             .and_then(|_| self.stream.flush())
-            .with_context(|| format!("sending frame to {}", self.peer))
+            .with_context(|| format!("sending frame to {}", self.peer))?;
+        self.counters.on_send(frame.len());
+        Ok(())
     }
 
     fn recv(&mut self) -> Result<Vec<u8>> {
@@ -159,6 +185,7 @@ impl Transport for Tcp {
         self.stream
             .read_exact(&mut frame)
             .with_context(|| format!("receiving frame from {}", self.peer))?;
+        self.counters.on_recv(frame.len());
         Ok(frame)
     }
 
@@ -168,6 +195,10 @@ impl Transport for Tcp {
 
     fn kind(&self) -> &'static str {
         "tcp"
+    }
+
+    fn counters(&self) -> TransportCounters {
+        self.counters
     }
 }
 
@@ -184,6 +215,21 @@ mod tests {
         assert_eq!(server.recv().unwrap(), Vec::<u8>::new());
         server.send(&[9]).unwrap();
         assert_eq!(client.recv().unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn counters_track_frames_and_bytes() {
+        let (mut server, mut client) = loopback_pair("t");
+        client.send(&[1, 2, 3]).unwrap();
+        client.send(&[4]).unwrap();
+        server.recv().unwrap();
+        let c = client.counters();
+        assert_eq!(c.frames_sent, 2);
+        assert_eq!(c.bytes_sent, 4);
+        assert_eq!(c.frames_recv, 0);
+        let s = server.counters();
+        assert_eq!(s.frames_recv, 1);
+        assert_eq!(s.bytes_recv, 3);
     }
 
     #[test]

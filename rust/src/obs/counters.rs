@@ -1,0 +1,124 @@
+//! Wire-level counters: per-connection frame/byte totals and per-node
+//! attend/error/drift accounting.
+//!
+//! [`TransportCounters`] is maintained inside each `net::Transport`
+//! impl (loopback and TCP) — every framed send/recv bumps it, so the
+//! numbers are ground truth for what crossed the wire. `RemotePool`
+//! aggregates them per node into [`NetStats`] together with attend-op
+//! and error counts and the **drift detector**: for every attend
+//! request (and its outputs response) the pool computes the
+//! `transport::LinkModel`-modeled activation payload bytes and the
+//! measured payload bytes (frame length minus the deterministic codec
+//! framing overhead); any mismatch increments `drift_events`. This
+//! promotes PR 5's pinned-bytes test discipline into an always-on
+//! runtime check — if the codec or the link model changes shape, live
+//! runs notice, not just the unit test.
+
+use crate::util::json::Json;
+
+/// Frames and bytes through one connection, both directions.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TransportCounters {
+    pub frames_sent: u64,
+    pub bytes_sent: u64,
+    pub frames_recv: u64,
+    pub bytes_recv: u64,
+}
+
+impl TransportCounters {
+    pub fn on_send(&mut self, frame_len: usize) {
+        self.frames_sent += 1;
+        self.bytes_sent += frame_len as u64;
+    }
+
+    pub fn on_recv(&mut self, frame_len: usize) {
+        self.frames_recv += 1;
+        self.bytes_recv += frame_len as u64;
+    }
+}
+
+/// One remote node's wire accounting, as surfaced by
+/// `AttendBackend::net_stats`.
+#[derive(Clone, Debug, Default)]
+pub struct NetStats {
+    pub node: usize,
+    pub label: String,
+    /// Frame/byte totals from the node's transport (last snapshot if
+    /// the node is dead).
+    pub transport: TransportCounters,
+    /// Attend RPCs submitted to this node.
+    pub attend_ops: u64,
+    /// Errors observed on this node (refusals, transport failures).
+    pub errors: u64,
+    /// LinkModel-modeled activation payload bytes sent (QKV legs).
+    pub modeled_payload_sent: u64,
+    /// Measured activation payload bytes sent (frame − framing overhead).
+    pub measured_payload_sent: u64,
+    /// Modeled activation payload bytes received (O legs).
+    pub modeled_payload_recv: u64,
+    /// Measured activation payload bytes received.
+    pub measured_payload_recv: u64,
+    /// Times measured ≠ modeled; nonzero means the codec and the
+    /// LinkModel disagree about message shape.
+    pub drift_events: u64,
+}
+
+impl NetStats {
+    /// True when every measured byte matched the model.
+    pub fn drift_free(&self) -> bool {
+        self.drift_events == 0
+            && self.modeled_payload_sent == self.measured_payload_sent
+            && self.modeled_payload_recv == self.measured_payload_recv
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("node", self.node)
+            .set("label", self.label.as_str())
+            .set("frames_sent", self.transport.frames_sent)
+            .set("bytes_sent", self.transport.bytes_sent)
+            .set("frames_recv", self.transport.frames_recv)
+            .set("bytes_recv", self.transport.bytes_recv)
+            .set("attend_ops", self.attend_ops)
+            .set("errors", self.errors)
+            .set("modeled_payload_sent", self.modeled_payload_sent)
+            .set("measured_payload_sent", self.measured_payload_sent)
+            .set("modeled_payload_recv", self.modeled_payload_recv)
+            .set("measured_payload_recv", self.measured_payload_recv)
+            .set("drift_events", self.drift_events)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut c = TransportCounters::default();
+        c.on_send(100);
+        c.on_send(50);
+        c.on_recv(7);
+        assert_eq!(c.frames_sent, 2);
+        assert_eq!(c.bytes_sent, 150);
+        assert_eq!(c.frames_recv, 1);
+        assert_eq!(c.bytes_recv, 7);
+    }
+
+    #[test]
+    fn drift_free_requires_exact_match() {
+        let mut s = NetStats {
+            modeled_payload_sent: 10,
+            measured_payload_sent: 10,
+            ..NetStats::default()
+        };
+        assert!(s.drift_free());
+        s.drift_events = 1;
+        assert!(!s.drift_free());
+        s.drift_events = 0;
+        s.measured_payload_recv = 4;
+        assert!(!s.drift_free());
+        let j = s.to_json().render();
+        assert!(j.contains("\"drift_events\":0"));
+    }
+}

@@ -1,0 +1,55 @@
+//! Observability: span tracing, leveled logging, and wire-level
+//! counters — the instrument behind the paper's latency decomposition
+//! (Figs 8/11/12/15: S-Part compute vs R-Part attend vs activation
+//! transfer).
+//!
+//! The flow is **trace → breakdown → snapshot**:
+//!
+//! 1. **Trace** — [`Tracer`] records wall-clock spans on per-thread
+//!    tracks at every pipeline stage: S compute on the S-thread,
+//!    QKV scatter and O-gather incast wait on the coordinator, one
+//!    submit→reply span per socket/node on its own track, admission
+//!    decisions and prefill-vs-decode rows in the serving engine. The
+//!    flush is a Chrome trace-event JSON (chrome://tracing, Perfetto)
+//!    built on `util::json` — one track per thread/node, so straggler
+//!    skew and pipeline bubbles are visible on a timeline.
+//! 2. **Breakdown** — the same timers feed
+//!    `metrics::StepRecord`'s measured segments (`queue_wait_s`,
+//!    `gather_wait_s`, `dispatch_s`, per-socket busy, straggler
+//!    `skew_s`), which tile each step's wall latency:
+//!    `accounted_s() ≈ latency_s` with a small residual
+//!    (`StepRecord::residual_s`). That identity is asserted by
+//!    `tests/obs_trace.rs` at every step of a live pipelined run.
+//! 3. **Snapshot** — `bench::snapshot` aggregates a run's trace into a
+//!    pinned machine-readable `BENCH_<name>.json` (schema documented
+//!    there), starting the cross-PR perf trajectory.
+//!
+//! Tracing is NEAR-ZERO-COST when disabled: [`Tracer`] is an
+//! `Option<Arc<_>>`; a disabled tracer's `span`/`record`/`instant`
+//! are a single branch with no clock read and no allocation, pinned
+//! below 2 % of a reduced-scale fig9 step by `tests/obs_trace.rs`.
+//! Enable at runtime with `FASTDECODE_TRACE=1` (picked up by every
+//! engine constructor) or explicitly via the `*_traced` constructors.
+//!
+//! Logging ([`log!`](crate::obs_log)) is leveled and timestamped,
+//! controlled by `FASTDECODE_LOG` (`error`/`warn`/`info`/`debug`, off
+//! by default) — the rnode/pool noise that used to be unconditional
+//! `eprintln!`s.
+//!
+//! Wire counters ([`TransportCounters`], [`NetStats`]) count frames
+//! and bytes per connection inside the transports and attend
+//! ops/errors per node in `net::RemotePool`, which also runs a live
+//! drift detector: measured activation payload bytes must equal the
+//! `transport::LinkModel`-modeled bytes (PR 5's pinned-bytes test
+//! discipline, promoted into always-on counters).
+
+pub mod counters;
+pub mod logging;
+pub mod tracer;
+
+pub use counters::{NetStats, TransportCounters};
+pub use logging::Level;
+pub use tracer::{Span, Tracer, Track};
+
+// Re-export the crate-root macro so call sites read `obs::log!`.
+pub use crate::obs_log as log;

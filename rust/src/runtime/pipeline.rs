@@ -61,6 +61,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context as _, Result};
 
+use crate::obs::{Tracer, Track};
 use crate::rworker::{AttendBackend, PendingAttend, RPool, SeqTask};
 use crate::sworker::NativeSWorker;
 use crate::transport::{LinkModel, PCIE4_X16, ROCE_100G};
@@ -101,7 +102,13 @@ impl Default for PipelineConfig {
 }
 
 /// Timing of one decode step, from real wall-clock timestamps.
-#[derive(Clone, Copy, Debug, Default)]
+///
+/// `s_time`/`r_time`/`comm_time` are *attributed* stage times (they
+/// overlap in a pipelined step); `queue_wait_s`/`gather_wait_s`/
+/// `dispatch_s` are *measured* disjoint coordinator-thread segments
+/// that tile `latency_s` (the breakdown identity asserted by
+/// `tests/obs_trace.rs`).
+#[derive(Clone, Debug, Default)]
 pub struct StepTiming {
     /// Wall time of the whole step.
     pub latency_s: f64,
@@ -111,6 +118,16 @@ pub struct StepTiming {
     pub r_time: f64,
     /// Modeled activation wire time for the real bytes shipped.
     pub comm_time: f64,
+    /// Coordinator blocked on S-thread responses (queue-wait).
+    pub queue_wait_s: f64,
+    /// O-gather incast wait: `wait_attend` plus output reassembly.
+    pub gather_wait_s: f64,
+    /// QKV per-sequence split plus scatter submit.
+    pub dispatch_s: f64,
+    /// Σ over gathers of (max − min) socket busy — straggler skew.
+    pub skew_s: f64,
+    /// Per-socket busy seconds accumulated over the step's gathers.
+    pub socket_busy: Vec<f64>,
 }
 
 /// Coordinator → S-thread.
@@ -170,6 +187,9 @@ pub struct ThreadedPipeline {
     /// must drain after a failed step.
     s_outstanding: usize,
     inflight: Option<Inflight>,
+    tracer: Tracer,
+    /// The coordinator thread's trace track (scatter/gather/step spans).
+    track: Track,
 }
 
 impl ThreadedPipeline {
@@ -195,11 +215,32 @@ impl ThreadedPipeline {
         pool: Box<dyn AttendBackend>,
         cfg: PipelineConfig,
     ) -> ThreadedPipeline {
+        ThreadedPipeline::with_backend_traced(
+            sworker,
+            pool,
+            cfg,
+            Tracer::from_env(),
+        )
+    }
+
+    /// [`ThreadedPipeline::with_backend`] with an explicit tracer: the
+    /// S-thread, the coordinator and (via
+    /// [`AttendBackend::install_tracer`]) every R socket/node get their
+    /// own track. Pass [`Tracer::disabled`] for zero overhead.
+    pub fn with_backend_traced(
+        sworker: NativeSWorker,
+        mut pool: Box<dyn AttendBackend>,
+        cfg: PipelineConfig,
+        tracer: Tracer,
+    ) -> ThreadedPipeline {
         let hidden = sworker.spec().hidden;
         let vocab = sworker.spec().vocab;
         let layers = sworker.layers();
         assert!(layers > 0, "pipeline needs at least one layer");
         assert!(cfg.depth > 0, "pipeline depth must be ≥ 1");
+        pool.install_tracer(tracer.clone());
+        let s_track = tracer.track("sworker");
+        let track = tracer.track("coordinator");
         // Capacity scales with depth: the prologue queues one Start per
         // mini-batch, and the S thread may run up to a full channel of
         // responses ahead. 2D+4 on both sides keeps every send in the
@@ -211,7 +252,7 @@ impl ThreadedPipeline {
         let pad = cfg.s_pad;
         let handle = std::thread::Builder::new()
             .name("sworker".into())
-            .spawn(move || s_worker_loop(sworker, pad, req_rx, resp_tx))
+            .spawn(move || s_worker_loop(sworker, pad, req_rx, resp_tx, s_track))
             .expect("spawning s-worker thread");
         ThreadedPipeline {
             req_tx,
@@ -224,7 +265,22 @@ impl ThreadedPipeline {
             vocab,
             s_outstanding: 0,
             inflight: None,
+            tracer,
+            track,
         }
+    }
+
+    /// The tracer threaded through this pipeline (disabled unless
+    /// `FASTDECODE_TRACE` was set or an enabled tracer was passed in).
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    /// The coordinator thread's track — callers driving the pipeline
+    /// (admission, serving) record their decisions next to the
+    /// scatter/gather spans.
+    pub fn track(&self) -> &Track {
+        &self.track
     }
 
     pub fn layers(&self) -> usize {
@@ -337,6 +393,12 @@ impl ThreadedPipeline {
         }
         let next = res?;
         timing.latency_s = t0.elapsed().as_secs_f64();
+        self.track.record(
+            "step",
+            t0,
+            Instant::now(),
+            &[("rows", b as f64), ("depth", d as f64)],
+        );
         Ok((next, timing))
     }
 
@@ -463,6 +525,7 @@ impl ThreadedPipeline {
         timing: &mut StepTiming,
     ) -> Result<()> {
         debug_assert!(self.inflight.is_none(), "attend already in flight");
+        let t_d = Instant::now();
         let h = self.hidden;
         debug_assert_eq!(qkv.len(), (hi - lo) * 3 * h);
         let mut tasks: Vec<SeqTask> = Vec::new();
@@ -512,6 +575,17 @@ impl ThreadedPipeline {
             hi,
             pending,
         });
+        timing.dispatch_s += t_d.elapsed().as_secs_f64();
+        self.track.record(
+            "scatter",
+            t_d,
+            Instant::now(),
+            &[
+                ("mb", mb as f64),
+                ("layer", layer as f64),
+                ("rows", (hi - lo) as f64),
+            ],
+        );
         Ok(())
     }
 
@@ -523,12 +597,34 @@ impl ThreadedPipeline {
         ids: &[u64],
         timing: &mut StepTiming,
     ) -> Result<(usize, usize, Vec<f32>)> {
+        let t_g = Instant::now();
         let inf = self.inflight.take().expect("no attend in flight");
         let step = self
             .pool
             .wait_attend(inf.pending)
             .context("gathering attend from the r-pool")?;
         timing.r_time += step.max_busy.as_secs_f64();
+        // Per-socket attribution: accumulate each socket's busy time and
+        // the straggler skew (max − min) of this gather.
+        if !step.socket_busy.is_empty() {
+            let sockets = self.pool.sockets();
+            if timing.socket_busy.len() < sockets {
+                timing.socket_busy.resize(sockets, 0.0);
+            }
+            let mut min_b = f64::INFINITY;
+            let mut max_b = 0.0f64;
+            for &(s, busy) in &step.socket_busy {
+                let b = busy.as_secs_f64();
+                if let Some(slot) = timing.socket_busy.get_mut(s) {
+                    *slot += b;
+                }
+                min_b = min_b.min(b);
+                max_b = max_b.max(b);
+            }
+            if step.socket_busy.len() >= 2 {
+                timing.skew_s += max_b - min_b;
+            }
+        }
         let mut o = Vec::with_capacity((inf.hi - inf.lo) * self.hidden);
         let mut s = inf.lo;
         while s < inf.hi {
@@ -541,11 +637,22 @@ impl ThreadedPipeline {
             s = j;
         }
         debug_assert_eq!(o.len(), (inf.hi - inf.lo) * self.hidden);
+        timing.gather_wait_s += t_g.elapsed().as_secs_f64();
+        self.track.record(
+            "gather",
+            t_g,
+            Instant::now(),
+            &[("mb", inf.mb as f64), ("layer", inf.layer as f64)],
+        );
         Ok((inf.mb, inf.layer, o))
     }
 
     fn recv_s(&mut self, timing: &mut StepTiming) -> Result<SResp> {
-        match self.resp_rx.recv() {
+        let t_w = Instant::now();
+        let received = self.resp_rx.recv();
+        timing.queue_wait_s += t_w.elapsed().as_secs_f64();
+        self.track.record("s_wait", t_w, Instant::now(), &[]);
+        match received {
             Ok(resp) => {
                 self.s_outstanding -= 1;
                 match resp {
@@ -618,6 +725,7 @@ fn s_worker_loop(
     pad: Duration,
     rx: Receiver<SReq>,
     tx: Sender<SResp>,
+    track: Track,
 ) {
     let layers = sworker.layers();
     let h = sworker.spec().hidden;
@@ -696,6 +804,24 @@ fn s_worker_loop(
                     std::thread::sleep(pad * rows as u32);
                 }
                 let elapsed_s = t0.elapsed().as_secs_f64();
+                let (span, layer_arg) = match &payload {
+                    Payload::Qkv(_, layer, ..) => (
+                        if is_start { "s_start" } else { "s_advance" },
+                        *layer as f64,
+                    ),
+                    // the logits head runs past the last layer
+                    Payload::Done(..) => ("s_advance", layers as f64),
+                };
+                track.record(
+                    span,
+                    t0,
+                    Instant::now(),
+                    &[
+                        ("mb", mb as f64),
+                        ("layer", layer_arg),
+                        ("rows", rows as f64),
+                    ],
+                );
                 match payload {
                     Payload::Qkv(mb, layer, qkv, _) => SResp::Qkv {
                         mb,

@@ -23,9 +23,10 @@
 
 use anyhow::Result;
 use std::collections::HashMap;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::kvcache::CacheStats;
+use crate::obs::{NetStats, Tracer};
 
 use super::worker::SeqTask;
 
@@ -38,6 +39,9 @@ pub struct PendingAttend {
     pub(crate) layer: usize,
     /// Total task count (outputs are counted against it).
     pub(crate) n: usize,
+    /// When the scatter completed — the start of each socket's
+    /// submit→reply trace span.
+    pub(crate) submitted: Instant,
 }
 
 /// Outputs of one pooled attend call.
@@ -49,6 +53,9 @@ pub struct PoolStep {
     pub max_busy: Duration,
     /// Sum of busy times (for utilization accounting).
     pub total_busy: Duration,
+    /// (socket index, busy time) for each socket that replied — the
+    /// per-socket decomposition behind `StepTiming::socket_busy`/skew.
+    pub socket_busy: Vec<(usize, Duration)>,
 }
 
 /// R-Part worker pool abstraction: in-process threads (`RPool`), wire
@@ -88,6 +95,19 @@ pub trait AttendBackend: Send {
 
     /// Aggregate cache statistics, one entry per live socket.
     fn stats(&mut self) -> Result<Vec<CacheStats>>;
+
+    /// Install a tracer: backends that support it create one track per
+    /// socket/node and record submit→reply attend spans on it. The
+    /// default ignores the tracer (tracing stays off for that backend).
+    fn install_tracer(&mut self, _tracer: Tracer) {}
+
+    /// Wire-level counters, one entry per node — frames/bytes per
+    /// connection, attend ops, errors, and the modeled-vs-measured
+    /// payload drift detector. Backends with no wire (in-process
+    /// threads) report none.
+    fn net_stats(&self) -> Vec<NetStats> {
+        Vec::new()
+    }
 
     /// Scatter one layer's tasks, attend in parallel, gather.
     fn attend(&mut self, layer: usize, tasks: Vec<SeqTask>) -> Result<PoolStep> {

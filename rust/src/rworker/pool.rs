@@ -16,11 +16,12 @@
 //! pool stays reusable for the sequences they hold.
 
 use std::collections::HashMap;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use crate::model::{ModelSpec, Precision};
+use crate::obs::{Tracer, Track};
 
 pub use super::backend::{AttendBackend, PendingAttend, PoolStep};
 use super::worker::{RRequest, RResponse, RWorker, SeqTask};
@@ -53,6 +54,8 @@ pub struct RPool {
     workers: Vec<RWorker>,
     placement: HashMap<u64, usize>,
     next_socket: usize,
+    /// One trace track per socket (all disabled until `install_tracer`).
+    tracks: Vec<Track>,
 }
 
 impl RPool {
@@ -75,7 +78,16 @@ impl RPool {
             workers,
             placement: HashMap::new(),
             next_socket: 0,
+            tracks: Vec::new(),
         }
+    }
+
+    /// Create one trace track per socket; each gathered attend then
+    /// records a submit→reply span on its socket's track.
+    pub fn install_tracer(&mut self, tracer: Tracer) {
+        self.tracks = (0..self.workers.len())
+            .map(|i| tracer.track(&format!("r-socket{i}")))
+            .collect();
     }
 
     pub fn sockets(&self) -> usize {
@@ -227,7 +239,12 @@ impl RPool {
             }
             active.push(s);
         }
-        Ok(PendingAttend { active, layer, n })
+        Ok(PendingAttend {
+            active,
+            layer,
+            n,
+            submitted: Instant::now(),
+        })
     }
 
     /// Gather one in-flight attend. Replies are FIFO per socket, so
@@ -240,6 +257,7 @@ impl RPool {
         let mut outputs = HashMap::with_capacity(pending.n);
         let mut max_busy = Duration::ZERO;
         let mut total_busy = Duration::ZERO;
+        let mut socket_busy: Vec<(usize, Duration)> = Vec::new();
         let mut first_err: Option<anyhow::Error> = None;
         for s in pending.active {
             match self.workers[s].recv() {
@@ -253,6 +271,19 @@ impl RPool {
                     );
                     max_busy = max_busy.max(busy);
                     total_busy += busy;
+                    socket_busy.push((s, busy));
+                    if let Some(track) = self.tracks.get(s) {
+                        track.record(
+                            "attend",
+                            pending.submitted,
+                            Instant::now(),
+                            &[
+                                ("socket", s as f64),
+                                ("layer", pending.layer as f64),
+                                ("busy_us", busy.as_secs_f64() * 1e6),
+                            ],
+                        );
+                    }
                     for (id, o) in outs {
                         outputs.insert(id, o);
                     }
@@ -285,6 +316,7 @@ impl RPool {
             outputs,
             max_busy,
             total_busy,
+            socket_busy,
         })
     }
 
@@ -344,6 +376,9 @@ impl AttendBackend for RPool {
     }
     fn stats(&mut self) -> Result<Vec<crate::kvcache::CacheStats>> {
         RPool::stats(self)
+    }
+    fn install_tracer(&mut self, tracer: Tracer) {
+        RPool::install_tracer(self, tracer)
     }
 }
 

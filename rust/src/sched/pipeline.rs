@@ -93,6 +93,8 @@ impl PipelineSim {
                 comm_time: c,
                 tokens,
                 total_ctx: ctx,
+                // modeled steps have no measured wait/skew breakdown
+                ..Default::default()
             });
         }
         trace

@@ -186,6 +186,9 @@ impl ServeEngine {
         }
         // take manual control of the sequence lifecycle
         self.fd.reset();
+        // serving-level events (admissions, passes) get their own track
+        // beside the pipeline's coordinator/sworker/socket tracks
+        let track = self.fd.tracer().track("serve");
 
         // arrivals in time order (stable on the trace's own order for
         // simultaneous arrivals)
@@ -261,6 +264,16 @@ impl ServeEngine {
                 };
                 let (_, meta) = waiting.remove(sel);
                 let r = &trace[meta.idx];
+                track.instant(
+                    "admit",
+                    &[
+                        ("request", r.id as f64),
+                        ("step", t as f64),
+                        ("prompt", r.prompt.len() as f64),
+                        ("target", r.target_len as f64),
+                        ("waited_steps", (t - meta.arrive_step) as f64),
+                    ],
+                );
                 let seq_id = self.fd.alloc_seq_ids(1)[0];
                 self.fd.register_seqs(&[seq_id])?;
                 let slot = slots.free_slot().expect("free slot checked");
@@ -329,7 +342,21 @@ impl ServeEngine {
                 continue;
             }
             // 4. one pipeline pass; then per-request bookkeeping
+            let prefill_rows: usize =
+                segs.iter().filter(|s| s.prefill).map(|s| s.rows).sum();
+            let decode_rows = tokens.len() - prefill_rows;
+            let t_pass = Instant::now();
             let (next, timing) = self.fd.forward_rows(&tokens, &row_seqs)?;
+            track.record(
+                "pass",
+                t_pass,
+                Instant::now(),
+                &[
+                    ("step", t as f64),
+                    ("prefill_rows", prefill_rows as f64),
+                    ("decode_rows", decode_rows as f64),
+                ],
+            );
             let now_s = t0.elapsed().as_secs_f64();
             // measure the aggregate KV load this pass actually held,
             // BEFORE finished sequences release their caches — this is
@@ -389,6 +416,11 @@ impl ServeEngine {
                 s_time: timing.s_time,
                 r_time: timing.r_time,
                 comm_time: timing.comm_time,
+                queue_wait_s: timing.queue_wait_s,
+                gather_wait_s: timing.gather_wait_s,
+                dispatch_s: timing.dispatch_s,
+                skew_s: timing.skew_s,
+                socket_busy: timing.socket_busy,
                 tokens: tokens.len(),
                 total_ctx: kv_load,
             });

@@ -4,6 +4,7 @@
 //! rate-vs-latency sweep plots.
 
 use crate::metrics::Histogram;
+use crate::util::json::Json;
 
 /// One finished request, with its generated tokens and latencies.
 #[derive(Clone, Debug)]
@@ -71,6 +72,24 @@ impl ServeReport {
         }
     }
 
+    /// Machine-readable summary — the `serve` section of
+    /// `BENCH_serve_openloop.json` (see `bench::snapshot` for the full
+    /// schema).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("requests", self.requests)
+            .set("completed", self.completed)
+            .set("tokens", self.tokens)
+            .set("elapsed_s", self.elapsed_s)
+            .set("steps", self.steps)
+            .set("mean_wait_steps", self.mean_wait_steps)
+            .set("throughput_tok_s", self.throughput())
+            .set("goodput_req_s", self.goodput())
+            .set("ttft", self.ttft.to_json_ms())
+            .set("itl", self.itl.to_json_ms())
+            .set("e2e", self.e2e.to_json_ms())
+    }
+
     /// Multi-line human summary.
     pub fn summary(&self) -> String {
         format!(
@@ -121,6 +140,15 @@ mod tests {
         assert!(s.contains("4/4"));
         assert!(s.contains("16.0 tok/s"));
         assert!((r.goodput() - 2.0).abs() < 1e-12);
+        // the JSON view parses and carries the same counters
+        let j = Json::parse(&r.to_json().render()).unwrap();
+        assert_eq!(j.get("completed").and_then(Json::as_f64), Some(4.0));
+        assert_eq!(
+            j.get("throughput_tok_s").and_then(Json::as_f64),
+            Some(16.0)
+        );
+        let ttft = j.get("ttft").expect("ttft block");
+        assert_eq!(ttft.get("count").and_then(Json::as_f64), Some(1.0));
     }
 
     #[test]

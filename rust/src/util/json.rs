@@ -1,10 +1,14 @@
-//! Minimal JSON *writer* (offline stand-in for serde_json).
+//! Minimal JSON reader/writer (offline stand-in for serde_json).
 //!
 //! Only what the metrics dumps and bench reports need: objects, arrays,
-//! strings, numbers, bools. No parsing — machine-readable inputs use the
-//! line-based `artifacts/manifest.txt` format instead.
+//! strings, numbers, bools. The writer produces the `BENCH_*.json`
+//! snapshots and Chrome traces; the parser ([`Json::parse`]) is what
+//! the snapshot schema validator and the trace tests read them back
+//! with.
 
 use std::fmt::Write as _;
+
+use anyhow::{bail, Result};
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
@@ -35,6 +39,59 @@ impl Json {
         let mut s = String::new();
         self.write(&mut s);
         s
+    }
+
+    /// Parse a complete JSON document (trailing garbage is an error).
+    pub fn parse(input: &str) -> Result<Json> {
+        let mut p = Parser {
+            bytes: input.as_bytes(),
+            pos: 0,
+        };
+        p.skip_ws();
+        let v = p.value(0)?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            bail!("trailing garbage at byte {}", p.pos);
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup (None for non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => {
+                fields.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
     }
 
     fn write(&self, out: &mut String) {
@@ -92,6 +149,231 @@ impl Json {
                 }
                 out.push('}');
             }
+        }
+    }
+}
+
+/// Recursion guard: deeper documents than any we emit, shallower than
+/// the stack.
+const MAX_DEPTH: usize = 64;
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if matches!(b, b' ' | b'\t' | b'\n' | b'\r') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn eat(&mut self, b: u8) -> Result<()> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            bail!(
+                "expected '{}' at byte {}, found {:?}",
+                b as char,
+                self.pos,
+                self.peek().map(|c| c as char)
+            )
+        }
+    }
+
+    fn literal(&mut self, word: &str, value: Json) -> Result<Json> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(value)
+        } else {
+            bail!("invalid literal at byte {}", self.pos)
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json> {
+        if depth > MAX_DEPTH {
+            bail!("document nested deeper than {MAX_DEPTH}");
+        }
+        match self.peek() {
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'[') => self.array(depth),
+            Some(b'{') => self.object(depth),
+            Some(b) if b == b'-' || b.is_ascii_digit() => self.number(),
+            other => bail!(
+                "unexpected {:?} at byte {}",
+                other.map(|c| c as char),
+                self.pos
+            ),
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => bail!("expected ',' or ']' at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Json> {
+        self.eat(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.eat(b':')?;
+            self.skip_ws();
+            let value = self.value(depth + 1)?;
+            fields.push((key, value));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => bail!("expected ',' or '}}' at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut s = String::new();
+        loop {
+            let Some(b) = self.peek() else {
+                bail!("unterminated string");
+            };
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let Some(esc) = self.peek() else {
+                        bail!("unterminated escape");
+                    };
+                    self.pos += 1;
+                    match esc {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b't' => s.push('\t'),
+                        b'r' => s.push('\r'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            let c = if (0xd800..0xdc00).contains(&hi) {
+                                // surrogate pair
+                                self.eat(b'\\')?;
+                                self.eat(b'u')?;
+                                let lo = self.hex4()?;
+                                if !(0xdc00..0xe000).contains(&lo) {
+                                    bail!("bad low surrogate");
+                                }
+                                let cp = 0x10000
+                                    + ((hi - 0xd800) << 10)
+                                    + (lo - 0xdc00);
+                                char::from_u32(cp)
+                            } else {
+                                char::from_u32(hi)
+                            };
+                            match c {
+                                Some(c) => s.push(c),
+                                None => bail!("invalid \\u escape"),
+                            }
+                        }
+                        other => {
+                            bail!("bad escape '\\{}'", other as char)
+                        }
+                    }
+                }
+                b if b < 0x20 => bail!("raw control byte in string"),
+                b if b < 0x80 => s.push(b as char),
+                b => {
+                    // multi-byte UTF-8: the input came from a &str so
+                    // the sequence is valid — decode it from the source
+                    let start = self.pos - 1;
+                    let len = match b {
+                        0xc0..=0xdf => 2,
+                        0xe0..=0xef => 3,
+                        _ => 4,
+                    };
+                    let Some(slice) = self.bytes.get(start..start + len)
+                    else {
+                        bail!("truncated UTF-8 sequence");
+                    };
+                    let text = std::str::from_utf8(slice)
+                        .map_err(|_| anyhow::anyhow!("invalid UTF-8"))?;
+                    s.push_str(text);
+                    self.pos = start + len;
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        if self.pos + 4 > self.bytes.len() {
+            bail!("truncated \\u escape");
+        }
+        let hex = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+            .map_err(|_| anyhow::anyhow!("non-ASCII \\u escape"))?;
+        let v = u32::from_str_radix(hex, 16)
+            .map_err(|_| anyhow::anyhow!("bad \\u escape '{hex}'"))?;
+        self.pos += 4;
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        while let Some(b) = self.peek() {
+            if b.is_ascii_digit()
+                || matches!(b, b'-' | b'+' | b'.' | b'e' | b'E')
+            {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .expect("ASCII number bytes");
+        match text.parse::<f64>() {
+            Ok(n) if n.is_finite() => Ok(Json::Num(n)),
+            _ => bail!("bad number '{text}' at byte {start}"),
         }
     }
 }
@@ -169,5 +451,95 @@ mod tests {
     #[test]
     fn non_finite_is_null() {
         assert_eq!(Json::Num(f64::NAN).render(), "null");
+    }
+
+    #[test]
+    fn parse_roundtrips_nested() {
+        let j = Json::obj()
+            .set("name", "fig9")
+            .set("tok_per_s", 2048.5)
+            .set("batch", 1024usize)
+            .set("series", vec![1.0f64, 2.0, 3.5])
+            .set("ok", true)
+            .set("none", Json::Null);
+        assert_eq!(Json::parse(&j.render()).unwrap(), j);
+    }
+
+    #[test]
+    fn parse_handles_whitespace_and_escapes() {
+        let j = Json::parse(
+            " { \"a\\n\\\"b\" : [ 1 , -2.5e3 , \"\\u00e9\\ud83d\\ude00\" ] } ",
+        )
+        .unwrap();
+        let arr = j.get("a\n\"b").and_then(Json::as_arr).unwrap();
+        assert_eq!(arr[0].as_f64(), Some(1.0));
+        assert_eq!(arr[1].as_f64(), Some(-2500.0));
+        assert_eq!(arr[2].as_str(), Some("é😀"));
+        // raw multi-byte UTF-8 survives too
+        assert_eq!(
+            Json::parse("\"héllo\"").unwrap().as_str(),
+            Some("héllo")
+        );
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for bad in [
+            "", "{", "[1,", "{\"a\":}", "tru", "1.2.3", "\"unterminated",
+            "[1] junk", "{\"a\" 1}", "\"\\q\"", "nan",
+        ] {
+            assert!(Json::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn prop_render_parse_roundtrip() {
+        use crate::util::prop;
+        fn tree(g: &mut prop::Gen, depth: usize) -> Json {
+            let kind = if depth >= 3 {
+                g.usize_in(0, 3)
+            } else {
+                g.usize_in(0, 5)
+            };
+            match kind {
+                0 => Json::Null,
+                1 => Json::Bool(g.bool()),
+                2 => {
+                    if g.bool() {
+                        Json::Num(g.u64_in(0, 1 << 40) as f64)
+                    } else {
+                        Json::Num(g.f32_in(-1e6, 1e6) as f64)
+                    }
+                }
+                3 => {
+                    let n = g.usize_in(0, 8);
+                    Json::Str(
+                        (0..n)
+                            .map(|_| {
+                                *g.pick(&[
+                                    'a', 'Z', '"', '\\', '\n', '\t', 'é',
+                                    '😀', '\u{1}',
+                                ])
+                            })
+                            .collect(),
+                    )
+                }
+                4 => Json::Arr(
+                    (0..g.usize_in(0, 4))
+                        .map(|_| tree(g, depth + 1))
+                        .collect(),
+                ),
+                _ => Json::Obj(
+                    (0..g.usize_in(0, 4))
+                        .map(|i| (format!("k{i}"), tree(g, depth + 1)))
+                        .collect(),
+                ),
+            }
+        }
+        prop::check("json-roundtrip", 200, |g| {
+            let j = tree(g, 0);
+            let back = Json::parse(&j.render()).expect("parses own render");
+            assert_eq!(back, j, "render: {}", j.render());
+        });
     }
 }
