@@ -26,6 +26,7 @@ fn main() -> anyhow::Result<()> {
         target_len: (8, 24),
         vocab: TINY.vocab,
         count: 32,
+        ..Default::default()
     });
     let w_lim = 96;
     println!(
@@ -57,6 +58,7 @@ fn main() -> anyhow::Result<()> {
                 steps_per_sec: 200.0,
                 prefill: PrefillMode::Batched,
                 max_steps: 50_000,
+                ..Default::default()
             },
             policy,
         )?;

@@ -108,6 +108,7 @@ fn fig13_tcp(max_nodes: usize) {
             NodeConfig::from_spec(
                 &TINY,
                 steps + 4,
+                8,
                 Precision::F16,
                 WireMode::F16,
             ),

@@ -11,7 +11,7 @@ use fastdecode::coordinator::real::{FastDecode, FastDecodeConfig};
 use fastdecode::model::{Precision, TINY};
 use fastdecode::serve::{
     AdmissionPolicy, Fifo, PrefillMode, ServeConfig, ServeEngine,
-    ShortestJobFirst, SlsEarliestStart,
+    ServeReport, ShortestJobFirst, SlsEarliestStart,
 };
 use fastdecode::util::json::Json;
 use fastdecode::workload::{generate_trace, TraceConfig};
@@ -56,6 +56,7 @@ fn main() -> anyhow::Result<()> {
             target_len: (8, 24),
             vocab: TINY.vocab,
             count: 24,
+            ..Default::default()
         });
         for name in ["fifo", "sjf", "sls"] {
             let fd = FastDecode::new(
@@ -75,6 +76,7 @@ fn main() -> anyhow::Result<()> {
                     steps_per_sec: STEPS_PER_SEC,
                     prefill: PrefillMode::Batched,
                     max_steps: 200_000,
+                    ..Default::default()
                 },
                 policy_by(name),
             )?;
@@ -109,6 +111,78 @@ fn main() -> anyhow::Result<()> {
     }
     table.print();
     record_result("serve_openloop", Json::obj().set("rows", results));
+
+    // ── prefix sharing: same trace, same W_lim, fork on vs off ──────
+    // Every request opens with the same 24-token system prompt, so a
+    // paged cache that COW-forks the resident prefix charges only the
+    // divergent tail against W_lim and packs strictly more concurrent
+    // sequences into the same memory budget.
+    let shared_trace = generate_trace(&TraceConfig {
+        seed: 7,
+        rate: 400.0, // burst: the queue is always deep enough to fork
+        prefix_len: 24,
+        share_prob: 1.0,
+        prompt_len: (2, 4),
+        target_len: (6, 10),
+        vocab: TINY.vocab,
+        count: 16,
+        ..Default::default()
+    });
+    let share_run = |share_prefixes: bool| -> anyhow::Result<ServeReport> {
+        let fd = FastDecode::new(
+            TINY,
+            FastDecodeConfig {
+                batch: 8,
+                sockets: 2,
+                precision: Precision::F16,
+                capacity_per_seq: 64,
+                kv_block_size: 4, // divides the 24-token shared prefix
+                ..Default::default()
+            },
+        )?;
+        let mut engine = ServeEngine::new(
+            fd,
+            ServeConfig {
+                w_lim: 72,
+                steps_per_sec: 400.0,
+                prefill: PrefillMode::Batched,
+                max_steps: 200_000,
+                share_prefixes,
+                ..Default::default()
+            },
+            Box::new(Fifo),
+        )?;
+        Ok(engine.run(&shared_trace)?.report)
+    };
+    let with_sharing = share_run(true)?;
+    let without = share_run(false)?;
+    let hit_rate =
+        with_sharing.prefix_forks as f64 / with_sharing.requests as f64;
+    println!(
+        "\nprefix sharing @ W_lim 72: {} forks ({:.0}% of admissions), \
+         peak batch {} vs {} unshared, utilization {:.2} vs {:.2}",
+        with_sharing.prefix_forks,
+        100.0 * hit_rate,
+        with_sharing.peak_active,
+        without.peak_active,
+        with_sharing.kv_utilization(),
+        without.kv_utilization(),
+    );
+    assert!(
+        with_sharing.prefix_forks > 0,
+        "no admission forked on a fully shared-prefix trace"
+    );
+    assert!(
+        with_sharing.peak_active > without.peak_active
+            || with_sharing.goodput() > without.goodput(),
+        "prefix sharing bought neither batch size ({} vs {}) nor \
+         goodput ({:.2} vs {:.2}) at the same W_lim",
+        with_sharing.peak_active,
+        without.peak_active,
+        with_sharing.goodput(),
+        without.goodput(),
+    );
+
     if let Some((rate, report, trace)) = snap_run {
         let snap = Snapshot::from_trace(
             "serve_openloop",
@@ -121,7 +195,25 @@ fn main() -> anyhow::Result<()> {
                 .set("steps_per_sec", STEPS_PER_SEC),
             &trace,
         )
-        .with_extra(Json::obj().set("serve", report));
+        .with_extra(
+            Json::obj().set("serve", report).set(
+                "prefix_share",
+                Json::obj()
+                    .set("hit_rate", hit_rate)
+                    .set("forks", with_sharing.prefix_forks)
+                    .set(
+                        "shared_prefix_tokens",
+                        with_sharing.shared_prefix_tokens,
+                    )
+                    .set("peak_active_shared", with_sharing.peak_active)
+                    .set("peak_active_unshared", without.peak_active)
+                    .set("kv_utilization_shared", with_sharing.kv_utilization())
+                    .set(
+                        "kv_utilization_unshared",
+                        without.kv_utilization(),
+                    ),
+            ),
+        );
         let path = snap.write()?;
         println!("snapshot: {}", path.display());
     }

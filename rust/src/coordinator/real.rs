@@ -50,6 +50,9 @@ pub struct FastDecodeConfig {
     pub sockets: usize,
     pub precision: Precision,
     pub capacity_per_seq: usize,
+    /// Tokens per KV block in the paged allocator
+    /// (`kvcache::BlockPool`); also the COW prefix-sharing granularity.
+    pub kv_block_size: usize,
     pub weight_seed: u64,
     /// Number of instantiated layers (≤ spec.n_layers, like the paper's
     /// reduced-layer evaluation).
@@ -74,6 +77,7 @@ impl Default for FastDecodeConfig {
             sockets: 2,
             precision: Precision::F16,
             capacity_per_seq: 256,
+            kv_block_size: 16,
             weight_seed: 0xfa57,
             layers: 2,
             pipelined: true,
@@ -169,6 +173,7 @@ impl FastDecode {
             RPoolConfig {
                 sockets: cfg.sockets,
                 capacity_per_seq: cfg.capacity_per_seq,
+                block_size: cfg.kv_block_size,
                 precision: cfg.precision,
                 attend_pad: cfg.r_pad,
             },
@@ -405,23 +410,49 @@ impl FastDecode {
         })
     }
 
-    /// Aggregate KV tokens currently held across sockets (remote
-    /// backends answer over the wire, hence fallible and `&mut`).
+    /// Aggregate LOGICAL KV tokens currently held across sockets —
+    /// what sequences believe they cache, shared prefix blocks counted
+    /// once per sequence (remote backends answer over the wire, hence
+    /// fallible and `&mut`).
     pub fn cache_tokens(&mut self) -> Result<usize> {
-        Ok(self
-            .pipeline
-            .pool_mut()
-            .stats()?
-            .iter()
-            .map(|s| s.total_tokens)
-            .sum())
+        Ok(self.cache_stats()?.total_tokens)
+    }
+
+    /// Merged cache statistics across every socket: logical AND
+    /// physical token/byte counts (one stats round trip).
+    pub fn cache_stats(&mut self) -> Result<crate::kvcache::CacheStats> {
+        let mut merged = crate::kvcache::CacheStats::default();
+        for st in self.pipeline.pool_mut().stats()? {
+            merged.merge(&st);
+        }
+        Ok(merged)
+    }
+
+    /// Instantiated layer count (`cfg.layers`) — the divisor that turns
+    /// per-layer cache totals into Algorithm 1's per-sequence W.
+    pub fn layers(&self) -> usize {
+        self.cfg.layers
     }
 
     /// Measured per-layer aggregate context across sockets — the live
     /// counterpart of Algorithm 1's W (each sequence counts its cached
-    /// tokens once, not once per layer).
+    /// tokens once, not once per layer). PHYSICAL: blocks shared by a
+    /// COW fork are counted once, so admission sees the real headroom
+    /// paging buys.
     pub fn measured_kv_load(&mut self) -> Result<usize> {
-        Ok(self.cache_tokens()? / self.cfg.layers)
+        Ok(self.cache_stats()?.physical_tokens / self.cfg.layers)
+    }
+
+    /// COW-fork `child` off the first `upto` tokens of `parent` on the
+    /// parent's socket (all layers). The child is registered by the
+    /// fork — do not `register_seqs` it.
+    pub fn fork_seq(
+        &mut self,
+        parent: u64,
+        child: u64,
+        upto: usize,
+    ) -> Result<()> {
+        self.pipeline.pool_mut().fork_seq(parent, child, upto)
     }
 
     /// The attend backend this engine is running over (for traces and

@@ -1,10 +1,47 @@
-//! KV-cache storage near the CPU (paper §4.1, §5.1–5.2).
+//! KV-cache storage near the CPU (paper §4.1, §5.1–5.2), PAGED.
 //!
-//! Each R-worker socket owns the KV-cache of its assigned sequences.
-//! Storage is per-sequence, per-layer, laid out `[heads][capacity][dim]`
-//! so the per-head attention scan is contiguous. Element formats
-//! (`model::Precision`): fp16 (lossless vs the fp16 GPU baseline), int8
-//! and int4 with one scale per (head, token) — §5.2's quantization hooks.
+//! Storage is a per-socket block arena ([`BlockPool`]): fixed-size KV
+//! blocks, each laid out `[heads][block_size][dim]` so the per-head
+//! attention scan stays contiguous *within a block*. A sequence maps to
+//! one **block table** per layer (ordered block indices); the attention
+//! hot loop walks the table block by block, threading the online-softmax
+//! state across block boundaries — bit-identical to a contiguous scan.
+//!
+//! Why paging: the contiguous store reserved full `capacity_per_seq`
+//! per layer at admission, so the batch ceiling (the paper's central
+//! fight) was set by worst-case length. Paged allocation charges actual
+//! occupancy, one block at a time.
+//!
+//! **COW prefix sharing**: `fork_seq(parent, child, upto)` makes the
+//! child reference the parent's first `ceil(upto / block_size)` blocks
+//! (refcounted, not copied). N sequences sharing a system prompt pay
+//! for its KV once. The first append past the fork point triggers
+//! copy-on-write of the tail block; everything earlier stays shared for
+//! both lifetimes — dropping the parent only releases its references.
+//!
+//! **Block-size tradeoff**: small blocks minimize padding waste (at
+//! most `block_size − 1` slack tokens per (seq, layer)) and maximize
+//! shareable prefix granularity, but grow the table and add a per-block
+//! loop-restart cost in the attend kernel; large blocks amortize the
+//! scan but waste tail space and round fork points down harder
+//! (`shared = ceil(upto / block_size)` blocks, with a COW copy for a
+//! mid-block fork on first divergence). Default 16 suits the tiny
+//! models here; production sizes (cf. vLLM) sit at 16–32 tokens.
+//!
+//! [`CacheStats`] reports both views: `total_tokens`/`logical_bytes`
+//! (what sequences believe they hold) and `physical_tokens`/
+//! `allocated_bytes` (unique blocks actually resident — shared blocks
+//! counted once). `utilization()` = logical/allocated: below 1.0 is
+//! block padding, above 1.0 is the sharing win.
+//!
+//! Element formats (`model::Precision`): fp16 (lossless vs the fp16 GPU
+//! baseline), int8 and int4 with one scale per (head, token) — §5.2's
+//! quantization hooks. Scales live inside their block, so a block is
+//! self-contained and COW copies carry them along.
+//!
+//! [`SeqKv`] — the original contiguous per-sequence store — remains as
+//! the single-block payload and as the reference/shadow implementation
+//! the property tests pin the paged store against.
 
 mod quant;
 mod store;
@@ -13,4 +50,6 @@ pub use quant::{
     dequant_i4, dequant_i8, nibble_pair_lut, nibble_to_i32, quant_i4,
     quant_i8,
 };
-pub use store::{CacheStats, SeqKv, SocketCache};
+pub use store::{
+    kv_token_bytes, BlockPool, CacheStats, PagedKv, SeqKv, SocketCache,
+};

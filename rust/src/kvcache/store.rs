@@ -1,6 +1,10 @@
-//! Per-sequence KV storage and the per-socket cache map.
+//! KV storage: the contiguous per-sequence store (`SeqKv`, kept as the
+//! reference/shadow implementation and as the payload of one block) and
+//! the paged per-socket cache (`BlockPool` + block tables + COW forks).
 
 use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
 
 use crate::model::Precision;
 use crate::util::f16::{encode_slice, F16};
@@ -8,6 +12,7 @@ use crate::util::f16::{encode_slice, F16};
 /// K and V of one sequence on one layer, laid out `[H][capacity][D]`
 /// (per-head scans are contiguous — the attention hot loop walks `t`
 /// within a head).
+#[derive(Clone)]
 pub struct SeqKv {
     pub n_heads: usize,
     pub head_dim: usize,
@@ -235,24 +240,250 @@ impl SeqKv {
     }
 }
 
+/// Bytes one token's K+V (data plus quantization scales) occupies at
+/// `prec` — the per-token cost used for the logical footprint.
+pub fn kv_token_bytes(
+    n_heads: usize,
+    head_dim: usize,
+    prec: Precision,
+) -> usize {
+    let elems = 2 * n_heads * head_dim; // K and V
+    match prec {
+        Precision::F32 => elems * 4,
+        Precision::F16 => elems * 2,
+        Precision::Int8 => elems + 2 * n_heads * 4,
+        Precision::Int4 => elems / 2 + 2 * n_heads * 4,
+    }
+}
+
 /// Aggregate statistics of one socket's cache (capacity planning, eq. 9).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct CacheStats {
     pub sequences: usize,
-    /// Sum of live lengths across sequences × layers (the R-Part load,
-    /// W in Algorithm 1's terms).
+    /// LOGICAL tokens: sum of live lengths across sequences × layers —
+    /// what each sequence believes it holds, shared prefixes counted
+    /// once PER SEQUENCE.
     pub total_tokens: usize,
+    /// PHYSICAL tokens actually stored: block fills summed over unique
+    /// live blocks — a block shared by N forked sequences counts ONCE.
+    /// This is W in Algorithm 1's terms under paging.
+    pub physical_tokens: usize,
+    /// Bytes of block storage held (allocated blocks × bytes per block).
     pub allocated_bytes: usize,
+    /// Bytes the logical tokens would occupy stored contiguously and
+    /// unshared (`total_tokens × kv_token_bytes`).
+    pub logical_bytes: usize,
 }
 
-/// All sequences assigned to one R-worker socket: (seq, layer) → SeqKv.
+impl CacheStats {
+    /// Utilization ratio logical/allocated. Below 1.0 the gap is block
+    /// padding (fragmentation); ABOVE 1.0 prefix sharing stores less
+    /// than the logical footprint — the paging win made measurable.
+    pub fn utilization(&self) -> f64 {
+        if self.allocated_bytes == 0 {
+            0.0
+        } else {
+            self.logical_bytes as f64 / self.allocated_bytes as f64
+        }
+    }
+
+    /// Accumulate another socket's stats (scatter-gather aggregation).
+    pub fn merge(&mut self, other: &CacheStats) {
+        self.sequences += other.sequences;
+        self.total_tokens += other.total_tokens;
+        self.physical_tokens += other.physical_tokens;
+        self.allocated_bytes += other.allocated_bytes;
+        self.logical_bytes += other.logical_bytes;
+    }
+}
+
+/// Fixed-size KV block arena for one socket. A block is a `SeqKv` with
+/// `capacity == block_size` plus a refcount; copy-on-write forking lets
+/// sequences share prefix blocks until one writes past the fork point.
+pub struct BlockPool {
+    n_heads: usize,
+    head_dim: usize,
+    block_size: usize,
+    prec: Precision,
+    slots: Vec<Option<Block>>,
+    free: Vec<u32>,
+}
+
+struct Block {
+    rc: u32,
+    /// `kv.len` is the block's fill (tokens written).
+    kv: SeqKv,
+}
+
+impl BlockPool {
+    pub fn new(
+        n_heads: usize,
+        head_dim: usize,
+        block_size: usize,
+        prec: Precision,
+    ) -> BlockPool {
+        assert!(block_size >= 1, "block_size must be >= 1");
+        BlockPool {
+            n_heads,
+            head_dim,
+            block_size,
+            prec,
+            slots: Vec::new(),
+            free: Vec::new(),
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Blocks currently live (allocated and referenced).
+    pub fn live_blocks(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    fn insert(&mut self, b: Block) -> u32 {
+        match self.free.pop() {
+            Some(i) => {
+                self.slots[i as usize] = Some(b);
+                i
+            }
+            None => {
+                self.slots.push(Some(b));
+                (self.slots.len() - 1) as u32
+            }
+        }
+    }
+
+    /// Allocate a fresh empty block with refcount 1.
+    fn alloc(&mut self) -> u32 {
+        let kv = SeqKv::new(
+            self.n_heads,
+            self.head_dim,
+            self.block_size,
+            self.prec,
+        );
+        self.insert(Block { rc: 1, kv })
+    }
+
+    fn slot(&self, idx: u32) -> &Block {
+        self.slots[idx as usize].as_ref().expect("freed block")
+    }
+
+    fn slot_mut(&mut self, idx: u32) -> &mut Block {
+        self.slots[idx as usize].as_mut().expect("freed block")
+    }
+
+    fn rc(&self, idx: u32) -> u32 {
+        self.slot(idx).rc
+    }
+
+    fn retain(&mut self, idx: u32) {
+        self.slot_mut(idx).rc += 1;
+    }
+
+    fn release(&mut self, idx: u32) {
+        let b = self.slot_mut(idx);
+        b.rc -= 1;
+        if b.rc == 0 {
+            self.slots[idx as usize] = None;
+            self.free.push(idx);
+        }
+    }
+
+    pub fn block(&self, idx: u32) -> &SeqKv {
+        &self.slot(idx).kv
+    }
+
+    fn block_mut(&mut self, idx: u32) -> &mut SeqKv {
+        &mut self.slot_mut(idx).kv
+    }
+
+    /// Copy-on-write: drop one reference to `idx` and return a fresh
+    /// exclusive block (rc 1) holding its first `keep` tokens.
+    fn cow_clone(&mut self, idx: u32, keep: usize) -> u32 {
+        let mut kv = self.block(idx).clone();
+        kv.len = keep;
+        self.release(idx);
+        self.insert(Block { rc: 1, kv })
+    }
+
+    fn stats_into(&self, st: &mut CacheStats) {
+        for b in self.slots.iter().flatten() {
+            st.physical_tokens += b.kv.len;
+            st.allocated_bytes += b.kv.allocated_bytes();
+        }
+    }
+}
+
+/// Read view of one (sequence, layer): the block table resolved against
+/// the pool. The attention hot loop walks blocks in order; per-head
+/// token rows inside one block are contiguous exactly as in `SeqKv`.
+pub struct PagedKv<'a> {
+    pool: &'a BlockPool,
+    table: &'a [u32],
+    pub len: usize,
+    pub capacity: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub block_size: usize,
+    prec: Precision,
+}
+
+impl PagedKv<'_> {
+    pub fn precision(&self) -> Precision {
+        self.prec
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.table.len()
+    }
+
+    /// The block holding tokens `[i * block_size, ...)`.
+    pub fn block(&self, i: usize) -> &SeqKv {
+        self.pool.block(self.table[i])
+    }
+
+    /// Live tokens of THIS sequence inside block `i` (a shared tail
+    /// block may physically hold more tokens than this sequence
+    /// references, so this is derived from the sequence length, not
+    /// from the block's fill).
+    pub fn block_tokens(&self, i: usize) -> usize {
+        (self.len - i * self.block_size).min(self.block_size)
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.capacity.saturating_sub(self.len)
+    }
+
+    /// Decode token `t` of head `h` (K) — test/debug helper mirroring
+    /// `SeqKv::decode_k`.
+    pub fn decode_k(&self, head: usize, t: usize, out: &mut [f32]) {
+        assert!(t < self.len);
+        self.block(t / self.block_size)
+            .decode_k(head, t % self.block_size, out);
+    }
+}
+
+/// One (sequence, layer)'s view into the pool: logical length plus the
+/// ordered block table. Lengths are per-layer because a pass appends
+/// layer by layer.
+struct SeqLayer {
+    len: usize,
+    table: Vec<u32>,
+}
+
+/// All sequences assigned to one R-worker socket, stored paged:
+/// (seq, layer) → block table → `BlockPool`.
 pub struct SocketCache {
     pub n_heads: usize,
     pub head_dim: usize,
     pub n_layers: usize,
     pub capacity_per_seq: usize,
+    pub block_size: usize,
     pub prec: Precision,
-    seqs: HashMap<u64, Vec<SeqKv>>,
+    pool: BlockPool,
+    seqs: HashMap<u64, Vec<SeqLayer>>,
 }
 
 impl SocketCache {
@@ -261,6 +492,7 @@ impl SocketCache {
         head_dim: usize,
         n_layers: usize,
         capacity_per_seq: usize,
+        block_size: usize,
         prec: Precision,
     ) -> SocketCache {
         SocketCache {
@@ -268,54 +500,185 @@ impl SocketCache {
             head_dim,
             n_layers,
             capacity_per_seq,
+            block_size,
             prec,
+            pool: BlockPool::new(n_heads, head_dim, block_size, prec),
             seqs: HashMap::new(),
         }
     }
 
-    /// Register a new sequence (all layers allocated lazily at insert).
+    /// Register a new sequence. No storage is reserved up front: blocks
+    /// are allocated one at a time as tokens are appended (the point of
+    /// paging — admission cost is actual occupancy, not worst case).
     pub fn add_seq(&mut self, seq_id: u64) {
         let layers = (0..self.n_layers)
-            .map(|_| {
-                SeqKv::new(
-                    self.n_heads,
-                    self.head_dim,
-                    self.capacity_per_seq,
-                    self.prec,
-                )
+            .map(|_| SeqLayer {
+                len: 0,
+                table: Vec::new(),
             })
             .collect();
         let prev = self.seqs.insert(seq_id, layers);
         assert!(prev.is_none(), "sequence {seq_id} already present");
     }
 
-    /// Drop a finished sequence, freeing its memory (§4.1: "drop KV-cache
-    /// of a certain sequence upon its generation ends").
+    /// Drop a finished sequence (§4.1: "drop KV-cache of a certain
+    /// sequence upon its generation ends"). Its block references are
+    /// released; blocks still shared with forked children survive.
     pub fn drop_seq(&mut self, seq_id: u64) -> bool {
-        self.seqs.remove(&seq_id).is_some()
+        match self.seqs.remove(&seq_id) {
+            Some(layers) => {
+                for sl in &layers {
+                    for &idx in &sl.table {
+                        self.pool.release(idx);
+                    }
+                }
+                true
+            }
+            None => false,
+        }
     }
 
     pub fn contains(&self, seq_id: u64) -> bool {
         self.seqs.contains_key(&seq_id)
     }
 
-    pub fn get_mut(&mut self, seq_id: u64, layer: usize) -> &mut SeqKv {
-        &mut self.seqs.get_mut(&seq_id).expect("unknown sequence")[layer]
+    fn layer_of(&self, seq_id: u64, layer: usize) -> Result<&SeqLayer> {
+        let layers = self
+            .seqs
+            .get(&seq_id)
+            .ok_or_else(|| anyhow!("unknown sequence {seq_id}"))?;
+        layers.get(layer).ok_or_else(|| {
+            anyhow!("layer {layer} out of range ({} layers)", self.n_layers)
+        })
     }
 
-    pub fn get(&self, seq_id: u64, layer: usize) -> &SeqKv {
-        &self.seqs.get(&seq_id).expect("unknown sequence")[layer]
+    /// Logical length of (seq, layer). `Err` on an unknown sequence —
+    /// never a panic, so a stale id is routable as a protocol error.
+    pub fn seq_len(&self, seq_id: u64, layer: usize) -> Result<usize> {
+        Ok(self.layer_of(seq_id, layer)?.len)
+    }
+
+    /// Paged read view of (seq, layer) for the attention hot loop.
+    /// `Err` on an unknown sequence — never a panic.
+    pub fn get(&self, seq_id: u64, layer: usize) -> Result<PagedKv<'_>> {
+        let sl = self.layer_of(seq_id, layer)?;
+        Ok(PagedKv {
+            pool: &self.pool,
+            table: &sl.table,
+            len: sl.len,
+            capacity: self.capacity_per_seq,
+            n_heads: self.n_heads,
+            head_dim: self.head_dim,
+            block_size: self.block_size,
+            prec: self.prec,
+        })
+    }
+
+    /// Append one token's K and V (each `[H * D]` f32, head-major) to
+    /// (seq, layer). Allocates a block when the tail is full; a shared
+    /// tail block is copied before the first divergent write (COW).
+    pub fn append(
+        &mut self,
+        seq_id: u64,
+        layer: usize,
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<usize> {
+        let (bs, cap) = (self.block_size, self.capacity_per_seq);
+        let layers = self
+            .seqs
+            .get_mut(&seq_id)
+            .ok_or_else(|| anyhow!("unknown sequence {seq_id}"))?;
+        let n_layers = layers.len();
+        let sl = layers.get_mut(layer).ok_or_else(|| {
+            anyhow!("layer {layer} out of range ({n_layers} layers)")
+        })?;
+        if sl.len >= cap {
+            bail!("KV-cache overflow (capacity {cap})");
+        }
+        let pos = sl.len % bs;
+        if pos == 0 {
+            let idx = self.pool.alloc();
+            sl.table.push(idx);
+        } else {
+            let tail = *sl.table.last().expect("non-empty table");
+            if self.pool.rc(tail) > 1 {
+                // first divergent write into a shared block: copy the
+                // prefix we own, release the shared reference
+                let idx = self.pool.cow_clone(tail, pos);
+                *sl.table.last_mut().expect("non-empty table") = idx;
+            } else if self.pool.block(tail).len != pos {
+                // sole owner of a block once shared with a longer (now
+                // dropped) relative: truncate the stale fill in place
+                self.pool.block_mut(tail).len = pos;
+            }
+        }
+        let tail = *sl.table.last().expect("non-empty table");
+        let t = self.pool.block_mut(tail).append(k, v);
+        debug_assert_eq!(t, pos);
+        sl.len += 1;
+        Ok(sl.len - 1)
+    }
+
+    /// Fork `child` from `parent`, sharing the first `upto` tokens on
+    /// every layer. Shared blocks are refcounted, not copied; the first
+    /// append past the fork point copies the tail block (COW). The
+    /// child's logical length starts at `upto` on every layer.
+    pub fn fork_seq(
+        &mut self,
+        parent: u64,
+        child: u64,
+        upto: usize,
+    ) -> Result<()> {
+        if self.seqs.contains_key(&child) {
+            bail!("sequence {child} already present");
+        }
+        let parent_layers = self
+            .seqs
+            .get(&parent)
+            .ok_or_else(|| anyhow!("unknown sequence {parent}"))?;
+        for sl in parent_layers {
+            if upto > sl.len {
+                bail!(
+                    "fork upto {upto} exceeds parent {parent} length {}",
+                    sl.len
+                );
+            }
+        }
+        let shared = upto.div_ceil(self.block_size);
+        let tables: Vec<Vec<u32>> = parent_layers
+            .iter()
+            .map(|sl| sl.table[..shared].to_vec())
+            .collect();
+        let mut child_layers = Vec::with_capacity(tables.len());
+        for table in tables {
+            for &idx in &table {
+                self.pool.retain(idx);
+            }
+            child_layers.push(SeqLayer { len: upto, table });
+        }
+        self.seqs.insert(child, child_layers);
+        Ok(())
+    }
+
+    /// Blocks currently live in the arena (shared blocks counted once).
+    pub fn live_blocks(&self) -> usize {
+        self.pool.live_blocks()
     }
 
     pub fn stats(&self) -> CacheStats {
-        let mut st = CacheStats::default();
-        st.sequences = self.seqs.len();
+        let mut st = CacheStats {
+            sequences: self.seqs.len(),
+            ..CacheStats::default()
+        };
         for layers in self.seqs.values() {
-            for kv in layers {
-                st.total_tokens += kv.len;
-                st.allocated_bytes += kv.allocated_bytes();
+            for sl in layers {
+                st.total_tokens += sl.len;
             }
         }
+        st.logical_bytes = st.total_tokens
+            * kv_token_bytes(self.n_heads, self.head_dim, self.prec);
+        self.pool.stats_into(&mut st);
         st
     }
 }
@@ -487,19 +850,20 @@ mod tests {
 
     #[test]
     fn socket_cache_lifecycle() {
-        let mut sc = SocketCache::new(2, 4, 3, 8, Precision::F16);
+        let mut sc = SocketCache::new(2, 4, 3, 8, 2, Precision::F16);
         sc.add_seq(7);
         sc.add_seq(9);
         let mut rng = Rng::new(1);
         let k = rng.normal_vec(8, 1.0);
         let v = rng.normal_vec(8, 1.0);
         for layer in 0..3 {
-            sc.get_mut(7, layer).append(&k, &v);
+            sc.append(7, layer, &k, &v).unwrap();
         }
-        sc.get_mut(9, 0).append(&k, &v);
+        sc.append(9, 0, &k, &v).unwrap();
         let st = sc.stats();
         assert_eq!(st.sequences, 2);
         assert_eq!(st.total_tokens, 4);
+        assert_eq!(st.physical_tokens, 4);
         assert!(sc.drop_seq(7));
         assert!(!sc.drop_seq(7));
         assert_eq!(sc.stats().sequences, 1);
@@ -508,8 +872,230 @@ mod tests {
     #[test]
     #[should_panic(expected = "already present")]
     fn duplicate_seq_panics() {
-        let mut sc = SocketCache::new(1, 2, 1, 4, Precision::F16);
+        let mut sc = SocketCache::new(1, 2, 1, 4, 2, Precision::F16);
         sc.add_seq(1);
         sc.add_seq(1);
+    }
+
+    /// Paged storage is exact (f32): appends spanning several blocks
+    /// decode back bit-identically through the paged view.
+    #[test]
+    fn paged_append_roundtrips_across_blocks() {
+        let (h, d, bs) = (2, 4, 3);
+        let mut sc = SocketCache::new(h, d, 1, 16, bs, Precision::F32);
+        sc.add_seq(1);
+        let mut rng = Rng::new(9);
+        let mut kept = Vec::new();
+        for _ in 0..8 {
+            let k = rng.normal_vec(h * d, 1.0);
+            let v = rng.normal_vec(h * d, 1.0);
+            sc.append(1, 0, &k, &v).unwrap();
+            kept.push(k);
+        }
+        let view = sc.get(1, 0).unwrap();
+        assert_eq!(view.len, 8);
+        assert_eq!(view.n_blocks(), 3); // ceil(8 / 3)
+        let mut out = vec![0.0; d];
+        for (t, k) in kept.iter().enumerate() {
+            for head in 0..h {
+                view.decode_k(head, t, &mut out);
+                assert_eq!(out, &k[head * d..(head + 1) * d], "t={t}");
+            }
+        }
+    }
+
+    /// Paging allocates lazily: an admitted-but-empty sequence holds no
+    /// blocks, and storage grows one block at a time with occupancy —
+    /// never the eager full-capacity reservation the contiguous store
+    /// made.
+    #[test]
+    fn lazy_allocation_grows_blockwise() {
+        let (h, d, bs) = (2, 4, 4);
+        let mut sc = SocketCache::new(h, d, 1, 64, bs, Precision::F16);
+        sc.add_seq(1);
+        assert_eq!(sc.stats().allocated_bytes, 0, "eager allocation");
+        assert_eq!(sc.live_blocks(), 0);
+        let k = vec![0.5; h * d];
+        sc.append(1, 0, &k, &k).unwrap();
+        let one_block = sc.stats().allocated_bytes;
+        assert!(one_block > 0);
+        for _ in 1..bs {
+            sc.append(1, 0, &k, &k).unwrap();
+        }
+        assert_eq!(sc.stats().allocated_bytes, one_block, "block not reused");
+        sc.append(1, 0, &k, &k).unwrap(); // crosses into block 2
+        assert_eq!(sc.stats().allocated_bytes, 2 * one_block);
+        assert_eq!(sc.live_blocks(), 2);
+    }
+
+    /// Forking shares prefix blocks physically: logical tokens double-
+    /// count the prefix, physical tokens count it once.
+    #[test]
+    fn fork_shares_blocks_physically() {
+        let (h, d, bs) = (1, 4, 2);
+        let mut sc = SocketCache::new(h, d, 1, 16, bs, Precision::F32);
+        sc.add_seq(1);
+        let mut rng = Rng::new(4);
+        for _ in 0..6 {
+            let k = rng.normal_vec(h * d, 1.0);
+            sc.append(1, 0, &k, &k).unwrap();
+        }
+        sc.fork_seq(1, 2, 4).unwrap();
+        let st = sc.stats();
+        assert_eq!(st.sequences, 2);
+        assert_eq!(st.total_tokens, 10, "logical: 6 + 4");
+        assert_eq!(st.physical_tokens, 6, "physical: shared counted once");
+        assert_eq!(sc.live_blocks(), 3);
+        assert!(st.utilization() > 1.0, "sharing must beat 1.0 utilization");
+        // child reads the parent's bits through the shared blocks
+        let mut a = vec![0.0; d];
+        let mut b = vec![0.0; d];
+        for t in 0..4 {
+            sc.get(1, 0).unwrap().decode_k(0, t, &mut a);
+            sc.get(2, 0).unwrap().decode_k(0, t, &mut b);
+            assert_eq!(a, b, "t={t}");
+        }
+    }
+
+    /// COW: a fork mid-block diverges correctly — the child's first
+    /// append past the fork point copies the tail block, and neither
+    /// sequence sees the other's subsequent tokens.
+    #[test]
+    fn cow_fork_then_diverge() {
+        let (h, d, bs) = (1, 4, 2);
+        let mut sc = SocketCache::new(h, d, 1, 16, bs, Precision::F32);
+        sc.add_seq(1);
+        let mut rng = Rng::new(17);
+        let mut parent_rows = Vec::new();
+        for _ in 0..3 {
+            let k = rng.normal_vec(h * d, 1.0);
+            sc.append(1, 0, &k, &k).unwrap();
+            parent_rows.push(k);
+        }
+        // fork at 3: mid-block (block 1 holds token 2 only, for child)
+        sc.fork_seq(1, 2, 3).unwrap();
+        let child_row = rng.normal_vec(h * d, 1.0);
+        sc.append(2, 0, &child_row, &child_row).unwrap(); // COW copy
+        let parent_row = rng.normal_vec(h * d, 1.0);
+        sc.append(1, 0, &parent_row, &parent_row).unwrap();
+        let mut out = vec![0.0; d];
+        // shared prefix intact on both
+        for t in 0..3 {
+            for seq in [1, 2] {
+                sc.get(seq, 0).unwrap().decode_k(0, t, &mut out);
+                assert_eq!(out, parent_rows[t].as_slice(), "seq {seq} t={t}");
+            }
+        }
+        // divergent token 3 differs per sequence
+        sc.get(1, 0).unwrap().decode_k(0, 3, &mut out);
+        assert_eq!(out, parent_row.as_slice());
+        sc.get(2, 0).unwrap().decode_k(0, 3, &mut out);
+        assert_eq!(out, child_row.as_slice());
+        // token-3 block was copied: 2 shared-prefix blocks + 2 tails
+        assert_eq!(sc.live_blocks(), 4);
+    }
+
+    /// Dropping the parent keeps the child's shared blocks alive
+    /// (refcounts), and fully-released blocks return to the free list
+    /// for reuse by later sequences.
+    #[test]
+    fn drop_parent_keeps_child_blocks_and_recycles() {
+        let (h, d, bs) = (1, 4, 2);
+        let mut sc = SocketCache::new(h, d, 1, 16, bs, Precision::F32);
+        sc.add_seq(1);
+        let mut rng = Rng::new(23);
+        let mut rows = Vec::new();
+        for _ in 0..6 {
+            let k = rng.normal_vec(h * d, 1.0);
+            sc.append(1, 0, &k, &k).unwrap();
+            rows.push(k);
+        }
+        // fork MID-BLOCK: child references only the first token of the
+        // second shared block
+        sc.fork_seq(1, 2, 3).unwrap();
+        assert_eq!(sc.live_blocks(), 3);
+        assert!(sc.drop_seq(1));
+        // parent's exclusive tail block freed; shared prefix survives
+        assert_eq!(sc.live_blocks(), 2);
+        let mut out = vec![0.0; d];
+        for t in 0..3 {
+            sc.get(2, 0).unwrap().decode_k(0, t, &mut out);
+            assert_eq!(out, rows[t].as_slice(), "t={t}");
+        }
+        // a new sequence reuses the freed slot instead of growing
+        let arena_before = sc.live_blocks();
+        sc.add_seq(3);
+        sc.append(3, 0, &rows[0], &rows[0]).unwrap();
+        assert_eq!(sc.live_blocks(), arena_before + 1);
+        // the child now solely owns a tail block with STALE fill (the
+        // dropped parent wrote 2 tokens, the child references 1):
+        // appending truncates in place and stays consistent
+        let fresh = rng.normal_vec(h * d, 1.0);
+        sc.append(2, 0, &fresh, &fresh).unwrap();
+        assert_eq!(sc.seq_len(2, 0).unwrap(), 4);
+        sc.get(2, 0).unwrap().decode_k(0, 3, &mut out);
+        assert_eq!(out, fresh.as_slice());
+    }
+
+    /// The satellite bugfix: a stale sequence id is an `Err`, not a
+    /// process-killing panic — the caller can route it as a protocol
+    /// error and keep serving.
+    #[test]
+    fn unknown_sequence_is_an_error_not_a_panic() {
+        let mut sc = SocketCache::new(1, 2, 1, 4, 2, Precision::F16);
+        assert!(sc.get(42, 0).is_err());
+        assert!(sc.seq_len(42, 0).is_err());
+        assert!(sc.append(42, 0, &[0.0, 0.0], &[0.0, 0.0]).is_err());
+        assert!(sc.fork_seq(42, 43, 0).is_err());
+        let msg = format!("{:#}", sc.get(42, 0).unwrap_err());
+        assert!(msg.contains("unknown sequence"), "{msg}");
+        // and a layer out of range is equally routable
+        sc.add_seq(1);
+        assert!(sc.get(1, 9).is_err());
+    }
+
+    /// Logical overflow (per-sequence capacity) surfaces as an error
+    /// through the paged API as well.
+    #[test]
+    fn paged_overflow_is_an_error() {
+        let mut sc = SocketCache::new(1, 2, 1, 2, 4, Precision::F32);
+        sc.add_seq(1);
+        let r = [0.5, 0.5];
+        sc.append(1, 0, &r, &r).unwrap();
+        sc.append(1, 0, &r, &r).unwrap();
+        let err = sc.append(1, 0, &r, &r).unwrap_err();
+        assert!(format!("{err:#}").contains("overflow"));
+        assert_eq!(sc.seq_len(1, 0).unwrap(), 2, "overflow must not write");
+    }
+
+    /// Fork validation: bad parents and over-long prefixes are errors.
+    #[test]
+    fn fork_validation_errors() {
+        let mut sc = SocketCache::new(1, 2, 1, 8, 2, Precision::F32);
+        sc.add_seq(1);
+        let r = [0.1, 0.2];
+        sc.append(1, 0, &r, &r).unwrap();
+        assert!(sc.fork_seq(9, 2, 0).is_err(), "unknown parent");
+        assert!(sc.fork_seq(1, 1, 1).is_err(), "child collides");
+        assert!(sc.fork_seq(1, 2, 5).is_err(), "upto exceeds parent");
+        // valid fork still works after the failures
+        sc.fork_seq(1, 2, 1).unwrap();
+        assert!(sc.contains(2));
+    }
+
+    /// logical_bytes tracks tokens × per-token cost; utilization is the
+    /// fragmentation/sharing signal (< 1 padding, > 1 sharing).
+    #[test]
+    fn stats_logical_vs_allocated() {
+        let (h, d, bs) = (2, 4, 4);
+        let mut sc = SocketCache::new(h, d, 1, 16, bs, Precision::F16);
+        sc.add_seq(1);
+        let k = vec![0.25; h * d];
+        sc.append(1, 0, &k, &k).unwrap();
+        let st = sc.stats();
+        assert_eq!(st.logical_bytes, kv_token_bytes(h, d, Precision::F16));
+        // one token in a 4-token block: utilization = 1/4
+        assert!((st.utilization() - 0.25).abs() < 1e-9, "{}", st.utilization());
+        assert_eq!(st.allocated_bytes, 4 * st.logical_bytes);
     }
 }

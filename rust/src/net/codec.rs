@@ -100,6 +100,10 @@ pub struct NodeConfig {
     pub head_dim: usize,
     pub n_layers: usize,
     pub capacity_per_seq: usize,
+    /// Tokens per KV block in the node's paged allocator — part of the
+    /// handshake so every node in a pool pages identically and fork
+    /// points mean the same thing everywhere.
+    pub block_size: usize,
     /// KV-cache storage precision ON the node (independent of the wire
     /// mode the activations travel in).
     pub precision: Precision,
@@ -113,6 +117,7 @@ impl NodeConfig {
     pub fn from_spec(
         spec: &crate::model::ModelSpec,
         capacity_per_seq: usize,
+        block_size: usize,
         precision: Precision,
         wire: WireMode,
     ) -> NodeConfig {
@@ -121,6 +126,7 @@ impl NodeConfig {
             head_dim: spec.head_dim(),
             n_layers: spec.n_layers,
             capacity_per_seq,
+            block_size,
             precision,
             wire,
         }
@@ -135,6 +141,9 @@ pub enum NetRequest {
     AddSeqs(Vec<u64>),
     DropSeqs(Vec<u64>),
     Attend { layer: usize, tasks: Vec<SeqTask> },
+    /// COW-fork `child` off `parent`'s first `upto` tokens (all
+    /// layers) — prefix sharing across the wire.
+    ForkSeq { parent: u64, child: u64, upto: usize },
     Stats,
     Shutdown,
 }
@@ -163,6 +172,7 @@ const REQ_DROP_SEQS: u8 = 3;
 const REQ_ATTEND: u8 = 4;
 const REQ_STATS: u8 = 5;
 const REQ_SHUTDOWN: u8 = 6;
+const REQ_FORK_SEQ: u8 = 7;
 
 const RESP_ACK: u8 = 1;
 const RESP_OUTPUTS: u8 = 2;
@@ -328,6 +338,7 @@ pub fn encode_request(req: &NetRequest, mode: WireMode) -> Vec<u8> {
             put_u32(&mut buf, c.head_dim as u32);
             put_u32(&mut buf, c.n_layers as u32);
             put_u32(&mut buf, c.capacity_per_seq as u32);
+            put_u32(&mut buf, c.block_size as u32);
             buf.push(precision_to_u8(c.precision));
             buf.push(c.wire.to_u8());
         }
@@ -350,6 +361,12 @@ pub fn encode_request(req: &NetRequest, mode: WireMode) -> Vec<u8> {
                 put_f32_vec(&mut buf, &t.v_new, mode);
             }
         }
+        NetRequest::ForkSeq { parent, child, upto } => {
+            buf.push(REQ_FORK_SEQ);
+            put_u64(&mut buf, *parent);
+            put_u64(&mut buf, *child);
+            put_u64(&mut buf, *upto as u64);
+        }
         NetRequest::Stats => buf.push(REQ_STATS),
         NetRequest::Shutdown => buf.push(REQ_SHUTDOWN),
     }
@@ -367,6 +384,7 @@ pub fn decode_request(buf: &[u8], mode: WireMode) -> Result<NetRequest> {
             head_dim: c.u32()? as usize,
             n_layers: c.u32()? as usize,
             capacity_per_seq: c.u32()? as usize,
+            block_size: c.u32()? as usize,
             precision: precision_from_u8(c.u8()?)?,
             wire: WireMode::from_u8(c.u8()?)?,
         }),
@@ -387,6 +405,11 @@ pub fn decode_request(buf: &[u8], mode: WireMode) -> Result<NetRequest> {
             }
             NetRequest::Attend { layer, tasks }
         }
+        REQ_FORK_SEQ => NetRequest::ForkSeq {
+            parent: c.u64()?,
+            child: c.u64()?,
+            upto: c.u64()? as usize,
+        },
         REQ_STATS => NetRequest::Stats,
         REQ_SHUTDOWN => NetRequest::Shutdown,
         tag => bail!("unknown request tag {tag}"),
@@ -416,7 +439,9 @@ pub fn encode_response(resp: &NetResponse, mode: WireMode) -> Vec<u8> {
             buf.push(RESP_STATS);
             put_u64(&mut buf, st.sequences as u64);
             put_u64(&mut buf, st.total_tokens as u64);
+            put_u64(&mut buf, st.physical_tokens as u64);
             put_u64(&mut buf, st.allocated_bytes as u64);
+            put_u64(&mut buf, st.logical_bytes as u64);
         }
         NetResponse::Err(msg) => {
             buf.push(RESP_ERR);
@@ -448,7 +473,9 @@ pub fn decode_response(buf: &[u8], mode: WireMode) -> Result<NetResponse> {
         RESP_STATS => NetResponse::Stats(CacheStats {
             sequences: c.u64()? as usize,
             total_tokens: c.u64()? as usize,
+            physical_tokens: c.u64()? as usize,
             allocated_bytes: c.u64()? as usize,
+            logical_bytes: c.u64()? as usize,
         }),
         RESP_ERR => {
             let n = c.count(1)?;
@@ -516,6 +543,11 @@ mod tests {
                 },
                 NetRequest::AddSeqs(vec![0, 7, u64::MAX]),
                 NetRequest::DropSeqs(vec![]),
+                NetRequest::ForkSeq {
+                    parent: g.u64_in(0, u64::MAX),
+                    child: g.u64_in(0, u64::MAX),
+                    upto: g.usize_in(0, 1 << 20),
+                },
                 NetRequest::Stats,
                 NetRequest::Shutdown,
                 NetRequest::Configure(NodeConfig {
@@ -523,6 +555,7 @@ mod tests {
                     head_dim: g.usize_in(1, 256),
                     n_layers: g.usize_in(1, 80),
                     capacity_per_seq: g.usize_in(1, 1 << 20),
+                    block_size: g.usize_in(1, 1 << 10),
                     precision: *g.pick(&[
                         Precision::F32,
                         Precision::F16,
@@ -595,7 +628,9 @@ mod tests {
                 NetResponse::Stats(CacheStats {
                     sequences: g.usize_in(0, 1 << 30),
                     total_tokens: g.usize_in(0, 1 << 40),
+                    physical_tokens: g.usize_in(0, 1 << 40),
                     allocated_bytes: g.usize_in(0, 1 << 40),
+                    logical_bytes: g.usize_in(0, 1 << 40),
                 }),
                 NetResponse::Err(
                     "node 1 refused: seq 9 not placed \u{1F4A3}".into(),

@@ -404,6 +404,30 @@ impl AttendBackend for RemotePool {
         Ok(())
     }
 
+    /// COW-fork on the node holding the parent; the child inherits the
+    /// parent's placement (shared blocks are node-local). A refusal
+    /// (unknown parent on the node, child collision) is a routed error
+    /// and does NOT place the child.
+    fn fork_seq(
+        &mut self,
+        parent: u64,
+        child: u64,
+        upto: usize,
+    ) -> Result<()> {
+        let n = match self.placement.get(&parent) {
+            Some(&n) => n,
+            None => bail!("sequence {parent} not placed"),
+        };
+        assert!(
+            !self.placement.contains_key(&child),
+            "sequence {child} already placed"
+        );
+        self.rpc_ack(n, &NetRequest::ForkSeq { parent, child, upto })
+            .context("forking sequence on remote node")?;
+        self.placement.insert(child, n);
+        Ok(())
+    }
+
     fn submit_attend(
         &mut self,
         layer: usize,
@@ -637,7 +661,7 @@ mod tests {
     use crate::util::Rng;
 
     fn cfg(wire: WireMode) -> NodeConfig {
-        NodeConfig::from_spec(&TINY, 8, Precision::F32, wire)
+        NodeConfig::from_spec(&TINY, 8, 4, Precision::F32, wire)
     }
 
     fn mk_task(rng: &mut Rng, id: u64, n: usize) -> SeqTask {
@@ -694,6 +718,47 @@ mod tests {
         for (id, o) in &threads {
             assert_eq!(&remote[id], o, "seq {id} diverged over the wire");
         }
+    }
+
+    /// ForkSeq over the wire: the child lands on the parent's node and
+    /// shares its prefix blocks (logical tokens > physical tokens in
+    /// the gathered stats); a fork off an unknown parent is a routed
+    /// error that does not place the child.
+    #[test]
+    fn fork_over_loopback_shares_blocks_and_routes_refusals() {
+        let mut pool = RemotePool::loopback(cfg(WireMode::F32), 2).unwrap();
+        // 1 → node 0, 2 → node 1
+        pool.add_seqs(&[1, 2]).unwrap();
+        let mut rng = Rng::new(5);
+        for _ in 0..4 {
+            // feed BOTH layers so every layer reaches the fork point
+            for layer in 0..TINY.n_layers {
+                let tasks = vec![
+                    mk_task(&mut rng, 1, TINY.hidden),
+                    mk_task(&mut rng, 2, TINY.hidden),
+                ];
+                pool.attend(layer, tasks).unwrap();
+            }
+        }
+        pool.fork_seq(1, 7, 4).unwrap();
+        assert_eq!(pool.socket_of(7), pool.socket_of(1));
+        let stats = pool.stats().unwrap();
+        let logical: usize = stats.iter().map(|s| s.total_tokens).sum();
+        let physical: usize = stats.iter().map(|s| s.physical_tokens).sum();
+        // 4 tokens × 2 layers × (seq 1 + seq 2 + forked 7)
+        assert_eq!(logical, 24, "{stats:?}");
+        assert_eq!(physical, 16, "{stats:?}"); // prefix stored once
+        // the child keeps attending through shared blocks
+        let step = pool
+            .attend(0, vec![mk_task(&mut rng, 7, TINY.hidden)])
+            .unwrap();
+        assert_eq!(step.outputs.len(), 1);
+        // refusal path: parent unknown ON THE NODE (placement forged)
+        pool.placement.insert(99, 0);
+        let err = pool.fork_seq(99, 100, 1).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown sequence"), "{err:#}");
+        assert_eq!(pool.socket_of(100), None, "refused fork placed child");
+        assert_eq!(pool.live_nodes(), 2, "a refusal must not kill the node");
     }
 
     /// A node that refuses a request reports a routed error and stays

@@ -23,7 +23,7 @@ use std::time::Instant;
 use anyhow::{bail, Context as _, Result};
 
 use crate::kvcache::SocketCache;
-use crate::rworker::{attend_one, AttnScratch, SeqTask};
+use crate::rworker::{attend_paged, AttnScratch, SeqTask};
 
 use super::codec::{
     decode_request, encode_response, NetRequest, NetResponse, WireMode,
@@ -65,6 +65,7 @@ pub fn serve_connection<T: Transport>(mut t: T) -> Result<()> {
         || cfg.head_dim == 0
         || cfg.n_layers == 0
         || cfg.capacity_per_seq == 0
+        || cfg.block_size == 0
     {
         let msg = format!("degenerate NodeConfig {cfg:?}");
         let _ = t
@@ -77,6 +78,7 @@ pub fn serve_connection<T: Transport>(mut t: T) -> Result<()> {
         cfg.head_dim,
         cfg.n_layers,
         cfg.capacity_per_seq,
+        cfg.block_size,
         cfg.precision,
     );
     let mut scratch = AttnScratch::new(cfg.head_dim);
@@ -103,6 +105,15 @@ pub fn serve_connection<T: Transport>(mut t: T) -> Result<()> {
             }
             Ok(NetRequest::Attend { layer, tasks }) => {
                 attend(&mut cache, &mut scratch, layer, tasks)
+            }
+            Ok(NetRequest::ForkSeq { parent, child, upto }) => {
+                // fork_seq validates before it mutates, so a refusal
+                // (unknown parent, child collision, upto too long)
+                // leaves the cache untouched
+                match cache.fork_seq(parent, child, upto) {
+                    Ok(()) => NetResponse::Ack,
+                    Err(e) => NetResponse::Err(format!("{e:#}")),
+                }
             }
             Ok(NetRequest::Stats) => NetResponse::Stats(cache.stats()),
         };
@@ -169,13 +180,18 @@ fn attend(
                 task.v_new.len(),
             ));
         }
-        let kv = cache.get(task.seq_id, layer);
+        // contains() passed above, so seq_len can only fail on the
+        // layer bound — already checked; still route it, never panic
+        let len = match cache.seq_len(task.seq_id, layer) {
+            Ok(len) => len,
+            Err(e) => return NetResponse::Err(format!("{e:#}")),
+        };
         let rows = task.q.len() / width;
-        if rows > kv.remaining() {
+        if rows > cache.capacity_per_seq - len {
             return NetResponse::Err(format!(
                 "seq {}: {rows}-row prefill overflows KV cache \
                  ({} of {} slots used)",
-                task.seq_id, kv.len, kv.capacity,
+                task.seq_id, len, cache.capacity_per_seq,
             ));
         }
     }
@@ -183,13 +199,25 @@ fn attend(
     let start = Instant::now();
     let mut outs = Vec::with_capacity(tasks.len());
     for task in &tasks {
-        let kv = cache.get_mut(task.seq_id, layer);
         let rows = task.q.len() / width;
         let mut o = vec![0.0f32; task.q.len()];
         for r in 0..rows {
             let s = r * width..(r + 1) * width;
-            kv.append(&task.k_new[s.clone()], &task.v_new[s.clone()]);
-            attend_one(kv, &task.q[s.clone()], &mut o[s.clone()], scratch);
+            // validated above: only a pool-level invariant breach could
+            // fail here, and that must still be routed, not a panic
+            if let Err(e) = cache.append(
+                task.seq_id,
+                layer,
+                &task.k_new[s.clone()],
+                &task.v_new[s.clone()],
+            ) {
+                return NetResponse::Err(format!("{e:#}"));
+            }
+            let kv = match cache.get(task.seq_id, layer) {
+                Ok(kv) => kv,
+                Err(e) => return NetResponse::Err(format!("{e:#}")),
+            };
+            attend_paged(&kv, &task.q[s.clone()], &mut o[s.clone()], scratch);
         }
         outs.push((task.seq_id, o));
     }
@@ -331,6 +359,7 @@ mod tests {
             head_dim: 4,
             n_layers: 1,
             capacity_per_seq: 8,
+            block_size: 4,
             precision: Precision::F32,
             wire,
         }

@@ -6,8 +6,15 @@
 //! decode is a 256 KiB LUT (util::f16) and the dot/axpy loops are written
 //! so LLVM auto-vectorizes them (fixed-stride, no bounds checks in the
 //! inner loop via chunks_exact).
+//!
+//! Two entry points share the same per-token kernels: [`attend_one`]
+//! scans a contiguous [`SeqKv`], [`attend_paged`] walks a [`PagedKv`]
+//! block table. The online-softmax state `(m, l, acc)` threads across
+//! block boundaries, so the paged scan performs the IDENTICAL sequence
+//! of floating-point operations as the contiguous one — bit-identical
+//! outputs, pinned by tests below.
 
-use crate::kvcache::SeqKv;
+use crate::kvcache::{PagedKv, SeqKv, SocketCache};
 use crate::model::Precision;
 use crate::util::f16::F16;
 
@@ -115,6 +122,31 @@ fn axpy_i8(alpha: f32, x: &[i8], y: &mut [f32]) {
     }
 }
 
+/// Running online-softmax state for one head, threaded across chunks so
+/// a blockwise scan is bit-identical to a contiguous one.
+struct OnlineState {
+    m: f32,
+    l: f32,
+}
+
+impl OnlineState {
+    #[inline(always)]
+    fn new() -> OnlineState {
+        OnlineState {
+            m: f32::NEG_INFINITY,
+            l: 0.0,
+        }
+    }
+
+    #[inline(always)]
+    fn finish(&self, o: &mut [f32], acc: &[f32]) {
+        let inv = 1.0 / self.l;
+        for (oi, a) in o.iter_mut().zip(acc.iter()) {
+            *oi = a * inv;
+        }
+    }
+}
+
 /// Decode attention for ONE sequence on one layer: q `[H*D]` against the
 /// sequence's cache (its `len` tokens), output into `o` `[H*D]`.
 /// Dispatches on the cache's storage precision. Zero allocations.
@@ -125,72 +157,122 @@ pub fn attend_one(kv: &SeqKv, q: &[f32], o: &mut [f32], scratch: &mut AttnScratc
     assert!(kv.len > 0, "attention over an empty cache");
     let scale = 1.0 / (d as f32).sqrt();
 
-    match kv.precision() {
-        Precision::F16 => {
-            for head in 0..h {
-                let qh = &q[head * d..(head + 1) * d];
-                let oh = &mut o[head * d..(head + 1) * d];
-                attend_head_f16(
-                    qh,
-                    kv.k16_head(head),
-                    kv.v16_head(head),
-                    kv.len,
-                    d,
-                    scale,
-                    oh,
-                    &mut scratch.acc,
-                );
-            }
-        }
-        Precision::F32 => {
-            for head in 0..h {
-                let qh = &q[head * d..(head + 1) * d];
-                let oh = &mut o[head * d..(head + 1) * d];
-                attend_head_f32(
-                    qh,
-                    kv.k32_head(head),
-                    kv.v32_head(head),
-                    kv.len,
-                    d,
-                    scale,
-                    oh,
-                    &mut scratch.acc,
-                );
-            }
-        }
-        Precision::Int8 => {
-            for head in 0..h {
-                let qh = &q[head * d..(head + 1) * d];
-                let oh = &mut o[head * d..(head + 1) * d];
+    for head in 0..h {
+        let qh = &q[head * d..(head + 1) * d];
+        let acc = &mut scratch.acc[..d];
+        acc.fill(0.0);
+        let mut st = OnlineState::new();
+        match kv.precision() {
+            Precision::F16 => chunk_f16(
+                qh,
+                kv.k16_head(head),
+                kv.v16_head(head),
+                kv.len,
+                d,
+                scale,
+                &mut st,
+                acc,
+            ),
+            Precision::F32 => chunk_f32(
+                qh,
+                kv.k32_head(head),
+                kv.v32_head(head),
+                kv.len,
+                d,
+                scale,
+                &mut st,
+                acc,
+            ),
+            Precision::Int8 => {
                 let (krow, kscale) = kv.k8_head(head);
                 let (vrow, vscale) = kv.v8_head(head);
-                attend_head_i8(
-                    qh, krow, kscale, vrow, vscale, kv.len, d, scale, oh,
-                    &mut scratch.acc,
+                chunk_i8(
+                    qh, krow, kscale, vrow, vscale, kv.len, d, scale,
+                    &mut st, acc,
                 );
             }
-        }
-        Precision::Int4 => {
-            for head in 0..h {
-                let qh = &q[head * d..(head + 1) * d];
-                let oh = &mut o[head * d..(head + 1) * d];
+            Precision::Int4 => {
                 let (krow, kscale) = kv.k4_head(head);
                 let (vrow, vscale) = kv.v4_head(head);
-                attend_head_i4(
-                    qh,
-                    krow,
-                    kscale,
-                    vrow,
-                    vscale,
-                    kv.len,
-                    d,
-                    scale,
-                    oh,
-                    &mut scratch.row,
-                    &mut scratch.acc,
+                chunk_i4(
+                    qh, krow, kscale, vrow, vscale, kv.len, d, scale,
+                    &mut st, acc,
                 );
             }
         }
+        st.finish(&mut o[head * d..(head + 1) * d], acc);
+    }
+}
+
+/// Decode attention over a PAGED view: walk the sequence's block table,
+/// feeding each block's contiguous per-head rows through the same chunk
+/// kernels as [`attend_one`] with the online-softmax state carried
+/// across block boundaries. Identical FP operation sequence — outputs
+/// are bit-identical to the contiguous scan for every precision.
+pub fn attend_paged(
+    kv: &PagedKv<'_>,
+    q: &[f32],
+    o: &mut [f32],
+    scratch: &mut AttnScratch,
+) {
+    let (h, d) = (kv.n_heads, kv.head_dim);
+    assert_eq!(q.len(), h * d);
+    assert_eq!(o.len(), h * d);
+    assert!(kv.len > 0, "attention over an empty cache");
+    let scale = 1.0 / (d as f32).sqrt();
+    let nb = kv.n_blocks();
+    let prec = kv.precision();
+
+    for head in 0..h {
+        let qh = &q[head * d..(head + 1) * d];
+        let acc = &mut scratch.acc[..d];
+        acc.fill(0.0);
+        let mut st = OnlineState::new();
+        for b in 0..nb {
+            let blk = kv.block(b);
+            // a shared tail block may hold more tokens than this
+            // sequence references — scan only our own
+            let n = kv.block_tokens(b);
+            match prec {
+                Precision::F16 => chunk_f16(
+                    qh,
+                    blk.k16_head(head),
+                    blk.v16_head(head),
+                    n,
+                    d,
+                    scale,
+                    &mut st,
+                    acc,
+                ),
+                Precision::F32 => chunk_f32(
+                    qh,
+                    blk.k32_head(head),
+                    blk.v32_head(head),
+                    n,
+                    d,
+                    scale,
+                    &mut st,
+                    acc,
+                ),
+                Precision::Int8 => {
+                    let (krow, kscale) = blk.k8_head(head);
+                    let (vrow, vscale) = blk.v8_head(head);
+                    chunk_i8(
+                        qh, krow, kscale, vrow, vscale, n, d, scale,
+                        &mut st, acc,
+                    );
+                }
+                Precision::Int4 => {
+                    let (krow, kscale) = blk.k4_head(head);
+                    let (vrow, vscale) = blk.v4_head(head);
+                    chunk_i4(
+                        qh, krow, kscale, vrow, vscale, n, d, scale,
+                        &mut st, acc,
+                    );
+                }
+            }
+        }
+        st.finish(&mut o[head * d..(head + 1) * d], acc);
     }
 }
 
@@ -202,76 +284,60 @@ pub fn attend_one_f32(kv: &SeqKv, q: &[f32], o: &mut [f32], scratch: &mut AttnSc
 
 #[allow(clippy::too_many_arguments)]
 #[inline]
-fn attend_head_f16(
+fn chunk_f16(
     q: &[f32],
     k: &[F16],
     v: &[F16],
     len: usize,
     d: usize,
     scale: f32,
-    o: &mut [f32],
+    st: &mut OnlineState,
     acc: &mut [f32],
 ) {
-    let acc = &mut acc[..d];
-    acc.fill(0.0);
-    let mut m = f32::NEG_INFINITY;
-    let mut l = 0.0f32;
     for t in 0..len {
         let krow = &k[t * d..(t + 1) * d];
         let s = dot_f16(q, krow) * scale;
-        let (p, corr) = online_step(&mut m, s);
+        let (p, corr) = online_step(&mut st.m, s);
         if corr != 1.0 {
             for a in acc.iter_mut() {
                 *a *= corr;
             }
-            l *= corr;
+            st.l *= corr;
         }
-        l += p;
+        st.l += p;
         axpy_f16(p, &v[t * d..(t + 1) * d], acc);
-    }
-    let inv = 1.0 / l;
-    for (oi, a) in o.iter_mut().zip(acc.iter()) {
-        *oi = a * inv;
     }
 }
 
 #[allow(clippy::too_many_arguments)]
 #[inline]
-fn attend_head_f32(
+fn chunk_f32(
     q: &[f32],
     k: &[f32],
     v: &[f32],
     len: usize,
     d: usize,
     scale: f32,
-    o: &mut [f32],
+    st: &mut OnlineState,
     acc: &mut [f32],
 ) {
-    let acc = &mut acc[..d];
-    acc.fill(0.0);
-    let mut m = f32::NEG_INFINITY;
-    let mut l = 0.0f32;
     for t in 0..len {
         let s = dot_f32(q, &k[t * d..(t + 1) * d]) * scale;
-        let (p, corr) = online_step(&mut m, s);
+        let (p, corr) = online_step(&mut st.m, s);
         if corr != 1.0 {
             for a in acc.iter_mut() {
                 *a *= corr;
             }
-            l *= corr;
+            st.l *= corr;
         }
-        l += p;
+        st.l += p;
         axpy_f32(p, &v[t * d..(t + 1) * d], acc);
-    }
-    let inv = 1.0 / l;
-    for (oi, a) in o.iter_mut().zip(acc.iter()) {
-        *oi = a * inv;
     }
 }
 
 #[allow(clippy::too_many_arguments)]
 #[inline]
-fn attend_head_i8(
+fn chunk_i8(
     q: &[f32],
     k: &[i8],
     k_scale: &[f32],
@@ -280,34 +346,26 @@ fn attend_head_i8(
     len: usize,
     d: usize,
     scale: f32,
-    o: &mut [f32],
+    st: &mut OnlineState,
     acc: &mut [f32],
 ) {
-    let acc = &mut acc[..d];
-    acc.fill(0.0);
-    let mut m = f32::NEG_INFINITY;
-    let mut l = 0.0f32;
     for t in 0..len {
         let s = dot_i8(q, &k[t * d..(t + 1) * d]) * k_scale[t] * scale;
-        let (p, corr) = online_step(&mut m, s);
+        let (p, corr) = online_step(&mut st.m, s);
         if corr != 1.0 {
             for a in acc.iter_mut() {
                 *a *= corr;
             }
-            l *= corr;
+            st.l *= corr;
         }
-        l += p;
+        st.l += p;
         axpy_i8(p * v_scale[t], &v[t * d..(t + 1) * d], acc);
-    }
-    let inv = 1.0 / l;
-    for (oi, a) in o.iter_mut().zip(acc.iter()) {
-        *oi = a * inv;
     }
 }
 
 #[allow(clippy::too_many_arguments)]
 #[inline]
-fn attend_head_i4(
+fn chunk_i4(
     q: &[f32],
     k: &[u8],
     k_scale: &[f32],
@@ -316,17 +374,10 @@ fn attend_head_i4(
     len: usize,
     d: usize,
     scale: f32,
-    o: &mut [f32],
-    row: &mut [f32],
+    st: &mut OnlineState,
     acc: &mut [f32],
 ) {
-    let acc = &mut acc[..d];
-    let row = &mut row[..d];
-    acc.fill(0.0);
-    let mut m = f32::NEG_INFINITY;
-    let mut l = 0.0f32;
     let pd = d / 2;
-    let _ = row;
     let lut = crate::kvcache::nibble_pair_lut();
     for t in 0..len {
         // fused nibble decode + dot: one byte yields two fused
@@ -341,14 +392,14 @@ fn attend_head_i4(
             s1 += q[2 * j + 1] * pair[1];
         }
         let s = (s0 + s1) * k_scale[t] * scale;
-        let (p, corr) = online_step(&mut m, s);
+        let (p, corr) = online_step(&mut st.m, s);
         if corr != 1.0 {
             for a in acc.iter_mut() {
                 *a *= corr;
             }
-            l *= corr;
+            st.l *= corr;
         }
-        l += p;
+        st.l += p;
         let vrow = &v[t * pd..(t + 1) * pd];
         let pv = p * v_scale[t];
         for (j, &byte) in vrow.iter().enumerate() {
@@ -356,10 +407,6 @@ fn attend_head_i4(
             acc[2 * j] += pv * pair[0];
             acc[2 * j + 1] += pv * pair[1];
         }
-    }
-    let inv = 1.0 / l;
-    for (oi, a) in o.iter_mut().zip(acc.iter()) {
-        *oi = a * inv;
     }
 }
 
@@ -377,25 +424,29 @@ fn online_step(m: &mut f32, s: f32) -> (f32, f32) {
 }
 
 /// Measure this machine's effective per-thread KV streaming bandwidth
-/// (bytes/s) with a realistic attention scan. Calibrates the R-Part cost
-/// model (perfmodel) so virtual-clock figures use *measured* CPU numbers.
+/// (bytes/s) with a realistic attention scan — over the PAGED store,
+/// the shape the serving hot loop actually runs. Calibrates the R-Part
+/// cost model (perfmodel) so virtual-clock figures use *measured* CPU
+/// numbers.
 pub fn stream_bandwidth_probe(mb: usize) -> f64 {
     let d = 128;
     let tokens = mb * 1024 * 1024 / (2 * d * 2); // K+V fp16 rows
-    let mut kv = SeqKv::new(1, d, tokens, Precision::F16);
+    let mut cache = SocketCache::new(1, d, 1, tokens, 64, Precision::F16);
+    cache.add_seq(0);
     let mut val = vec![0.01f32; d];
     for _ in 0..tokens {
-        kv.append(&val, &val);
+        cache.append(0, 0, &val, &val).expect("probe append");
     }
     let q = vec![0.5f32; d];
     let mut o = vec![0.0f32; d];
     let mut scratch = AttnScratch::new(d);
     // warm
-    attend_one(&kv, &q, &mut o, &mut scratch);
+    let kv = cache.get(0, 0).expect("probe view");
+    attend_paged(&kv, &q, &mut o, &mut scratch);
     let start = std::time::Instant::now();
     let reps = 3;
     for _ in 0..reps {
-        attend_one(&kv, &q, &mut o, &mut scratch);
+        attend_paged(&kv, &q, &mut o, &mut scratch);
         val[0] = o[0]; // keep the result alive
     }
     let dt = start.elapsed().as_secs_f64() / reps as f64;
@@ -492,6 +543,94 @@ mod tests {
     #[test]
     fn int4_coarse_but_sane() {
         case(Precision::Int4, 0.6);
+    }
+
+    /// THE refactor pin: the paged scan is BIT-IDENTICAL to the
+    /// contiguous scan for every precision and for block sizes that
+    /// split the sequence raggedly (including block_size 1 and a block
+    /// larger than the whole sequence).
+    #[test]
+    fn paged_attend_bit_identical_to_contiguous() {
+        for prec in [
+            Precision::F32,
+            Precision::F16,
+            Precision::Int8,
+            Precision::Int4,
+        ] {
+            let (h, d, len) = (3, 16, 33);
+            let mut rng = Rng::new(77);
+            let mut kv = SeqKv::new(h, d, 64, prec);
+            let rows: Vec<(Vec<f32>, Vec<f32>)> = (0..len)
+                .map(|_| {
+                    (rng.normal_vec(h * d, 0.7), rng.normal_vec(h * d, 0.7))
+                })
+                .collect();
+            for (k, v) in &rows {
+                kv.append(k, v);
+            }
+            let q = rng.normal_vec(h * d, 0.7);
+            let mut want = vec![0.0; h * d];
+            let mut scratch = AttnScratch::new(d);
+            attend_one(&kv, &q, &mut want, &mut scratch);
+
+            for bs in [1usize, 3, 8, 64] {
+                let mut sc = SocketCache::new(h, d, 1, 64, bs, prec);
+                sc.add_seq(0);
+                for (k, v) in &rows {
+                    sc.append(0, 0, k, v).unwrap();
+                }
+                let view = sc.get(0, 0).unwrap();
+                let mut got = vec![0.0; h * d];
+                attend_paged(&view, &q, &mut got, &mut scratch);
+                assert!(
+                    want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "{prec:?} bs={bs}: paged attend diverged from contiguous"
+                );
+            }
+        }
+    }
+
+    /// A forked child attends through SHARED blocks bit-identically to
+    /// a sequence that appended the same tokens itself — prefix sharing
+    /// changes where bytes live, never what attention computes.
+    #[test]
+    fn forked_view_attends_bit_identical() {
+        let (h, d, bs) = (2, 8, 3);
+        let mut rng = Rng::new(31);
+        let rows: Vec<(Vec<f32>, Vec<f32>)> = (0..10)
+            .map(|_| (rng.normal_vec(h * d, 0.7), rng.normal_vec(h * d, 0.7)))
+            .collect();
+        let divergent: Vec<(Vec<f32>, Vec<f32>)> = (0..3)
+            .map(|_| (rng.normal_vec(h * d, 0.7), rng.normal_vec(h * d, 0.7)))
+            .collect();
+        let q = rng.normal_vec(h * d, 0.7);
+        let mut scratch = AttnScratch::new(d);
+
+        // baseline: one sequence appends prefix + divergent tail itself
+        let mut sc = SocketCache::new(h, d, 1, 32, bs, Precision::F32);
+        sc.add_seq(0);
+        for (k, v) in rows.iter().take(7).chain(&divergent) {
+            sc.append(0, 0, k, v).unwrap();
+        }
+        let mut want = vec![0.0; h * d];
+        attend_paged(&sc.get(0, 0).unwrap(), &q, &mut want, &mut scratch);
+
+        // forked: parent appends all 10, child forks at 7 and diverges
+        let mut sc2 = SocketCache::new(h, d, 1, 32, bs, Precision::F32);
+        sc2.add_seq(1);
+        for (k, v) in &rows {
+            sc2.append(1, 0, k, v).unwrap();
+        }
+        sc2.fork_seq(1, 2, 7).unwrap();
+        for (k, v) in &divergent {
+            sc2.append(2, 0, k, v).unwrap();
+        }
+        let mut got = vec![0.0; h * d];
+        attend_paged(&sc2.get(2, 0).unwrap(), &q, &mut got, &mut scratch);
+        assert!(
+            want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "forked attend diverged from self-appended"
+        );
     }
 
     #[test]

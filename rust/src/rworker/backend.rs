@@ -78,6 +78,13 @@ pub trait AttendBackend: Send {
     /// socket) — dropping them is not an error.
     fn drop_seqs(&mut self, seq_ids: &[u64]) -> Result<()>;
 
+    /// COW-fork `child` off `parent`'s first `upto` tokens on every
+    /// layer. The child is placed on the PARENT's socket (shared blocks
+    /// must be local to one cache) and must not already be placed.
+    /// Replaces `add_seqs` for the child — it is registered by the fork.
+    fn fork_seq(&mut self, parent: u64, child: u64, upto: usize)
+        -> Result<()>;
+
     /// Scatter one layer's tasks to their sockets WITHOUT waiting for
     /// the results. At most one task per sequence per call (outputs are
     /// keyed by `seq_id`). On error, sockets that already received

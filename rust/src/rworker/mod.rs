@@ -12,7 +12,8 @@ mod pool;
 mod worker;
 
 pub use attention::{
-    attend_one, attend_one_f32, stream_bandwidth_probe, AttnScratch,
+    attend_one, attend_one_f32, attend_paged, stream_bandwidth_probe,
+    AttnScratch,
 };
 pub use backend::{AttendBackend, PendingAttend, PoolStep};
 pub use pool::{RPool, RPoolConfig};

@@ -30,6 +30,8 @@ use super::worker::{RRequest, RResponse, RWorker, SeqTask};
 pub struct RPoolConfig {
     pub sockets: usize,
     pub capacity_per_seq: usize,
+    /// Tokens per KV block (paged allocation; kvcache::BlockPool).
+    pub block_size: usize,
     pub precision: Precision,
     /// Artificial dilation per appended token row of every attend (a
     /// decode task is one row, a prefill task is T rows), applied
@@ -44,6 +46,7 @@ impl Default for RPoolConfig {
         RPoolConfig {
             sockets: 2,
             capacity_per_seq: 2048,
+            block_size: 16,
             precision: Precision::F16,
             attend_pad: Duration::ZERO,
         }
@@ -69,6 +72,7 @@ impl RPool {
                     spec.head_dim(),
                     spec.n_layers,
                     cfg.capacity_per_seq,
+                    cfg.block_size,
                     cfg.precision,
                     cfg.attend_pad,
                 )
@@ -189,6 +193,36 @@ impl RPool {
                 Err(_) => continue, // died mid-drop: same as above
             }
         }
+        Ok(())
+    }
+
+    /// COW-fork `child` off `parent`'s first `upto` tokens. The child
+    /// lands on the parent's socket — shared blocks live in one cache —
+    /// so fork placement overrides round-robin.
+    pub fn fork_seq(
+        &mut self,
+        parent: u64,
+        child: u64,
+        upto: usize,
+    ) -> Result<()> {
+        let s = match self.placement.get(&parent) {
+            Some(&s) => s,
+            None => bail!("sequence {parent} not placed"),
+        };
+        assert!(
+            !self.placement.contains_key(&child),
+            "sequence {child} already placed"
+        );
+        self.workers[s].submit(RRequest::ForkSeq {
+            parent,
+            child,
+            upto,
+        })?;
+        match self.workers[s].recv()? {
+            RResponse::Ack => {}
+            _ => bail!("expected ack from socket {s}"),
+        }
+        self.placement.insert(child, s);
         Ok(())
     }
 
@@ -364,6 +398,14 @@ impl AttendBackend for RPool {
     fn drop_seqs(&mut self, seq_ids: &[u64]) -> Result<()> {
         RPool::drop_seqs(self, seq_ids)
     }
+    fn fork_seq(
+        &mut self,
+        parent: u64,
+        child: u64,
+        upto: usize,
+    ) -> Result<()> {
+        RPool::fork_seq(self, parent, child, upto)
+    }
     fn submit_attend(
         &mut self,
         layer: usize,
@@ -472,6 +514,56 @@ mod tests {
             pool.stats().unwrap().iter().map(|s| s.sequences).sum();
         assert_eq!(after, 2);
         assert_eq!(pool.socket_of(2), None);
+    }
+
+    /// fork_seq co-locates the child with its parent (not round-robin)
+    /// and the forked prefix yields bit-identical attention: a decode
+    /// step on the child matches the same step on a sequence that
+    /// appended the prefix itself.
+    #[test]
+    fn fork_colocates_and_matches_self_appended() {
+        let n = TINY.hidden;
+        let mut rng = Rng::new(8);
+        let prefix: Vec<SeqTask> =
+            (0..3).map(|_| mk_task(&mut rng, 0, n)).collect();
+        let probe = mk_task(&mut rng, 0, n);
+
+        let mut pool = RPool::spawn(
+            &TINY,
+            RPoolConfig {
+                sockets: 2,
+                capacity_per_seq: 8,
+                block_size: 2,
+                precision: Precision::F32,
+                ..Default::default()
+            },
+        );
+        // seq 0 → socket 0, seq 1 → socket 1
+        pool.add_seqs(&[0, 1]).unwrap();
+        for t in &prefix {
+            // feed EVERY layer so each reaches the fork point
+            for layer in 0..TINY.n_layers {
+                let both =
+                    vec![t.clone(), SeqTask { seq_id: 1, ..t.clone() }];
+                pool.attend(layer, both).unwrap();
+            }
+        }
+        // fork child 7 off seq 0's full 3-token prefix
+        pool.fork_seq(0, 7, 3).unwrap();
+        assert_eq!(pool.socket_of(7), pool.socket_of(0));
+        // the probe on the child matches the probe on seq 1, which
+        // appended the identical prefix itself on another socket
+        let out = pool
+            .attend(
+                0,
+                vec![
+                    SeqTask { seq_id: 7, ..probe.clone() },
+                    SeqTask { seq_id: 1, ..probe.clone() },
+                ],
+            )
+            .unwrap()
+            .outputs;
+        assert_eq!(out[&7], out[&1], "forked prefix diverged");
     }
 
     #[test]

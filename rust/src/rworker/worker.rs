@@ -10,7 +10,7 @@ use crate::kvcache::{CacheStats, SocketCache};
 use crate::model::Precision;
 use crate::util::chan::{bounded, Receiver, Sender};
 
-use super::attention::{attend_one, AttnScratch};
+use super::attention::{attend_paged, AttnScratch};
 
 /// Per-sequence work item within one step: the activation vectors of
 /// the newest token(s) — the only data FastDecode ships across the
@@ -38,6 +38,10 @@ pub enum RRequest {
     AddSeqs(Vec<u64>),
     /// Drop finished sequences.
     DropSeqs(Vec<u64>),
+    /// COW-fork `child` off `parent`'s first `upto` tokens (all layers):
+    /// the child references the parent's blocks, no copy (paper-adjacent
+    /// prefix sharing; kvcache::SocketCache::fork_seq).
+    ForkSeq { parent: u64, child: u64, upto: usize },
     /// Append K/V and compute attention for one layer of one micro-batch.
     Attend { layer: usize, tasks: Vec<SeqTask> },
     /// Report cache statistics.
@@ -82,6 +86,7 @@ impl RWorker {
         head_dim: usize,
         n_layers: usize,
         capacity_per_seq: usize,
+        block_size: usize,
         prec: Precision,
         attend_pad: Duration,
     ) -> RWorker {
@@ -98,6 +103,7 @@ impl RWorker {
                         head_dim,
                         n_layers,
                         capacity_per_seq,
+                        block_size,
                         prec,
                     ),
                     head_dim,
@@ -201,9 +207,13 @@ fn run_loop(
                 let start = std::time::Instant::now();
                 let mut outs = Vec::with_capacity(tasks.len());
                 let mut total_rows = 0usize;
+                let width = cache.n_heads * cache.head_dim;
                 for task in &tasks {
-                    let kv = cache.get_mut(task.seq_id, layer);
-                    let width = kv.n_heads * kv.head_dim;
+                    // in-process discipline: a bad request kills the
+                    // worker (the pool surfaces the panic payload);
+                    // rnode's TCP front validates and routes instead
+                    let len =
+                        cache.seq_len(task.seq_id, layer).unwrap();
                     assert!(
                         !task.q.is_empty()
                             && task.q.len() % width == 0
@@ -217,12 +227,12 @@ fn run_loop(
                     );
                     let rows = task.q.len() / width;
                     assert!(
-                        rows <= kv.remaining(),
+                        rows <= cache.capacity_per_seq - len,
                         "seq {}: {rows}-row prefill overflows KV cache \
                          ({} of {} slots used)",
                         task.seq_id,
-                        kv.len,
-                        kv.capacity,
+                        len,
+                        cache.capacity_per_seq,
                     );
                     let mut o = vec![0.0f32; task.q.len()];
                     // append+attend row by row: row p attends positions
@@ -230,9 +240,16 @@ fn run_loop(
                     // (T = 1) are the same loop
                     for r in 0..rows {
                         let s = r * width..(r + 1) * width;
-                        kv.append(&task.k_new[s.clone()], &task.v_new[s.clone()]);
-                        attend_one(
-                            kv,
+                        cache
+                            .append(
+                                task.seq_id,
+                                layer,
+                                &task.k_new[s.clone()],
+                                &task.v_new[s.clone()],
+                            )
+                            .unwrap();
+                        attend_paged(
+                            &cache.get(task.seq_id, layer).unwrap(),
                             &task.q[s.clone()],
                             &mut o[s.clone()],
                             &mut scratch,
@@ -251,6 +268,10 @@ fn run_loop(
                     return;
                 }
             }
+            RRequest::ForkSeq { parent, child, upto } => {
+                cache.fork_seq(parent, child, upto).unwrap();
+                let _ = tx.send(RResponse::Ack);
+            }
             RRequest::Stats => {
                 let _ = tx.send(RResponse::Stats(cache.stats()));
             }
@@ -267,8 +288,16 @@ mod tests {
     #[test]
     fn worker_appends_and_attends() {
         let (h, d) = (2, 4);
-        let mut w =
-            RWorker::spawn(0, h, d, 1, 16, Precision::F32, Duration::ZERO);
+        let mut w = RWorker::spawn(
+            0,
+            h,
+            d,
+            1,
+            16,
+            4,
+            Precision::F32,
+            Duration::ZERO,
+        );
         w.submit(RRequest::AddSeqs(vec![1, 2])).unwrap();
         assert!(matches!(w.recv().unwrap(), RResponse::Ack));
 
@@ -332,8 +361,16 @@ mod tests {
         let probe_v = rng.normal_vec(width, 1.0);
 
         let run = |multi: bool| -> (Vec<f32>, Vec<f32>) {
-            let mut w =
-                RWorker::spawn(0, h, d, 1, 16, Precision::F32, Duration::ZERO);
+            let mut w = RWorker::spawn(
+                0,
+                h,
+                d,
+                1,
+                16,
+                4,
+                Precision::F32,
+                Duration::ZERO,
+            );
             w.submit(RRequest::AddSeqs(vec![1])).unwrap();
             assert!(matches!(w.recv().unwrap(), RResponse::Ack));
             let mut prefill_out = Vec::new();
@@ -406,8 +443,16 @@ mod tests {
     #[test]
     fn multi_row_overflow_surfaces_root_cause() {
         let (h, d) = (1usize, 4usize);
-        let mut w =
-            RWorker::spawn(0, h, d, 1, 4, Precision::F32, Duration::ZERO);
+        let mut w = RWorker::spawn(
+            0,
+            h,
+            d,
+            1,
+            4,
+            2,
+            Precision::F32,
+            Duration::ZERO,
+        );
         w.submit(RRequest::AddSeqs(vec![1])).unwrap();
         assert!(matches!(w.recv().unwrap(), RResponse::Ack));
         let mut rng = Rng::new(2);
@@ -433,11 +478,86 @@ mod tests {
         assert!(format!("{err2:#}").contains("died"), "{err2:#}");
     }
 
+    /// ForkSeq makes the child share the parent's prefix blocks: the
+    /// stats show logical tokens exceeding physical tokens.
+    #[test]
+    fn fork_seq_shares_blocks_on_the_worker() {
+        let (h, d) = (1usize, 4usize);
+        let mut w = RWorker::spawn(
+            0,
+            h,
+            d,
+            1,
+            16,
+            2,
+            Precision::F32,
+            Duration::ZERO,
+        );
+        w.submit(RRequest::AddSeqs(vec![1])).unwrap();
+        assert!(matches!(w.recv().unwrap(), RResponse::Ack));
+        let mut rng = Rng::new(6);
+        for _ in 0..4 {
+            w.submit(RRequest::Attend {
+                layer: 0,
+                tasks: vec![SeqTask {
+                    seq_id: 1,
+                    q: rng.normal_vec(h * d, 1.0),
+                    k_new: rng.normal_vec(h * d, 1.0),
+                    v_new: rng.normal_vec(h * d, 1.0),
+                }],
+            })
+            .unwrap();
+            w.recv().unwrap();
+        }
+        w.submit(RRequest::ForkSeq {
+            parent: 1,
+            child: 2,
+            upto: 4,
+        })
+        .unwrap();
+        assert!(matches!(w.recv().unwrap(), RResponse::Ack));
+        w.submit(RRequest::Stats).unwrap();
+        match w.recv().unwrap() {
+            RResponse::Stats(st) => {
+                assert_eq!(st.sequences, 2);
+                assert_eq!(st.total_tokens, 8); // 4 logical each
+                assert_eq!(st.physical_tokens, 4); // stored once
+                assert!(st.utilization() > 1.0, "{st:?}");
+            }
+            _ => panic!("expected stats"),
+        }
+        // the child keeps serving attends (COW past the fork point)
+        w.submit(RRequest::Attend {
+            layer: 0,
+            tasks: vec![SeqTask {
+                seq_id: 2,
+                q: rng.normal_vec(h * d, 1.0),
+                k_new: rng.normal_vec(h * d, 1.0),
+                v_new: rng.normal_vec(h * d, 1.0),
+            }],
+        })
+        .unwrap();
+        match w.recv().unwrap() {
+            RResponse::Outputs { outs, .. } => {
+                assert!(outs[0].1.iter().all(|x| x.is_finite()));
+            }
+            _ => panic!("expected outputs"),
+        }
+    }
+
     #[test]
     fn growing_sequence_is_consistent() {
         let (h, d) = (1, 8);
-        let mut w =
-            RWorker::spawn(0, h, d, 2, 32, Precision::F16, Duration::ZERO);
+        let mut w = RWorker::spawn(
+            0,
+            h,
+            d,
+            2,
+            32,
+            8,
+            Precision::F16,
+            Duration::ZERO,
+        );
         w.submit(RRequest::AddSeqs(vec![7])).unwrap();
         w.recv().unwrap();
         let mut rng = Rng::new(4);

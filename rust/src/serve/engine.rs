@@ -5,11 +5,15 @@
 //! waiting queue; (2) the [`AdmissionPolicy`] admits startable requests
 //! into free slots under the aggregate-KV limit W_lim (Algorithm 1 via
 //! [`LoadControl`], with the batched prefill's bulk append modeled as
-//! an `init` offset); (3) every occupied slot contributes rows to ONE
-//! ragged forward pass — freshly admitted requests their (multi-row)
-//! prefill, decoding requests one row each; (4) finished requests drop
-//! their KV ([`FastDecode::retire_seqs`]) and free their slot for
-//! backfill, without disturbing in-flight neighbors.
+//! an `init` offset) — when `share_prefixes` is on, a prompt whose
+//! prefix is already resident in an active sequence COW-forks those KV
+//! blocks instead of recomputing them, and only its divergent tail is
+//! charged; (3) every occupied slot contributes rows to ONE ragged
+//! forward pass — freshly admitted requests their (multi-row, possibly
+//! `max_prefill_rows`-chunked) prefill, decoding requests one row each;
+//! (4) finished requests drop their KV ([`FastDecode::retire_seqs`])
+//! and free their slot for backfill, without disturbing in-flight
+//! neighbors.
 //!
 //! All latencies are real wall-clock seconds measured from the run's
 //! start; the step clock is virtual (`steps_per_sec` maps the trace's
@@ -44,7 +48,9 @@ pub enum PrefillMode {
 #[derive(Clone, Copy, Debug)]
 pub struct ServeConfig {
     /// Aggregate KV-token limit enforced by admission (Algorithm 1's
-    /// W_lim).
+    /// W_lim). Under paging this bounds PHYSICAL per-layer tokens:
+    /// blocks shared by a COW fork are charged once, so a shared-prefix
+    /// workload fits more concurrent sequences into the same budget.
     pub w_lim: usize,
     /// Virtual step rate mapping `Request::arrival_s` onto the step
     /// clock: a request arrives at step ⌊arrival_s · steps_per_sec⌋.
@@ -53,6 +59,19 @@ pub struct ServeConfig {
     /// Hard cap on driven steps — exceeded means the configuration
     /// cannot drain the trace (an error, never an infinite loop).
     pub max_steps: usize,
+    /// Chunked prefill: at most this many prompt rows per request per
+    /// pass (0 = the whole remaining prompt in one pass). Caps the
+    /// prefill burst a long prompt injects into a step without changing
+    /// any generated token — per-row append/attend order is identical.
+    /// [`PrefillMode::Batched`] only; token-at-a-time already feeds one
+    /// row per step.
+    pub max_prefill_rows: usize,
+    /// COW-fork the KV blocks of a prompt prefix already resident in an
+    /// active sequence instead of recomputing them. Semantically
+    /// invisible (generated tokens are bit-identical either way); only
+    /// the divergent tail is charged against W_lim.
+    /// [`PrefillMode::Batched`] only.
+    pub share_prefixes: bool,
 }
 
 impl Default for ServeConfig {
@@ -62,6 +81,8 @@ impl Default for ServeConfig {
             steps_per_sec: 100.0,
             prefill: PrefillMode::Batched,
             max_steps: 100_000,
+            max_prefill_rows: 0,
+            share_prefixes: true,
         }
     }
 }
@@ -84,6 +105,34 @@ struct WaitingReq {
     idx: usize,
     arrive_step: usize,
     wall_arrive_s: f64,
+}
+
+/// Shortest prefix worth forking: below this the block-table plumbing
+/// outweighs the savings, and degenerate one-token "prefixes" would
+/// fork on almost every admission.
+const MIN_FORK_LEN: usize = 2;
+
+/// Longest usable shared prompt prefix between `prompt` and any active
+/// request: the parent must have fed the prefix already (`fed`), the
+/// child must keep at least one prompt row of its own (the row that
+/// produces its first token), and prefixes shorter than
+/// [`MIN_FORK_LEN`] are ignored. Returns the parent's seq id and the
+/// fork length.
+fn fork_candidate(slots: &SlotManager, prompt: &[i32]) -> Option<(u64, usize)> {
+    let mut best: Option<(u64, usize)> = None;
+    for (_, req) in slots.iter_active() {
+        let common = req
+            .prompt
+            .iter()
+            .zip(prompt)
+            .take_while(|&(a, b)| a == b)
+            .count();
+        let upto = common.min(prompt.len() - 1).min(req.fed);
+        if upto >= MIN_FORK_LEN && upto > best.map_or(0, |(_, u)| u) {
+            best = Some((req.seq_id, upto));
+        }
+    }
+    best
 }
 
 /// Continuous-batching serving engine over the live coordinator.
@@ -215,6 +264,13 @@ impl ServeEngine {
         let mut e2e_h = Histogram::new();
         let mut total_wait_steps = 0usize;
         let mut total_tokens = 0u64;
+        let mut prefix_forks = 0u64;
+        let mut shared_prefix_tokens = 0u64;
+        let mut peak_active = 0usize;
+        let mut peak_kv_allocated = 0usize;
+        let mut peak_kv_logical = 0usize;
+        let share = self.cfg.share_prefixes
+            && self.cfg.prefill == PrefillMode::Batched;
         let t0 = Instant::now();
         let mut t = 0usize;
 
@@ -250,8 +306,32 @@ impl ServeEngine {
             // enforces the policy contract and charges the controller)
             lc.retire_before(t);
             while slots.free_count() > 0 && !waiting.is_empty() {
-                let jobs: Vec<QueuedJob> =
-                    waiting.iter().map(|&(j, _)| j).collect();
+                // fork candidates are re-scanned every round: an
+                // admission can itself become the parent of the next
+                let forks: Vec<Option<(u64, usize)>> = waiting
+                    .iter()
+                    .map(|(_, meta)| {
+                        if share {
+                            fork_candidate(&slots, &trace[meta.idx].prompt)
+                        } else {
+                            None
+                        }
+                    })
+                    .collect();
+                let jobs: Vec<QueuedJob> = waiting
+                    .iter()
+                    .zip(&forks)
+                    .map(|((j, _), f)| match f {
+                        // the shared prefix is already resident as COW
+                        // blocks — only the divergent tail is new
+                        // physical KV, so only it is charged
+                        Some((_, upto)) => QueuedJob {
+                            init_len: j.init_len - upto,
+                            ..*j
+                        },
+                        None => *j,
+                    })
+                    .collect();
                 let Some(sel) = admit_one(
                     self.policy.as_ref(),
                     t,
@@ -262,6 +342,7 @@ impl ServeEngine {
                 else {
                     break;
                 };
+                let fork = forks[sel];
                 let (_, meta) = waiting.remove(sel);
                 let r = &trace[meta.idx];
                 track.instant(
@@ -272,10 +353,22 @@ impl ServeEngine {
                         ("prompt", r.prompt.len() as f64),
                         ("target", r.target_len as f64),
                         ("waited_steps", (t - meta.arrive_step) as f64),
+                        ("shared_prefix", fork.map_or(0.0, |(_, u)| u as f64)),
                     ],
                 );
                 let seq_id = self.fd.alloc_seq_ids(1)[0];
-                self.fd.register_seqs(&[seq_id])?;
+                let fed = match fork {
+                    Some((parent, upto)) => {
+                        self.fd.fork_seq(parent, seq_id, upto)?;
+                        prefix_forks += 1;
+                        shared_prefix_tokens += upto as u64;
+                        upto
+                    }
+                    None => {
+                        self.fd.register_seqs(&[seq_id])?;
+                        0
+                    }
+                };
                 let slot = slots.free_slot().expect("free slot checked");
                 total_wait_steps += t - meta.arrive_step;
                 slots.place(
@@ -285,7 +378,7 @@ impl ServeEngine {
                         seq_id,
                         prompt: r.prompt.clone(),
                         target_len: r.target_len,
-                        fed: 0,
+                        fed,
                         produced: Vec::new(),
                         next_token: 0,
                         arrive_step: meta.arrive_step,
@@ -296,6 +389,7 @@ impl ServeEngine {
                     },
                 );
             }
+            peak_active = peak_active.max(slots.active_count());
             // 3. assemble one ragged pass over every occupied slot
             struct PassSeg {
                 slot: usize,
@@ -316,7 +410,13 @@ impl ServeEngine {
                     });
                 } else {
                     let rows = match self.cfg.prefill {
-                        PrefillMode::Batched => req.prompt.len() - req.fed,
+                        PrefillMode::Batched => {
+                            let left = req.prompt.len() - req.fed;
+                            match self.cfg.max_prefill_rows {
+                                0 => left,
+                                cap => left.min(cap),
+                            }
+                        }
                         PrefillMode::TokenAtATime => 1,
                     };
                     for &tok in &req.prompt[req.fed..req.fed + rows] {
@@ -360,8 +460,12 @@ impl ServeEngine {
             let now_s = t0.elapsed().as_secs_f64();
             // measure the aggregate KV load this pass actually held,
             // BEFORE finished sequences release their caches — this is
-            // what W_lim must bound
-            let kv_load = self.fd.measured_kv_load()?;
+            // what W_lim must bound. One stats round trip yields both
+            // the physical per-layer load and the byte-level peaks.
+            let cs = self.fd.cache_stats()?;
+            let kv_load = cs.physical_tokens / self.fd.layers();
+            peak_kv_allocated = peak_kv_allocated.max(cs.allocated_bytes);
+            peak_kv_logical = peak_kv_logical.max(cs.logical_bytes);
             let mut finished_seqs: Vec<u64> = Vec::new();
             let mut row = 0usize;
             for seg in &segs {
@@ -443,6 +547,11 @@ impl ServeEngine {
             ttft: ttft_h,
             itl: itl_h,
             e2e: e2e_h,
+            prefix_forks,
+            shared_prefix_tokens,
+            peak_active,
+            kv_allocated_bytes: peak_kv_allocated,
+            kv_logical_bytes: peak_kv_logical,
         };
         Ok(ServeOutcome {
             report,

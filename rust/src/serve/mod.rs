@@ -18,12 +18,29 @@
 //!   request starts each step, constrained by Algorithm 1's load
 //!   controller so the aggregate KV load never exceeds W_lim; the
 //!   batched prefill's bulk append is modeled as an `init` offset
-//!   ([`crate::sched::LoadControl::add_init`]).
+//!   ([`crate::sched::LoadControl::add_init`]). W_lim bounds the
+//!   PHYSICAL KV token count: the paged cache stores fixed-size
+//!   refcounted blocks, and a block shared by a copy-on-write prefix
+//!   fork is charged once however many sequences reference it — so
+//!   under a shared-prefix workload the same budget admits more
+//!   concurrent sequences than a contiguous (per-sequence) cache
+//!   would. The per-step trace's `total_ctx` records this measured
+//!   physical load; `ServeReport::kv_logical_bytes` vs
+//!   `kv_allocated_bytes` quantifies the gap.
+//! * **Prefix sharing** — with `ServeConfig::share_prefixes` on
+//!   (default), a prompt whose prefix is already resident in an active
+//!   sequence is admitted by COW-forking those blocks
+//!   ([`crate::coordinator::real::FastDecode::fork_seq`]) instead of
+//!   recomputing them: the child starts with `fed = upto` and prefills
+//!   only its divergent tail. Forks are semantically invisible —
+//!   generated tokens are bit-identical with sharing on or off.
 //! * **Prefill** — the whole prompt crosses the S↔R pipeline as one
 //!   multi-row causal pass ([`PrefillMode::Batched`]); the row that
 //!   consumes the prompt's last token produces the first generated
-//!   token (TTFT). Token-at-a-time prefill survives as a comparison
-//!   baseline.
+//!   token (TTFT). `ServeConfig::max_prefill_rows` chunks a long
+//!   prompt across several passes (bounding the rows any one step
+//!   carries) without changing any generated token. Token-at-a-time
+//!   prefill survives as a comparison baseline.
 //! * **Decode slots** — the engine's batch is B independent slots
 //!   ([`SlotManager`]); sequences of different lengths finish
 //!   independently, and prefill and decode rows share one ragged pass

@@ -51,6 +51,20 @@ pub struct ServeReport {
     pub itl: Histogram,
     /// End-to-end latency, per request.
     pub e2e: Histogram,
+    /// Admissions that COW-forked a resident prompt prefix instead of
+    /// recomputing it.
+    pub prefix_forks: u64,
+    /// Prompt tokens admitted via fork (KV neither recomputed nor
+    /// stored twice).
+    pub shared_prefix_tokens: u64,
+    /// Most requests simultaneously holding slots at any step.
+    pub peak_active: usize,
+    /// Peak bytes of KV block storage held (physical, shared blocks
+    /// counted once).
+    pub kv_allocated_bytes: usize,
+    /// Peak bytes the logical KV would occupy stored contiguously and
+    /// unshared.
+    pub kv_logical_bytes: usize,
 }
 
 impl ServeReport {
@@ -72,6 +86,17 @@ impl ServeReport {
         }
     }
 
+    /// Peak logical/allocated KV ratio: below 1.0 the gap is block
+    /// padding, above 1.0 prefix sharing stored less than the sequences
+    /// logically hold. 0 when no KV was ever held.
+    pub fn kv_utilization(&self) -> f64 {
+        if self.kv_allocated_bytes == 0 {
+            0.0
+        } else {
+            self.kv_logical_bytes as f64 / self.kv_allocated_bytes as f64
+        }
+    }
+
     /// Machine-readable summary — the `serve` section of
     /// `BENCH_serve_openloop.json` (see `bench::snapshot` for the full
     /// schema).
@@ -85,6 +110,12 @@ impl ServeReport {
             .set("mean_wait_steps", self.mean_wait_steps)
             .set("throughput_tok_s", self.throughput())
             .set("goodput_req_s", self.goodput())
+            .set("prefix_forks", self.prefix_forks)
+            .set("shared_prefix_tokens", self.shared_prefix_tokens)
+            .set("peak_active", self.peak_active)
+            .set("kv_allocated_bytes", self.kv_allocated_bytes)
+            .set("kv_logical_bytes", self.kv_logical_bytes)
+            .set("kv_utilization", self.kv_utilization())
             .set("ttft", self.ttft.to_json_ms())
             .set("itl", self.itl.to_json_ms())
             .set("e2e", self.e2e.to_json_ms())
@@ -149,6 +180,24 @@ mod tests {
         );
         let ttft = j.get("ttft").expect("ttft block");
         assert_eq!(ttft.get("count").and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn kv_utilization_reflects_sharing() {
+        let mut r = ServeReport::default();
+        assert_eq!(r.kv_utilization(), 0.0); // no KV held, no NaN
+        r.kv_allocated_bytes = 1024;
+        r.kv_logical_bytes = 1536; // prefix sharing: logical > physical
+        assert!((r.kv_utilization() - 1.5).abs() < 1e-12);
+        let j = Json::parse(&r.to_json().render()).unwrap();
+        assert_eq!(
+            j.get("kv_utilization").and_then(Json::as_f64),
+            Some(1.5)
+        );
+        assert_eq!(
+            j.get("prefix_forks").and_then(Json::as_f64),
+            Some(0.0)
+        );
     }
 
     #[test]

@@ -16,7 +16,7 @@ pub struct Request {
 }
 
 /// Trace generator: Poisson arrivals, uniform prompt lengths, fixed or
-/// jittered target lengths.
+/// jittered target lengths, optional shared system-prompt prefix.
 #[derive(Clone, Copy, Debug)]
 pub struct TraceConfig {
     pub seed: u64,
@@ -26,6 +26,14 @@ pub struct TraceConfig {
     pub target_len: (usize, usize),
     pub vocab: usize,
     pub count: usize,
+    /// Length of ONE shared prefix (a common system prompt) prepended
+    /// to a `share_prob` fraction of prompts; 0 disables sharing and
+    /// keeps the generated trace byte-identical to what this generator
+    /// produced before prefixes existed.
+    pub prefix_len: usize,
+    /// Probability a request carries the shared prefix (ignored when
+    /// `prefix_len` is 0).
+    pub share_prob: f64,
 }
 
 impl Default for TraceConfig {
@@ -37,24 +45,64 @@ impl Default for TraceConfig {
             target_len: (32, 64),
             vocab: 256,
             count: 64,
+            prefix_len: 0,
+            share_prob: 0.0,
+        }
+    }
+}
+
+impl TraceConfig {
+    /// Chat-style mix: most requests open with the same system prompt,
+    /// so a prefix-sharing cache stores (and recomputes) it once.
+    /// `prompt_len` here is the per-request tail AFTER the prefix.
+    pub fn shared_prefix_mix(seed: u64) -> TraceConfig {
+        TraceConfig {
+            seed,
+            prefix_len: 12,
+            share_prob: 0.75,
+            prompt_len: (2, 6),
+            ..TraceConfig::default()
+        }
+    }
+
+    /// Long-context mix: long prompts, short generations
+    /// (summarization-style) — stresses chunked prefill and per-step
+    /// prefill burst size rather than decode residency.
+    pub fn long_context_mix(seed: u64) -> TraceConfig {
+        TraceConfig {
+            seed,
+            rate: 8.0,
+            prompt_len: (48, 96),
+            target_len: (4, 8),
+            count: 16,
+            ..TraceConfig::default()
         }
     }
 }
 
 pub fn generate_trace(cfg: &TraceConfig) -> Vec<Request> {
     let mut rng = Rng::new(cfg.seed);
+    // drawn FIRST so the draw order (and hence the whole trace) with
+    // prefix_len == 0 is unchanged from the pre-prefix generator
+    let shared: Vec<i32> = (0..cfg.prefix_len)
+        .map(|_| rng.range_usize(0, cfg.vocab) as i32)
+        .collect();
     let mut t = 0.0;
     (0..cfg.count as u64)
         .map(|id| {
             t += rng.exponential(cfg.rate);
             let plen = rng.range_usize(cfg.prompt_len.0, cfg.prompt_len.1 + 1);
             let tlen = rng.range_usize(cfg.target_len.0, cfg.target_len.1 + 1);
+            // && short-circuits: the default path consumes no extra draw
+            let share = cfg.prefix_len > 0 && rng.next_f64() < cfg.share_prob;
+            let mut prompt: Vec<i32> =
+                if share { shared.clone() } else { Vec::new() };
+            prompt
+                .extend((0..plen).map(|_| rng.range_usize(0, cfg.vocab) as i32));
             Request {
                 id,
                 arrival_s: t,
-                prompt: (0..plen)
-                    .map(|_| rng.range_usize(0, cfg.vocab) as i32)
-                    .collect(),
+                prompt,
                 target_len: tlen,
             }
         })
@@ -178,6 +226,60 @@ mod tests {
             / gaps.len() as f64;
         let cv = var.sqrt() / mean;
         assert!((cv - 1.0).abs() < 0.15, "coefficient of variation {cv}");
+    }
+
+    /// With `prefix_len == 0` the prefix fields must be inert: the
+    /// trace is identical whatever `share_prob` says (no extra rng
+    /// draw), so every pre-prefix caller sees byte-identical traces.
+    #[test]
+    fn zero_prefix_len_leaves_trace_unchanged() {
+        let plain = generate_trace(&TraceConfig::default());
+        let inert = generate_trace(&TraceConfig {
+            share_prob: 0.9,
+            ..Default::default()
+        });
+        assert_eq!(plain, inert);
+    }
+
+    #[test]
+    fn shared_prefix_mix_shares_one_prefix_across_requests() {
+        let cfg = TraceConfig {
+            count: 100,
+            ..TraceConfig::shared_prefix_mix(5)
+        };
+        let trace = generate_trace(&cfg);
+        let shared: Vec<&Request> = trace
+            .iter()
+            .filter(|r| r.prompt.len() > cfg.prompt_len.1)
+            .collect();
+        // share_prob 0.75 over 100 requests: both kinds present
+        assert!(shared.len() > 50, "only {} shared", shared.len());
+        assert!(shared.len() < 100, "every request shared");
+        let prefix = &shared[0].prompt[..cfg.prefix_len];
+        for r in &shared {
+            assert_eq!(&r.prompt[..cfg.prefix_len], prefix);
+            let tail = r.prompt.len() - cfg.prefix_len;
+            assert!(
+                (cfg.prompt_len.0..=cfg.prompt_len.1).contains(&tail),
+                "tail {tail}"
+            );
+        }
+        // unshared prompts do NOT begin with the prefix-length stem
+        assert!(trace
+            .iter()
+            .any(|r| r.prompt.len() <= cfg.prompt_len.1
+                && !r.prompt.starts_with(prefix)));
+    }
+
+    #[test]
+    fn long_context_mix_skews_long_prompts_short_targets() {
+        let cfg = TraceConfig::long_context_mix(3);
+        let trace = generate_trace(&cfg);
+        assert_eq!(trace.len(), cfg.count);
+        for r in &trace {
+            assert!((48..=96).contains(&r.prompt.len()));
+            assert!((4..=8).contains(&r.target_len));
+        }
     }
 
     /// Different seeds must generate different traces (the generator

@@ -41,7 +41,7 @@ fn engine_cfg(batch: usize) -> FastDecodeConfig {
 fn node_cfg(wire: WireMode) -> NodeConfig {
     // TINY.n_layers == 2 == engine_cfg().layers, so the spec's layer
     // count is already the instantiated one
-    NodeConfig::from_spec(&TINY, CAP, Precision::F16, wire)
+    NodeConfig::from_spec(&TINY, CAP, 8, Precision::F16, wire)
 }
 
 /// Pin 1: the loopback backend — every activation round-tripping
@@ -165,6 +165,7 @@ fn serve_engine_completes_over_two_rnode_processes() {
             steps_per_sec: 200.0,
             prefill: PrefillMode::Batched,
             max_steps: 10_000,
+            ..Default::default()
         },
         Box::new(Fifo),
     )
@@ -297,4 +298,67 @@ fn refused_request_over_tcp_is_routed_and_node_survives() {
     let stats = pool.stats().unwrap();
     let seqs: usize = stats.iter().map(|s| s.sequences).sum();
     assert_eq!(seqs, 1);
+}
+
+/// Regression (paged-KV refactor): an `Attend` for a sequence that WAS
+/// placed but has since been dropped must come back as a routed
+/// `NetResponse::Err` — not a node panic — and the same connection
+/// keeps serving. The pre-paging `SocketCache` panicked on unknown ids
+/// inside `get`/`get_mut`, which over TCP killed the node.
+#[test]
+fn attend_on_dropped_seq_is_refused_and_node_keeps_serving() {
+    let node = spawn_rnode();
+    let mut raw = fastdecode::net::Tcp::connect(node.addr.as_str()).unwrap();
+    use fastdecode::net::Transport as _;
+    let wire = WireMode::F32;
+    let mut rpc = |req: &NetRequest| -> NetResponse {
+        raw.send(&encode_request(req, wire)).unwrap();
+        fastdecode::net::decode_response(&raw.recv().unwrap(), wire).unwrap()
+    };
+    assert_eq!(
+        rpc(&NetRequest::Configure(node_cfg(wire))),
+        NetResponse::Ack
+    );
+    assert_eq!(rpc(&NetRequest::AddSeqs(vec![5])), NetResponse::Ack);
+    let mut rng = Rng::new(31);
+    let mut task = || SeqTask {
+        seq_id: 5,
+        q: rng.normal_vec(TINY.hidden, 1.0),
+        k_new: rng.normal_vec(TINY.hidden, 1.0),
+        v_new: rng.normal_vec(TINY.hidden, 1.0),
+    };
+    // healthy attend while the sequence lives
+    let resp = rpc(&NetRequest::Attend {
+        layer: 0,
+        tasks: vec![task()],
+    });
+    assert!(
+        matches!(resp, NetResponse::Outputs { ref outs, .. } if outs.len() == 1),
+        "{resp:?}"
+    );
+    assert_eq!(rpc(&NetRequest::DropSeqs(vec![5])), NetResponse::Ack);
+    // attend on the DROPPED sequence: routed refusal, cache untouched
+    let resp = rpc(&NetRequest::Attend {
+        layer: 0,
+        tasks: vec![task()],
+    });
+    assert!(
+        matches!(resp, NetResponse::Err(ref m) if m.contains("not placed")),
+        "{resp:?}"
+    );
+    // the node is still serving on the same connection
+    assert_eq!(rpc(&NetRequest::AddSeqs(vec![6])), NetResponse::Ack);
+    let ok = rpc(&NetRequest::Attend {
+        layer: 0,
+        tasks: vec![SeqTask {
+            seq_id: 6,
+            q: rng.normal_vec(TINY.hidden, 1.0),
+            k_new: rng.normal_vec(TINY.hidden, 1.0),
+            v_new: rng.normal_vec(TINY.hidden, 1.0),
+        }],
+    });
+    assert!(
+        matches!(ok, NetResponse::Outputs { ref outs, .. } if outs.len() == 1),
+        "{ok:?}"
+    );
 }

@@ -36,6 +36,7 @@ fn traced_engine(tracer: Tracer) -> FastDecode {
             capacity_per_seq: cfg.capacity_per_seq,
             precision: cfg.precision,
             attend_pad: cfg.r_pad,
+            ..Default::default()
         },
     );
     FastDecode::with_backend_traced(TINY, cfg, Box::new(pool), tracer)

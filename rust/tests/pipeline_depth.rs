@@ -249,6 +249,7 @@ fn s_failure_surfaces_cause_and_pipeline_stays_usable() {
             capacity_per_seq: 16,
             precision: Precision::F16,
             attend_pad: Duration::ZERO,
+            ..Default::default()
         },
     );
     let ids: Vec<u64> = (1..=6).collect();

@@ -157,7 +157,8 @@ fn prop_loadctl_reproduces_sls_load() {
 fn prop_socket_cache_accounting() {
     prop::check("cache-accounting", 25, |g| {
         let layers = g.usize_in(1, 4);
-        let mut sc = SocketCache::new(2, 4, layers, 16, Precision::F16);
+        let block = g.usize_in(1, 6);
+        let mut sc = SocketCache::new(2, 4, layers, 16, block, Precision::F16);
         let mut expect = 0usize;
         for id in 0..g.usize_in(1, 5) as u64 {
             sc.add_seq(id);
@@ -166,12 +167,17 @@ fn prop_socket_cache_accounting() {
                 for layer in 0..layers {
                     let k = g.vec_normal(8, 1.0);
                     let v = g.vec_normal(8, 1.0);
-                    sc.get_mut(id, layer).append(&k, &v);
+                    sc.append(id, layer, &k, &v).unwrap();
                     expect += 1;
                 }
             }
         }
         assert_eq!(sc.stats().total_tokens, expect);
+        // without forks, the paged store holds exactly the logical
+        // tokens and never less storage than it reports logically
+        let st = sc.stats();
+        assert_eq!(st.physical_tokens, expect);
+        assert!(st.allocated_bytes >= st.logical_bytes);
     });
 }
 
@@ -208,5 +214,126 @@ fn prop_histogram_percentiles_monotone() {
             assert!(v >= h.min_us() && v <= h.max_us());
             prev = v;
         }
+    });
+}
+
+/// Paged KV (tentpole): for ANY interleaving of append / COW-fork /
+/// drop — at every block size (odd sizes exercise int4's packed tails)
+/// and every precision — the paged `SocketCache` decodes back EXACTLY
+/// what a contiguous per-sequence `SeqKv` shadow holds. Block payloads
+/// reuse `SeqKv`'s quantization path, so equality is exact even for
+/// int8/int4; forked children diverge immediately so copy-on-write is
+/// exercised and must never leak a child's writes into its parent.
+#[test]
+fn prop_paged_cache_matches_contiguous_shadow() {
+    use std::collections::HashMap;
+    prop::check("paged-vs-contiguous", 30, |g| {
+        let precs = [
+            Precision::F32,
+            Precision::F16,
+            Precision::Int8,
+            Precision::Int4,
+        ];
+        let prec = precs[g.usize_in(0, precs.len())];
+        let (heads, d) = (2usize, 4usize); // even d: int4 packs 2/byte
+        let layers = g.usize_in(1, 3);
+        let cap = 24usize;
+        let block = g.usize_in(1, 6);
+        let mut sc = SocketCache::new(heads, d, layers, cap, block, prec);
+        let mut shadow: HashMap<u64, Vec<SeqKv>> = HashMap::new();
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..14 {
+            let op = if live.is_empty() { 0 } else { g.usize_in(0, 4) };
+            match op {
+                // add a fresh empty sequence
+                0 => {
+                    let id = next_id;
+                    next_id += 1;
+                    sc.add_seq(id);
+                    shadow.insert(
+                        id,
+                        (0..layers)
+                            .map(|_| SeqKv::new(heads, d, cap, prec))
+                            .collect(),
+                    );
+                    live.push(id);
+                }
+                // append a ragged burst to one sequence, all layers
+                1 => {
+                    let id = live[g.usize_in(0, live.len())];
+                    let have = sc.seq_len(id, 0).unwrap();
+                    let n = g.usize_in(0, (cap - have).min(4) + 1);
+                    for _ in 0..n {
+                        for layer in 0..layers {
+                            let k = g.vec_normal(heads * d, 1.0);
+                            let v = g.vec_normal(heads * d, 1.0);
+                            sc.append(id, layer, &k, &v).unwrap();
+                            shadow.get_mut(&id).unwrap()[layer]
+                                .append(&k, &v);
+                        }
+                    }
+                }
+                // COW-fork a child at a random (often mid-block) point,
+                // then diverge it right away
+                2 => {
+                    let parent = live[g.usize_in(0, live.len())];
+                    let plen = sc.seq_len(parent, 0).unwrap();
+                    let upto = g.usize_in(0, plen + 1);
+                    let child = next_id;
+                    next_id += 1;
+                    sc.fork_seq(parent, child, upto).unwrap();
+                    let forked: Vec<SeqKv> = shadow[&parent]
+                        .iter()
+                        .map(|kv| {
+                            let mut c = kv.clone();
+                            c.len = upto;
+                            c
+                        })
+                        .collect();
+                    shadow.insert(child, forked);
+                    live.push(child);
+                    if upto < cap {
+                        for layer in 0..layers {
+                            let k = g.vec_normal(heads * d, 1.0);
+                            let v = g.vec_normal(heads * d, 1.0);
+                            sc.append(child, layer, &k, &v).unwrap();
+                            shadow.get_mut(&child).unwrap()[layer]
+                                .append(&k, &v);
+                        }
+                    }
+                }
+                // drop one sequence (parents may die before children:
+                // refcounts must keep shared blocks alive)
+                _ => {
+                    let i = g.usize_in(0, live.len());
+                    let id = live.swap_remove(i);
+                    assert!(sc.drop_seq(id));
+                    shadow.remove(&id);
+                }
+            }
+            // full cross-check after EVERY op
+            for &id in &live {
+                for layer in 0..layers {
+                    let len = sc.seq_len(id, layer).unwrap();
+                    let sh = &shadow[&id][layer];
+                    assert_eq!(len, sh.len, "seq {id} layer {layer} len");
+                    let view = sc.get(id, layer).unwrap();
+                    let mut a = vec![0.0f32; d];
+                    let mut b = vec![0.0f32; d];
+                    for head in 0..heads {
+                        for t in 0..len {
+                            view.decode_k(head, t, &mut a);
+                            sh.decode_k(head, t, &mut b);
+                            assert_eq!(
+                                a, b,
+                                "seq {id} layer {layer} head {head} t {t}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        assert_eq!(sc.stats().sequences, live.len());
     });
 }

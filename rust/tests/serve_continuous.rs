@@ -54,6 +54,7 @@ fn every_request_completes_including_partial_tail() {
         target_len: (4, 9),
         vocab: TINY.vocab,
         count: 10, // 10 = 2·4 + 2: a partial tail of 2
+        ..Default::default()
     });
     let mut eng = engine(
         slots,
@@ -63,6 +64,7 @@ fn every_request_completes_including_partial_tail() {
             steps_per_sec: 400.0,
             prefill: PrefillMode::Batched,
             max_steps: 10_000,
+            ..Default::default()
         },
         Box::new(Fifo),
     );
@@ -98,6 +100,7 @@ fn sls_policy_bounds_measured_kv_load() {
         target_len: (6, 12),
         vocab: TINY.vocab,
         count: 14,
+        ..Default::default()
     });
     let w_lim = 40; // single peak ≤ 19, six concurrent would be ~90
     let mut eng = engine(
@@ -108,6 +111,7 @@ fn sls_policy_bounds_measured_kv_load() {
             steps_per_sec: 400.0,
             prefill: PrefillMode::Batched,
             max_steps: 10_000,
+            ..Default::default()
         },
         Box::new(SlsEarliestStart),
     );
@@ -157,6 +161,7 @@ fn lockstep_serve_matches_fixed_batch_generate() {
             steps_per_sec: 100.0,
             prefill: PrefillMode::Batched,
             max_steps: 1000,
+            ..Default::default()
         },
         Box::new(Fifo),
     );
@@ -209,6 +214,7 @@ fn staggered_arrivals_produce_same_tokens() {
                 steps_per_sec: 100.0,
                 prefill: PrefillMode::Batched,
                 max_steps: 1000,
+                ..Default::default()
             },
             Box::new(Fifo),
         );
@@ -239,6 +245,7 @@ fn report_percentiles_ordered_and_batched_prefill_wins_ttft() {
                 steps_per_sec: 100.0,
                 prefill: mode,
                 max_steps: 10_000,
+                ..Default::default()
             },
             Box::new(Fifo),
         );
@@ -278,4 +285,118 @@ fn report_percentiles_ordered_and_batched_prefill_wins_ttft() {
         "batched prefill TTFT {b} µs not below token-at-a-time {t} µs \
          for {plen}-token prompts"
     );
+}
+
+/// Chunked prefill (`max_prefill_rows`) spreads a long prompt across
+/// several passes without changing a single generated token: per-row
+/// append/attend order is identical, only the step boundaries move.
+#[test]
+fn chunked_prefill_is_token_identical_to_whole_prompt() {
+    let (slots, plen, tlen) = (3, 24, 5);
+    let trace = lockstep_trace(slots, plen, tlen, TINY.vocab, 17);
+    let run = |max_prefill_rows: usize| {
+        let mut eng = engine(
+            slots,
+            64,
+            ServeConfig {
+                w_lim: 256,
+                steps_per_sec: 100.0,
+                prefill: PrefillMode::Batched,
+                max_steps: 10_000,
+                max_prefill_rows,
+                ..Default::default()
+            },
+            Box::new(Fifo),
+        );
+        eng.run(&trace).unwrap()
+    };
+    let whole = run(0);
+    let chunked = run(5); // 24 prompt rows → 5 passes of ≤ 5 rows
+    assert_eq!(chunked.report.completed, trace.len());
+    // the chunked run needs extra steps for the extra prefill passes
+    assert!(
+        chunked.report.steps > whole.report.steps,
+        "chunking did not spread prefill ({} vs {} steps)",
+        chunked.report.steps,
+        whole.report.steps
+    );
+    // no pass carried more rows than the cap allows (3 slots × ≤5 rows)
+    let max_rows =
+        chunked.trace.records.iter().map(|r| r.tokens).max().unwrap();
+    assert!(
+        max_rows <= slots * 5,
+        "a pass carried {max_rows} rows under a 5-row prefill cap"
+    );
+    // ...and the generated tokens are bit-identical
+    for (a, b) in whole.completions.iter().zip(&chunked.completions) {
+        assert_eq!(a.request_id, b.request_id);
+        assert_eq!(a.tokens, b.tokens, "chunked prefill changed tokens");
+    }
+}
+
+/// Prefix sharing is semantically invisible: a shared-prefix trace
+/// produces bit-identical tokens with `share_prefixes` on or off —
+/// while the ON run really does admit by COW fork (`prefix_forks`),
+/// storing the common prefix's blocks once.
+#[test]
+fn prefix_sharing_is_token_identical_and_actually_forks() {
+    let trace = generate_trace(&TraceConfig {
+        vocab: TINY.vocab,
+        target_len: (4, 8),
+        rate: 300.0, // burst arrivals: parents stay active for children
+        count: 12,
+        ..TraceConfig::shared_prefix_mix(9)
+    });
+    let run = |share_prefixes: bool| {
+        let fd = FastDecode::new(
+            TINY,
+            FastDecodeConfig {
+                batch: 4,
+                sockets: 2,
+                precision: Precision::F16,
+                capacity_per_seq: 64,
+                weight_seed: 0xfa57,
+                layers: 2,
+                kv_block_size: 4, // divides the 12-token shared prefix
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut eng = ServeEngine::new(
+            fd,
+            ServeConfig {
+                w_lim: 48,
+                steps_per_sec: 400.0,
+                max_steps: 10_000,
+                share_prefixes,
+                ..Default::default()
+            },
+            Box::new(Fifo),
+        )
+        .unwrap();
+        eng.run(&trace).unwrap()
+    };
+    let shared = run(true);
+    let unshared = run(false);
+    assert_eq!(shared.report.completed, trace.len());
+    assert_eq!(unshared.report.completed, trace.len());
+    for (a, b) in shared.completions.iter().zip(&unshared.completions) {
+        assert_eq!(a.request_id, b.request_id);
+        assert_eq!(a.tokens, b.tokens, "prefix sharing changed tokens");
+    }
+    assert!(
+        shared.report.prefix_forks > 0,
+        "no admission forked on a 75%-shared-prefix trace"
+    );
+    assert!(
+        shared.report.shared_prefix_tokens
+            >= 2 * shared.report.prefix_forks,
+        "forks below MIN_FORK_LEN tokens"
+    );
+    assert_eq!(unshared.report.prefix_forks, 0);
+    assert_eq!(unshared.report.shared_prefix_tokens, 0);
+    // without sharing, logical KV can never exceed what is allocated
+    assert!(unshared.report.kv_utilization() <= 1.0);
+    assert!(shared.report.kv_utilization() > 0.0);
+    assert!(shared.report.peak_active >= 1);
 }
