@@ -1,0 +1,485 @@
+//! The fdlint engine: runs every rule over an in-memory source tree,
+//! applies `fdlint: allow` suppressions, and checks the result against
+//! the grandfathered-violation baseline (the CI ratchet).
+//!
+//! The core is filesystem-free — `analyze` takes a `BTreeMap` of
+//! relative path → source text — so the ratchet semantics are unit- and
+//! property-testable without touching disk. `collect_sources` is the
+//! thin walker the `fdlint` binary and the integration gate use to
+//! build that map from `rust/src`.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+use anyhow::{bail, Context as _, Result};
+
+use super::lexer::{lex, Line};
+use super::rules::{self, Violation};
+
+/// Grandfathered counts: `(rule, file)` → number of allowed violations.
+pub type Baseline = BTreeMap<(String, String), usize>;
+
+/// Result of one analyzer run over a source tree.
+#[derive(Debug)]
+pub struct Analysis {
+    /// Unsuppressed violations, ordered by (file, line, rule).
+    pub violations: Vec<Violation>,
+    /// Violations silenced by a well-formed allow directive.
+    pub allowed: usize,
+    /// Files analyzed.
+    pub files: usize,
+}
+
+/// The literal that opens a suppression directive in a comment. The
+/// trigger is deliberately exact: a misspelled directive simply never
+/// suppresses (the underlying violation still fails the build), while
+/// anything matching the trigger must parse fully or it is reported as
+/// a malformed-suppression violation — a suppression can fail open,
+/// never silently.
+const ALLOW_MARKER: &str = "fdlint: allow(";
+
+/// Parse the directive body following [`ALLOW_MARKER`]: a known rule
+/// name up to `)`, then `:` and a non-empty reason.
+fn parse_allow_body(s: &str) -> Result<String, String> {
+    let Some(close) = s.find(')') else {
+        return Err("unclosed rule name in fdlint allow directive".to_string());
+    };
+    let rule = s[..close].trim();
+    if !rules::RULES.iter().any(|r| *r == rule) {
+        return Err(format!("fdlint allow names unknown rule `{rule}`"));
+    }
+    let rest = s[close + 1..].trim_start();
+    let Some(reason) = rest.strip_prefix(':') else {
+        return Err(format!(
+            "fdlint allow for `{rule}` is missing a `: <reason>` tail"
+        ));
+    };
+    if reason.trim().is_empty() {
+        return Err(format!("fdlint allow for `{rule}` has an empty reason"));
+    }
+    Ok(rule.to_string())
+}
+
+/// Collect allow directives from the comment channel. A well-formed
+/// allow covers its own line and the next line (so it works both as a
+/// trailing comment and as a comment line directly above the site).
+fn collect_allows(
+    path: &str,
+    lines: &[Line],
+    allows: &mut BTreeSet<(String, String, usize)>,
+    out: &mut Vec<Violation>,
+) {
+    for line in lines {
+        let mut rest = line.comment.as_str();
+        while let Some(pos) = rest.find(ALLOW_MARKER) {
+            let after = &rest[pos + ALLOW_MARKER.len()..];
+            match parse_allow_body(after) {
+                Ok(rule) => {
+                    allows.insert((path.to_string(), rule.clone(), line.number));
+                    allows.insert((path.to_string(), rule, line.number + 1));
+                }
+                Err(message) => out.push(Violation {
+                    rule: rules::MALFORMED_SUPPRESSION,
+                    file: path.to_string(),
+                    line: line.number,
+                    message,
+                }),
+            }
+            rest = after;
+        }
+    }
+}
+
+/// Run every rule over the tree and apply suppressions.
+pub fn analyze(files: &BTreeMap<String, String>) -> Analysis {
+    let mut raw = Vec::new();
+    let mut allows: BTreeSet<(String, String, usize)> = BTreeSet::new();
+    for (path, text) in files {
+        let lines = lex(text);
+        collect_allows(path, &lines, &mut allows, &mut raw);
+        rules::check_file(path, &lines, &mut raw);
+    }
+    rules::check_codec(files, &mut raw);
+    let mut violations = Vec::new();
+    let mut allowed = 0usize;
+    for v in raw {
+        if allows.contains(&(v.file.clone(), v.rule.to_string(), v.line)) {
+            allowed += 1;
+        } else {
+            violations.push(v);
+        }
+    }
+    violations.sort_by(|a, b| {
+        (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule))
+    });
+    Analysis {
+        violations,
+        allowed,
+        files: files.len(),
+    }
+}
+
+/// Aggregate violations into per-(rule, file) counts.
+pub fn baseline_of(violations: &[Violation]) -> Baseline {
+    let mut b = Baseline::new();
+    for v in violations {
+        *b.entry((v.rule.to_string(), v.file.clone())).or_insert(0) += 1;
+    }
+    b
+}
+
+/// Serialize a baseline in the checked-in `fdlint.baseline` format.
+pub fn format_baseline(b: &Baseline) -> String {
+    let mut s = String::from(
+        "# fdlint baseline: grandfathered violations, one `rule path count`\n\
+         # per line. New violations fail the build; fixing a grandfathered\n\
+         # one requires ratcheting this file DOWN (the check also fails\n\
+         # when a count is stale-high):\n\
+         #     cargo run --bin fdlint -- --update-baseline\n",
+    );
+    for ((rule, file), count) in b {
+        s.push_str(&format!("{rule} {file} {count}\n"));
+    }
+    s
+}
+
+/// Parse a checked-in baseline file.
+pub fn parse_baseline(text: &str) -> Result<Baseline> {
+    let mut b = Baseline::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split_whitespace().collect();
+        let (rule, file, count) = match fields.as_slice() {
+            [rule, file, count] => (*rule, *file, *count),
+            _ => bail!(
+                "baseline line {}: expected `rule path count`, got {raw:?}",
+                i + 1
+            ),
+        };
+        if !rules::RULES.iter().any(|r| *r == rule) {
+            bail!("baseline line {}: unknown rule {rule:?}", i + 1);
+        }
+        let count: usize = count
+            .parse()
+            .with_context(|| format!("baseline line {}: bad count", i + 1))?;
+        if count == 0 {
+            bail!(
+                "baseline line {}: zero-count entry for {rule} {file} — \
+                 delete the line instead",
+                i + 1
+            );
+        }
+        let prev = b.insert((rule.to_string(), file.to_string()), count);
+        if prev.is_some() {
+            bail!(
+                "baseline line {}: duplicate entry for {rule} {file}",
+                i + 1
+            );
+        }
+    }
+    Ok(b)
+}
+
+/// The ratchet: compare current per-(rule, file) counts against the
+/// grandfathered baseline. Returns human-readable failures — empty
+/// means the gate passes. A count above baseline is a regression; a
+/// count below baseline is a stale baseline (the fix must ratchet the
+/// file down so the improvement is locked in).
+pub fn compare(
+    current: &Baseline,
+    grandfathered: &Baseline,
+    violations: &[Violation],
+) -> Vec<String> {
+    let mut failures = Vec::new();
+    for ((rule, file), &cur) in current {
+        let base = grandfathered
+            .get(&(rule.clone(), file.clone()))
+            .copied()
+            .unwrap_or(0);
+        if cur > base {
+            failures.push(format!(
+                "{file}: {cur} violation(s) of `{rule}` (baseline allows \
+                 {base})"
+            ));
+            for v in violations
+                .iter()
+                .filter(|v| v.rule == rule.as_str() && v.file == *file)
+            {
+                failures.push(format!("    {}:{}: {}", v.file, v.line, v.message));
+            }
+        }
+    }
+    for ((rule, file), &base) in grandfathered {
+        let cur = current
+            .get(&(rule.clone(), file.clone()))
+            .copied()
+            .unwrap_or(0);
+        if cur < base {
+            failures.push(format!(
+                "stale baseline: `{rule}` in {file} grandfathers {base} but \
+                 only {cur} remain — ratchet down with `cargo run --bin \
+                 fdlint -- --update-baseline`"
+            ));
+        }
+    }
+    failures
+}
+
+/// Recursively collect `*.rs` files under `root` into relative-path →
+/// source-text map (`/`-separated paths, sorted by the BTreeMap).
+pub fn collect_sources(root: &Path) -> Result<BTreeMap<String, String>> {
+    fn walk(
+        dir: &Path,
+        root: &Path,
+        out: &mut BTreeMap<String, String>,
+    ) -> Result<()> {
+        let entries = std::fs::read_dir(dir)
+            .with_context(|| format!("reading {}", dir.display()))?;
+        for entry in entries {
+            let path = entry
+                .with_context(|| format!("walking {}", dir.display()))?
+                .path();
+            if path.is_dir() {
+                walk(&path, root, out)?;
+            } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+                let text = std::fs::read_to_string(&path)
+                    .with_context(|| format!("reading {}", path.display()))?;
+                let rel = path
+                    .strip_prefix(root)
+                    .unwrap_or(&path)
+                    .to_string_lossy()
+                    .replace('\\', "/");
+                out.insert(rel, text);
+            }
+        }
+        Ok(())
+    }
+    let mut out = BTreeMap::new();
+    walk(root, root, &mut out)?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn tree(path: &str, src: &str) -> BTreeMap<String, String> {
+        let mut files = BTreeMap::new();
+        files.insert(path.to_string(), src.to_string());
+        files
+    }
+
+    /// The full gate as the binary and CI run it.
+    fn gate(files: &BTreeMap<String, String>, baseline: &str) -> Vec<String> {
+        let a = analyze(files);
+        let gf = parse_baseline(baseline).expect("baseline parses");
+        compare(&baseline_of(&a.violations), &gf, &a.violations)
+    }
+
+    #[test]
+    fn clean_tree_passes_empty_baseline() {
+        let files = tree("util/a.rs", "pub fn ok() -> u8 {\n    1\n}\n");
+        assert!(gate(&files, "").is_empty());
+    }
+
+    #[test]
+    fn new_violation_fails_empty_baseline() {
+        let files = tree("net/a.rs", "fn f() {\n    x.unwrap();\n}\n");
+        let failures = gate(&files, "");
+        assert_eq!(failures.len(), 2, "{failures:?}");
+        assert!(failures[0].contains("no-unwrap-in-routed"));
+        assert!(failures[1].contains("net/a.rs:2"));
+    }
+
+    #[test]
+    fn grandfathered_violation_passes_exact_baseline() {
+        let files = tree("net/a.rs", "fn f() {\n    x.unwrap();\n}\n");
+        assert!(gate(&files, "no-unwrap-in-routed net/a.rs 1\n").is_empty());
+    }
+
+    #[test]
+    fn count_above_baseline_fails() {
+        let files = tree(
+            "net/a.rs",
+            "fn f() {\n    x.unwrap();\n    y.unwrap();\n}\n",
+        );
+        let failures = gate(&files, "no-unwrap-in-routed net/a.rs 1\n");
+        assert!(!failures.is_empty());
+        assert!(failures[0].contains("baseline allows 1"), "{failures:?}");
+    }
+
+    #[test]
+    fn stale_high_baseline_fails_until_ratcheted() {
+        // the violation was fixed but the baseline still grandfathers 2:
+        // the gate demands the ratchet move down
+        let files = tree("net/a.rs", "fn f() {\n    x.unwrap();\n}\n");
+        let failures = gate(&files, "no-unwrap-in-routed net/a.rs 2\n");
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].contains("stale baseline"), "{failures:?}");
+    }
+
+    #[test]
+    fn update_baseline_roundtrip_shrinks_and_passes() {
+        let files = tree("net/a.rs", "fn f() {\n    x.unwrap();\n}\n");
+        let a = analyze(&files);
+        // what --update-baseline writes...
+        let written = format_baseline(&baseline_of(&a.violations));
+        // ...parses back to the exact current counts and gates clean
+        let gf = parse_baseline(&written).unwrap();
+        assert_eq!(gf.len(), 1);
+        assert!(gate(&files, &written).is_empty());
+    }
+
+    #[test]
+    fn baseline_rejects_garbage() {
+        assert!(parse_baseline("not a baseline line\n").is_err());
+        assert!(parse_baseline("made-up-rule net/a.rs 1\n").is_err());
+        assert!(parse_baseline("no-unwrap-in-routed net/a.rs zero\n").is_err());
+        assert!(parse_baseline("no-unwrap-in-routed net/a.rs 0\n").is_err());
+        assert!(parse_baseline(
+            "no-unwrap-in-routed net/a.rs 1\nno-unwrap-in-routed net/a.rs 2\n"
+        )
+        .is_err());
+        assert!(parse_baseline("# comment\n\nno-raw-eprintln serve/e.rs 3\n")
+            .is_ok());
+    }
+
+    // The allow-directive texts below live inside string literals, so
+    // the self-scan of this file never parses them as real directives.
+
+    #[test]
+    fn trailing_allow_with_reason_suppresses() {
+        let src = "fn f() {\n    x.unwrap(); // fdlint: \
+                   allow(no-unwrap-in-routed): test fixture\n}\n";
+        let a = analyze(&tree("net/a.rs", src));
+        assert!(a.violations.is_empty(), "{:?}", a.violations);
+        assert_eq!(a.allowed, 1);
+    }
+
+    #[test]
+    fn allow_on_the_line_above_suppresses() {
+        let src = "fn f() {\n    // fdlint: allow(no-unwrap-in-routed): \
+                   test fixture\n    x.unwrap();\n}\n";
+        let a = analyze(&tree("net/a.rs", src));
+        assert!(a.violations.is_empty(), "{:?}", a.violations);
+        assert_eq!(a.allowed, 1);
+    }
+
+    #[test]
+    fn allow_does_not_reach_past_the_next_line() {
+        let src = "fn f() {\n    // fdlint: allow(no-unwrap-in-routed): \
+                   too far away\n    let ok = 1;\n    x.unwrap();\n}\n";
+        let a = analyze(&tree("net/a.rs", src));
+        assert_eq!(a.violations.len(), 1, "{:?}", a.violations);
+        assert_eq!(a.allowed, 0);
+    }
+
+    #[test]
+    fn allow_for_the_wrong_rule_does_not_suppress() {
+        let src = "fn f() {\n    x.unwrap(); // fdlint: \
+                   allow(no-raw-eprintln): wrong rule named\n}\n";
+        let a = analyze(&tree("net/a.rs", src));
+        assert_eq!(a.violations.len(), 1, "{:?}", a.violations);
+    }
+
+    #[test]
+    fn allow_with_unknown_rule_is_malformed() {
+        let src = "fn f() {\n    // fdlint: allow(no-such-rule): reason\n\
+                       x();\n}\n";
+        let a = analyze(&tree("util/a.rs", src));
+        assert_eq!(a.violations.len(), 1, "{:?}", a.violations);
+        assert_eq!(a.violations[0].rule, rules::MALFORMED_SUPPRESSION);
+        assert!(a.violations[0].message.contains("unknown rule"));
+    }
+
+    #[test]
+    fn allow_without_reason_is_malformed() {
+        for src in [
+            // missing the `: reason` tail entirely
+            "fn f() {\n    // fdlint: allow(no-unwrap-in-routed)\n    \
+             x.unwrap();\n}\n",
+            // colon present but reason blank
+            "fn f() {\n    // fdlint: allow(no-unwrap-in-routed):\n    \
+             x.unwrap();\n}\n",
+        ] {
+            let a = analyze(&tree("net/a.rs", src));
+            assert!(
+                a.violations
+                    .iter()
+                    .any(|v| v.rule == rules::MALFORMED_SUPPRESSION),
+                "{:?}",
+                a.violations
+            );
+            // and the underlying violation still fires — a broken
+            // suppression fails open
+            assert!(
+                a.violations
+                    .iter()
+                    .any(|v| v.rule == rules::NO_UNWRAP_IN_ROUTED),
+                "{:?}",
+                a.violations
+            );
+        }
+    }
+
+    #[test]
+    fn directive_inside_a_string_is_inert() {
+        // a directive-shaped string literal is neither a suppression
+        // nor a malformed-suppression violation: only comment text is
+        // parsed
+        let src = "fn f() {\n    let s = \"fdlint: allow(bogus)\";\n}\n";
+        let a = analyze(&tree("util/a.rs", src));
+        assert!(a.violations.is_empty(), "{:?}", a.violations);
+        assert_eq!(a.allowed, 0);
+    }
+
+    /// Property: rule patterns inside strings, raw strings and comments
+    /// never fire; the violation count equals exactly the number of
+    /// real code sites generated.
+    #[test]
+    fn prop_masked_channels_never_fire() {
+        prop::check("fdlint-masking", 200, |g| {
+            let mut src = String::from("pub fn f() {\n");
+            let mut expected = 0usize;
+            let n = g.usize_in(1, 13);
+            for _ in 0..n {
+                match g.usize_in(0, 5) {
+                    0 => {
+                        src.push_str("    x.unwrap();\n");
+                        expected += 1;
+                    }
+                    1 => src.push_str(
+                        "    let s = \".unwrap() HashMap eprintln!\";\n",
+                    ),
+                    2 => src.push_str(
+                        "    // .unwrap() unsafe panic! in a comment\n",
+                    ),
+                    3 => src.push_str(
+                        "    let r = r#\".expect( HashSet todo!\"#;\n",
+                    ),
+                    4 => src.push_str(
+                        "    let c = '\\n'; let l: &'static str = \"x\";\n",
+                    ),
+                    _ => unreachable!("usize_in(0, 5) is half-open"),
+                }
+            }
+            src.push_str("}\n");
+            let a = analyze(&tree("net/gen.rs", src.as_str()));
+            let unwraps = a
+                .violations
+                .iter()
+                .filter(|v| v.rule == rules::NO_UNWRAP_IN_ROUTED)
+                .count();
+            assert_eq!(unwraps, expected, "source was:\n{src}");
+            assert_eq!(
+                a.violations.len(),
+                expected,
+                "unexpected extra rules fired for:\n{src}"
+            );
+        });
+    }
+}

@@ -1,0 +1,464 @@
+//! Comment/string/char-literal-aware lexer shared by every fdlint rule.
+//!
+//! `lex` splits a Rust source file into [`Line`]s carrying two aligned
+//! channels: `code` (literals and comments blanked out, so a rule
+//! pattern can never fire inside a string or a comment) and `comment`
+//! (only comment text survives, which is where `SAFETY:` markers and
+//! `fdlint` allow directives are read from). Both channels preserve the
+//! byte length of the raw source — multi-byte characters are padded
+//! with spaces — so a byte span found in one channel is valid in the
+//! raw text too (the codec-exhaustive surgery test relies on this).
+//!
+//! The lexer understands: `//` line comments, nested `/* */` block
+//! comments, `"..."` strings with escapes, `b"..."` byte strings,
+//! `r"..."`/`r#"..."#`/`br#"..."#` raw strings with any number of
+//! hashes, and char literals (`'x'`, `'\n'`, `b'x'`, `'\u{1F4A3}'`)
+//! versus lifetimes (`'a`, `'static`), which stay in the code channel.
+//!
+//! It also tracks `#[cfg(test)]` regions by brace depth: the attribute
+//! arms the tracker and the next `{` opens a test region until its
+//! matching `}`. Most rules skip lines inside test regions (tests may
+//! unwrap and panic freely).
+
+/// One source line, split into aligned channels.
+#[derive(Debug, Clone)]
+pub struct Line {
+    /// 1-based line number.
+    pub number: usize,
+    /// Code channel: comment and literal bytes blanked with spaces.
+    pub code: String,
+    /// Comment channel: only comment text (sans the `//`/`/* */`
+    /// markers) survives; everything else is blanked.
+    pub comment: String,
+    /// True when the line touches a `#[cfg(test)]` region.
+    pub in_test: bool,
+}
+
+enum State {
+    Code,
+    LineComment,
+    BlockComment { depth: usize },
+    Str,
+    RawStr { hashes: usize },
+}
+
+/// Push `c` to `out` as padding: newlines survive (they keep the line
+/// split aligned across channels), everything else becomes one space
+/// per byte.
+fn pad(out: &mut String, c: char) {
+    if c == '\n' {
+        out.push('\n');
+    } else {
+        for _ in 0..c.len_utf8() {
+            out.push(' ');
+        }
+    }
+}
+
+/// If position `i` (holding `r` or `b`) opens a raw/byte string
+/// literal, return `(consumed_including_quote, hashes, is_raw)`.
+fn literal_open(chars: &[char], i: usize) -> Option<(usize, usize, bool)> {
+    let mut j = i + 1; // past the leading 'r' or 'b'
+    let mut raw = chars[i] == 'r';
+    if chars[i] == 'b' && chars.get(j) == Some(&'r') {
+        raw = true;
+        j += 1;
+    }
+    if raw {
+        let mut hashes = 0;
+        while chars.get(j) == Some(&'#') {
+            hashes += 1;
+            j += 1;
+        }
+        if chars.get(j) == Some(&'"') {
+            return Some((j + 1 - i, hashes, true));
+        }
+        return None;
+    }
+    // b"..." byte string (escapes behave like a normal string)
+    if chars.get(j) == Some(&'"') {
+        return Some((2, 0, false));
+    }
+    None
+}
+
+/// If position `i` (holding `'`) starts a char literal, return its
+/// total length in chars; `None` means it is a lifetime tick (or
+/// malformed) and stays in the code channel.
+fn char_literal_len(chars: &[char], i: usize) -> Option<usize> {
+    match chars.get(i + 1) {
+        Some('\\') => {
+            // escaped form: skip the backslash and the escaped char,
+            // then scan (bounded) for the closing quote — long enough
+            // for '\u{10FFFF}', short enough to never swallow code
+            let mut j = i + 3;
+            while let Some(&c) = chars.get(j) {
+                if c == '\'' {
+                    return Some(j + 1 - i);
+                }
+                if c == '\n' || j > i + 12 {
+                    return None;
+                }
+                j += 1;
+            }
+            None
+        }
+        Some(&c) if c != '\'' => {
+            if chars.get(i + 2) == Some(&'\'') {
+                Some(3)
+            } else {
+                None // lifetime: 'a, 'static, '_
+            }
+        }
+        _ => None,
+    }
+}
+
+/// True when the quote at `i` is followed by `hashes` `#` chars — the
+/// closer of an `r#"..."#`-style literal.
+fn closes_raw(chars: &[char], i: usize, hashes: usize) -> bool {
+    (1..=hashes).all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+/// Blank literals and comments out of `source`. Returns the code and
+/// comment channels, each byte-length-equal to the input.
+pub(crate) fn mask(source: &str) -> (String, String) {
+    let chars: Vec<char> = source.chars().collect();
+    let mut code = String::with_capacity(source.len());
+    let mut comment = String::with_capacity(source.len());
+    let mut state = State::Code;
+    // whether the previous code char could end an identifier — tells
+    // `r"raw"` apart from an identifier that happens to end in `r`
+    let mut prev_ident = false;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        match state {
+            State::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    pad(&mut code, '/');
+                    pad(&mut comment, '/');
+                    pad(&mut code, '/');
+                    pad(&mut comment, '/');
+                    i += 2;
+                    state = State::LineComment;
+                    prev_ident = false;
+                    continue;
+                }
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    pad(&mut code, '/');
+                    pad(&mut comment, '/');
+                    pad(&mut code, '*');
+                    pad(&mut comment, '*');
+                    i += 2;
+                    state = State::BlockComment { depth: 1 };
+                    prev_ident = false;
+                    continue;
+                }
+                if c == '"' {
+                    pad(&mut code, c);
+                    pad(&mut comment, c);
+                    i += 1;
+                    state = State::Str;
+                    prev_ident = false;
+                    continue;
+                }
+                if (c == 'r' || c == 'b') && !prev_ident {
+                    if let Some((consumed, hashes, raw)) =
+                        literal_open(&chars, i)
+                    {
+                        for k in 0..consumed {
+                            pad(&mut code, chars[i + k]);
+                            pad(&mut comment, chars[i + k]);
+                        }
+                        i += consumed;
+                        state = if raw {
+                            State::RawStr { hashes }
+                        } else {
+                            State::Str
+                        };
+                        prev_ident = false;
+                        continue;
+                    }
+                }
+                if c == '\'' {
+                    if let Some(len) = char_literal_len(&chars, i) {
+                        for k in 0..len {
+                            pad(&mut code, chars[i + k]);
+                            pad(&mut comment, chars[i + k]);
+                        }
+                        i += len;
+                        prev_ident = false;
+                        continue;
+                    }
+                }
+                code.push(c);
+                pad(&mut comment, c);
+                prev_ident = c.is_alphanumeric() || c == '_';
+                i += 1;
+            }
+            State::LineComment => {
+                if c == '\n' {
+                    code.push('\n');
+                    comment.push('\n');
+                    state = State::Code;
+                } else {
+                    pad(&mut code, c);
+                    comment.push(c);
+                }
+                i += 1;
+            }
+            State::BlockComment { depth } => {
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    pad(&mut code, '*');
+                    pad(&mut comment, '*');
+                    pad(&mut code, '/');
+                    pad(&mut comment, '/');
+                    i += 2;
+                    state = if depth == 1 {
+                        State::Code
+                    } else {
+                        State::BlockComment { depth: depth - 1 }
+                    };
+                    continue;
+                }
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    pad(&mut code, '/');
+                    pad(&mut comment, '/');
+                    pad(&mut code, '*');
+                    pad(&mut comment, '*');
+                    i += 2;
+                    state = State::BlockComment { depth: depth + 1 };
+                    continue;
+                }
+                if c == '\n' {
+                    code.push('\n');
+                    comment.push('\n');
+                } else {
+                    pad(&mut code, c);
+                    comment.push(c);
+                }
+                i += 1;
+            }
+            State::Str => {
+                if c == '\\' && i + 1 < chars.len() {
+                    pad(&mut code, c);
+                    pad(&mut comment, c);
+                    pad(&mut code, chars[i + 1]);
+                    pad(&mut comment, chars[i + 1]);
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    pad(&mut code, c);
+                    pad(&mut comment, c);
+                    i += 1;
+                    state = State::Code;
+                    continue;
+                }
+                pad(&mut code, c);
+                pad(&mut comment, c);
+                i += 1;
+            }
+            State::RawStr { hashes } => {
+                if c == '"' && closes_raw(&chars, i, hashes) {
+                    for k in 0..=hashes {
+                        pad(&mut code, chars[i + k]);
+                        pad(&mut comment, chars[i + k]);
+                    }
+                    i += 1 + hashes;
+                    state = State::Code;
+                    continue;
+                }
+                pad(&mut code, c);
+                pad(&mut comment, c);
+                i += 1;
+            }
+        }
+    }
+    (code, comment)
+}
+
+/// Code channel only (comments and literals blanked; byte-length equal
+/// to the input).
+pub(crate) fn mask_code(source: &str) -> String {
+    mask(source).0
+}
+
+/// Lex a source file into per-line channels plus `#[cfg(test)]` region
+/// flags.
+pub fn lex(source: &str) -> Vec<Line> {
+    let (code, comment) = mask(source);
+    let mut lines = Vec::new();
+    let mut armed = false; // saw #[cfg(test)], waiting for its '{'
+    let mut depth = 0usize;
+    let mut test_depth: Option<usize> = None;
+    for (idx, (code_l, comment_l)) in
+        code.split('\n').zip(comment.split('\n')).enumerate()
+    {
+        let started_in_test = test_depth.is_some();
+        if code_l.contains("#[cfg(test)]") {
+            armed = true;
+        }
+        for ch in code_l.chars() {
+            match ch {
+                '{' => {
+                    depth += 1;
+                    if armed {
+                        armed = false;
+                        if test_depth.is_none() {
+                            test_depth = Some(depth);
+                        }
+                    }
+                }
+                '}' => {
+                    if test_depth == Some(depth) {
+                        test_depth = None;
+                    }
+                    depth = depth.saturating_sub(1);
+                }
+                _ => {}
+            }
+        }
+        lines.push(Line {
+            number: idx + 1,
+            code: code_l.to_string(),
+            comment: comment_l.to_string(),
+            in_test: started_in_test || test_depth.is_some(),
+        });
+    }
+    lines
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(src: &str) -> String {
+        mask(src).0
+    }
+
+    fn comment_of(src: &str) -> String {
+        mask(src).1
+    }
+
+    #[test]
+    fn masks_string_literals() {
+        let src = "let s = \".unwrap() HashMap panic!\"; s.len();";
+        let code = code_of(src);
+        assert!(!code.contains(".unwrap()"), "{code:?}");
+        assert!(!code.contains("HashMap"), "{code:?}");
+        assert!(code.contains("let s = "), "{code:?}");
+        assert!(code.contains("s.len();"), "{code:?}");
+        assert_eq!(code.len(), src.len());
+    }
+
+    #[test]
+    fn masks_line_and_block_comments() {
+        let src = "x(); // .unwrap() here\n/* HashMap\n * eprintln! */ y();";
+        let code = code_of(src);
+        assert!(!code.contains(".unwrap()"));
+        assert!(!code.contains("HashMap"));
+        assert!(!code.contains("eprintln!"));
+        assert!(code.contains("x();"));
+        assert!(code.contains("y();"));
+        // ...while the comment channel keeps the text
+        let comment = comment_of(src);
+        assert!(comment.contains(".unwrap() here"));
+        assert!(comment.contains("HashMap"));
+        assert!(!comment.contains("x();"));
+    }
+
+    #[test]
+    fn block_comments_nest() {
+        let src = "/* outer /* inner */ still.unwrap() */ code()";
+        let code = code_of(src);
+        assert!(!code.contains("still.unwrap()"), "{code:?}");
+        assert!(code.contains("code()"), "{code:?}");
+    }
+
+    #[test]
+    fn masks_raw_strings_with_hashes() {
+        let src = "let r = r#\"panic! \"quoted\" .expect(\"#; done();";
+        let code = code_of(src);
+        assert!(!code.contains("panic!"), "{code:?}");
+        assert!(!code.contains(".expect("), "{code:?}");
+        assert!(code.contains("done();"), "{code:?}");
+    }
+
+    #[test]
+    fn masks_byte_and_raw_byte_strings() {
+        let src = "let a = b\".unwrap()\"; let c = br#\"todo!\"#; ok();";
+        let code = code_of(src);
+        assert!(!code.contains(".unwrap()"));
+        assert!(!code.contains("todo!"));
+        assert!(code.contains("ok();"));
+    }
+
+    #[test]
+    fn identifier_ending_in_r_is_not_a_raw_string() {
+        let src = "let var = 1; let x = var\n    + 1;";
+        let code = code_of(src);
+        assert_eq!(code, src);
+    }
+
+    #[test]
+    fn char_literals_masked_but_lifetimes_kept() {
+        let src = "fn f<'a>(x: &'a str) { let c = '\"'; let d = '\\n'; }";
+        let code = code_of(src);
+        assert!(code.contains("<'a>"), "{code:?}");
+        assert!(code.contains("&'a str"), "{code:?}");
+        // the quote chars inside the literals must not open strings
+        assert!(code.contains("let d = "), "{code:?}");
+        assert!(!code.contains('"'), "{code:?}");
+    }
+
+    #[test]
+    fn string_escapes_do_not_end_the_string() {
+        let src = "let s = \"a\\\" .unwrap() b\"; tail();";
+        let code = code_of(src);
+        assert!(!code.contains(".unwrap()"), "{code:?}");
+        assert!(code.contains("tail();"), "{code:?}");
+    }
+
+    #[test]
+    fn multibyte_chars_pad_to_equal_byte_length() {
+        let src = "// 𝒫 sockets → θ\nlet x = \"π\"; y();";
+        let (code, comment) = mask(src);
+        assert_eq!(code.len(), src.len());
+        assert_eq!(comment.len(), src.len());
+        assert!(code.contains("y();"));
+    }
+
+    #[test]
+    fn cfg_test_region_tracking() {
+        let src = "fn prod() {\n    x.unwrap();\n}\n\n#[cfg(test)]\n\
+                   mod tests {\n    fn t() {\n        y.unwrap();\n    }\n}\n\
+                   fn after() {}\n";
+        let lines = lex(src);
+        assert!(!lines[1].in_test, "prod body");
+        assert!(!lines[4].in_test, "the attribute line itself");
+        assert!(lines[5].in_test, "mod tests opener");
+        assert!(lines[7].in_test, "test body");
+        assert!(lines[9].in_test, "closing brace of the test mod");
+        assert!(!lines[10].in_test, "code after the test mod");
+    }
+
+    #[test]
+    fn braces_inside_strings_do_not_move_depth() {
+        let src = "#[cfg(test)]\nmod tests {\n    let s = \"}}}}\";\n    \
+                   z.unwrap();\n}\n";
+        let lines = lex(src);
+        assert!(lines[3].in_test, "stray braces in a string closed the mod");
+    }
+
+    #[test]
+    fn line_numbers_are_one_based_and_aligned() {
+        let src = "a\nb\nc";
+        let lines = lex(src);
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[0].number, 1);
+        assert_eq!(lines[2].number, 3);
+        assert_eq!(lines[2].code, "c");
+    }
+}

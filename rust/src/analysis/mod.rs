@@ -1,0 +1,95 @@
+//! fdlint — the project-invariant static analyzer.
+//!
+//! The correctness story of this repo rests on hand-maintained
+//! disciplines that ordinary `rustc`/clippy cannot see: failures on
+//! serving paths must be *routed* (`SResp::Err` / `NetResponse::Err` /
+//! dead-node marking) rather than panicking, bit-identity-pinned
+//! modules must iterate deterministically, the simulator must never
+//! read the wall clock, and the wire codec's encoder, decoder, and
+//! property-test corpus must cover every message variant in lockstep.
+//! fdlint pins those invariants with a lightweight, fully offline
+//! analyzer: a string/comment-aware lexer ([`lexer`]), per-line rules
+//! plus one cross-file consistency check ([`rules`]), and a
+//! suppress/baseline engine ([`engine`]) run as a CI gate by the
+//! `fdlint` binary and by `tests/fdlint.rs`.
+//!
+//! # Rules
+//!
+//! - **`no-unwrap-in-routed`** — `.unwrap()` / `.expect(` are forbidden
+//!   in `net/`, `rworker/`, `runtime/`, and `serve/`. These modules sit
+//!   on the serving path where the routed-error discipline applies: a
+//!   panic strands in-flight attends and poisons locks, whereas a
+//!   routed error keeps survivors serving (PR 3/5 behavior, and the
+//!   precondition for DéjàVu-style failover).
+//! - **`no-panic-in-worker-loop`** — `panic!` / `unreachable!` /
+//!   `todo!` are forbidden inside long-lived thread-loop bodies
+//!   (`run_loop`, `s_worker_loop`, `serve_connection`,
+//!   `serve_listener`). A panic there kills the thread, not the
+//!   request: the failure must flow through the loop's error channel.
+//! - **`no-raw-eprintln`** — `eprintln!` outside `obs/logging.rs` and
+//!   `bin/` bypasses the leveled `obs::log!` sink added in PR 6 and
+//!   corrupts benchmark stderr parsing.
+//! - **`deterministic-iteration`** — `HashMap` / `HashSet` are flagged
+//!   in the bit-identity-pinned modules `kvcache/`, `rworker/`, `net/`.
+//!   Random iteration order reaching scatter order, stats output, or
+//!   reduction order breaks the repo's bit-identity pins; use
+//!   `BTreeMap` / sorted keys, or justify membership-only usage with
+//!   an allow.
+//! - **`wall-clock-in-sim`** — `Instant::now` / `SystemTime` are
+//!   forbidden in `coordinator/sim.rs` and `perfmodel/`: the simulator
+//!   and the §5 performance model are virtual-clock-pure and must stay
+//!   reproducible.
+//! - **`unsafe-needs-safety-comment`** — every `unsafe` must have a
+//!   `// SAFETY:` comment within the five lines above it stating the
+//!   invariant that makes it sound. Applies in test code too.
+//! - **`codec-exhaustive`** — cross-file check that every
+//!   `NetRequest` / `NetResponse` variant appears in
+//!   `encode_request`/`encode_response`, in the decoder tag matches,
+//!   and in the codec test corpus, and that the wire enums stay a
+//!   mirror of the in-process `RRequest`/`RResponse` (minus the
+//!   transport-only variants). This is the exact hazard PR 7's
+//!   `ForkSeq` addition skated past by hand.
+//! - **`malformed-suppression`** — a directive that matches the allow
+//!   trigger but names an unknown rule or omits the reason is itself a
+//!   violation. Suppressions fail open: a broken allow can never
+//!   silently hide a finding.
+//!
+//! # Suppressing a finding
+//!
+//! Add a line comment on the offending line (or the line directly
+//! above) naming the rule and a non-empty justification, e.g.:
+//!
+//! ```text
+//! // fdlint: allow(deterministic-iteration): membership-only HashSet, order never observed
+//! set.insert(id);
+//! ```
+//!
+//! The rule name must be one of the rules above and the `: reason`
+//! tail is mandatory — anything else is reported as
+//! `malformed-suppression`.
+//!
+//! # The baseline ratchet
+//!
+//! `rust/fdlint.baseline` grandfathers pre-existing violations as
+//! `rule path count` lines. The gate fails when a (rule, file) count
+//! rises above its baseline **or** falls below it without the baseline
+//! being updated — improvements must be locked in by ratcheting the
+//! file down:
+//!
+//! ```text
+//! cargo run --release --bin fdlint            # the CI gate
+//! cargo run --release --bin fdlint -- --update-baseline
+//! ```
+//!
+//! The analyzer runs over its own sources like any other module.
+
+pub mod engine;
+pub mod lexer;
+pub mod rules;
+
+pub use engine::{
+    analyze, baseline_of, collect_sources, compare, format_baseline,
+    parse_baseline, Analysis, Baseline,
+};
+pub use lexer::{lex, Line};
+pub use rules::Violation;

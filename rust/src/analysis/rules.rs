@@ -1,0 +1,643 @@
+//! The fdlint rules: per-line pattern rules driven by the masked code
+//! channel, plus the cross-file codec-exhaustive consistency check.
+//! See `analysis` module docs for the catalogue with rationale.
+
+use std::collections::BTreeMap;
+
+use super::lexer::{mask_code, Line};
+
+/// `.unwrap()` / `.expect(` are forbidden where the routed-error
+/// discipline applies (`net/`, `rworker/`, `runtime/`, `serve/`).
+pub const NO_UNWRAP_IN_ROUTED: &str = "no-unwrap-in-routed";
+/// `panic!` / `unreachable!` / `todo!` forbidden inside thread loop
+/// bodies (`run_loop`, `s_worker_loop`, `serve_connection`,
+/// `serve_listener`).
+pub const NO_PANIC_IN_WORKER_LOOP: &str = "no-panic-in-worker-loop";
+/// Raw `eprintln!` outside `obs/logging.rs` and `bin/` — use
+/// `obs::log!` so output is leveled and capturable.
+pub const NO_RAW_EPRINTLN: &str = "no-raw-eprintln";
+/// `HashMap` / `HashSet` in bit-identity-pinned modules (`kvcache/`,
+/// `rworker/`, `net/`) — iteration order must be deterministic.
+pub const DETERMINISTIC_ITERATION: &str = "deterministic-iteration";
+/// `Instant::now` / `SystemTime` in the virtual-clock sim
+/// (`coordinator/sim.rs`, `perfmodel/`).
+pub const WALL_CLOCK_IN_SIM: &str = "wall-clock-in-sim";
+/// Every `unsafe` needs a `// SAFETY:` comment on or just above it.
+pub const UNSAFE_NEEDS_SAFETY_COMMENT: &str = "unsafe-needs-safety-comment";
+/// Every `NetRequest`/`NetResponse` variant must appear in the encoder,
+/// the decoder and the codec test corpus; `RRequest`/`RResponse` must
+/// mirror them.
+pub const CODEC_EXHAUSTIVE: &str = "codec-exhaustive";
+/// An `fdlint: allow` directive that does not parse (unknown rule,
+/// missing reason) is itself a violation — never a silent no-op.
+pub const MALFORMED_SUPPRESSION: &str = "malformed-suppression";
+
+/// Every active rule name (what allow directives and baselines may
+/// reference).
+pub const RULES: &[&str] = &[
+    NO_UNWRAP_IN_ROUTED,
+    NO_PANIC_IN_WORKER_LOOP,
+    NO_RAW_EPRINTLN,
+    DETERMINISTIC_ITERATION,
+    WALL_CLOCK_IN_SIM,
+    UNSAFE_NEEDS_SAFETY_COMMENT,
+    CODEC_EXHAUSTIVE,
+    MALFORMED_SUPPRESSION,
+];
+
+/// One finding, anchored at a line of a file (line 0 = file level).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+const ROUTED_DIRS: &[&str] = &["net/", "rworker/", "runtime/", "serve/"];
+const PINNED_DIRS: &[&str] = &["kvcache/", "rworker/", "net/"];
+const WORKER_LOOP_FNS: &[&str] =
+    &["run_loop", "s_worker_loop", "serve_connection", "serve_listener"];
+const PANIC_TOKENS: &[&str] = &["panic!", "unreachable!", "todo!"];
+
+fn in_dirs(path: &str, dirs: &[&str]) -> bool {
+    dirs.iter().any(|d| path.starts_with(d))
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Substring search with identifier-boundary checks at whichever ends
+/// of `token` are identifier characters (so `unsafe` does not match
+/// inside `UnwindSafe`, but `.unwrap()` matches after any receiver).
+fn has_token(code: &str, token: &str) -> bool {
+    token_pos(code, token).is_some()
+}
+
+/// Like [`has_token`] but returns the byte offset of the first match.
+fn token_pos(code: &str, token: &str) -> Option<usize> {
+    let bytes = code.as_bytes();
+    let head_is_ident = token.starts_with(|c: char| c.is_alphanumeric() || c == '_');
+    let tail_is_ident = token.ends_with(|c: char| c.is_alphanumeric() || c == '_');
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(token) {
+        let at = start + pos;
+        let end = at + token.len();
+        let before_ok = !head_is_ident || at == 0 || !is_ident_byte(bytes[at - 1]);
+        let after_ok =
+            !tail_is_ident || end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if before_ok && after_ok {
+            return Some(at);
+        }
+        start = at + 1;
+    }
+    None
+}
+
+/// 1-based line number of byte offset `pos` in `text`.
+fn line_of(text: &str, pos: usize) -> usize {
+    text.as_bytes()[..pos].iter().filter(|&&b| b == b'\n').count() + 1
+}
+
+/// Byte span of the brace block following `from`: `(open + 1, close)`,
+/// i.e. the content between the braces.
+fn block_after(code: &str, from: usize) -> Option<(usize, usize)> {
+    let open = from + code[from..].find('{')?;
+    let mut depth = 0usize;
+    for (off, c) in code[open..].char_indices() {
+        match c {
+            '{' => depth += 1,
+            '}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some((open + 1, open + off));
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Byte span of the body of `fn <name>` in masked code.
+pub(crate) fn fn_body_span(code: &str, name: &str) -> Option<(usize, usize)> {
+    let pos = token_pos(code, &format!("fn {name}"))?;
+    block_after(code, pos)
+}
+
+/// Line ranges (inclusive) of the worker-loop function bodies present
+/// in this file.
+fn worker_loop_ranges(code: &str) -> Vec<(usize, usize)> {
+    let mut ranges = Vec::new();
+    for name in WORKER_LOOP_FNS {
+        if let Some((a, b)) = fn_body_span(code, name) {
+            ranges.push((line_of(code, a), line_of(code, b)));
+        }
+    }
+    ranges
+}
+
+/// True when any of lines `number-5 ..= number` carries a `SAFETY:`
+/// marker in its comment channel.
+fn has_safety_comment(lines: &[Line], number: usize) -> bool {
+    let lo = number.saturating_sub(6); // 0-based index of number-5
+    lines[lo..number]
+        .iter()
+        .any(|l| l.comment.contains("SAFETY:"))
+}
+
+/// Run every per-file rule over one lexed file.
+pub fn check_file(path: &str, lines: &[Line], out: &mut Vec<Violation>) {
+    let routed = in_dirs(path, ROUTED_DIRS);
+    let pinned = in_dirs(path, PINNED_DIRS);
+    let sim = path == "coordinator/sim.rs" || path.starts_with("perfmodel/");
+    let eprintln_exempt =
+        path.starts_with("bin/") || path == "obs/logging.rs";
+    let joined: String = lines
+        .iter()
+        .map(|l| l.code.as_str())
+        .collect::<Vec<_>>()
+        .join("\n");
+    let loop_ranges = worker_loop_ranges(&joined);
+    let mut push = |rule: &'static str, line: usize, message: String| {
+        out.push(Violation {
+            rule,
+            file: path.to_string(),
+            line,
+            message,
+        });
+    };
+    for line in lines {
+        // unsafe discipline applies everywhere, test code included
+        if has_token(&line.code, "unsafe")
+            && !has_safety_comment(lines, line.number)
+        {
+            push(
+                UNSAFE_NEEDS_SAFETY_COMMENT,
+                line.number,
+                "`unsafe` without a `// SAFETY:` comment on or just above it"
+                    .to_string(),
+            );
+        }
+        if line.in_test {
+            continue;
+        }
+        if routed
+            && (has_token(&line.code, ".unwrap()")
+                || has_token(&line.code, ".expect("))
+        {
+            push(
+                NO_UNWRAP_IN_ROUTED,
+                line.number,
+                "unwrap/expect in a routed-error module — surface failures \
+                 as Result (NetResponse::Err / dead-node paths) instead"
+                    .to_string(),
+            );
+        }
+        if pinned
+            && (has_token(&line.code, "HashMap")
+                || has_token(&line.code, "HashSet"))
+        {
+            push(
+                DETERMINISTIC_ITERATION,
+                line.number,
+                "HashMap/HashSet in a bit-identity-pinned module — use \
+                 BTreeMap/BTreeSet (or justify with an allow: never \
+                 iterated, or iteration is order-independent)"
+                    .to_string(),
+            );
+        }
+        if sim
+            && (has_token(&line.code, "Instant::now")
+                || has_token(&line.code, "SystemTime"))
+        {
+            push(
+                WALL_CLOCK_IN_SIM,
+                line.number,
+                "wall-clock read inside the virtual-clock sim — derive \
+                 time from the simulated clock"
+                    .to_string(),
+            );
+        }
+        if !eprintln_exempt && has_token(&line.code, "eprintln!") {
+            push(
+                NO_RAW_EPRINTLN,
+                line.number,
+                "raw eprintln! — use obs::log! so output is leveled"
+                    .to_string(),
+            );
+        }
+        if loop_ranges
+            .iter()
+            .any(|&(a, b)| a <= line.number && line.number <= b)
+        {
+            for tok in PANIC_TOKENS {
+                if has_token(&line.code, tok) {
+                    push(
+                        NO_PANIC_IN_WORKER_LOOP,
+                        line.number,
+                        format!(
+                            "{tok} inside a worker loop body — a dead loop \
+                             strands its channel peers; route the error"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+const CODEC_PATH: &str = "net/codec.rs";
+const WORKER_PATH: &str = "rworker/worker.rs";
+
+/// Variant names of `enum <name>` in masked code: blank every nested
+/// `()`/`{}`/`[]` group inside the enum body, then the first identifier
+/// of each comma piece is a variant.
+fn enum_variants(code: &str, name: &str) -> Option<Vec<String>> {
+    let pos = token_pos(code, &format!("enum {name}"))?;
+    let (a, b) = block_after(code, pos)?;
+    let mut top = String::new();
+    let mut depth = 0usize;
+    for c in code[a..b].chars() {
+        match c {
+            '{' | '(' | '[' => {
+                depth += 1;
+                top.push(' ');
+            }
+            '}' | ')' | ']' => {
+                depth = depth.saturating_sub(1);
+                top.push(' ');
+            }
+            _ if depth > 0 => top.push(' '),
+            _ => top.push(c),
+        }
+    }
+    let mut vars = Vec::new();
+    for piece in top.split(',') {
+        let ident: String = piece
+            .chars()
+            .skip_while(|c| !(c.is_alphanumeric() || *c == '_'))
+            .take_while(|c| c.is_alphanumeric() || *c == '_')
+            .collect();
+        if !ident.is_empty() {
+            vars.push(ident);
+        }
+    }
+    Some(vars)
+}
+
+/// The cross-file codec-exhaustive check (see [`CODEC_EXHAUSTIVE`]).
+/// Skipped silently when `net/codec.rs` is absent from the tree (unit
+/// tests analyze synthetic trees); the integration gate always hands it
+/// the real sources.
+pub fn check_codec(files: &BTreeMap<String, String>, out: &mut Vec<Violation>) {
+    let Some(codec_src) = files.get(CODEC_PATH) else {
+        return;
+    };
+    let codec = mask_code(codec_src);
+    let mut anchored = |line: usize, message: String| {
+        out.push(Violation {
+            rule: CODEC_EXHAUSTIVE,
+            file: CODEC_PATH.to_string(),
+            line,
+            message,
+        });
+    };
+    let tests_span =
+        token_pos(&codec, "mod tests").and_then(|p| block_after(&codec, p));
+    let mut wire_variants: BTreeMap<&str, Vec<String>> = BTreeMap::new();
+    for (enum_name, enc_fn, dec_fn) in [
+        ("NetRequest", "encode_request", "decode_request"),
+        ("NetResponse", "encode_response", "decode_response"),
+    ] {
+        let Some(vars) = enum_variants(&codec, enum_name) else {
+            anchored(0, format!("enum {enum_name} not found in {CODEC_PATH}"));
+            continue;
+        };
+        let enum_line = token_pos(&codec, &format!("enum {enum_name}"))
+            .map(|p| line_of(&codec, p))
+            .unwrap_or(0);
+        for (fn_name, span) in [
+            (enc_fn, fn_body_span(&codec, enc_fn)),
+            (dec_fn, fn_body_span(&codec, dec_fn)),
+        ] {
+            let Some((a, b)) = span else {
+                anchored(0, format!("fn {fn_name} not found in {CODEC_PATH}"));
+                continue;
+            };
+            for v in &vars {
+                let qualified = format!("{enum_name}::{v}");
+                if !has_token(&codec[a..b], &qualified) {
+                    anchored(
+                        enum_line,
+                        format!(
+                            "variant {qualified} is not handled in {fn_name} \
+                             — encoder/decoder drifted from the enum"
+                        ),
+                    );
+                }
+            }
+        }
+        match tests_span {
+            Some((a, b)) => {
+                for v in &vars {
+                    let qualified = format!("{enum_name}::{v}");
+                    if !has_token(&codec[a..b], &qualified) {
+                        anchored(
+                            enum_line,
+                            format!(
+                                "variant {qualified} never appears in the \
+                                 codec test corpus (mod tests) — round-trip \
+                                 coverage drifted from the enum"
+                            ),
+                        );
+                    }
+                }
+            }
+            None => anchored(0, format!("mod tests not found in {CODEC_PATH}")),
+        }
+        wire_variants.insert(enum_name, vars);
+    }
+    // Mirror check: the in-process protocol (RRequest/RResponse) and
+    // the wire protocol must stay in lockstep. Configure is wire-only
+    // (connection setup); Err is wire-only (in-proc failures are routed
+    // through the channel itself).
+    let Some(worker_src) = files.get(WORKER_PATH) else {
+        return;
+    };
+    let worker = mask_code(worker_src);
+    for (local, wire, wire_only) in [
+        ("RRequest", "NetRequest", "Configure"),
+        ("RResponse", "NetResponse", "Err"),
+    ] {
+        let Some(wire_vars) = wire_variants.get(wire) else {
+            continue;
+        };
+        let Some(local_vars) = enum_variants(&worker, local) else {
+            out.push(Violation {
+                rule: CODEC_EXHAUSTIVE,
+                file: WORKER_PATH.to_string(),
+                line: 0,
+                message: format!("enum {local} not found in {WORKER_PATH}"),
+            });
+            continue;
+        };
+        let local_line = token_pos(&worker, &format!("enum {local}"))
+            .map(|p| line_of(&worker, p))
+            .unwrap_or(0);
+        for v in &local_vars {
+            if !wire_vars.iter().any(|w| w == v) {
+                out.push(Violation {
+                    rule: CODEC_EXHAUSTIVE,
+                    file: WORKER_PATH.to_string(),
+                    line: local_line,
+                    message: format!(
+                        "{local}::{v} has no {wire} counterpart — the wire \
+                         protocol cannot express it"
+                    ),
+                });
+            }
+        }
+        for v in wire_vars {
+            if v.as_str() != wire_only && !local_vars.iter().any(|l| l == v) {
+                out.push(Violation {
+                    rule: CODEC_EXHAUSTIVE,
+                    file: WORKER_PATH.to_string(),
+                    line: local_line,
+                    message: format!(
+                        "{wire}::{v} has no {local} counterpart — rnode \
+                         cannot serve it in-process"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    fn violations(path: &str, src: &str) -> Vec<Violation> {
+        let mut out = Vec::new();
+        check_file(path, &lex(src), &mut out);
+        out
+    }
+
+    fn count(hits: &[Violation], rule: &str) -> usize {
+        hits.iter().filter(|v| v.rule == rule).count()
+    }
+
+    #[test]
+    fn unwrap_flagged_in_routed_dirs_only() {
+        let src = "fn f() {\n    x.unwrap();\n    y.expect(\"z\");\n}\n";
+        let hits = violations("net/a.rs", src);
+        assert_eq!(count(&hits, NO_UNWRAP_IN_ROUTED), 2, "{hits:?}");
+        assert_eq!(hits[0].line, 2);
+        let outside = violations("util/a.rs", src);
+        assert_eq!(count(&outside, NO_UNWRAP_IN_ROUTED), 0, "{outside:?}");
+    }
+
+    #[test]
+    fn unwrap_in_test_mod_is_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t() {\n        \
+                   x.unwrap();\n    }\n}\n";
+        assert!(violations("net/a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unwrap_inside_string_never_fires() {
+        let src = "fn f() {\n    let s = \"x.unwrap() y.expect(\";\n}\n";
+        assert!(violations("net/a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn panic_only_flagged_in_worker_loop_bodies() {
+        let src = "fn run_loop() {\n    panic!(\"boom\");\n}\n\
+                   fn other() {\n    panic!(\"fine\");\n}\n";
+        let hits = violations("rworker/a.rs", src);
+        assert_eq!(count(&hits, NO_PANIC_IN_WORKER_LOOP), 1, "{hits:?}");
+        let hit = hits
+            .iter()
+            .find(|v| v.rule == NO_PANIC_IN_WORKER_LOOP)
+            .unwrap();
+        assert_eq!(hit.line, 2);
+    }
+
+    #[test]
+    fn unreachable_and_todo_flagged_in_loops() {
+        let src =
+            "fn serve_connection() {\n    unreachable!();\n    todo!();\n}\n";
+        let hits = violations("net/r.rs", src);
+        assert_eq!(count(&hits, NO_PANIC_IN_WORKER_LOOP), 2, "{hits:?}");
+    }
+
+    #[test]
+    fn eprintln_exemptions() {
+        let src = "fn f() {\n    eprintln!(\"x\");\n}\n";
+        assert_eq!(count(&violations("serve/a.rs", src), NO_RAW_EPRINTLN), 1);
+        assert_eq!(count(&violations("bin/tool.rs", src), NO_RAW_EPRINTLN), 0);
+        assert_eq!(
+            count(&violations("obs/logging.rs", src), NO_RAW_EPRINTLN),
+            0
+        );
+    }
+
+    #[test]
+    fn hash_collections_flagged_in_pinned_dirs() {
+        let src = "use std::collections::HashMap;\nfn f() {\n    \
+                   let s: HashSet<u8> = HashSet::new();\n}\n";
+        let hits = violations("kvcache/a.rs", src);
+        assert_eq!(count(&hits, DETERMINISTIC_ITERATION), 2, "{hits:?}");
+        let outside = violations("serve/a.rs", src);
+        assert_eq!(count(&outside, DETERMINISTIC_ITERATION), 0, "{outside:?}");
+    }
+
+    #[test]
+    fn wall_clock_flagged_in_sim_paths_only() {
+        let src = "fn f() {\n    let t = Instant::now();\n    \
+                   let s = SystemTime::now();\n}\n";
+        assert_eq!(
+            count(&violations("coordinator/sim.rs", src), WALL_CLOCK_IN_SIM),
+            2
+        );
+        assert_eq!(
+            count(&violations("perfmodel/planner.rs", src), WALL_CLOCK_IN_SIM),
+            2
+        );
+        assert_eq!(
+            count(&violations("coordinator/real.rs", src), WALL_CLOCK_IN_SIM),
+            0
+        );
+    }
+
+    #[test]
+    fn unsafe_needs_a_safety_comment() {
+        let bad = "fn f() {\n    unsafe { g() }\n}\n";
+        assert_eq!(
+            count(&violations("util/a.rs", bad), UNSAFE_NEEDS_SAFETY_COMMENT),
+            1
+        );
+        let good = "fn f() {\n    // SAFETY: g has no preconditions\n    \
+                    unsafe { g() }\n}\n";
+        assert!(violations("util/a.rs", good).is_empty());
+        // the word in a comment or a string is not unsafe code, and an
+        // identifier merely containing it is not the keyword
+        let masked = "fn f() {\n    // unsafe is discussed here\n    \
+                      let s = \"unsafe\";\n    let unsafety = 1;\n}\n";
+        assert!(violations("util/a.rs", masked).is_empty());
+    }
+
+    fn real_tree() -> BTreeMap<String, String> {
+        let mut files = BTreeMap::new();
+        files.insert(
+            CODEC_PATH.to_string(),
+            include_str!("../net/codec.rs").to_string(),
+        );
+        files.insert(
+            WORKER_PATH.to_string(),
+            include_str!("../rworker/worker.rs").to_string(),
+        );
+        files
+    }
+
+    #[test]
+    fn real_codec_is_exhaustive() {
+        let mut out = Vec::new();
+        check_codec(&real_tree(), &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    /// The acceptance-criteria test: surgically remove one variant's
+    /// decode arm from the real codec source (braces stay balanced;
+    /// the encoder and the test corpus still mention the variant) and
+    /// the codec-exhaustive rule must fail the build.
+    #[test]
+    fn removing_a_decode_arm_is_caught() {
+        let mut files = real_tree();
+        let src = files[CODEC_PATH].clone();
+        let code = mask_code(&src);
+        let (a, b) =
+            fn_body_span(&code, "decode_request").expect("decode_request");
+        let doctored = format!(
+            "{}{}{}",
+            &src[..a],
+            src[a..b].replace("NetRequest::ForkSeq", "NetRequest::Stats"),
+            &src[b..]
+        );
+        assert_ne!(doctored, src, "surgery must have changed the decoder");
+        files.insert(CODEC_PATH.to_string(), doctored);
+        let mut out = Vec::new();
+        check_codec(&files, &mut out);
+        assert!(
+            out.iter().any(|v| v.rule == CODEC_EXHAUSTIVE
+                && v.message.contains("NetRequest::ForkSeq")
+                && v.message.contains("decode_request")),
+            "{out:?}"
+        );
+    }
+
+    #[test]
+    fn dropping_a_variant_from_the_test_corpus_is_caught() {
+        let mut files = real_tree();
+        let src = files[CODEC_PATH].clone();
+        let code = mask_code(&src);
+        let (a, b) = token_pos(&code, "mod tests")
+            .and_then(|p| block_after(&code, p))
+            .expect("mod tests");
+        let doctored = format!(
+            "{}{}{}",
+            &src[..a],
+            src[a..b].replace("NetRequest::DropSeqs", "NetRequest::AddSeqs"),
+            &src[b..]
+        );
+        assert_ne!(doctored, src, "surgery must have changed the corpus");
+        files.insert(CODEC_PATH.to_string(), doctored);
+        let mut out = Vec::new();
+        check_codec(&files, &mut out);
+        assert!(
+            out.iter().any(|v| v.rule == CODEC_EXHAUSTIVE
+                && v.message.contains("NetRequest::DropSeqs")
+                && v.message.contains("test corpus")),
+            "{out:?}"
+        );
+    }
+
+    #[test]
+    fn wire_and_inproc_enums_must_mirror() {
+        let codec = "\
+pub enum NetRequest { Ping, Pong }\n\
+pub enum NetResponse { Ack, Err }\n\
+fn encode_request() { NetRequest::Ping; NetRequest::Pong; }\n\
+fn decode_request() { NetRequest::Ping; NetRequest::Pong; }\n\
+fn encode_response() { NetResponse::Ack; NetResponse::Err; }\n\
+fn decode_response() { NetResponse::Ack; NetResponse::Err; }\n\
+mod tests { fn t() { NetRequest::Ping; NetRequest::Pong; \
+NetResponse::Ack; NetResponse::Err; } }\n";
+        let mut files = BTreeMap::new();
+        files.insert(CODEC_PATH.to_string(), codec.to_string());
+        files.insert(
+            WORKER_PATH.to_string(),
+            "pub enum RRequest { Ping, Pong }\npub enum RResponse { Ack }\n"
+                .to_string(),
+        );
+        let mut out = Vec::new();
+        check_codec(&files, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+        // drop Pong from the in-proc protocol: the wire can say it but
+        // the node cannot serve it — a mirror violation
+        files.insert(
+            WORKER_PATH.to_string(),
+            "pub enum RRequest { Ping }\npub enum RResponse { Ack }\n"
+                .to_string(),
+        );
+        let mut out = Vec::new();
+        check_codec(&files, &mut out);
+        assert!(
+            out.iter().any(|v| v.message.contains("NetRequest::Pong")),
+            "{out:?}"
+        );
+    }
+}

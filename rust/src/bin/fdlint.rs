@@ -1,0 +1,133 @@
+//! CI gate binary for the fdlint project-invariant analyzer.
+//!
+//! ```text
+//! cargo run --release --bin fdlint                    # gate rust/src
+//! cargo run --release --bin fdlint -- --update-baseline
+//! cargo run --release --bin fdlint -- --root path/src --baseline path/b
+//! ```
+//!
+//! Exit codes: 0 clean, 1 gate failure, 2 usage/IO error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use fastdecode::analysis::{
+    analyze, baseline_of, collect_sources, compare, format_baseline,
+    parse_baseline, Baseline,
+};
+
+const USAGE: &str = "usage: fdlint [--root <dir>] [--baseline <file>] \
+                     [--update-baseline]";
+
+struct Args {
+    root: PathBuf,
+    baseline: PathBuf,
+    update: bool,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut args = Args {
+        root: PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/src")),
+        baseline: PathBuf::from(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/fdlint.baseline"
+        )),
+        update: false,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--root" => {
+                let v = it.next().ok_or("--root needs a value")?;
+                args.root = PathBuf::from(v);
+            }
+            "--baseline" => {
+                let v = it.next().ok_or("--baseline needs a value")?;
+                args.baseline = PathBuf::from(v);
+            }
+            "--update-baseline" => args.update = true,
+            "-h" | "--help" => return Err(USAGE.to_string()),
+            other => return Err(format!("unknown argument {other:?}\n{USAGE}")),
+        }
+    }
+    Ok(args)
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let files = match collect_sources(&args.root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("fdlint: failed to collect sources: {e:#}");
+            return ExitCode::from(2);
+        }
+    };
+    let analysis = analyze(&files);
+    let current = baseline_of(&analysis.violations);
+
+    if args.update {
+        let text = format_baseline(&current);
+        if let Err(e) = std::fs::write(&args.baseline, text) {
+            eprintln!(
+                "fdlint: failed to write {}: {e}",
+                args.baseline.display()
+            );
+            return ExitCode::from(2);
+        }
+        println!(
+            "fdlint: baseline rewritten with {} grandfathered violation(s) \
+             across {} (rule, file) entries",
+            analysis.violations.len(),
+            current.len()
+        );
+        return ExitCode::SUCCESS;
+    }
+
+    let grandfathered: Baseline = match std::fs::read_to_string(&args.baseline)
+    {
+        Ok(text) => match parse_baseline(&text) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!(
+                    "fdlint: bad baseline {}: {e:#}",
+                    args.baseline.display()
+                );
+                return ExitCode::from(2);
+            }
+        },
+        // a missing baseline means nothing is grandfathered
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Baseline::new(),
+        Err(e) => {
+            eprintln!(
+                "fdlint: failed to read {}: {e}",
+                args.baseline.display()
+            );
+            return ExitCode::from(2);
+        }
+    };
+
+    let failures = compare(&current, &grandfathered, &analysis.violations);
+    if failures.is_empty() {
+        println!(
+            "fdlint: OK — {} file(s), {} suppressed by allow, {} \
+             grandfathered by baseline",
+            analysis.files,
+            analysis.allowed,
+            analysis.violations.len()
+        );
+        ExitCode::SUCCESS
+    } else {
+        for f in &failures {
+            eprintln!("fdlint: {f}");
+        }
+        eprintln!("fdlint: FAILED ({} finding(s))", failures.len());
+        ExitCode::FAILURE
+    }
+}

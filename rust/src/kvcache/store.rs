@@ -2,7 +2,7 @@
 //! reference/shadow implementation and as the payload of one block) and
 //! the paged per-socket cache (`BlockPool` + block tables + COW forks).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -483,7 +483,9 @@ pub struct SocketCache {
     pub block_size: usize,
     pub prec: Precision,
     pool: BlockPool,
-    seqs: HashMap<u64, Vec<SeqLayer>>,
+    /// BTreeMap so whole-cache walks (stats totals, future
+    /// save/migrate serialization) run in ascending seq-id order.
+    seqs: BTreeMap<u64, Vec<SeqLayer>>,
 }
 
 impl SocketCache {
@@ -503,7 +505,7 @@ impl SocketCache {
             block_size,
             prec,
             pool: BlockPool::new(n_heads, head_dim, block_size, prec),
-            seqs: HashMap::new(),
+            seqs: BTreeMap::new(),
         }
     }
 

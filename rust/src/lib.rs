@@ -17,6 +17,7 @@
 //! with a length-prefixed fp16/fp32 activation codec. See DESIGN.md
 //! for the system inventory and the per-experiment index.
 
+pub mod analysis;
 pub mod baselines;
 pub mod bench;
 pub mod coordinator;

@@ -35,6 +35,7 @@ fn main() {
         }
     };
     if let Err(e) = result {
+        // fdlint: allow(no-raw-eprintln): CLI error epilogue — the one place stderr IS the interface
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }

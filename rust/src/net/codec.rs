@@ -240,10 +240,12 @@ impl<'a> Cursor<'a> {
     }
 
     fn u32(&mut self) -> Result<u32> {
+        // fdlint: allow(no-unwrap-in-routed): take(4) guarantees a 4-byte slice, the try_into is infallible
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
     fn u64(&mut self) -> Result<u64> {
+        // fdlint: allow(no-unwrap-in-routed): take(8) guarantees an 8-byte slice, the try_into is infallible
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
@@ -298,6 +300,7 @@ fn get_f32_vec(c: &mut Cursor, mode: WireMode) -> Result<Vec<f32>> {
     Ok(match mode {
         WireMode::F32 => raw
             .chunks_exact(4)
+            // fdlint: allow(no-unwrap-in-routed): chunks_exact(4) yields 4-byte slices, the try_into is infallible
             .map(|b| f32::from_bits(u32::from_le_bytes(b.try_into().unwrap())))
             .collect(),
         WireMode::F16 => raw
@@ -307,6 +310,7 @@ fn get_f32_vec(c: &mut Cursor, mode: WireMode) -> Result<Vec<f32>> {
                 // (an upstream overflow), which `to_f32_finite` would
                 // mangle
                 f16_bits_to_f32_slow(u16::from_le_bytes(
+                    // fdlint: allow(no-unwrap-in-routed): chunks_exact(2) yields 2-byte slices, the try_into is infallible
                     b.try_into().unwrap(),
                 ))
             })

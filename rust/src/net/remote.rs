@@ -15,7 +15,8 @@
 //! (`NetResponse::Err`) is still alive and in sync: the error is
 //! routed up without marking the node dead.
 
-use std::collections::{HashMap, HashSet};
+// fdlint: allow(deterministic-iteration): HashSet here is membership-only (duplicate detection), never iterated
+use std::collections::{BTreeMap, HashSet};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context as _, Result};
@@ -61,7 +62,10 @@ struct Node {
 pub struct RemotePool {
     nodes: Vec<Node>,
     wire: WireMode,
-    placement: HashMap<u64, usize>,
+    /// BTreeMap, not HashMap: rollback on partial registration failure
+    /// and any future whole-map scatter walk this in key order, keeping
+    /// wire traffic deterministic across runs (bit-identity pins).
+    placement: BTreeMap<u64, usize>,
     next_node: usize,
     name: &'static str,
     /// Loopback server threads, joined on drop.
@@ -109,7 +113,7 @@ impl RemotePool {
         Ok(RemotePool {
             nodes,
             wire: cfg.wire,
-            placement: HashMap::new(),
+            placement: BTreeMap::new(),
             next_node: 0,
             name,
             servers: Vec::new(),
@@ -340,13 +344,15 @@ impl AttendBackend for RemotePool {
         if self.live_nodes() == 0 {
             bail!("no live nodes left in the remote pool");
         }
+        // fdlint: allow(deterministic-iteration): membership-only duplicate check, never iterated
         let mut seen = HashSet::with_capacity(seq_ids.len());
         let mut per_node: Vec<Vec<u64>> = vec![vec![]; self.nodes.len()];
         for &id in seq_ids {
-            assert!(
-                !self.placement.contains_key(&id) && seen.insert(id),
-                "sequence {id} already placed"
-            );
+            if self.placement.contains_key(&id) || !seen.insert(id) {
+                // caller bug, but panicking here would strand the pool:
+                // route it and leave every node untouched
+                bail!("sequence {id} already placed");
+            }
             // advance past dead nodes (live_nodes > 0 ⇒ terminates)
             while self.nodes[self.next_node].transport.is_none() {
                 self.next_node = (self.next_node + 1) % self.nodes.len();
@@ -418,10 +424,9 @@ impl AttendBackend for RemotePool {
             Some(&n) => n,
             None => bail!("sequence {parent} not placed"),
         };
-        assert!(
-            !self.placement.contains_key(&child),
-            "sequence {child} already placed"
-        );
+        if self.placement.contains_key(&child) {
+            bail!("sequence {child} already placed");
+        }
         self.rpc_ack(n, &NetRequest::ForkSeq { parent, child, upto })
             .context("forking sequence on remote node")?;
         self.placement.insert(child, n);
@@ -473,7 +478,7 @@ impl AttendBackend for RemotePool {
     }
 
     fn wait_attend(&mut self, pending: PendingAttend) -> Result<PoolStep> {
-        let mut outputs = HashMap::with_capacity(pending.n);
+        let mut outputs = BTreeMap::new();
         let mut max_busy = Duration::ZERO;
         let mut total_busy = Duration::ZERO;
         let mut socket_busy: Vec<(usize, Duration)> = Vec::new();
@@ -482,15 +487,24 @@ impl AttendBackend for RemotePool {
             match self.recv_from(n) {
                 Ok(NetResponse::Outputs { layer, outs, busy }) => {
                     if layer != pending.layer {
-                        // a crossed reply means the client waited out of
-                        // submission order — a programming error, same
-                        // discipline as the in-process pool
-                        panic!(
+                        // a crossed reply means this connection is desynced
+                        // from the request stream — the node's replies can
+                        // no longer be trusted, so it dies and the error is
+                        // routed (panicking here would strand every other
+                        // node's in-flight reply)
+                        let e = anyhow!(
                             "{} replied for layer {layer}, handle is for \
                              layer {}: attends gathered out of submission \
                              order",
-                            self.nodes[n].label, pending.layer
+                            self.nodes[n].label,
+                            pending.layer
                         );
+                        self.nodes[n].wire_stats.errors += 1;
+                        self.mark_dead(n, &e);
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                        continue;
                     }
                     max_busy = max_busy.max(busy);
                     total_busy += busy;
@@ -684,7 +698,7 @@ mod tests {
             let mut pool = RemotePool::loopback(cfg(WireMode::F32), 3).unwrap();
             pool.add_seqs(&ids).unwrap();
             let mut rng = Rng::new(42);
-            let mut last = HashMap::new();
+            let mut last = BTreeMap::new();
             for _ in 0..3 {
                 let tasks: Vec<SeqTask> =
                     ids.iter().map(|&i| mk_task(&mut rng, i, n)).collect();
@@ -704,7 +718,7 @@ mod tests {
             );
             pool.add_seqs(&ids).unwrap();
             let mut rng = Rng::new(42);
-            let mut last = HashMap::new();
+            let mut last = BTreeMap::new();
             for _ in 0..3 {
                 let tasks: Vec<SeqTask> =
                     ids.iter().map(|&i| mk_task(&mut rng, i, n)).collect();
@@ -865,5 +879,58 @@ mod tests {
                 assert!(s.transport.frames_recv >= 3, "{s:?}");
             }
         }
+    }
+
+    /// Placement iterates in ascending sequence-id order (BTreeMap):
+    /// whole-map walks (rollback, future migration scatters) see a
+    /// deterministic order, and gathered outputs come back keyed the
+    /// same way run to run — the deterministic-iteration discipline,
+    /// pinned.
+    #[test]
+    fn placement_and_outputs_iterate_in_seq_id_order() {
+        let mut pool = RemotePool::loopback(cfg(WireMode::F32), 2).unwrap();
+        // insertion order deliberately shuffled
+        pool.add_seqs(&[9, 2, 7, 1, 4]).unwrap();
+        let ids: Vec<u64> = pool.placement.keys().copied().collect();
+        assert_eq!(ids, vec![1, 2, 4, 7, 9], "placement walk not sorted");
+        // ...while round-robin still follows INSERTION order: 9,2 → 0,1
+        assert_eq!(pool.socket_of(9), Some(0));
+        assert_eq!(pool.socket_of(2), Some(1));
+        let mut rng = Rng::new(11);
+        let tasks: Vec<SeqTask> = [9u64, 2, 7, 1, 4]
+            .iter()
+            .map(|&i| mk_task(&mut rng, i, TINY.hidden))
+            .collect();
+        let step = pool.attend(0, tasks).unwrap();
+        let out_ids: Vec<u64> = step.outputs.keys().copied().collect();
+        assert_eq!(out_ids, vec![1, 2, 4, 7, 9], "outputs walk not sorted");
+    }
+
+    /// Double placement is a routed error (not a panic, PR 3/5
+    /// discipline) and leaves the pool fully usable.
+    #[test]
+    fn duplicate_placement_is_a_routed_error() {
+        let mut pool = RemotePool::loopback(cfg(WireMode::F32), 2).unwrap();
+        pool.add_seqs(&[1]).unwrap();
+        let err = pool.add_seqs(&[2, 1]).unwrap_err();
+        assert!(format!("{err:#}").contains("already placed"), "{err:#}");
+        assert_eq!(pool.socket_of(2), None, "failed batch must not place");
+        // an in-batch duplicate routes the same way
+        let err2 = pool.add_seqs(&[5, 5]).unwrap_err();
+        assert!(format!("{err2:#}").contains("already placed"), "{err2:#}");
+        assert_eq!(pool.live_nodes(), 2, "a local refusal kills no node");
+        // and the pool keeps placing and attending
+        pool.add_seqs(&[2]).unwrap();
+        let mut rng = Rng::new(1);
+        let step = pool
+            .attend(
+                0,
+                vec![
+                    mk_task(&mut rng, 1, TINY.hidden),
+                    mk_task(&mut rng, 2, TINY.hidden),
+                ],
+            )
+            .unwrap();
+        assert_eq!(step.outputs.len(), 2);
     }
 }

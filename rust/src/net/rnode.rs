@@ -153,6 +153,7 @@ fn attend(
         ));
     }
     let width = cache.n_heads * cache.head_dim;
+    // fdlint: allow(deterministic-iteration): membership-only duplicate check, never iterated
     let mut seen = std::collections::HashSet::with_capacity(tasks.len());
     for task in &tasks {
         if !cache.contains(task.seq_id) {

@@ -253,6 +253,7 @@ impl ThreadedPipeline {
         let handle = std::thread::Builder::new()
             .name("sworker".into())
             .spawn(move || s_worker_loop(sworker, pad, req_rx, resp_tx, s_track))
+            // fdlint: allow(no-unwrap-in-routed): thread spawn fails only on OS resource exhaustion, before any request is accepted
             .expect("spawning s-worker thread");
         ThreadedPipeline {
             req_tx,
@@ -791,6 +792,7 @@ fn s_worker_loop(
                     }
                 })()
                 .with_context(|| format!("advance of mini-batch {mb} at layer {layer}")),
+                // fdlint: allow(no-panic-in-worker-loop): both arms are consumed by the dispatch match above; this inner match sees Advance only
                 SReq::Poison { .. } | SReq::Shutdown => unreachable!(),
             }
         };

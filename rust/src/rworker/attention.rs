@@ -435,12 +435,14 @@ pub fn stream_bandwidth_probe(mb: usize) -> f64 {
     cache.add_seq(0);
     let mut val = vec![0.01f32; d];
     for _ in 0..tokens {
+        // fdlint: allow(no-unwrap-in-routed): offline calibration probe over a fresh cache, not a serving path
         cache.append(0, 0, &val, &val).expect("probe append");
     }
     let q = vec![0.5f32; d];
     let mut o = vec![0.0f32; d];
     let mut scratch = AttnScratch::new(d);
     // warm
+    // fdlint: allow(no-unwrap-in-routed): offline calibration probe, sequence 0 was just appended
     let kv = cache.get(0, 0).expect("probe view");
     attend_paged(&kv, &q, &mut o, &mut scratch);
     let start = std::time::Instant::now();

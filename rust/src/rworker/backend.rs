@@ -22,7 +22,7 @@
 //!   stay usable for sequences placed on its surviving sockets.
 
 use anyhow::Result;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 use crate::kvcache::CacheStats;
@@ -47,8 +47,9 @@ pub struct PendingAttend {
 /// Outputs of one pooled attend call.
 pub struct PoolStep {
     /// seq_id → attention output `[T*H*D]` (row-major over the task's
-    /// rows).
-    pub outputs: HashMap<u64, Vec<f32>>,
+    /// rows). BTreeMap so consumers that walk all outputs do so in
+    /// ascending seq-id order — deterministic across runs and backends.
+    pub outputs: BTreeMap<u64, Vec<f32>>,
     /// Max busy time across sockets (the pipeline-visible R latency).
     pub max_busy: Duration,
     /// Sum of busy times (for utilization accounting).

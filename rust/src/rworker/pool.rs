@@ -15,7 +15,7 @@
 //! mid-gather failure the surviving sockets are still drained so the
 //! pool stays reusable for the sequences they hold.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
@@ -55,7 +55,10 @@ impl Default for RPoolConfig {
 
 pub struct RPool {
     workers: Vec<RWorker>,
-    placement: HashMap<u64, usize>,
+    /// BTreeMap, not HashMap: whole-map walks see ascending seq ids, so
+    /// anything derived from placement order stays deterministic
+    /// (bit-identity pins).
+    placement: BTreeMap<u64, usize>,
     next_socket: usize,
     /// One trace track per socket (all disabled until `install_tracer`).
     tracks: Vec<Track>,
@@ -80,7 +83,7 @@ impl RPool {
             .collect();
         RPool {
             workers,
-            placement: HashMap::new(),
+            placement: BTreeMap::new(),
             next_socket: 0,
             tracks: Vec::new(),
         }
@@ -116,6 +119,7 @@ impl RPool {
     /// (best effort), so no sequence is ever locally "placed" on a
     /// socket that never registered it, and the pool stays usable.
     pub fn add_seqs(&mut self, seq_ids: &[u64]) -> Result<()> {
+        // fdlint: allow(deterministic-iteration): membership-only duplicate check, never iterated
         let mut seen = std::collections::HashSet::with_capacity(seq_ids.len());
         let mut per_socket: Vec<Vec<u64>> = vec![vec![]; self.workers.len()];
         for &id in seq_ids {
@@ -288,7 +292,7 @@ impl RPool {
     /// surfaces as an error AFTER the surviving sockets are drained, so
     /// the pool stays in sync for the next step.
     pub fn wait_attend(&mut self, pending: PendingAttend) -> Result<PoolStep> {
-        let mut outputs = HashMap::with_capacity(pending.n);
+        let mut outputs = BTreeMap::new();
         let mut max_busy = Duration::ZERO;
         let mut total_busy = Duration::ZERO;
         let mut socket_busy: Vec<(usize, Duration)> = Vec::new();
@@ -458,6 +462,36 @@ mod tests {
         assert_eq!(counts, [2, 2, 2]);
     }
 
+    /// The deterministic-iteration discipline, pinned: placement and
+    /// gathered outputs walk in ascending seq-id order (BTreeMap), while
+    /// round-robin assignment still follows insertion order.
+    #[test]
+    fn placement_and_outputs_iterate_in_seq_id_order() {
+        let mut pool = RPool::spawn(
+            &TINY,
+            RPoolConfig {
+                sockets: 2,
+                capacity_per_seq: 8,
+                precision: Precision::F32,
+                ..Default::default()
+            },
+        );
+        // insertion order deliberately shuffled
+        pool.add_seqs(&[9, 2, 7, 1, 4]).unwrap();
+        let ids: Vec<u64> = pool.placement.keys().copied().collect();
+        assert_eq!(ids, vec![1, 2, 4, 7, 9], "placement walk not sorted");
+        assert_eq!(pool.socket_of(9), Some(0), "round-robin order changed");
+        assert_eq!(pool.socket_of(2), Some(1), "round-robin order changed");
+        let mut rng = Rng::new(11);
+        let tasks: Vec<SeqTask> = [9u64, 2, 7, 1, 4]
+            .iter()
+            .map(|&i| mk_task(&mut rng, i, TINY.hidden))
+            .collect();
+        let step = pool.attend(0, tasks).unwrap();
+        let out_ids: Vec<u64> = step.outputs.keys().copied().collect();
+        assert_eq!(out_ids, vec![1, 2, 4, 7, 9], "outputs walk not sorted");
+    }
+
     #[test]
     fn scatter_gather_matches_single_socket() {
         // Same tasks through 1 socket and 3 sockets must agree exactly.
@@ -475,7 +509,7 @@ mod tests {
             let ids: Vec<u64> = (0..5).collect();
             pool.add_seqs(&ids).unwrap();
             let mut rng = Rng::new(42);
-            let mut last = HashMap::new();
+            let mut last = BTreeMap::new();
             for _ in 0..3 {
                 let tasks: Vec<SeqTask> =
                     ids.iter().map(|&i| mk_task(&mut rng, i, n)).collect();

@@ -110,6 +110,7 @@ impl RWorker {
                     attend_pad,
                 )
             })
+            // fdlint: allow(no-unwrap-in-routed): thread spawn fails only on OS resource exhaustion, before any request is accepted
             .expect("spawning rworker thread");
         RWorker {
             socket_id,
@@ -212,8 +213,8 @@ fn run_loop(
                     // in-process discipline: a bad request kills the
                     // worker (the pool surfaces the panic payload);
                     // rnode's TCP front validates and routes instead
-                    let len =
-                        cache.seq_len(task.seq_id, layer).unwrap();
+                    // fdlint: allow(no-unwrap-in-routed): in-process discipline — the panic payload becomes the pool's routed error (see module docs)
+                    let len = cache.seq_len(task.seq_id, layer).unwrap();
                     assert!(
                         !task.q.is_empty()
                             && task.q.len() % width == 0
@@ -247,8 +248,10 @@ fn run_loop(
                                 &task.k_new[s.clone()],
                                 &task.v_new[s.clone()],
                             )
+                            // fdlint: allow(no-unwrap-in-routed): in-process discipline — panic payload becomes the pool's routed error
                             .unwrap();
                         attend_paged(
+                            // fdlint: allow(no-unwrap-in-routed): same in-process discipline as the append above
                             &cache.get(task.seq_id, layer).unwrap(),
                             &task.q[s.clone()],
                             &mut o[s.clone()],
@@ -269,6 +272,7 @@ fn run_loop(
                 }
             }
             RRequest::ForkSeq { parent, child, upto } => {
+                // fdlint: allow(no-unwrap-in-routed): in-process discipline — panic payload becomes the pool's routed error
                 cache.fork_seq(parent, child, upto).unwrap();
                 let _ = tx.send(RResponse::Ack);
             }

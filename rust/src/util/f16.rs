@@ -102,7 +102,11 @@ impl F16 {
     pub fn to_f32(self) -> f32 {
         // LUT path: one L2-resident load. Exact for every bit pattern
         // (incl. inf/nan); used off the vectorized hot loop.
-        unsafe { *decode_lut().get_unchecked(self.0 as usize) }
+        let lut = decode_lut();
+        debug_assert!((self.0 as usize) < lut.len());
+        // SAFETY: the LUT spans every u16 bit pattern (0..=u16::MAX,
+        // 65536 entries), so indexing with any u16 is in bounds.
+        unsafe { *lut.get_unchecked(self.0 as usize) }
     }
 
     /// Branchless decode for FINITE values — shift the exponent+mantissa

@@ -1,0 +1,34 @@
+//! The fdlint gate as a tier-1 test: `cargo test` fails on any
+//! above-baseline violation of the project invariants, exactly as the
+//! `fdlint` binary does in CI. This is what makes the codec-exhaustive
+//! check (and every other rule) part of the build: deleting a codec
+//! decode arm turns this test — and therefore the build — red.
+
+use std::path::Path;
+
+use fastdecode::analysis::{
+    analyze, baseline_of, collect_sources, compare, parse_baseline,
+};
+
+#[test]
+fn sources_have_no_above_baseline_violations() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let files = collect_sources(&manifest.join("src"))
+        .expect("collecting rust/src sources");
+    assert!(files.len() > 50, "source walk found only {}", files.len());
+    let analysis = analyze(&files);
+    let baseline_text = std::fs::read_to_string(manifest.join("fdlint.baseline"))
+        .expect("reading fdlint.baseline");
+    let grandfathered =
+        parse_baseline(&baseline_text).expect("parsing fdlint.baseline");
+    let failures = compare(
+        &baseline_of(&analysis.violations),
+        &grandfathered,
+        &analysis.violations,
+    );
+    assert!(
+        failures.is_empty(),
+        "fdlint gate failed:\n{}",
+        failures.join("\n")
+    );
+}
