@@ -27,6 +27,7 @@ use fastdecode::coordinator::sim::steady_throughput;
 use fastdecode::coordinator::{Coordinator, SimConfig};
 use fastdecode::kvcache::SeqKv;
 use fastdecode::model::{ModelSpec, Precision, LLAMA_13B, LLAMA_7B, OPT_175B, TINY};
+use fastdecode::obs::{NetStats, Tracer};
 use fastdecode::perfmodel::{CpuModel, GpuModel, A10, EPYC_7452};
 use fastdecode::rworker::{attend_one, AttnScratch};
 use fastdecode::util::json::Json;
@@ -88,6 +89,12 @@ fn spawn_rnode() -> RnodeProcess {
 /// largest run's trace becomes the `BENCH_fig13_tcp.json` snapshot.
 fn fig13_tcp(max_nodes: usize) {
     let (batch, steps) = (16usize, 32usize);
+    // FASTDECODE_TRACE=1 turns the sweep into a traced run: the rnodes
+    // record server-side spans (Configure's `trace` flag), and after
+    // each run the coordinator fetches + clock-aligns them into one
+    // Chrome trace (the largest run's trace survives as
+    // TRACE_fig13_tcp.json, one track per node).
+    let traced = Tracer::from_env().is_enabled();
     let mut t = Table::new(
         "Fig 13 (--tcp, tiny, B=16): throughput vs rnode processes (f16 wire)",
         &["nodes", "tok/s", "speedup"],
@@ -95,6 +102,7 @@ fn fig13_tcp(max_nodes: usize) {
     let mut base = 0.0;
     let mut js = Vec::new();
     let mut last: Option<(usize, fastdecode::metrics::StepTrace)> = None;
+    let mut last_stats: Vec<NetStats> = Vec::new();
     let counts: Vec<usize> = [1usize, 2, 4]
         .into_iter()
         .filter(|&p| p <= max_nodes.max(1))
@@ -111,7 +119,8 @@ fn fig13_tcp(max_nodes: usize) {
                 8,
                 Precision::F16,
                 WireMode::F16,
-            ),
+            )
+            .with_trace(traced),
         )
         .expect("connecting rnodes");
         let mut fd = FastDecode::with_backend(
@@ -141,6 +150,20 @@ fn fig13_tcp(max_nodes: usize) {
             format!("{:.2}x", tp / base),
         ]);
         js.push(Json::obj().set("nodes", p).set("tok_per_s", tp));
+        last_stats = fd.net_stats();
+        if traced {
+            let merged =
+                fd.merge_remote_traces().expect("fetching remote traces");
+            let path =
+                fastdecode::artifacts_dir().join("TRACE_fig13_tcp.json");
+            fd.tracer()
+                .write_chrome_trace(&path)
+                .expect("writing chrome trace");
+            println!(
+                "trace: {} ({merged} remote spans from {p} nodes)",
+                path.display()
+            );
+        }
         last = Some((p, trace));
         drop(fd); // disconnects before the rnode processes are killed
     }
@@ -158,7 +181,17 @@ fn fig13_tcp(max_nodes: usize) {
                 .set("wire", "f16"),
             &trace,
         )
-        .with_extra(Json::Arr(js));
+        // sweep points plus the largest run's measured per-node
+        // profiles (EWMA tok/s, bytes/s, service percentiles) — the
+        // planner's from_measured_profiles input, archived per commit
+        .with_extra(
+            Json::obj().set("sweep", Json::Arr(js)).set(
+                "nodes",
+                Json::Arr(
+                    last_stats.iter().map(NetStats::to_json).collect(),
+                ),
+            ),
+        );
         let path = snap.write().expect("writing BENCH_fig13_tcp.json");
         println!("snapshot: {}", path.display());
     }

@@ -360,16 +360,22 @@ pub fn check_codec(files: &BTreeMap<String, String>, out: &mut Vec<Violation>) {
         wire_variants.insert(enum_name, vars);
     }
     // Mirror check: the in-process protocol (RRequest/RResponse) and
-    // the wire protocol must stay in lockstep. Configure is wire-only
-    // (connection setup); Err is wire-only (in-proc failures are routed
-    // through the channel itself).
+    // the wire protocol must stay in lockstep. Wire-only variants are
+    // exempt: Configure/Ping/FetchTrace are connection setup and
+    // observability of the process boundary itself (meaningless
+    // in-process); Err/Pong/Trace are their replies (in-proc failures
+    // are routed through the channel itself).
     let Some(worker_src) = files.get(WORKER_PATH) else {
         return;
     };
     let worker = mask_code(worker_src);
     for (local, wire, wire_only) in [
-        ("RRequest", "NetRequest", "Configure"),
-        ("RResponse", "NetResponse", "Err"),
+        (
+            "RRequest",
+            "NetRequest",
+            &["Configure", "Ping", "FetchTrace"][..],
+        ),
+        ("RResponse", "NetResponse", &["Err", "Pong", "Trace"][..]),
     ] {
         let Some(wire_vars) = wire_variants.get(wire) else {
             continue;
@@ -400,7 +406,9 @@ pub fn check_codec(files: &BTreeMap<String, String>, out: &mut Vec<Violation>) {
             }
         }
         for v in wire_vars {
-            if v.as_str() != wire_only && !local_vars.iter().any(|l| l == v) {
+            if !wire_only.contains(&v.as_str())
+                && !local_vars.iter().any(|l| l == v)
+            {
                 out.push(Violation {
                     rule: CODEC_EXHAUSTIVE,
                     file: WORKER_PATH.to_string(),

@@ -1,29 +1,72 @@
-//! CI gate for benchmark snapshots: validate each `BENCH_*.json` path
-//! on the command line against the `bench::snapshot` schema. Exits
-//! non-zero (with a message per offending file) on any missing, empty
-//! or malformed snapshot.
+//! CI gate for benchmark artifacts: validate each `BENCH_*.json` path
+//! on the command line against the `bench::snapshot` schema, and each
+//! path following `--chrome-trace` against the Chrome trace-event
+//! invariants (`obs::validate_chrome_trace_file`: parses, ≥ N
+//! `thread_name` tracks, finite non-negative timestamps, per-track
+//! monotone span completion). `--min-tracks N` (before the trace paths
+//! it applies to) sets the track floor — CI passes the node count of
+//! the fig13 TCP run plus its local tracks. Exits non-zero (with a
+//! message per offending file) on any missing, empty or malformed
+//! artifact.
 
 use std::path::PathBuf;
 use std::process::ExitCode;
 
 use fastdecode::bench::snapshot;
+use fastdecode::obs::validate_chrome_trace_file;
 
 fn main() -> ExitCode {
-    let paths: Vec<PathBuf> =
-        std::env::args_os().skip(1).map(PathBuf::from).collect();
-    if paths.is_empty() {
-        eprintln!("usage: bench_validate <BENCH_*.json>...");
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        eprintln!(
+            "usage: bench_validate <BENCH_*.json>... \
+             [--min-tracks <n>] [--chrome-trace <TRACE_*.json>...]"
+        );
         return ExitCode::FAILURE;
     }
     let mut failed = false;
-    for path in &paths {
-        match snapshot::validate_file(path) {
-            Ok(()) => println!("OK {}", path.display()),
-            Err(e) => {
-                eprintln!("FAIL {}: {e:#}", path.display());
-                failed = true;
+    let mut checked = 0usize;
+    let mut min_tracks = 1usize;
+    let mut chrome = false;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--min-tracks" => {
+                match args.get(i + 1).and_then(|v| v.parse::<usize>().ok()) {
+                    Some(n) => min_tracks = n,
+                    None => {
+                        eprintln!("--min-tracks needs a number");
+                        return ExitCode::FAILURE;
+                    }
+                }
+                i += 2;
+            }
+            "--chrome-trace" => {
+                chrome = true;
+                i += 1;
+            }
+            p => {
+                let path = PathBuf::from(p);
+                let res = if chrome {
+                    validate_chrome_trace_file(&path, min_tracks)
+                } else {
+                    snapshot::validate_file(&path)
+                };
+                match res {
+                    Ok(()) => println!("OK {}", path.display()),
+                    Err(e) => {
+                        eprintln!("FAIL {}: {e:#}", path.display());
+                        failed = true;
+                    }
+                }
+                checked += 1;
+                i += 1;
             }
         }
+    }
+    if checked == 0 {
+        eprintln!("bench_validate: no artifact paths given");
+        return ExitCode::FAILURE;
     }
     if failed {
         ExitCode::FAILURE

@@ -469,9 +469,19 @@ impl FastDecode {
 
     /// Wire-level counters of the attend backend, one entry per remote
     /// node (empty for in-process backends). Includes the
-    /// modeled-vs-measured payload drift detector.
+    /// modeled-vs-measured payload drift detector and the live per-node
+    /// performance profile.
     pub fn net_stats(&self) -> Vec<NetStats> {
         self.pipeline.pool().net_stats()
+    }
+
+    /// Fetch every remote node's server-side trace spans and merge
+    /// them, clock-aligned, into this engine's tracer — one track per
+    /// node in the same Chrome trace as the S-thread and socket spans.
+    /// Returns the number of spans merged (0 for in-process backends).
+    /// Call before `tracer().write_chrome_trace(..)`.
+    pub fn merge_remote_traces(&mut self) -> Result<usize> {
+        self.pipeline.pool_mut().merge_remote_traces()
     }
 
     // ── raw sequence-lifecycle API (used by `serve::ServeEngine`) ──

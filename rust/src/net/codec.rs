@@ -28,6 +28,7 @@ use anyhow::{bail, Context as _, Result};
 
 use crate::kvcache::CacheStats;
 use crate::model::Precision;
+use crate::obs::TraceSpan;
 use crate::rworker::SeqTask;
 use crate::util::f16::{f16_bits_to_f32_slow, f32_to_f16_bits, F16};
 
@@ -108,6 +109,11 @@ pub struct NodeConfig {
     /// mode the activations travel in).
     pub precision: Precision,
     pub wire: WireMode,
+    /// Enable the node's server-side tracer for this connection: the
+    /// node records queue-wait/decode/append+attend/encode spans
+    /// against its own epoch, fetched later via
+    /// `NetRequest::FetchTrace`.
+    pub trace: bool,
 }
 
 impl NodeConfig {
@@ -129,7 +135,14 @@ impl NodeConfig {
             block_size,
             precision,
             wire,
+            trace: false,
         }
+    }
+
+    /// Builder-style toggle for server-side tracing.
+    pub fn with_trace(mut self, trace: bool) -> NodeConfig {
+        self.trace = trace;
+        self
     }
 }
 
@@ -145,6 +158,14 @@ pub enum NetRequest {
     /// layers) — prefix sharing across the wire.
     ForkSeq { parent: u64, child: u64, upto: usize },
     Stats,
+    /// Clock-sync probe: the node answers `Pong` with its epoch-
+    /// relative time in µs. The client timestamps send and receive;
+    /// the minimum-RTT sample's midpoint estimates the clock offset
+    /// that maps remote trace spans onto the local timeline.
+    Ping,
+    /// Drain the node's server-side trace buffer (`Trace` reply).
+    /// Spans are consumed: a second fetch returns only new ones.
+    FetchTrace,
     Shutdown,
 }
 
@@ -161,6 +182,14 @@ pub enum NetResponse {
         busy: Duration,
     },
     Stats(CacheStats),
+    /// Reply to `Ping`: microseconds since the node's tracer epoch
+    /// (its connection-accept instant) at the moment the request was
+    /// handled.
+    Pong { node_us: f64 },
+    /// Reply to `FetchTrace`: the node's drained span batch, still
+    /// timestamped against the NODE's epoch — `Tracer::merge_remote`
+    /// remaps them client-side.
+    Trace(Vec<TraceSpan>),
     Err(String),
 }
 
@@ -173,11 +202,15 @@ const REQ_ATTEND: u8 = 4;
 const REQ_STATS: u8 = 5;
 const REQ_SHUTDOWN: u8 = 6;
 const REQ_FORK_SEQ: u8 = 7;
+const REQ_PING: u8 = 8;
+const REQ_FETCH_TRACE: u8 = 9;
 
 const RESP_ACK: u8 = 1;
 const RESP_OUTPUTS: u8 = 2;
 const RESP_STATS: u8 = 3;
 const RESP_ERR: u8 = 4;
+const RESP_PONG: u8 = 5;
+const RESP_TRACE: u8 = 6;
 
 fn precision_to_u8(p: Precision) -> u8 {
     match p {
@@ -206,6 +239,16 @@ fn put_u32(buf: &mut Vec<u8>, v: u32) {
 
 fn put_u64(buf: &mut Vec<u8>, v: u64) {
     buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// f64 as raw IEEE bits — trace timestamps/args cross bit-exactly.
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    put_u64(buf, v.to_bits());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
 }
 
 /// Bounds-checked cursor over a frame body.
@@ -330,6 +373,54 @@ fn get_u64_vec(c: &mut Cursor) -> Result<Vec<u64>> {
     (0..n).map(|_| c.u64()).collect()
 }
 
+fn get_f64(c: &mut Cursor) -> Result<f64> {
+    Ok(f64::from_bits(c.u64()?))
+}
+
+fn get_str(c: &mut Cursor) -> Result<String> {
+    let n = c.count(1)?;
+    Ok(String::from_utf8_lossy(c.take(n)?).into_owned())
+}
+
+// ── trace spans on the wire ──────────────────────────────────────────
+
+fn put_trace_span(buf: &mut Vec<u8>, s: &TraceSpan) {
+    put_str(buf, &s.track);
+    put_str(buf, &s.name);
+    buf.push(s.instant as u8);
+    put_f64(buf, s.ts_us);
+    put_f64(buf, s.dur_us);
+    put_u32(buf, s.args.len() as u32);
+    for (k, v) in &s.args {
+        put_str(buf, k);
+        put_f64(buf, *v);
+    }
+}
+
+fn get_trace_span(c: &mut Cursor) -> Result<TraceSpan> {
+    let track = get_str(c)?;
+    let name = get_str(c)?;
+    let instant = c.u8()? != 0;
+    let ts_us = get_f64(c)?;
+    let dur_us = get_f64(c)?;
+    // an arg is ≥ 4 (key header) + 8 (f64) bytes
+    let n = c.count(12)?;
+    let mut args = Vec::with_capacity(n);
+    for _ in 0..n {
+        let k = get_str(c)?;
+        let v = get_f64(c)?;
+        args.push((k, v));
+    }
+    Ok(TraceSpan {
+        track,
+        name,
+        instant,
+        ts_us,
+        dur_us,
+        args,
+    })
+}
+
 // ── requests ─────────────────────────────────────────────────────────
 
 /// Encode one request body (the transport adds the length prefix).
@@ -345,6 +436,7 @@ pub fn encode_request(req: &NetRequest, mode: WireMode) -> Vec<u8> {
             put_u32(&mut buf, c.block_size as u32);
             buf.push(precision_to_u8(c.precision));
             buf.push(c.wire.to_u8());
+            buf.push(c.trace as u8);
         }
         NetRequest::AddSeqs(ids) => {
             buf.push(REQ_ADD_SEQS);
@@ -372,6 +464,8 @@ pub fn encode_request(req: &NetRequest, mode: WireMode) -> Vec<u8> {
             put_u64(&mut buf, *upto as u64);
         }
         NetRequest::Stats => buf.push(REQ_STATS),
+        NetRequest::Ping => buf.push(REQ_PING),
+        NetRequest::FetchTrace => buf.push(REQ_FETCH_TRACE),
         NetRequest::Shutdown => buf.push(REQ_SHUTDOWN),
     }
     buf
@@ -391,6 +485,7 @@ pub fn decode_request(buf: &[u8], mode: WireMode) -> Result<NetRequest> {
             block_size: c.u32()? as usize,
             precision: precision_from_u8(c.u8()?)?,
             wire: WireMode::from_u8(c.u8()?)?,
+            trace: c.u8()? != 0,
         }),
         REQ_ADD_SEQS => NetRequest::AddSeqs(get_u64_vec(&mut c)?),
         REQ_DROP_SEQS => NetRequest::DropSeqs(get_u64_vec(&mut c)?),
@@ -415,6 +510,8 @@ pub fn decode_request(buf: &[u8], mode: WireMode) -> Result<NetRequest> {
             upto: c.u64()? as usize,
         },
         REQ_STATS => NetRequest::Stats,
+        REQ_PING => NetRequest::Ping,
+        REQ_FETCH_TRACE => NetRequest::FetchTrace,
         REQ_SHUTDOWN => NetRequest::Shutdown,
         tag => bail!("unknown request tag {tag}"),
     };
@@ -446,6 +543,17 @@ pub fn encode_response(resp: &NetResponse, mode: WireMode) -> Vec<u8> {
             put_u64(&mut buf, st.physical_tokens as u64);
             put_u64(&mut buf, st.allocated_bytes as u64);
             put_u64(&mut buf, st.logical_bytes as u64);
+        }
+        NetResponse::Pong { node_us } => {
+            buf.push(RESP_PONG);
+            put_f64(&mut buf, *node_us);
+        }
+        NetResponse::Trace(spans) => {
+            buf.push(RESP_TRACE);
+            put_u32(&mut buf, spans.len() as u32);
+            for s in spans {
+                put_trace_span(&mut buf, s);
+            }
         }
         NetResponse::Err(msg) => {
             buf.push(RESP_ERR);
@@ -481,6 +589,17 @@ pub fn decode_response(buf: &[u8], mode: WireMode) -> Result<NetResponse> {
             allocated_bytes: c.u64()? as usize,
             logical_bytes: c.u64()? as usize,
         }),
+        RESP_PONG => NetResponse::Pong { node_us: get_f64(&mut c)? },
+        RESP_TRACE => {
+            // a span is ≥ 2 string headers + instant + ts + dur + arg
+            // count = 4 + 4 + 1 + 8 + 8 + 4 bytes
+            let n = c.count(29)?;
+            let mut spans = Vec::with_capacity(n);
+            for _ in 0..n {
+                spans.push(get_trace_span(&mut c)?);
+            }
+            NetResponse::Trace(spans)
+        }
         RESP_ERR => {
             let n = c.count(1)?;
             let msg = String::from_utf8_lossy(c.take(n)?).into_owned();
@@ -553,6 +672,8 @@ mod tests {
                     upto: g.usize_in(0, 1 << 20),
                 },
                 NetRequest::Stats,
+                NetRequest::Ping,
+                NetRequest::FetchTrace,
                 NetRequest::Shutdown,
                 NetRequest::Configure(NodeConfig {
                     n_heads: g.usize_in(1, 64),
@@ -567,6 +688,7 @@ mod tests {
                         Precision::Int4,
                     ]),
                     wire: *g.pick(&[WireMode::F32, WireMode::F16]),
+                    trace: g.bool(),
                 }),
             ];
             for req in &reqs {
@@ -636,6 +758,24 @@ mod tests {
                     allocated_bytes: g.usize_in(0, 1 << 40),
                     logical_bytes: g.usize_in(0, 1 << 40),
                 }),
+                NetResponse::Pong {
+                    node_us: g.u64_in(0, 1 << 50) as f64 / 8.0,
+                },
+                NetResponse::Trace(
+                    (0..g.usize_in(0, 4))
+                        .map(|i| TraceSpan {
+                            track: format!("rnode{i}"),
+                            name: "attend".into(),
+                            instant: g.bool(),
+                            ts_us: g.u64_in(0, 1 << 40) as f64 / 4.0,
+                            dur_us: g.u64_in(0, 1 << 30) as f64 / 4.0,
+                            args: vec![
+                                ("layer".to_string(), 3.0),
+                                ("rows \u{1F4A3}".to_string(), -1.5),
+                            ],
+                        })
+                        .collect(),
+                ),
                 NetResponse::Err(
                     "node 1 refused: seq 9 not placed \u{1F4A3}".into(),
                 ),

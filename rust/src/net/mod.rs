@@ -31,6 +31,38 @@
 //! side: a node death, a refused request or a malformed frame comes
 //! back as a routed error with the root cause — never a hang, never a
 //! bare thread death — and the surviving nodes stay usable.
+//!
+//! # Cross-process observability: trace → align → merge
+//!
+//! The wire also carries the distributed-tracing flow (`obs`):
+//!
+//! 1. **Trace** — the `Configure` handshake's `trace` flag turns on a
+//!    server-side `Tracer` in each rnode, pinned to the connection's
+//!    own monotonic epoch: queue-wait, frame-decode, per-layer
+//!    kv-append + attend (row/task counts in args), and output-encode
+//!    spans. `NetRequest::FetchTrace` → `NetResponse::Trace` ships
+//!    them back as serialized span batches.
+//! 2. **Align** — two processes' monotonic clocks share no epoch, so
+//!    [`RemotePool`] follows the `Configure` ack with an RTT ping burst
+//!    (`NetRequest::Ping` → `NetResponse::Pong` carrying the node's
+//!    epoch-relative time). The minimum-RTT sample's midpoint
+//!    (`obs::pick_clock_sync`) estimates the per-node clock offset with
+//!    error bounded by ±RTT/2.
+//! 3. **Merge** — `merge_remote_traces` (on the `AttendBackend` trait)
+//!    fetches every live node's spans, shifts each by that node's
+//!    offset, and folds them into the client's tracer as one track per
+//!    node — one chrome://tracing timeline where each node's internals
+//!    nest inside the client-side submit→reply spans that caused them.
+//!    Every live node is drained before the first failure is reported,
+//!    so a node dying mid-fetch still leaves the survivors' traces in
+//!    the export.
+//!
+//! The same submit→reply timing feeds each node's live
+//! `obs::NodeProfile` (EWMA tokens/s, bytes/s, service-time
+//! percentiles, queue depth), surfaced through `net_stats` — the
+//! measured per-node throughput that
+//! `perfmodel::Planner::from_measured_profiles` consumes in place of
+//! assumed-equal device models.
 
 pub mod codec;
 pub mod remote;

@@ -22,7 +22,9 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context as _, Result};
 
 use crate::kvcache::CacheStats;
-use crate::obs::{NetStats, Tracer, Track, TransportCounters};
+use crate::obs::{
+    pick_clock_sync, NetStats, NodeProfile, Tracer, Track, TransportCounters,
+};
 use crate::rworker::{AttendBackend, PendingAttend, PoolStep, SeqTask};
 
 use super::codec::{
@@ -49,6 +51,26 @@ struct NodeWire {
     final_transport: TransportCounters,
 }
 
+/// Clock-offset estimate for one node, from the RTT ping burst in the
+/// `Configure` handshake. The node answered `Ping` with its
+/// epoch-relative time `node_us`; at the client-side midpoint `mid` of
+/// the minimum-RTT sample the node's clock read `node_us`, so
+/// `offset_us = local_us(mid) − node_us` maps remote timestamps into
+/// any local epoch with error bounded by ±`min_rtt_us / 2`.
+#[derive(Clone, Copy, Debug)]
+struct ClockSync {
+    /// Client-side midpoint of the minimum-RTT ping round trip.
+    mid: Instant,
+    /// The node's epoch-relative microseconds in that ping's reply.
+    node_us: f64,
+    /// The minimum RTT observed across the burst (µs).
+    min_rtt_us: f64,
+}
+
+/// Ping samples per node at Configure time: enough that one of them
+/// usually avoids scheduler noise, cheap enough to not slow connect.
+const CLOCK_SYNC_PINGS: usize = 8;
+
 struct Node {
     /// `None` once the node is dead (with the cause in `fate`).
     transport: Option<Box<dyn Transport>>,
@@ -57,6 +79,11 @@ struct Node {
     /// name the original failure.
     fate: Option<String>,
     wire_stats: NodeWire,
+    /// Clock-offset estimate from the Configure-time ping burst.
+    clock: Option<ClockSync>,
+    /// Live measured performance profile (EWMA throughput, service-time
+    /// percentiles, queue depth), fed by every submit/gather.
+    profile: NodeProfile,
 }
 
 pub struct RemotePool {
@@ -73,6 +100,15 @@ pub struct RemotePool {
     /// One trace track per node ("r-node{i}"), empty until a tracer is
     /// installed.
     tracks: Vec<Track>,
+    /// The installed tracer itself — the merge target for fetched
+    /// remote spans. Disabled until `install_tracer`.
+    tracer: Tracer,
+    /// Token-row width (heads × head_dim) of one q/k/v row, for row
+    /// counts in the per-node profiles.
+    width: usize,
+    /// Per-node (rows, payload bytes) of the attend currently in
+    /// flight, observed into the profile at gather time.
+    pending_load: Vec<(usize, u64)>,
 }
 
 impl RemotePool {
@@ -103,13 +139,49 @@ impl RemotePool {
                     "{label} answered Configure with {other:?} instead of Ack"
                 ),
             }
+            // RTT ping burst: the node answers each Ping with its
+            // epoch-relative time; the minimum-RTT sample's midpoint
+            // gives the clock offset with error ≤ RTT/2 — what
+            // `merge_remote_traces` uses to align the node's spans.
+            let sync_epoch = Instant::now();
+            let us = |at: Instant| {
+                at.duration_since(sync_epoch).as_secs_f64() * 1e6
+            };
+            let mut samples = Vec::with_capacity(CLOCK_SYNC_PINGS);
+            for _ in 0..CLOCK_SYNC_PINGS {
+                let t0 = Instant::now();
+                t.send(&encode_request(&NetRequest::Ping, cfg.wire))
+                    .with_context(|| format!("pinging {label}"))?;
+                let frame = t
+                    .recv()
+                    .with_context(|| format!("awaiting Pong from {label}"))?;
+                let t1 = Instant::now();
+                let node_us = match decode_response(&frame, cfg.wire)? {
+                    NetResponse::Pong { node_us } => node_us,
+                    other => bail!(
+                        "{label} answered Ping with {other:?} instead of Pong"
+                    ),
+                };
+                samples.push((us(t0), node_us, us(t1)));
+            }
+            let clock = pick_clock_sync(&samples).map(
+                |(mid_us, node_us, min_rtt_us)| ClockSync {
+                    mid: sync_epoch
+                        + Duration::from_secs_f64(mid_us / 1e6),
+                    node_us,
+                    min_rtt_us,
+                },
+            );
             nodes.push(Node {
                 transport: Some(t),
                 label,
                 fate: None,
                 wire_stats: NodeWire::default(),
+                clock,
+                profile: NodeProfile::default(),
             });
         }
+        let n = nodes.len();
         Ok(RemotePool {
             nodes,
             wire: cfg.wire,
@@ -118,6 +190,9 @@ impl RemotePool {
             name,
             servers: Vec::new(),
             tracks: Vec::new(),
+            tracer: Tracer::disabled(),
+            width: cfg.n_heads * cfg.head_dim,
+            pending_load: vec![(0, 0); n],
         })
     }
 
@@ -453,8 +528,26 @@ impl AttendBackend for RemotePool {
             if tasks.is_empty() {
                 continue;
             }
+            // profile bookkeeping: rows and payload bytes of this
+            // node's share, observed into its EWMA at gather time
+            let rows: usize = tasks
+                .iter()
+                .map(|t| t.q.len() / self.width.max(1))
+                .sum();
+            let bytes: usize = tasks
+                .iter()
+                .map(|t| {
+                    vec_payload_bytes(t.q.len(), self.wire)
+                        + vec_payload_bytes(t.k_new.len(), self.wire)
+                        + vec_payload_bytes(t.v_new.len(), self.wire)
+                })
+                .sum();
+            self.pending_load[n] = (rows, bytes as u64);
             match self.send_to(n, &NetRequest::Attend { layer, tasks }) {
-                Ok(()) => active.push(n),
+                Ok(()) => {
+                    self.nodes[n].profile.on_submit();
+                    active.push(n);
+                }
                 Err(e) => {
                     first_err = Some(e);
                     break;
@@ -466,6 +559,7 @@ impl AttendBackend for RemotePool {
             // the next attend
             for n in active {
                 let _ = self.recv_from(n);
+                self.nodes[n].profile.on_gather();
             }
             return Err(e.context("scattering attend to remote nodes"));
         }
@@ -484,7 +578,11 @@ impl AttendBackend for RemotePool {
         let mut socket_busy: Vec<(usize, Duration)> = Vec::new();
         let mut first_err: Option<anyhow::Error> = None;
         for n in pending.active {
-            match self.recv_from(n) {
+            let reply = self.recv_from(n);
+            // the reply (or the failure) consumed this node's in-flight
+            // slot either way
+            self.nodes[n].profile.on_gather();
+            match reply {
                 Ok(NetResponse::Outputs { layer, outs, busy }) => {
                     if layer != pending.layer {
                         // a crossed reply means this connection is desynced
@@ -509,6 +607,12 @@ impl AttendBackend for RemotePool {
                     max_busy = max_busy.max(busy);
                     total_busy += busy;
                     socket_busy.push((n, busy));
+                    let (rows, bytes) = self.pending_load[n];
+                    self.nodes[n].profile.observe(
+                        rows,
+                        bytes,
+                        Instant::now().duration_since(pending.submitted),
+                    );
                     if let Some(track) = self.tracks.get(n) {
                         track.record(
                             "attend",
@@ -621,11 +725,82 @@ impl AttendBackend for RemotePool {
     }
 
     /// One trace track per node; subsequent attends record submit→reply
-    /// spans on the owning node's track.
+    /// spans on the owning node's track. The tracer is kept as the
+    /// merge target for spans fetched by [`Self::merge_remote_traces`].
     fn install_tracer(&mut self, tracer: Tracer) {
         self.tracks = (0..self.nodes.len())
             .map(|i| tracer.track(&format!("r-node{i}")))
             .collect();
+        self.tracer = tracer;
+    }
+
+    /// Fetch each live node's server-side spans and fold them into the
+    /// installed tracer, shifted by the node's clock-offset estimate
+    /// (`offset_us = local_us(mid) − node_us` from the Configure-time
+    /// ping burst). EVERY live node is drained before the first failure
+    /// is reported, so survivors' partial traces still merge when a
+    /// node dies mid-fetch — the error names the dead node.
+    fn merge_remote_traces(&mut self) -> Result<usize> {
+        let live: Vec<usize> = (0..self.nodes.len())
+            .filter(|&i| self.nodes[i].transport.is_some())
+            .collect();
+        let mut sent: Vec<usize> = Vec::new();
+        let mut first_err: Option<anyhow::Error> = None;
+        for &i in &live {
+            match self.send_to(i, &NetRequest::FetchTrace) {
+                Ok(()) => sent.push(i),
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        let mut merged = 0usize;
+        for &i in &sent {
+            match self.recv_from(i) {
+                Ok(NetResponse::Trace(spans)) => {
+                    let offset_us = match self.nodes[i].clock {
+                        Some(c) => {
+                            self.tracer.us_since_epoch(c.mid) - c.node_us
+                        }
+                        None => 0.0,
+                    };
+                    merged += self.tracer.merge_remote(
+                        &format!("rnode{i}"),
+                        spans,
+                        offset_us,
+                    );
+                }
+                Ok(NetResponse::Err(msg)) => {
+                    self.nodes[i].wire_stats.errors += 1;
+                    if first_err.is_none() {
+                        first_err = Some(anyhow!(
+                            "{} refused trace fetch: {msg}",
+                            self.nodes[i].label
+                        ));
+                    }
+                }
+                Ok(other) => {
+                    self.nodes[i].wire_stats.errors += 1;
+                    if first_err.is_none() {
+                        first_err = Some(anyhow!(
+                            "{} answered FetchTrace with {other:?}",
+                            self.nodes[i].label
+                        ));
+                    }
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e.context("fetching remote traces")),
+            None => Ok(merged),
+        }
     }
 
     /// Wire accounting for EVERY node, dead ones included (their
@@ -650,6 +825,7 @@ impl AttendBackend for RemotePool {
                     modeled_payload_recv: node.wire_stats.modeled_recv,
                     measured_payload_recv: node.wire_stats.measured_recv,
                     drift_events: node.wire_stats.drift_events,
+                    profile: node.profile.clone(),
                 }
             })
             .collect()
@@ -878,6 +1054,64 @@ mod tests {
                 assert!(s.transport.bytes_sent > s.modeled_payload_sent, "{s:?}");
                 assert!(s.transport.frames_recv >= 3, "{s:?}");
             }
+        }
+    }
+
+    /// Traced loopback nodes ship their server-side spans back through
+    /// `FetchTrace`; the pool clock-aligns and merges them onto one
+    /// track per node in the installed tracer, and the per-node
+    /// profiles carry measured throughput with a drained queue.
+    #[test]
+    fn remote_traces_merge_and_profiles_measure() {
+        use crate::util::json::Json;
+        let tracer = Tracer::enabled();
+        let mut pool =
+            RemotePool::loopback(cfg(WireMode::F32).with_trace(true), 2)
+                .unwrap();
+        pool.install_tracer(tracer.clone());
+        pool.add_seqs(&[1, 2]).unwrap();
+        let mut rng = Rng::new(21);
+        for _ in 0..3 {
+            let tasks = vec![
+                mk_task(&mut rng, 1, TINY.hidden),
+                mk_task(&mut rng, 2, TINY.hidden),
+            ];
+            pool.attend(0, tasks).unwrap();
+        }
+        let merged = pool.merge_remote_traces().unwrap();
+        assert!(merged > 0, "expected server-side spans to merge");
+        let parsed = Json::parse(&tracer.chrome_trace().render()).unwrap();
+        let events =
+            parsed.get("traceEvents").and_then(Json::as_arr).unwrap();
+        for label in ["rnode0", "rnode1"] {
+            assert!(
+                events.iter().any(|e| {
+                    e.get("name").and_then(Json::as_str)
+                        == Some("thread_name")
+                        && e.get("args")
+                            .and_then(|a| a.get("name"))
+                            .and_then(Json::as_str)
+                            == Some(label)
+                }),
+                "missing per-node track {label}"
+            );
+        }
+        // every merged span lands inside the local timeline
+        for e in events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+        {
+            let ts = e.get("ts").and_then(Json::as_f64).unwrap();
+            let dur = e.get("dur").and_then(Json::as_f64).unwrap();
+            assert!(ts >= 0.0 && dur >= 0.0, "span escaped the window");
+        }
+        let stats = pool.net_stats();
+        for s in &stats {
+            assert_eq!(s.profile.samples(), 3, "{s:?}");
+            assert!(s.profile.tokens_per_s > 0.0, "{s:?}");
+            assert!(s.profile.bytes_per_s > 0.0, "{s:?}");
+            assert_eq!(s.profile.queue_depth, 0, "{s:?}");
+            assert!(s.profile.peak_queue_depth >= 1, "{s:?}");
         }
     }
 

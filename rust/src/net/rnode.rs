@@ -18,11 +18,12 @@
 //! (client gone) ends the loop.
 
 use std::net::{TcpListener, ToSocketAddrs};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context as _, Result};
 
 use crate::kvcache::SocketCache;
+use crate::obs::{Tracer, Track};
 use crate::rworker::{attend_paged, AttnScratch, SeqTask};
 
 use super::codec::{
@@ -82,15 +83,35 @@ pub fn serve_connection<T: Transport>(mut t: T) -> Result<()> {
         cfg.precision,
     );
     let mut scratch = AttnScratch::new(cfg.head_dim);
+    // The node's own trace session: pinned to the connection-accept
+    // instant so the same epoch anchors both recorded spans and the
+    // `Ping` clock-sync replies the client uses to align them.
+    let epoch = Instant::now();
+    let tracer = if cfg.trace {
+        Tracer::enabled_with_epoch(epoch)
+    } else {
+        Tracer::disabled()
+    };
+    let track = tracer.track("rnode");
     t.send(&encode_response(&NetResponse::Ack, wire))
         .context("acking Configure")?;
 
     loop {
+        // time blocked waiting for the next request frame — the
+        // server-side queue-wait the client's submit→reply span hides
+        let idle_from = Instant::now();
         let frame = match t.recv() {
             Ok(f) => f,
             Err(_) => return Ok(()), // client gone: normal end of life
         };
-        let resp = match decode_request(&frame, wire) {
+        track.record("queue_wait", idle_from, Instant::now(), &[]);
+        let decoded = {
+            let _s = track
+                .span("decode")
+                .arg("frame_bytes", frame.len() as f64);
+            decode_request(&frame, wire)
+        };
+        let resp = match decoded {
             Err(e) => NetResponse::Err(format!("malformed frame: {e:#}")),
             Ok(NetRequest::Shutdown) => return Ok(()),
             Ok(NetRequest::Configure(_)) => NetResponse::Err(
@@ -104,7 +125,7 @@ pub fn serve_connection<T: Transport>(mut t: T) -> Result<()> {
                 NetResponse::Ack
             }
             Ok(NetRequest::Attend { layer, tasks }) => {
-                attend(&mut cache, &mut scratch, layer, tasks)
+                attend(&mut cache, &mut scratch, layer, tasks, &track)
             }
             Ok(NetRequest::ForkSeq { parent, child, upto }) => {
                 // fork_seq validates before it mutates, so a refusal
@@ -116,9 +137,23 @@ pub fn serve_connection<T: Transport>(mut t: T) -> Result<()> {
                 }
             }
             Ok(NetRequest::Stats) => NetResponse::Stats(cache.stats()),
+            // clock-sync probe: answer with the node's epoch-relative
+            // time so the client can estimate the offset between the
+            // two monotonic clocks from the RTT midpoint
+            Ok(NetRequest::Ping) => NetResponse::Pong {
+                node_us: epoch.elapsed().as_secs_f64() * 1e6,
+            },
+            // drain-and-ship: buffers come back empty, so each fetch
+            // returns only spans recorded since the previous one
+            Ok(NetRequest::FetchTrace) => {
+                NetResponse::Trace(tracer.drain_remote_spans())
+            }
         };
-        t.send(&encode_response(&resp, wire))
-            .context("sending reply")?;
+        let reply = {
+            let _s = track.span("encode");
+            encode_response(&resp, wire)
+        };
+        t.send(&reply).context("sending reply")?;
     }
 }
 
@@ -140,11 +175,18 @@ fn add_seqs(cache: &mut SocketCache, ids: &[u64]) -> NetResponse {
 /// The node-side attend: validate EVERY task, then append+attend row
 /// by row exactly like the in-process `RWorker` loop — same math, same
 /// causal row order, so loopback f32 is bit-identical to threads.
+///
+/// Traced as an `attend` span (layer / rows / tasks args) with a
+/// nested `kv_append` span carrying the time spent appending KV rows;
+/// the causal row order (append row r, attend row r) forbids
+/// separating the phases, so the append time is accumulated across
+/// rows and recorded as one sub-span.
 fn attend(
     cache: &mut SocketCache,
     scratch: &mut AttnScratch,
     layer: usize,
     tasks: Vec<SeqTask>,
+    track: &Track,
 ) -> NetResponse {
     if layer >= cache.n_layers {
         return NetResponse::Err(format!(
@@ -197,13 +239,18 @@ fn attend(
         }
     }
     // all valid: apply (identical loop to rworker::worker::run_loop)
+    let traced = track.is_enabled();
     let start = Instant::now();
+    let mut append_time = Duration::ZERO;
+    let mut total_rows = 0usize;
     let mut outs = Vec::with_capacity(tasks.len());
     for task in &tasks {
         let rows = task.q.len() / width;
+        total_rows += rows;
         let mut o = vec![0.0f32; task.q.len()];
         for r in 0..rows {
             let s = r * width..(r + 1) * width;
+            let t0 = traced.then(Instant::now);
             // validated above: only a pool-level invariant breach could
             // fail here, and that must still be routed, not a panic
             if let Err(e) = cache.append(
@@ -214,6 +261,9 @@ fn attend(
             ) {
                 return NetResponse::Err(format!("{e:#}"));
             }
+            if let Some(t0) = t0 {
+                append_time += t0.elapsed();
+            }
             let kv = match cache.get(task.seq_id, layer) {
                 Ok(kv) => kv,
                 Err(e) => return NetResponse::Err(format!("{e:#}")),
@@ -222,11 +272,24 @@ fn attend(
         }
         outs.push((task.seq_id, o));
     }
-    NetResponse::Outputs {
-        layer,
-        outs,
-        busy: start.elapsed(),
-    }
+    let busy = start.elapsed();
+    track.record(
+        "kv_append",
+        start,
+        start + append_time,
+        &[("layer", layer as f64), ("rows", total_rows as f64)],
+    );
+    track.record(
+        "attend",
+        start,
+        start + busy,
+        &[
+            ("layer", layer as f64),
+            ("rows", total_rows as f64),
+            ("tasks", tasks.len() as f64),
+        ],
+    );
+    NetResponse::Outputs { layer, outs, busy }
 }
 
 /// Accept loop: every connection gets its own serving thread (one
@@ -363,6 +426,7 @@ mod tests {
             block_size: 4,
             precision: Precision::F32,
             wire,
+            trace: false,
         }
     }
 
@@ -478,6 +542,109 @@ mod tests {
         let stats = pool.stats().unwrap();
         assert_eq!(stats.len(), 2);
         assert!(stats.iter().all(|s| s.sequences == 2), "{stats:?}");
+    }
+
+    /// A trace-enabled connection answers `Ping` with nondecreasing
+    /// epoch-relative time and `FetchTrace` with the server-side spans
+    /// (decode / attend / kv_append / encode / queue_wait) recorded
+    /// since the last fetch — and a second fetch starts empty.
+    #[test]
+    fn traced_connection_serves_pings_and_trace_fetches() {
+        let (server, mut client) = loopback_pair("rnode-trace");
+        let h = std::thread::spawn(move || serve_connection(server));
+        let wire = WireMode::F32;
+        let config = NodeConfig {
+            trace: true,
+            ..cfg(wire)
+        };
+        assert_eq!(
+            rpc(&mut client, &NetRequest::Configure(config), wire),
+            NetResponse::Ack
+        );
+        let NetResponse::Pong { node_us: t1 } =
+            rpc(&mut client, &NetRequest::Ping, wire)
+        else {
+            panic!("expected Pong");
+        };
+        assert_eq!(
+            rpc(&mut client, &NetRequest::AddSeqs(vec![1]), wire),
+            NetResponse::Ack
+        );
+        let attend = NetRequest::Attend {
+            layer: 0,
+            tasks: vec![SeqTask {
+                seq_id: 1,
+                q: vec![1.0; 8],
+                k_new: vec![1.0; 8],
+                v_new: vec![1.0; 8],
+            }],
+        };
+        assert!(matches!(
+            rpc(&mut client, &attend, wire),
+            NetResponse::Outputs { .. }
+        ));
+        let NetResponse::Pong { node_us: t2 } =
+            rpc(&mut client, &NetRequest::Ping, wire)
+        else {
+            panic!("expected Pong");
+        };
+        assert!(t2 >= t1, "node clock must be monotone: {t1} then {t2}");
+        let NetResponse::Trace(spans) =
+            rpc(&mut client, &NetRequest::FetchTrace, wire)
+        else {
+            panic!("expected Trace");
+        };
+        for name in ["queue_wait", "decode", "attend", "kv_append", "encode"] {
+            assert!(
+                spans.iter().any(|s| s.name == name),
+                "missing {name} span in {spans:?}"
+            );
+        }
+        let a = spans
+            .iter()
+            .find(|s| s.name == "attend")
+            .expect("attend span");
+        assert!(a
+            .args
+            .iter()
+            .any(|(k, v)| k == "rows" && *v == 1.0), "{a:?}");
+        assert!(spans.iter().all(|s| s.track == "rnode"));
+        assert!(spans.iter().all(|s| s.ts_us >= 0.0 && s.dur_us >= 0.0));
+        // drained: a second fetch only carries spans recorded since
+        let NetResponse::Trace(again) =
+            rpc(&mut client, &NetRequest::FetchTrace, wire)
+        else {
+            panic!("expected Trace");
+        };
+        assert!(
+            !again.iter().any(|s| s.name == "attend"),
+            "attend spans must not be re-shipped: {again:?}"
+        );
+        rpc_shutdown(&mut client, wire);
+        h.join().unwrap().unwrap();
+    }
+
+    /// An untraced connection still answers Ping (clock sync works
+    /// without tracing) and FetchTrace returns an empty batch.
+    #[test]
+    fn untraced_connection_pings_but_ships_no_spans() {
+        let (server, mut client) = loopback_pair("rnode-untraced");
+        let h = std::thread::spawn(move || serve_connection(server));
+        let wire = WireMode::F32;
+        assert_eq!(
+            rpc(&mut client, &NetRequest::Configure(cfg(wire)), wire),
+            NetResponse::Ack
+        );
+        assert!(matches!(
+            rpc(&mut client, &NetRequest::Ping, wire),
+            NetResponse::Pong { node_us } if node_us >= 0.0
+        ));
+        assert_eq!(
+            rpc(&mut client, &NetRequest::FetchTrace, wire),
+            NetResponse::Trace(Vec::new())
+        );
+        rpc_shutdown(&mut client, wire);
+        h.join().unwrap().unwrap();
     }
 
     /// First frame must be Configure; anything else is refused and the

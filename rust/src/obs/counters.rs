@@ -14,6 +14,9 @@
 //! runtime check — if the codec or the link model changes shape, live
 //! runs notice, not just the unit test.
 
+use std::time::Duration;
+
+use crate::metrics::Histogram;
 use crate::util::json::Json;
 
 /// Frames and bytes through one connection, both directions.
@@ -34,6 +37,77 @@ impl TransportCounters {
     pub fn on_recv(&mut self, frame_len: usize) {
         self.frames_recv += 1;
         self.bytes_recv += frame_len as u64;
+    }
+}
+
+/// Live performance profile of one R-node, maintained client-side from
+/// the submit→reply timing of every gathered attend. This is the
+/// MEASURED per-node throughput the heterogeneity-aware planner needs
+/// (`perfmodel::Planner::from_measured_profiles`): EWMA rates adapt to
+/// drifting node speed, the service-time histogram captures the tail a
+/// mean would hide, and the queue depth shows standing backlog.
+#[derive(Clone, Debug, Default)]
+pub struct NodeProfile {
+    /// EWMA of attended token rows per second of service time.
+    pub tokens_per_s: f64,
+    /// EWMA of streamed activation payload bytes per second.
+    pub bytes_per_s: f64,
+    /// Per-attend submit→reply service time (p50/p99 via percentiles).
+    pub service: Histogram,
+    /// Attends in flight right now (submitted, not yet gathered).
+    pub queue_depth: usize,
+    /// Highest queue depth ever observed.
+    pub peak_queue_depth: usize,
+}
+
+/// EWMA smoothing factor: ~5 observations of memory, fast enough to
+/// follow a node that slows under co-located load.
+const PROFILE_ALPHA: f64 = 0.2;
+
+impl NodeProfile {
+    /// Record one gathered attend: `rows` token rows and `bytes` of
+    /// activation payload served in `service` wall time.
+    pub fn observe(&mut self, rows: usize, bytes: u64, service: Duration) {
+        let secs = service.as_secs_f64().max(1e-9);
+        self.service.record_secs(service.as_secs_f64());
+        let tok_rate = rows as f64 / secs;
+        let byte_rate = bytes as f64 / secs;
+        if self.service.count() == 1 {
+            self.tokens_per_s = tok_rate;
+            self.bytes_per_s = byte_rate;
+        } else {
+            self.tokens_per_s +=
+                PROFILE_ALPHA * (tok_rate - self.tokens_per_s);
+            self.bytes_per_s +=
+                PROFILE_ALPHA * (byte_rate - self.bytes_per_s);
+        }
+    }
+
+    /// Bump the in-flight count at submit time.
+    pub fn on_submit(&mut self) {
+        self.queue_depth += 1;
+        self.peak_queue_depth = self.peak_queue_depth.max(self.queue_depth);
+    }
+
+    /// Drop the in-flight count at gather time.
+    pub fn on_gather(&mut self) {
+        self.queue_depth = self.queue_depth.saturating_sub(1);
+    }
+
+    /// Attends observed so far.
+    pub fn samples(&self) -> u64 {
+        self.service.count()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("tokens_per_s", self.tokens_per_s)
+            .set("bytes_per_s", self.bytes_per_s)
+            .set("service_p50_us", self.service.percentile_us(0.50))
+            .set("service_p99_us", self.service.percentile_us(0.99))
+            .set("samples", self.samples())
+            .set("queue_depth", self.queue_depth)
+            .set("peak_queue_depth", self.peak_queue_depth)
     }
 }
 
@@ -61,6 +135,9 @@ pub struct NetStats {
     /// Times measured ≠ modeled; nonzero means the codec and the
     /// LinkModel disagree about message shape.
     pub drift_events: u64,
+    /// Live measured performance profile (EWMA throughput, service-time
+    /// percentiles, queue depth) — the planner's measurement input.
+    pub profile: NodeProfile,
 }
 
 impl NetStats {
@@ -86,6 +163,7 @@ impl NetStats {
             .set("modeled_payload_recv", self.modeled_payload_recv)
             .set("measured_payload_recv", self.measured_payload_recv)
             .set("drift_events", self.drift_events)
+            .set("profile", self.profile.to_json())
     }
 }
 
@@ -103,6 +181,37 @@ mod tests {
         assert_eq!(c.bytes_sent, 150);
         assert_eq!(c.frames_recv, 1);
         assert_eq!(c.bytes_recv, 7);
+    }
+
+    #[test]
+    fn node_profile_ewma_and_queue_depth() {
+        let mut p = NodeProfile::default();
+        assert_eq!(p.samples(), 0);
+        // first observation seeds the EWMA exactly
+        p.observe(100, 1000, Duration::from_millis(10));
+        assert!((p.tokens_per_s - 10_000.0).abs() < 1.0, "{}", p.tokens_per_s);
+        assert!((p.bytes_per_s - 100_000.0).abs() < 10.0, "{}", p.bytes_per_s);
+        // a 2× faster observation moves the EWMA by alpha of the gap
+        p.observe(200, 2000, Duration::from_millis(10));
+        assert!(
+            p.tokens_per_s > 10_000.0 && p.tokens_per_s < 20_000.0,
+            "{}",
+            p.tokens_per_s
+        );
+        assert_eq!(p.samples(), 2);
+        assert!(p.service.percentile_us(0.99) >= p.service.percentile_us(0.5));
+
+        p.on_submit();
+        p.on_submit();
+        assert_eq!(p.queue_depth, 2);
+        assert_eq!(p.peak_queue_depth, 2);
+        p.on_gather();
+        p.on_gather();
+        p.on_gather(); // saturates, never underflows
+        assert_eq!(p.queue_depth, 0);
+        assert_eq!(p.peak_queue_depth, 2);
+        let j = p.to_json().render();
+        assert!(j.contains("tokens_per_s"));
     }
 
     #[test]

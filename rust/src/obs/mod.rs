@@ -1,9 +1,9 @@
 //! Observability: span tracing, leveled logging, and wire-level
 //! counters — the instrument behind the paper's latency decomposition
 //! (Figs 8/11/12/15: S-Part compute vs R-Part attend vs activation
-//! transfer).
+//! transfer), now spanning the PROCESS BOUNDARY.
 //!
-//! The flow is **trace → breakdown → snapshot**:
+//! The in-process flow is **trace → breakdown → snapshot**:
 //!
 //! 1. **Trace** — [`Tracer`] records wall-clock spans on per-thread
 //!    tracks at every pipeline stage: S compute on the S-thread,
@@ -23,6 +23,34 @@
 //! 3. **Snapshot** — `bench::snapshot` aggregates a run's trace into a
 //!    pinned machine-readable `BENCH_<name>.json` (schema documented
 //!    there), starting the cross-PR perf trajectory.
+//!
+//! The cross-process flow is **trace → align → merge**:
+//!
+//! 1. **Trace (remote)** — a remote `rnode` runs its OWN [`Tracer`]
+//!    against its own monotonic epoch (enabled by the `Configure`
+//!    handshake's `trace` flag), recording queue-wait, frame-decode,
+//!    per-layer append+attend, and output-encode spans server-side.
+//!    `NetRequest::FetchTrace` drains them as [`TraceSpan`] batches.
+//! 2. **Align** — monotonic clocks of different processes share no
+//!    epoch, so `net::RemotePool` samples RTT pings at `Configure`
+//!    time: the node answers `Ping` with its epoch-relative time, and
+//!    the minimum-RTT sample's midpoint gives the clock offset with
+//!    error bounded by ±RTT/2 (property-tested in
+//!    `tests/net_trace.rs`).
+//! 3. **Merge** — [`Tracer::merge_remote`] remaps each fetched span by
+//!    that offset ([`map_remote_span`] clamps so estimate error can
+//!    never yield negative timestamps/durations) and lands it on one
+//!    track per node, so a single chrome://tracing view shows the
+//!    S-thread, sockets, wire, AND remote node internals aligned —
+//!    each node's spans nest inside the client-side submit→reply span
+//!    that caused them.
+//!
+//! From the same measurements each node gets a live [`NodeProfile`]
+//! (EWMA attend tokens/s and bytes/s, p50/p99 service time, queue
+//! depth) carried in [`NetStats`] — the measured input
+//! `perfmodel::Planner::from_measured_profiles` consumes in place of
+//! assumed-equal device models, and what `ServeReport` and the bench
+//! snapshots surface per node.
 //!
 //! Tracing is NEAR-ZERO-COST when disabled: [`Tracer`] is an
 //! `Option<Arc<_>>`; a disabled tracer's `span`/`record`/`instant`
@@ -47,9 +75,12 @@ pub mod counters;
 pub mod logging;
 pub mod tracer;
 
-pub use counters::{NetStats, TransportCounters};
+pub use counters::{NetStats, NodeProfile, TransportCounters};
 pub use logging::Level;
-pub use tracer::{Span, Tracer, Track};
+pub use tracer::{
+    map_remote_span, pick_clock_sync, validate_chrome_trace_file, Span,
+    TraceSpan, Tracer, Track,
+};
 
 // Re-export the crate-root macro so call sites read `obs::log!`.
 pub use crate::obs_log as log;

@@ -22,11 +22,20 @@
 //! per span (`"i"` for instants), all in `pid` 0 with the track index
 //! as `tid` — one horizontal track per thread/node. Attribution
 //! (layer, mini-batch, socket, rows) travels in numeric `args`.
+//!
+//! **Cross-process traces.** A remote `rnode` records spans against its
+//! OWN epoch and ships them back as [`TraceSpan`] batches
+//! (`NetResponse::Trace`). The client estimates the node's clock offset
+//! from RTT ping samples (min-RTT midpoint; `net::RemotePool`), then
+//! [`Tracer::merge_remote`] remaps each remote span into this tracer's
+//! epoch via [`map_remote_span`] and lands it on its own track — one
+//! chrome://tracing view of S-thread, sockets, wire, and remote node
+//! internals on a single aligned timeline.
 
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
-use anyhow::{Context as _, Result};
+use anyhow::{bail, ensure, Context as _, Result};
 
 use crate::util::json::Json;
 
@@ -41,7 +50,73 @@ pub struct Event {
     /// Span duration in microseconds (0 for instants).
     pub dur_us: f64,
     /// Numeric attribution (layer, mb, socket, rows, …).
-    pub args: Vec<(&'static str, f64)>,
+    pub args: Vec<(String, f64)>,
+}
+
+/// One span in transit between processes: a [`Event`] plus the name of
+/// the track it was recorded on, timestamped against the REMOTE
+/// process's epoch. This is the payload of `NetResponse::Trace`; the
+/// receiving side remaps `ts_us` with [`map_remote_span`] before it
+/// joins the local timeline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceSpan {
+    /// Remote track name (e.g. `"rnode"`).
+    pub track: String,
+    pub name: String,
+    /// `true` for instants (`"i"`), `false` for complete spans (`"X"`).
+    pub instant: bool,
+    /// Microseconds since the REMOTE epoch.
+    pub ts_us: f64,
+    pub dur_us: f64,
+    pub args: Vec<(String, f64)>,
+}
+
+/// Pick the clock-sync sample out of an RTT ping burst. Each sample is
+/// `(send_us, node_us, recv_us)`: the client-side send/receive times of
+/// one `Ping` round trip (any client epoch) and the node's
+/// epoch-relative reply. The minimum-RTT sample wins; at its client-side
+/// midpoint the node's clock read `node_us`, so
+/// `offset_us = mid_us − node_us` maps remote time into client time
+/// with error bounded by ±`min_rtt/2` no matter how asymmetrically the
+/// two legs split the round trip (the error is exactly
+/// `(back − out)/2`). Returns `(mid_us, node_us, min_rtt_us)`; `None`
+/// when no sample is usable (empty burst, non-finite or negative RTT).
+/// Pure — property-tested under randomized asymmetric delays in
+/// `tests/net_trace.rs`; `net::RemotePool` builds its per-node
+/// `ClockSync` from this.
+pub fn pick_clock_sync(
+    samples: &[(f64, f64, f64)],
+) -> Option<(f64, f64, f64)> {
+    let mut best: Option<(f64, f64, f64)> = None;
+    for &(send, node, recv) in samples {
+        let rtt = recv - send;
+        if !rtt.is_finite() || rtt < 0.0 {
+            continue;
+        }
+        if best.map_or(true, |(_, _, min)| rtt < min) {
+            best = Some(((send + recv) / 2.0, node, rtt));
+        }
+    }
+    best
+}
+
+/// Remap one remote span into the local epoch: shift by the estimated
+/// clock offset (local_us ≈ remote_us + offset_us), then clamp into
+/// `window = (lo_us, hi_us)` so an offset-estimate error can never
+/// produce a negative timestamp, a negative duration, or a span poking
+/// outside the window it must nest in. Pure — property-tested under
+/// randomized asymmetric RTT jitter in `tests/net_trace.rs`.
+pub fn map_remote_span(
+    ts_us: f64,
+    dur_us: f64,
+    offset_us: f64,
+    window: (f64, f64),
+) -> (f64, f64) {
+    let (lo, hi) = window;
+    let hi = hi.max(lo);
+    let start = (ts_us + offset_us).clamp(lo, hi);
+    let end = (ts_us + offset_us + dur_us.max(0.0)).clamp(start, hi);
+    (start, end - start)
 }
 
 struct TrackBuf {
@@ -70,9 +145,16 @@ impl Tracer {
 
     /// An active tracer; the epoch (ts = 0) is now.
     pub fn enabled() -> Tracer {
+        Tracer::enabled_with_epoch(Instant::now())
+    }
+
+    /// An active tracer with an explicit epoch — `rnode` pins its
+    /// tracer to the connection-accept instant so the same epoch
+    /// anchors both its spans and the `Ping` clock-sync replies.
+    pub fn enabled_with_epoch(epoch: Instant) -> Tracer {
         Tracer {
             inner: Some(Arc::new(Inner {
-                epoch: Instant::now(),
+                epoch,
                 tracks: Mutex::new(Vec::new()),
             })),
         }
@@ -96,6 +178,80 @@ impl Tracer {
 
     pub fn is_enabled(&self) -> bool {
         self.inner.is_some()
+    }
+
+    /// Microseconds from this tracer's epoch to `t` (clamped at 0; 0 on
+    /// a disabled tracer). The clock-offset estimator uses this to
+    /// express its ping midpoints in trace time.
+    pub fn us_since_epoch(&self, t: Instant) -> f64 {
+        match &self.inner {
+            Some(inner) => {
+                t.saturating_duration_since(inner.epoch).as_secs_f64() * 1e6
+            }
+            None => 0.0,
+        }
+    }
+
+    /// Take every recorded event out of every track, tagged with its
+    /// track name — the serialization point for `NetResponse::Trace`.
+    /// Buffers are left empty (a second fetch returns only new spans);
+    /// track registrations stay. Empty on a disabled tracer.
+    pub fn drain_remote_spans(&self) -> Vec<TraceSpan> {
+        let Some(inner) = &self.inner else {
+            return Vec::new();
+        };
+        let mut out = Vec::new();
+        let tracks = inner.tracks.lock().expect("track registry");
+        for t in tracks.iter() {
+            let events =
+                std::mem::take(&mut *t.events.lock().expect("track buffer"));
+            for e in events {
+                out.push(TraceSpan {
+                    track: t.name.clone(),
+                    name: e.name,
+                    instant: e.ph != "X",
+                    ts_us: e.ts_us,
+                    dur_us: e.dur_us,
+                    args: e.args,
+                });
+            }
+        }
+        out
+    }
+
+    /// Fold a fetched batch of remote spans into this trace as ONE new
+    /// track named `label`, remapping each span's remote-epoch
+    /// timestamp by `offset_us` (local ≈ remote + offset) and clamping
+    /// into `[0, now]` via [`map_remote_span`]. Returns the number of
+    /// spans merged (0 on a disabled tracer).
+    pub fn merge_remote(
+        &self,
+        label: &str,
+        spans: Vec<TraceSpan>,
+        offset_us: f64,
+    ) -> usize {
+        if self.inner.is_none() || spans.is_empty() {
+            return 0;
+        }
+        let window = (0.0, self.us_since_epoch(Instant::now()));
+        let track = self.track(label);
+        let Some(h) = &track.inner else {
+            return 0;
+        };
+        let mut merged = 0usize;
+        for s in spans {
+            let (ts_us, dur_us) =
+                map_remote_span(s.ts_us, s.dur_us, offset_us, window);
+            h.push_raw(Event {
+                name: s.name,
+                ph: if s.instant { "i" } else { "X" },
+                ts_us,
+                dur_us,
+                args: s.args,
+            });
+            merged += 1;
+        }
+        merged
     }
 
     /// Register a new track (one per thread/node; `name` becomes the
@@ -143,8 +299,8 @@ impl Tracer {
                 );
                 for e in t.events.lock().expect("track buffer").iter() {
                     let mut args = Json::obj();
-                    for &(k, v) in &e.args {
-                        args = args.set(k, v);
+                    for (k, v) in &e.args {
+                        args = args.set(k.as_str(), *v);
                     }
                     let mut j = Json::obj()
                         .set("ph", e.ph)
@@ -179,6 +335,101 @@ impl Tracer {
     }
 }
 
+/// Validate a `TRACE_*.json` artifact on disk — the CI gate run by
+/// `bench_validate --chrome-trace`. Checks, in order:
+///
+/// * the file parses as JSON (`util::json`, the same parser the rest of
+///   the project trusts) and holds a non-empty `traceEvents` array;
+/// * at least `min_tracks` `thread_name` metadata events are present
+///   (one per expected track: with N remote nodes merged, N node tracks
+///   on top of the local ones);
+/// * every event carries a known phase (`M`/`X`/`i`) and finite,
+///   non-negative `ts` (and `dur` for `X` spans);
+/// * per track, span COMPLETION times (`ts + dur`) are monotone
+///   non-decreasing in document order — the order events are recorded
+///   in on a single thread, preserved by drain → merge. A violation
+///   means the clock-offset remap reordered or corrupted a batch.
+pub fn validate_chrome_trace_file(
+    path: &std::path::Path,
+    min_tracks: usize,
+) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let doc = Json::parse(&text)
+        .with_context(|| format!("parsing {}", path.display()))?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .context("missing traceEvents array")?;
+    ensure!(!events.is_empty(), "traceEvents is empty");
+
+    let mut tracks = 0usize;
+    // (tid, last span end) per track; tids are small dense ints, a vec
+    // scan beats pulling in a map.
+    let mut last_end: Vec<(f64, f64)> = Vec::new();
+    const EPS_US: f64 = 1.0; // float-rounding slack on the µs clock
+    for (i, e) in events.iter().enumerate() {
+        let ph = e
+            .get("ph")
+            .and_then(Json::as_str)
+            .with_context(|| format!("event {i}: missing ph"))?;
+        match ph {
+            "M" => {
+                if e.get("name").and_then(Json::as_str)
+                    == Some("thread_name")
+                {
+                    tracks += 1;
+                }
+            }
+            "X" | "i" => {
+                let ts = e
+                    .get("ts")
+                    .and_then(Json::as_f64)
+                    .with_context(|| format!("event {i}: missing ts"))?;
+                ensure!(
+                    ts.is_finite() && ts >= 0.0,
+                    "event {i}: bad ts {ts}"
+                );
+                let dur = if ph == "X" {
+                    let d = e
+                        .get("dur")
+                        .and_then(Json::as_f64)
+                        .with_context(|| format!("event {i}: missing dur"))?;
+                    ensure!(
+                        d.is_finite() && d >= 0.0,
+                        "event {i}: bad dur {d}"
+                    );
+                    d
+                } else {
+                    0.0
+                };
+                let tid = e
+                    .get("tid")
+                    .and_then(Json::as_f64)
+                    .with_context(|| format!("event {i}: missing tid"))?;
+                let end = ts + dur;
+                match last_end.iter_mut().find(|(t, _)| *t == tid) {
+                    Some((_, prev)) => {
+                        ensure!(
+                            end >= *prev - EPS_US,
+                            "event {i}: track {tid} span ends at {end} \
+                             before the previous span's {prev}"
+                        );
+                        *prev = prev.max(end);
+                    }
+                    None => last_end.push((tid, end)),
+                }
+            }
+            other => bail!("event {i}: unknown phase {other:?}"),
+        }
+    }
+    ensure!(
+        tracks >= min_tracks,
+        "only {tracks} thread_name tracks, expected at least {min_tracks}"
+    );
+    Ok(())
+}
+
 #[derive(Clone)]
 struct TrackHandle {
     epoch: Instant,
@@ -208,8 +459,15 @@ impl TrackHandle {
             ph,
             ts_us,
             dur_us,
-            args: args.to_vec(),
+            args: args.iter().map(|&(k, v)| (k.to_string(), v)).collect(),
         });
+    }
+
+    /// Append a pre-timestamped event (already in THIS tracer's epoch)
+    /// — the merge path for remote spans, which carry explicit `ts_us`
+    /// rather than `Instant`s.
+    fn push_raw(&self, event: Event) {
+        self.events.lock().expect("track buffer").push(event);
     }
 }
 
@@ -415,6 +673,93 @@ mod tests {
                 stack.push((s, e));
             }
         });
+    }
+
+    /// Drain → merge round trip: a "remote" tracer's spans land on a
+    /// fresh local track with the offset applied, clamped into the
+    /// local timeline, and the remote buffers come back empty.
+    #[test]
+    fn drain_and_merge_remote_spans() {
+        let remote = Tracer::enabled();
+        let rt = remote.track("rnode");
+        {
+            let _s = rt.span("attend").arg("layer", 1.0);
+        }
+        rt.instant("mark", &[]);
+        let spans = remote.drain_remote_spans();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].track, "rnode");
+        assert!(!spans[0].instant);
+        assert!(spans[1].instant);
+        assert!(
+            remote.drain_remote_spans().is_empty(),
+            "drain must empty the buffers"
+        );
+
+        let local = Tracer::enabled();
+        let merged = local.merge_remote("node0", spans, 0.0);
+        assert_eq!(merged, 2);
+        let parsed = Json::parse(&local.chrome_trace().render()).unwrap();
+        let events = parsed.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let has_track = events.iter().any(|e| {
+            e.get("name").and_then(Json::as_str) == Some("thread_name")
+                && e.get("args").and_then(|a| a.get("name")).and_then(Json::as_str)
+                    == Some("node0")
+        });
+        assert!(has_track, "merged spans must land on their own track");
+        for e in events.iter().filter(|e| {
+            e.get("ph").and_then(Json::as_str) == Some("X")
+        }) {
+            let ts = e.get("ts").and_then(Json::as_f64).unwrap();
+            let dur = e.get("dur").and_then(Json::as_f64).unwrap();
+            assert!(ts >= 0.0 && dur >= 0.0);
+        }
+    }
+
+    /// The pure remap clamps hostile inputs: negative durations, spans
+    /// before the window, spans past it.
+    #[test]
+    fn map_remote_span_clamps() {
+        let w = (10.0, 100.0);
+        assert_eq!(map_remote_span(0.0, 5.0, 0.0, w), (10.0, 0.0));
+        assert_eq!(map_remote_span(50.0, -3.0, 0.0, w), (50.0, 0.0));
+        let (ts, dur) = map_remote_span(90.0, 50.0, 0.0, w);
+        assert_eq!((ts, ts + dur), (90.0, 100.0));
+        // offset shifts before clamping
+        assert_eq!(map_remote_span(30.0, 10.0, 20.0, w), (50.0, 10.0));
+    }
+
+    /// The CI validator accepts a real export (local + merged remote
+    /// tracks) and rejects shortfalls and corruption.
+    #[test]
+    fn chrome_trace_file_validator() {
+        let tr = Tracer::enabled();
+        let t = tr.track("local");
+        {
+            let _s = t.span("work");
+        }
+        let remote = Tracer::enabled();
+        {
+            let _s = remote.track("rnode").span("attend");
+        }
+        assert_eq!(
+            tr.merge_remote("rnode0", remote.drain_remote_spans(), 0.0),
+            1
+        );
+        let path = std::env::temp_dir()
+            .join(format!("fd_trace_validate_{}.json", std::process::id()));
+        tr.write_chrome_trace(&path).unwrap();
+        validate_chrome_trace_file(&path, 2).expect("valid trace");
+        let err = validate_chrome_trace_file(&path, 9).unwrap_err();
+        assert!(err.to_string().contains("thread_name tracks"), "{err:#}");
+        // corruption: a negative duration must fail
+        std::fs::write(
+            &path,
+            r#"{"traceEvents":[{"ph":"X","ts":1,"dur":-2,"tid":0}]}"#,
+        )
+        .unwrap();
+        assert!(validate_chrome_trace_file(&path, 0).is_err());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //!       𝕋(ℬ) (eq. 10 → 11), subject to the memory constraint (eq. 9).
 
 use crate::model::{ModelSpec, Precision};
+use crate::obs::NodeProfile;
 
 use super::gpu::{CpuModel, GpuModel};
 
@@ -75,6 +76,34 @@ pub struct Planner {
 
 impl Planner {
     pub fn new(gpu: GpuModel, cpu: CpuModel) -> Planner {
+        Planner { gpu, cpu }
+    }
+
+    /// A planner whose CPU model is MEASURED, not assumed: ingest the
+    /// live per-node [`NodeProfile`]s (as surfaced by
+    /// `AttendBackend::net_stats`) and use their mean EWMA KV-streaming
+    /// bandwidth as the per-socket R-Part rate — replacing the
+    /// assumed-equal Table 1 device model with what the deployed,
+    /// possibly heterogeneous nodes actually sustain. Profiles with no
+    /// samples are ignored; with no sampled profile at all the
+    /// `fallback` CPU model is used unchanged.
+    pub fn from_measured_profiles(
+        gpu: GpuModel,
+        profiles: &[NodeProfile],
+        fallback: CpuModel,
+    ) -> Planner {
+        let sampled: Vec<f64> = profiles
+            .iter()
+            .filter(|p| p.samples() > 0 && p.bytes_per_s > 0.0)
+            .map(|p| p.bytes_per_s)
+            .collect();
+        let cpu = if sampled.is_empty() {
+            fallback
+        } else {
+            CpuModel::from_measured(
+                sampled.iter().sum::<f64>() / sampled.len() as f64,
+            )
+        };
         Planner { gpu, cpu }
     }
 
@@ -235,6 +264,61 @@ mod tests {
             tiny_mem.batch * 1024 / 2
                 <= 10_000 * tiny_mem.sockets
         );
+    }
+
+    /// Feed a NodeProfile through observe() so it carries a measured
+    /// EWMA bandwidth: `bytes` streamed in `us` microseconds.
+    fn measured(bytes: u64, us: u64) -> NodeProfile {
+        let mut p = NodeProfile::default();
+        p.observe(1, bytes, std::time::Duration::from_micros(us));
+        p
+    }
+
+    #[test]
+    fn measured_profiles_replace_the_assumed_cpu_model() {
+        let gpu = || GpuModel::new(A10);
+        let fallback = CpuModel::from_device(EPYC_7452);
+        // 100 GB/s vs 25 GB/s measured KV-streaming bandwidth.
+        let fast = Planner::from_measured_profiles(
+            gpu(),
+            &[measured(100_000, 1), measured(100_000, 1)],
+            fallback,
+        );
+        let slow = Planner::from_measured_profiles(
+            gpu(),
+            &[measured(25_000, 1), measured(25_000, 1)],
+            fallback,
+        );
+        let pf = fast.min_sockets(&LLAMA_7B, 512, 1024, Precision::F16);
+        let ps = slow.min_sockets(&LLAMA_7B, 512, 1024, Precision::F16);
+        assert!(pf < ps, "fast nodes need fewer sockets: {pf} !< {ps}");
+        // Unsampled profiles are ignored; mixing one in changes nothing.
+        let mixed = Planner::from_measured_profiles(
+            gpu(),
+            &[measured(100_000, 1), NodeProfile::default()],
+            fallback,
+        );
+        assert_eq!(
+            mixed.min_sockets(&LLAMA_7B, 512, 1024, Precision::F16),
+            Planner::from_measured_profiles(
+                gpu(),
+                &[measured(100_000, 1)],
+                fallback
+            )
+            .min_sockets(&LLAMA_7B, 512, 1024, Precision::F16),
+        );
+    }
+
+    #[test]
+    fn no_sampled_profiles_fall_back_to_the_device_model() {
+        let fallback = CpuModel::from_device(EPYC_7452);
+        let p = Planner::from_measured_profiles(
+            GpuModel::new(A10),
+            &vec![NodeProfile::default(); 3],
+            fallback,
+        );
+        let want = planner().plan(&LLAMA_7B, PlanInput::default());
+        assert_eq!(p.plan(&LLAMA_7B, PlanInput::default()), want);
     }
 
     #[test]

@@ -599,7 +599,12 @@ impl ThreadedPipeline {
         timing: &mut StepTiming,
     ) -> Result<(usize, usize, Vec<f32>)> {
         let t_g = Instant::now();
-        let inf = self.inflight.take().expect("no attend in flight");
+        let Some(inf) = self.inflight.take() else {
+            // a gather with nothing scattered is a pipeline-sequencing
+            // bug, but the pool is healthy — route it instead of
+            // poisoning the S-thread
+            bail!("gather with no attend in flight");
+        };
         let step = self
             .pool
             .wait_attend(inf.pending)

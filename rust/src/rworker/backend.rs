@@ -110,11 +110,22 @@ pub trait AttendBackend: Send {
     fn install_tracer(&mut self, _tracer: Tracer) {}
 
     /// Wire-level counters, one entry per node — frames/bytes per
-    /// connection, attend ops, errors, and the modeled-vs-measured
-    /// payload drift detector. Backends with no wire (in-process
-    /// threads) report none.
+    /// connection, attend ops, errors, the modeled-vs-measured payload
+    /// drift detector, and the live per-node performance profile.
+    /// Backends with no wire (in-process threads) report none.
     fn net_stats(&self) -> Vec<NetStats> {
         Vec::new()
+    }
+
+    /// Fetch every remote node's server-side trace spans
+    /// (`NetRequest::FetchTrace`), remap them into the installed
+    /// tracer's epoch via the node's clock-offset estimate, and merge
+    /// them as one track per node. Returns the number of spans merged.
+    /// All live nodes are drained before the first failure is reported,
+    /// so survivors' partial traces still land even when a node died
+    /// mid-fetch. Backends with no wire (or no tracer) merge nothing.
+    fn merge_remote_traces(&mut self) -> Result<usize> {
+        Ok(0)
     }
 
     /// Scatter one layer's tasks, attend in parallel, gather.

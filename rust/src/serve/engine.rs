@@ -369,7 +369,15 @@ impl ServeEngine {
                         0
                     }
                 };
-                let slot = slots.free_slot().expect("free slot checked");
+                let Some(slot) = slots.free_slot() else {
+                    // the loop condition guarantees a free slot; if the
+                    // invariant ever breaks, route it — the engine holds
+                    // live KV a panic would strand
+                    bail!(
+                        "admission selected request {} with no free slot",
+                        r.id
+                    );
+                };
                 total_wait_steps += t - meta.arrive_step;
                 slots.place(
                     slot,
@@ -387,7 +395,7 @@ impl ServeEngine {
                         wall_last_token_s: 0.0,
                         ttft_s: 0.0,
                     },
-                );
+                )?;
             }
             peak_active = peak_active.max(slots.active_count());
             // 3. assemble one ragged pass over every occupied slot
@@ -472,7 +480,13 @@ impl ServeEngine {
                 let last = next[row + seg.rows - 1];
                 row += seg.rows;
                 let done = {
-                    let req = slots.get_mut(seg.slot).expect("active slot");
+                    let Some(req) = slots.get_mut(seg.slot) else {
+                        bail!(
+                            "pass segment references empty slot {} at step \
+                             {t}",
+                            seg.slot
+                        );
+                    };
                     if seg.prefill {
                         req.fed += seg.rows;
                         if req.decoding() {
@@ -496,7 +510,7 @@ impl ServeEngine {
                     req.done()
                 };
                 if done {
-                    let req = slots.take(seg.slot);
+                    let req = slots.take(seg.slot)?;
                     finished_seqs.push(req.seq_id);
                     let e2e_s = now_s - req.wall_arrive_s;
                     e2e_h.record_secs(e2e_s);
@@ -552,6 +566,10 @@ impl ServeEngine {
             peak_active,
             kv_allocated_bytes: peak_kv_allocated,
             kv_logical_bytes: peak_kv_logical,
+            // per-node wire totals and measured profiles at end of run
+            // (empty for in-process backends): the serving layer's view
+            // of node heterogeneity
+            node_stats: self.fd.net_stats(),
         };
         Ok(ServeOutcome {
             report,

@@ -4,6 +4,7 @@
 //! rate-vs-latency sweep plots.
 
 use crate::metrics::Histogram;
+use crate::obs::NetStats;
 use crate::util::json::Json;
 
 /// One finished request, with its generated tokens and latencies.
@@ -65,6 +66,10 @@ pub struct ServeReport {
     /// Peak bytes the logical KV would occupy stored contiguously and
     /// unshared.
     pub kv_logical_bytes: usize,
+    /// Per-node wire accounting and measured performance profiles
+    /// (EWMA throughput, service-time percentiles, queue depth) at the
+    /// end of the run. Empty for in-process backends (no wire).
+    pub node_stats: Vec<NetStats>,
 }
 
 impl ServeReport {
@@ -119,6 +124,12 @@ impl ServeReport {
             .set("ttft", self.ttft.to_json_ms())
             .set("itl", self.itl.to_json_ms())
             .set("e2e", self.e2e.to_json_ms())
+            .set(
+                "nodes",
+                Json::Arr(
+                    self.node_stats.iter().map(NetStats::to_json).collect(),
+                ),
+            )
     }
 
     /// Multi-line human summary.

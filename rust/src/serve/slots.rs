@@ -7,6 +7,14 @@
 //! queue on the next step WITHOUT disturbing in-flight neighbors —
 //! continuous batching at request granularity, in contrast to the
 //! wave-at-a-time `server::AdmissionQueue` front-end.
+//!
+//! Slot misuse (placing into an occupied slot, taking from an empty
+//! one) is an engine-logic bug, but it surfaces as a routed `Err`
+//! rather than a panic: a serving engine mid-run holds live KV on
+//! every node, and the routed-error discipline says the caller decides
+//! how to unwind, not a poisoned thread.
+
+use anyhow::{bail, Result};
 
 /// One admitted, in-flight request occupying a slot.
 #[derive(Clone, Debug)]
@@ -85,23 +93,34 @@ impl SlotManager {
         self.slots.iter().position(|s| s.is_none())
     }
 
-    /// Place a request into an empty slot.
-    pub fn place(&mut self, slot: usize, req: ActiveRequest) {
-        assert!(
-            self.slots[slot].is_none(),
-            "slot {slot} already occupied by request {}",
-            self.slots[slot].as_ref().unwrap().request_id
-        );
+    /// Place a request into an empty slot; a routed error if the slot
+    /// is occupied (the request is handed back inside the error path by
+    /// NOT being consumed — the caller still owns the queue it came
+    /// from).
+    pub fn place(&mut self, slot: usize, req: ActiveRequest) -> Result<()> {
+        if let Some(occupant) = &self.slots[slot] {
+            bail!(
+                "slot {slot} already occupied by request {} (placing \
+                 request {})",
+                occupant.request_id,
+                req.request_id
+            );
+        }
         self.slots[slot] = Some(req);
+        Ok(())
     }
 
     pub fn get_mut(&mut self, slot: usize) -> Option<&mut ActiveRequest> {
         self.slots[slot].as_mut()
     }
 
-    /// Retire the request in `slot`, freeing it for backfill.
-    pub fn take(&mut self, slot: usize) -> ActiveRequest {
-        self.slots[slot].take().expect("taking an empty slot")
+    /// Retire the request in `slot`, freeing it for backfill; a routed
+    /// error if the slot is already empty.
+    pub fn take(&mut self, slot: usize) -> Result<ActiveRequest> {
+        match self.slots[slot].take() {
+            Some(req) => Ok(req),
+            None => bail!("taking an empty slot {slot}"),
+        }
     }
 
     /// Occupied slots in slot order (stable row order across steps for
@@ -140,15 +159,15 @@ mod tests {
         let mut sm = SlotManager::new(3);
         for id in 0..3 {
             let s = sm.free_slot().unwrap();
-            sm.place(s, req(id));
+            sm.place(s, req(id)).unwrap();
         }
         assert_eq!(sm.free_count(), 0);
         assert_eq!(sm.free_slot(), None);
         // request 1 (slot 1) finishes; neighbors keep their slots
-        let finished = sm.take(1);
+        let finished = sm.take(1).unwrap();
         assert_eq!(finished.request_id, 1);
         assert_eq!(sm.free_slot(), Some(1));
-        sm.place(1, req(9));
+        sm.place(1, req(9)).unwrap();
         let ids: Vec<u64> =
             sm.iter_active().map(|(_, r)| r.request_id).collect();
         assert_eq!(ids, vec![0, 9, 2]); // slot order, neighbors untouched
@@ -164,11 +183,16 @@ mod tests {
         assert!(r.done());
     }
 
+    /// Slot misuse is a routed error, not a panic: double placement
+    /// leaves the occupant untouched; taking an empty slot names it.
     #[test]
-    #[should_panic(expected = "already occupied")]
-    fn double_place_panics() {
+    fn slot_misuse_is_a_routed_error() {
         let mut sm = SlotManager::new(1);
-        sm.place(0, req(0));
-        sm.place(0, req(1));
+        sm.place(0, req(0)).unwrap();
+        let err = sm.place(0, req(1)).unwrap_err();
+        assert!(format!("{err:#}").contains("already occupied"), "{err:#}");
+        assert_eq!(sm.take(0).unwrap().request_id, 0, "occupant displaced");
+        let err = sm.take(0).unwrap_err();
+        assert!(format!("{err:#}").contains("empty slot"), "{err:#}");
     }
 }

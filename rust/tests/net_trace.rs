@@ -1,0 +1,329 @@
+//! Acceptance suite for CROSS-PROCESS tracing (ISSUE 9): remote rnode
+//! span capture, RTT-ping clock alignment, and the merged Chrome trace.
+//!
+//! Pins:
+//! 1. a 2-rnode TCP run with tracing enabled exports ONE Chrome trace
+//!    where each node's server-side spans (queue_wait / decode / attend
+//!    / kv_append / encode) appear on that node's own track,
+//!    clock-aligned with the client-side submit→reply spans, and the
+//!    per-node profiles carry measured throughput;
+//! 2. killing a node mid-`FetchTrace` routes an error NAMING the node,
+//!    and the survivors' partial traces still merge into a valid trace;
+//! 3. (property) the min-RTT-midpoint clock-offset estimator recovers
+//!    the true offset within ±min_rtt/2 under randomized asymmetric
+//!    per-leg delays;
+//! 4. (property) remapped remote spans never have negative durations
+//!    and never extend past the enclosing client-side window.
+
+use fastdecode::coordinator::real::{FastDecode, FastDecodeConfig};
+use fastdecode::model::{Precision, TINY};
+use fastdecode::net::{
+    spawn_rnode_process, NodeConfig, RemotePool, RnodeProcess, WireMode,
+};
+use fastdecode::obs::{
+    map_remote_span, pick_clock_sync, validate_chrome_trace_file, Tracer,
+};
+use fastdecode::rworker::{AttendBackend, SeqTask};
+use fastdecode::util::json::Json;
+use fastdecode::util::{prop, Rng};
+
+const CAP: usize = 64;
+
+fn engine_cfg(batch: usize) -> FastDecodeConfig {
+    FastDecodeConfig {
+        batch,
+        sockets: 2,
+        precision: Precision::F16,
+        capacity_per_seq: CAP,
+        layers: 2,
+        ..Default::default()
+    }
+}
+
+fn node_cfg(wire: WireMode) -> NodeConfig {
+    NodeConfig::from_spec(&TINY, CAP, 8, Precision::F16, wire)
+        .with_trace(true)
+}
+
+fn spawn_rnode() -> RnodeProcess {
+    spawn_rnode_process(env!("CARGO_BIN_EXE_rnode"))
+        .expect("spawning the rnode binary")
+}
+
+/// `tid → track name` from the trace's thread_name metadata events.
+fn track_names(doc: &Json) -> Vec<(f64, String)> {
+    doc.get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents")
+        .iter()
+        .filter(|e| {
+            e.get("name").and_then(Json::as_str) == Some("thread_name")
+        })
+        .map(|e| {
+            (
+                e.get("tid").and_then(Json::as_f64).expect("tid"),
+                e.get("args")
+                    .and_then(|a| a.get("name"))
+                    .and_then(Json::as_str)
+                    .expect("track name")
+                    .to_string(),
+            )
+        })
+        .collect()
+}
+
+/// `(name, ts, dur)` of every complete span on one track.
+fn spans_on(doc: &Json, tid: f64) -> Vec<(String, f64, f64)> {
+    doc.get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents")
+        .iter()
+        .filter(|e| {
+            e.get("ph").and_then(Json::as_str) == Some("X")
+                && e.get("tid").and_then(Json::as_f64) == Some(tid)
+        })
+        .map(|e| {
+            (
+                e.get("name").and_then(Json::as_str).unwrap().to_string(),
+                e.get("ts").and_then(Json::as_f64).unwrap(),
+                e.get("dur").and_then(Json::as_f64).unwrap(),
+            )
+        })
+        .collect()
+}
+
+/// Pin 1: the full flow over real TCP — two traced rnode processes, a
+/// generating engine, fetch + clock-align + merge, one valid Chrome
+/// trace with one track per node, remote attend spans landing inside
+/// the window of the client-side submit→reply spans.
+#[test]
+fn two_traced_rnodes_merge_into_one_aligned_timeline() {
+    let nodes = [spawn_rnode(), spawn_rnode()];
+    let addrs: Vec<String> = nodes.iter().map(|n| n.addr.clone()).collect();
+    let pool = RemotePool::connect_tcp(&addrs, node_cfg(WireMode::F16))
+        .expect("connecting to rnodes");
+    let mut fd = FastDecode::with_backend_traced(
+        TINY,
+        engine_cfg(4),
+        Box::new(pool),
+        Tracer::enabled(),
+    )
+    .expect("engine over tcp");
+    let prompts = fastdecode::workload::fixed_batch(4, 2, TINY.vocab, 17);
+    fd.generate(&prompts, 8).expect("traced generate");
+
+    let merged = fd.merge_remote_traces().expect("fetching remote traces");
+    assert!(merged > 0, "no remote spans merged");
+    // the run's measured per-node profiles carry throughput
+    for st in fd.net_stats() {
+        assert!(st.profile.samples() > 0, "{}: no samples", st.label);
+        assert!(st.profile.tokens_per_s > 0.0);
+        assert!(st.profile.bytes_per_s > 0.0);
+    }
+
+    let path = std::env::temp_dir()
+        .join(format!("fd_net_trace_{}.json", std::process::id()));
+    fd.tracer().write_chrome_trace(&path).expect("writing trace");
+    // 2 merged node tracks + at least the 2 client-side r-node tracks
+    validate_chrome_trace_file(&path, 4).expect("trace validates");
+
+    let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let tracks = track_names(&doc);
+    for i in 0..2 {
+        let remote_tid = tracks
+            .iter()
+            .find(|(_, n)| n == &format!("rnode{i}"))
+            .unwrap_or_else(|| panic!("no rnode{i} track"))
+            .0;
+        let client_tid = tracks
+            .iter()
+            .find(|(_, n)| n == &format!("r-node{i}"))
+            .unwrap_or_else(|| panic!("no r-node{i} track"))
+            .0;
+        let remote = spans_on(&doc, remote_tid);
+        for want in ["queue_wait", "decode", "attend", "kv_append", "encode"]
+        {
+            assert!(
+                remote.iter().any(|(n, _, _)| n == want),
+                "rnode{i}: missing {want} span"
+            );
+        }
+        // clock alignment: every remote attend span must land inside
+        // the window covered by this node's client-side submit→reply
+        // spans (offset error is bounded by min-RTT/2; allow generous
+        // scheduler slack — an epoch mix-up would be off by much more)
+        let client = spans_on(&doc, client_tid);
+        let lo = client
+            .iter()
+            .map(|&(_, ts, _)| ts)
+            .fold(f64::INFINITY, f64::min);
+        let hi = client
+            .iter()
+            .map(|&(_, ts, dur)| ts + dur)
+            .fold(0.0f64, f64::max);
+        assert!(lo.is_finite() && hi > lo, "no client spans for node {i}");
+        const SLACK_US: f64 = 10_000.0;
+        let mut aligned = 0usize;
+        for (name, ts, dur) in &remote {
+            if name == "attend" {
+                assert!(
+                    *ts >= lo - SLACK_US && ts + dur <= hi + SLACK_US,
+                    "rnode{i} attend [{ts}, {}] outside client window \
+                     [{lo}, {hi}]",
+                    ts + dur,
+                );
+                aligned += 1;
+            }
+        }
+        assert!(aligned > 0, "rnode{i}: no attend spans");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// Pin 2: a node killed before `FetchTrace` yields a routed error that
+/// names it, while the survivor's spans still merge — the partial
+/// trace stays a valid Chrome trace with the survivor's track.
+#[test]
+fn killed_node_mid_fetch_names_node_and_survivors_merge() {
+    let mut victim = spawn_rnode();
+    let survivor = spawn_rnode();
+    let addrs = vec![victim.addr.clone(), survivor.addr.clone()];
+    let mut pool = RemotePool::connect_tcp(&addrs, node_cfg(WireMode::F16))
+        .expect("connecting to rnodes");
+    let tracer = Tracer::enabled();
+    pool.install_tracer(tracer.clone());
+    // 1 → node 0 (victim); 2 → node 1 (survivor)
+    pool.add_seqs(&[1, 2]).unwrap();
+    let mut rng = Rng::new(9);
+    let mk = |rng: &mut Rng, id: u64| SeqTask {
+        seq_id: id,
+        q: rng.normal_vec(TINY.hidden, 1.0),
+        k_new: rng.normal_vec(TINY.hidden, 1.0),
+        v_new: rng.normal_vec(TINY.hidden, 1.0),
+    };
+    let tasks = vec![mk(&mut rng, 1), mk(&mut rng, 2)];
+    assert_eq!(pool.attend(0, tasks).unwrap().outputs.len(), 2);
+
+    victim.child.kill().expect("killing rnode");
+    victim.child.wait().expect("reaping rnode");
+
+    let err = pool.merge_remote_traces().unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("node 0"), "error does not name the node: {msg}");
+
+    // the survivor's spans landed despite the failure
+    let doc = Json::parse(&tracer.chrome_trace().render()).unwrap();
+    let tracks = track_names(&doc);
+    let tid = tracks
+        .iter()
+        .find(|(_, n)| n == "rnode1")
+        .expect("survivor track merged")
+        .0;
+    let spans = spans_on(&doc, tid);
+    assert!(
+        spans.iter().any(|(n, _, _)| n == "attend"),
+        "survivor trace has no attend span"
+    );
+    assert!(
+        !tracks.iter().any(|(_, n)| n == "rnode0"),
+        "dead node must not contribute a merged track"
+    );
+    // and the partial trace is still a valid artifact
+    let path = std::env::temp_dir()
+        .join(format!("fd_net_trace_partial_{}.json", std::process::id()));
+    tracer.write_chrome_trace(&path).unwrap();
+    validate_chrome_trace_file(&path, 3).expect("partial trace validates");
+    std::fs::remove_file(&path).ok();
+}
+
+/// Pin 3: under randomized asymmetric per-leg delays, the min-RTT
+/// midpoint estimate is off by exactly (back − out)/2 of the winning
+/// sample, so the error stays within ±min_rtt/2 of the true offset.
+#[test]
+fn prop_clock_offset_recovers_within_min_rtt_bound() {
+    prop::check("clock-offset-min-rtt", 200, |g| {
+        // true node→local clock offset, µs (either sign, up to ~0.5 s)
+        let true_offset = g.f32_in(-5e5, 5e5) as f64;
+        let n = g.usize_in(1, 12);
+        let mut samples = Vec::with_capacity(n);
+        let mut now = g.f32_in(0.0, 1e3) as f64;
+        let mut min_rtt = f64::INFINITY;
+        for _ in 0..n {
+            let out = g.f32_in(1.0, 500.0) as f64;
+            let back = g.f32_in(1.0, 500.0) as f64;
+            // the node stamps its reply out µs after our send; its
+            // clock reads local − offset
+            let node_us = now + out - true_offset;
+            samples.push((now, node_us, now + out + back));
+            min_rtt = min_rtt.min(out + back);
+            now += out + back + g.f32_in(1.0, 100.0) as f64;
+        }
+        let (mid_us, node_us, rtt) =
+            pick_clock_sync(&samples).expect("burst has samples");
+        assert!(
+            (rtt - min_rtt).abs() < 1e-6,
+            "did not pick the min-RTT sample: {rtt} vs {min_rtt}"
+        );
+        let est = mid_us - node_us;
+        assert!(
+            (est - true_offset).abs() <= rtt / 2.0 + 1e-6,
+            "estimate {est} off true {true_offset} by more than \
+             min_rtt/2 = {}",
+            rtt / 2.0
+        );
+    });
+}
+
+/// Degenerate bursts are rejected, not mis-picked.
+#[test]
+fn clock_sync_rejects_unusable_samples() {
+    assert_eq!(pick_clock_sync(&[]), None);
+    // recv before send (clock misuse) and non-finite RTTs are skipped
+    assert_eq!(pick_clock_sync(&[(10.0, 0.0, 5.0)]), None);
+    assert_eq!(pick_clock_sync(&[(0.0, 0.0, f64::NAN)]), None);
+    let ok = pick_clock_sync(&[(10.0, 0.0, 5.0), (10.0, 7.0, 14.0)]);
+    assert_eq!(ok, Some((12.0, 7.0, 4.0)));
+}
+
+/// Pin 4: whatever the remote timestamps, durations and offset estimate
+/// are, the remap never produces a negative duration and never lets a
+/// span escape the enclosing client-side window.
+#[test]
+fn prop_remapped_spans_stay_inside_the_window() {
+    prop::check("remote-span-window", 300, |g| {
+        let lo = g.f32_in(0.0, 1e3) as f64;
+        let hi = lo + g.f32_in(0.0, 1e6) as f64;
+        let ts = g.f32_in(-1e6, 2e6) as f64;
+        let dur = g.f32_in(-1e3, 1e6) as f64;
+        let off = g.f32_in(-1e6, 1e6) as f64;
+        let (s, d) = map_remote_span(ts, dur, off, (lo, hi));
+        assert!(d >= 0.0, "negative duration {d}");
+        assert!(
+            s >= lo && s + d <= hi,
+            "span [{s}, {}] escapes window [{lo}, {hi}]",
+            s + d
+        );
+    });
+}
+
+/// The same invariant holds through `Tracer::merge_remote` with a
+/// hostile offset: every merged span stays inside [0, now].
+#[test]
+fn merge_remote_clamps_hostile_offsets() {
+    let remote = Tracer::enabled();
+    let rt = remote.track("rnode");
+    {
+        let _s = rt.span("attend");
+    }
+    let spans = remote.drain_remote_spans();
+    let local = Tracer::enabled();
+    assert_eq!(local.merge_remote("rnode0", spans, 1e12), 1);
+    let doc = Json::parse(&local.chrome_trace().render()).unwrap();
+    let tracks = track_names(&doc);
+    let tid = tracks.iter().find(|(_, n)| n == "rnode0").unwrap().0;
+    for (_, ts, dur) in spans_on(&doc, tid) {
+        assert!(ts >= 0.0 && dur >= 0.0);
+        // clamped into the local timeline: no span a million seconds out
+        assert!(ts + dur < 60e6, "span escaped the [0, now] window: {ts}");
+    }
+}
