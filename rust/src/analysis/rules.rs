@@ -373,9 +373,13 @@ pub fn check_codec(files: &BTreeMap<String, String>, out: &mut Vec<Violation>) {
         (
             "RRequest",
             "NetRequest",
-            &["Configure", "Ping", "FetchTrace"][..],
+            &["Configure", "Ping", "FetchTrace", "NodeStats"][..],
         ),
-        ("RResponse", "NetResponse", &["Err", "Pong", "Trace"][..]),
+        (
+            "RResponse",
+            "NetResponse",
+            &["Err", "Pong", "Trace", "NodeStats"][..],
+        ),
     ] {
         let Some(wire_vars) = wire_variants.get(wire) else {
             continue;

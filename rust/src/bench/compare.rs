@@ -1,0 +1,404 @@
+//! Perf-regression gate: compare fresh `BENCH_*.json` snapshots
+//! against the checked-in `rust/bench.baseline.json`.
+//!
+//! CI-scale benches are tiny and run on shared noisy runners, so the
+//! gate is deliberately NOISE-AWARE: it fails only on ratio changes
+//! far outside run-to-run variance (defaults: throughput below 50% of
+//! baseline, or p99 step latency above 1.75× baseline), and the
+//! baseline file can widen them further per repository. The gate's job
+//! is to catch a real regression — an accidental O(n²), a lost
+//! overlap, a serialization on the hot path — not 10% jitter.
+//!
+//! A snapshot with no baseline entry is a WARNING, not a failure: new
+//! benches land before their baseline does, and the baseline is then
+//! refreshed deliberately (a human re-runs the bench and commits the
+//! new numbers with the change that moved them).
+//!
+//! # Baseline schema (version 1)
+//!
+//! ```json
+//! {
+//!   "schema_version": 1,
+//!   "note": "provenance of the numbers",
+//!   "thresholds": { "min_tok_ratio": 0.2, "max_p99_ratio": 5.0 },
+//!   "benches": {
+//!     "fig9":  { "tok_per_s": 1500.0, "p99_ms": 30.0 },
+//!     "fig13_tcp": { "tok_per_s": 400.0, "p99_ms": 80.0 }
+//!   }
+//! }
+//! ```
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Bump when the baseline layout changes incompatibly.
+pub const BASELINE_SCHEMA_VERSION: u64 = 1;
+
+/// Ratio gates applied to `current / baseline`.
+#[derive(Clone, Copy, Debug)]
+pub struct CompareThresholds {
+    /// Fail when `tok_per_s(current) / tok_per_s(baseline)` drops
+    /// below this.
+    pub min_tok_ratio: f64,
+    /// Fail when `p99_ms(current) / p99_ms(baseline)` rises above
+    /// this.
+    pub max_p99_ratio: f64,
+}
+
+impl Default for CompareThresholds {
+    fn default() -> Self {
+        CompareThresholds {
+            min_tok_ratio: 0.5,
+            max_p99_ratio: 1.75,
+        }
+    }
+}
+
+/// One bench's pinned numbers.
+#[derive(Clone, Copy, Debug)]
+pub struct BaselinePoint {
+    pub tok_per_s: f64,
+    pub p99_ms: f64,
+}
+
+/// A parsed baseline file: thresholds plus per-bench points.
+#[derive(Clone, Debug)]
+pub struct Baseline {
+    pub thresholds: CompareThresholds,
+    /// (bench name, pinned numbers), in file order.
+    pub entries: Vec<(String, BaselinePoint)>,
+}
+
+impl Baseline {
+    pub fn point(&self, name: &str) -> Option<BaselinePoint> {
+        self.entries
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, p)| *p)
+    }
+}
+
+fn req_pos(j: &Json, ctx: &str, key: &str) -> Result<f64> {
+    let v = j
+        .get(key)
+        .and_then(Json::as_f64)
+        .with_context(|| format!("{ctx}: missing numeric field '{key}'"))?;
+    if !v.is_finite() || v <= 0.0 {
+        bail!("{ctx}: field '{key}' is {v}, want finite and > 0");
+    }
+    Ok(v)
+}
+
+/// Parse a baseline document (schema above).
+pub fn parse_baseline(doc: &Json) -> Result<Baseline> {
+    let version = doc
+        .get("schema_version")
+        .and_then(Json::as_f64)
+        .context("baseline: missing numeric 'schema_version'")?;
+    if version != BASELINE_SCHEMA_VERSION as f64 {
+        bail!(
+            "unsupported baseline schema_version {version} (want \
+             {BASELINE_SCHEMA_VERSION})"
+        );
+    }
+    let thresholds = match doc.get("thresholds") {
+        Some(t) => CompareThresholds {
+            min_tok_ratio: req_pos(t, "thresholds", "min_tok_ratio")?,
+            max_p99_ratio: req_pos(t, "thresholds", "max_p99_ratio")?,
+        },
+        None => CompareThresholds::default(),
+    };
+    if thresholds.min_tok_ratio >= 1.0 {
+        bail!(
+            "baseline: min_tok_ratio {} would fail an UNCHANGED bench \
+             (want < 1)",
+            thresholds.min_tok_ratio
+        );
+    }
+    if thresholds.max_p99_ratio <= 1.0 {
+        bail!(
+            "baseline: max_p99_ratio {} would fail an UNCHANGED bench \
+             (want > 1)",
+            thresholds.max_p99_ratio
+        );
+    }
+    let benches = match doc.get("benches") {
+        Some(Json::Obj(fields)) => fields,
+        _ => bail!("baseline: missing object field 'benches'"),
+    };
+    if benches.is_empty() {
+        bail!("baseline: empty 'benches' — nothing to gate");
+    }
+    let mut entries = Vec::with_capacity(benches.len());
+    for (name, point) in benches {
+        entries.push((
+            name.clone(),
+            BaselinePoint {
+                tok_per_s: req_pos(
+                    point,
+                    &format!("benches.{name}"),
+                    "tok_per_s",
+                )?,
+                p99_ms: req_pos(point, &format!("benches.{name}"), "p99_ms")?,
+            },
+        ));
+    }
+    Ok(Baseline {
+        thresholds,
+        entries,
+    })
+}
+
+/// Read and [`parse_baseline`] a baseline file.
+pub fn load_baseline(path: &Path) -> Result<Baseline> {
+    let body = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let doc = Json::parse(&body)
+        .with_context(|| format!("parsing {}", path.display()))?;
+    parse_baseline(&doc)
+        .with_context(|| format!("loading baseline {}", path.display()))
+}
+
+/// Verdict of one snapshot-vs-baseline comparison.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CompareOutcome {
+    /// No baseline entry for this bench — report, don't fail.
+    NoBaseline { name: String },
+    /// Within thresholds. Ratios are current/baseline.
+    Pass {
+        name: String,
+        tok_ratio: f64,
+        p99_ratio: f64,
+    },
+    /// Outside thresholds; one human-readable reason per breach.
+    Fail {
+        name: String,
+        reasons: Vec<String>,
+    },
+}
+
+impl CompareOutcome {
+    pub fn is_fail(&self) -> bool {
+        matches!(self, CompareOutcome::Fail { .. })
+    }
+}
+
+/// Compare one parsed `BENCH_*.json` snapshot against the baseline.
+/// The snapshot must already be schema-valid (`snapshot::validate`).
+pub fn compare_snapshot(
+    doc: &Json,
+    baseline: &Baseline,
+) -> Result<CompareOutcome> {
+    let name = doc
+        .get("name")
+        .and_then(Json::as_str)
+        .context("snapshot: missing string field 'name'")?
+        .to_string();
+    let tok_per_s = req_pos(doc, "snapshot", "tok_per_s")?;
+    let steps = doc.get("steps").context("snapshot: missing 'steps'")?;
+    let p99_ms = req_pos(steps, "steps", "p99_ms")?;
+    let Some(base) = baseline.point(&name) else {
+        return Ok(CompareOutcome::NoBaseline { name });
+    };
+    let tok_ratio = tok_per_s / base.tok_per_s;
+    let p99_ratio = p99_ms / base.p99_ms;
+    let mut reasons = Vec::new();
+    if tok_ratio < baseline.thresholds.min_tok_ratio {
+        reasons.push(format!(
+            "throughput regressed: {tok_per_s:.1} tok/s is {:.0}% of the \
+             {:.1} tok/s baseline (floor {:.0}%)",
+            tok_ratio * 100.0,
+            base.tok_per_s,
+            baseline.thresholds.min_tok_ratio * 100.0
+        ));
+    }
+    if p99_ratio > baseline.thresholds.max_p99_ratio {
+        reasons.push(format!(
+            "p99 step latency regressed: {p99_ms:.2} ms is {p99_ratio:.2}x \
+             the {:.2} ms baseline (ceiling {:.2}x)",
+            base.p99_ms, baseline.thresholds.max_p99_ratio
+        ));
+    }
+    if reasons.is_empty() {
+        Ok(CompareOutcome::Pass {
+            name,
+            tok_ratio,
+            p99_ratio,
+        })
+    } else {
+        Ok(CompareOutcome::Fail { name, reasons })
+    }
+}
+
+/// Read, parse and [`compare_snapshot`] a `BENCH_*.json` file.
+pub fn compare_file(
+    path: &Path,
+    baseline: &Baseline,
+) -> Result<CompareOutcome> {
+    let body = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let doc = Json::parse(&body)
+        .with_context(|| format!("parsing {}", path.display()))?;
+    compare_snapshot(&doc, baseline)
+        .with_context(|| format!("comparing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn baseline_doc() -> Json {
+        Json::obj()
+            .set("schema_version", BASELINE_SCHEMA_VERSION)
+            .set("note", "unit test")
+            .set(
+                "thresholds",
+                Json::obj()
+                    .set("min_tok_ratio", 0.5)
+                    .set("max_p99_ratio", 1.75),
+            )
+            .set(
+                "benches",
+                Json::obj().set(
+                    "fig9",
+                    Json::obj()
+                        .set("tok_per_s", 1000.0)
+                        .set("p99_ms", 10.0),
+                ),
+            )
+    }
+
+    fn snapshot_doc(name: &str, tok_per_s: f64, p99_ms: f64) -> Json {
+        Json::obj()
+            .set("schema_version", 1u64)
+            .set("name", name)
+            .set("tok_per_s", tok_per_s)
+            .set("steps", Json::obj().set("p99_ms", p99_ms))
+    }
+
+    #[test]
+    fn unchanged_numbers_pass() {
+        let base = parse_baseline(&baseline_doc()).unwrap();
+        let out =
+            compare_snapshot(&snapshot_doc("fig9", 1000.0, 10.0), &base)
+                .unwrap();
+        match out {
+            CompareOutcome::Pass {
+                tok_ratio,
+                p99_ratio,
+                ..
+            } => {
+                assert!((tok_ratio - 1.0).abs() < 1e-12);
+                assert!((p99_ratio - 1.0).abs() < 1e-12);
+            }
+            other => panic!("expected Pass, got {other:?}"),
+        }
+        // noise inside the band passes too
+        assert!(!compare_snapshot(
+            &snapshot_doc("fig9", 800.0, 14.0),
+            &base
+        )
+        .unwrap()
+        .is_fail());
+    }
+
+    #[test]
+    fn synthetic_2x_p99_regression_fails() {
+        let base = parse_baseline(&baseline_doc()).unwrap();
+        let out =
+            compare_snapshot(&snapshot_doc("fig9", 1000.0, 20.0), &base)
+                .unwrap();
+        match out {
+            CompareOutcome::Fail { reasons, .. } => {
+                assert_eq!(reasons.len(), 1, "{reasons:?}");
+                assert!(
+                    reasons[0].contains("p99"),
+                    "reason names p99: {reasons:?}"
+                );
+            }
+            other => panic!("2x p99 must fail, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn throughput_collapse_fails() {
+        let base = parse_baseline(&baseline_doc()).unwrap();
+        let out =
+            compare_snapshot(&snapshot_doc("fig9", 300.0, 10.0), &base)
+                .unwrap();
+        assert!(out.is_fail(), "{out:?}");
+    }
+
+    #[test]
+    fn missing_baseline_entry_warns_not_fails() {
+        let base = parse_baseline(&baseline_doc()).unwrap();
+        let out =
+            compare_snapshot(&snapshot_doc("brand_new", 1.0, 1.0), &base)
+                .unwrap();
+        assert_eq!(
+            out,
+            CompareOutcome::NoBaseline {
+                name: "brand_new".to_string()
+            }
+        );
+    }
+
+    #[test]
+    fn malformed_baselines_are_rejected() {
+        // wrong version
+        let mut doc = baseline_doc();
+        if let Json::Obj(fields) = &mut doc {
+            fields[0].1 = Json::Num(99.0);
+        }
+        assert!(parse_baseline(&doc).is_err());
+        // thresholds that would fail an unchanged bench
+        let tight = Json::obj()
+            .set("schema_version", BASELINE_SCHEMA_VERSION)
+            .set(
+                "thresholds",
+                Json::obj()
+                    .set("min_tok_ratio", 1.5)
+                    .set("max_p99_ratio", 1.75),
+            )
+            .set(
+                "benches",
+                Json::obj().set(
+                    "x",
+                    Json::obj().set("tok_per_s", 1.0).set("p99_ms", 1.0),
+                ),
+            );
+        assert!(parse_baseline(&tight).is_err());
+        // no benches
+        let empty = Json::obj()
+            .set("schema_version", BASELINE_SCHEMA_VERSION)
+            .set("benches", Json::obj());
+        assert!(parse_baseline(&empty).is_err());
+        // non-positive pinned numbers
+        let zero = Json::obj()
+            .set("schema_version", BASELINE_SCHEMA_VERSION)
+            .set(
+                "benches",
+                Json::obj().set(
+                    "x",
+                    Json::obj().set("tok_per_s", 0.0).set("p99_ms", 1.0),
+                ),
+            );
+        assert!(parse_baseline(&zero).is_err());
+    }
+
+    #[test]
+    fn checked_in_baseline_parses() {
+        // the repo's own baseline must stay loadable — CI depends on it
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("bench.baseline.json");
+        let base = load_baseline(&path).unwrap();
+        assert!(!base.entries.is_empty());
+        for (name, p) in &base.entries {
+            assert!(p.tok_per_s > 0.0, "{name}: tok_per_s");
+            assert!(p.p99_ms > 0.0, "{name}: p99_ms");
+        }
+    }
+}

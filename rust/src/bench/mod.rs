@@ -5,6 +5,7 @@
 //! are also appended as JSON lines to `target/bench_results.jsonl` so
 //! EXPERIMENTS.md numbers are reproducible.
 
+pub mod compare;
 pub mod snapshot;
 
 use std::io::Write as _;

@@ -8,26 +8,50 @@
 //! the fig13 TCP run plus its local tracks. Exits non-zero (with a
 //! message per offending file) on any missing, empty or malformed
 //! artifact.
+//!
+//! Two further gates:
+//!
+//! * `--compare <baseline.json>` additionally runs every snapshot path
+//!   through the noise-aware perf-regression gate (`bench::compare`)
+//!   against the checked-in baseline: throughput below the floor ratio
+//!   or p99 above the ceiling ratio FAILS; a snapshot with no baseline
+//!   entry WARNs (new benches land before their baseline does).
+//! * paths following `--cluster` are validated as `fdtop --once
+//!   --json` cluster documents (`net::monitor::validate_cluster_file`)
+//!   — the schema gate CI runs over the live-metrics smoke step.
 
 use std::path::PathBuf;
 use std::process::ExitCode;
 
+use fastdecode::bench::compare::{
+    load_baseline, Baseline, CompareOutcome,
+};
 use fastdecode::bench::snapshot;
+use fastdecode::net::monitor::validate_cluster_file;
 use fastdecode::obs::validate_chrome_trace_file;
+
+enum Mode {
+    Snapshot,
+    Chrome,
+    Cluster,
+}
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     if args.is_empty() {
         eprintln!(
-            "usage: bench_validate <BENCH_*.json>... \
-             [--min-tracks <n>] [--chrome-trace <TRACE_*.json>...]"
+            "usage: bench_validate [--compare <baseline.json>] \
+             <BENCH_*.json>... [--min-tracks <n>] \
+             [--chrome-trace <TRACE_*.json>...] \
+             [--cluster <fdtop.json>...]"
         );
         return ExitCode::FAILURE;
     }
     let mut failed = false;
     let mut checked = 0usize;
     let mut min_tracks = 1usize;
-    let mut chrome = false;
+    let mut mode = Mode::Snapshot;
+    let mut baseline: Option<Baseline> = None;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
@@ -41,22 +65,75 @@ fn main() -> ExitCode {
                 }
                 i += 2;
             }
+            "--compare" => {
+                let Some(path) = args.get(i + 1) else {
+                    eprintln!("--compare needs a baseline path");
+                    return ExitCode::FAILURE;
+                };
+                match load_baseline(&PathBuf::from(path)) {
+                    Ok(b) => baseline = Some(b),
+                    Err(e) => {
+                        eprintln!("FAIL {path}: {e:#}");
+                        return ExitCode::FAILURE;
+                    }
+                }
+                i += 2;
+            }
             "--chrome-trace" => {
-                chrome = true;
+                mode = Mode::Chrome;
+                i += 1;
+            }
+            "--cluster" => {
+                mode = Mode::Cluster;
                 i += 1;
             }
             p => {
                 let path = PathBuf::from(p);
-                let res = if chrome {
-                    validate_chrome_trace_file(&path, min_tracks)
-                } else {
-                    snapshot::validate_file(&path)
+                let res = match mode {
+                    Mode::Chrome => {
+                        validate_chrome_trace_file(&path, min_tracks)
+                    }
+                    Mode::Cluster => validate_cluster_file(&path),
+                    Mode::Snapshot => snapshot::validate_file(&path),
                 };
                 match res {
                     Ok(()) => println!("OK {}", path.display()),
                     Err(e) => {
                         eprintln!("FAIL {}: {e:#}", path.display());
                         failed = true;
+                    }
+                }
+                if let (Mode::Snapshot, Some(base)) = (&mode, &baseline) {
+                    match fastdecode::bench::compare::compare_file(
+                        &path, base,
+                    ) {
+                        Ok(CompareOutcome::Pass {
+                            name,
+                            tok_ratio,
+                            p99_ratio,
+                        }) => println!(
+                            "COMPARE ok {name}: tok {tok_ratio:.2}x, p99 \
+                             {p99_ratio:.2}x of baseline"
+                        ),
+                        Ok(CompareOutcome::NoBaseline { name }) => {
+                            println!(
+                                "COMPARE warn {name}: no baseline entry \
+                                 (add one to pin this bench)"
+                            );
+                        }
+                        Ok(CompareOutcome::Fail { name, reasons }) => {
+                            for r in &reasons {
+                                eprintln!("COMPARE FAIL {name}: {r}");
+                            }
+                            failed = true;
+                        }
+                        Err(e) => {
+                            eprintln!(
+                                "COMPARE FAIL {}: {e:#}",
+                                path.display()
+                            );
+                            failed = true;
+                        }
                     }
                 }
                 checked += 1;

@@ -1,0 +1,125 @@
+//! `fdtop` — live per-node dashboard for a running rnode cluster.
+//!
+//! Each tick opens a fresh monitor connection to every address and
+//! asks for its `NodeStats` self-report (`net::monitor`): no
+//! `Configure` handshake, no interference with the serving
+//! connections. A node that cannot be reached renders as a DEAD row
+//! with the root cause — the dashboard keeps running on the
+//! survivors, which is exactly when a dashboard matters.
+//!
+//! Usage:
+//!   fdtop [--interval SECS] [--once] [--json] ADDR...
+//!
+//! * default: clear-screen table every `--interval` seconds (2.0 by
+//!   default); the TOK/S column uses between-poll deltas after the
+//!   first tick (cumulative rows/uptime on the first).
+//! * `--once`: poll once, print, exit 0 (dead nodes do NOT fail the
+//!   exit code — the row reports them; scripts check `alive`).
+//! * `--json`: emit the `net::monitor::cluster_json` document instead
+//!   of the table — the scripting/CI surface, schema-validated by
+//!   `bench_validate --cluster`.
+
+use anyhow::{bail, Result};
+
+use fastdecode::net::monitor::{cluster_json, poll_cluster, rate_between, render_table};
+use fastdecode::net::NodeStatsReport;
+
+struct Opts {
+    interval_s: f64,
+    once: bool,
+    json: bool,
+    addrs: Vec<String>,
+}
+
+fn parse_args(args: &[String]) -> Result<Option<Opts>> {
+    let mut opts = Opts {
+        interval_s: 2.0,
+        once: false,
+        json: false,
+        addrs: Vec::new(),
+    };
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--interval" => {
+                i += 1;
+                match args.get(i).and_then(|v| v.parse::<f64>().ok()) {
+                    Some(s) if s > 0.0 && s.is_finite() => {
+                        opts.interval_s = s
+                    }
+                    _ => bail!("--interval needs a positive number of seconds"),
+                }
+            }
+            "--once" => opts.once = true,
+            "--json" => opts.json = true,
+            "--help" | "-h" => {
+                println!(
+                    "fdtop — live per-node dashboard for rnode clusters\n\n\
+                     USAGE: fdtop [--interval SECS] [--once] [--json] \
+                     ADDR...\n\n\
+                     Polls each rnode's NodeStats self-report over a fresh \
+                     monitor connection per tick. Dead nodes render as DEAD \
+                     rows (alive:false in --json) instead of aborting."
+                );
+                return Ok(None);
+            }
+            flag if flag.starts_with('-') => {
+                bail!("unknown flag {flag:?} (see --help)")
+            }
+            addr => opts.addrs.push(addr.to_string()),
+        }
+        i += 1;
+    }
+    if opts.addrs.is_empty() {
+        bail!("no node addresses given (see --help)");
+    }
+    Ok(Some(opts))
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match parse_args(&args).and_then(|opts| match opts {
+        Some(opts) => run(&opts),
+        None => Ok(()),
+    }) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("fdtop: error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run(opts: &Opts) -> Result<()> {
+    let mut prev: Vec<Option<NodeStatsReport>> = vec![None; opts.addrs.len()];
+    loop {
+        let rows = poll_cluster(&opts.addrs);
+        if opts.json {
+            println!("{}", cluster_json(&rows).render());
+        } else {
+            // between-poll deltas once a node has two samples
+            let rates: Vec<Option<f64>> = rows
+                .iter()
+                .enumerate()
+                .map(|(i, row)| match (&prev[i], &row.report) {
+                    (Some(p), Some(c)) => rate_between(p, c),
+                    _ => None,
+                })
+                .collect();
+            if !opts.once {
+                // ANSI clear-screen + home, like top(1)
+                print!("\x1b[2J\x1b[H");
+            }
+            print!("{}", render_table(&rows, &rates));
+        }
+        if opts.once {
+            return Ok(());
+        }
+        for (i, row) in rows.into_iter().enumerate() {
+            if let Some(r) = row.report {
+                prev[i] = Some(r);
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_secs_f64(opts.interval_s));
+    }
+}

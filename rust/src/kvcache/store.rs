@@ -342,6 +342,11 @@ impl BlockPool {
         self.slots.len() - self.free.len()
     }
 
+    /// Freed slots available for reuse without growing the pool.
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
     fn insert(&mut self, b: Block) -> u32 {
         match self.free.pop() {
             Some(i) => {
@@ -668,6 +673,11 @@ impl SocketCache {
         self.pool.live_blocks()
     }
 
+    /// Freed arena slots available for reuse without growing the pool.
+    pub fn free_blocks(&self) -> usize {
+        self.pool.free_blocks()
+    }
+
     pub fn stats(&self) -> CacheStats {
         let mut st = CacheStats {
             sequences: self.seqs.len(),
@@ -681,6 +691,12 @@ impl SocketCache {
         st.logical_bytes = st.total_tokens
             * kv_token_bytes(self.n_heads, self.head_dim, self.prec);
         self.pool.stats_into(&mut st);
+        let m = crate::obs::Metrics::global();
+        if m.is_enabled() {
+            m.set_gauge("kv_blocks_used", &[], self.live_blocks() as f64);
+            m.set_gauge("kv_blocks_free", &[], self.free_blocks() as f64);
+            m.set_gauge("kv_utilization", &[], st.utilization());
+        }
         st
     }
 }

@@ -146,6 +146,74 @@ impl NodeConfig {
     }
 }
 
+/// A node's live self-reported snapshot — the reply to
+/// [`NetRequest::NodeStats`], and what the `fdtop` poller renders.
+/// All counters are cumulative since the LISTENER started (one report
+/// covers every connection the node has served, cache occupancy merged
+/// across live connections), so a monitor connection sees the whole
+/// node, not just itself.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct NodeStatsReport {
+    /// Microseconds since the node's listener started.
+    pub uptime_us: u64,
+    /// Connections currently open (monitor connections included).
+    pub connections: u64,
+    /// Attend requests served successfully.
+    pub attend_ops: u64,
+    /// Rows (tokens) appended+attended across all attends.
+    pub attend_rows: u64,
+    /// Requests answered with a routed `Err`.
+    pub attend_errors: u64,
+    /// Σ idle time between finishing one frame and receiving the next.
+    pub queue_wait_us: u64,
+    /// Σ attend busy time (the `Outputs::busy` the node reported).
+    pub busy_us: u64,
+    /// p50 of per-attend service time (µs, 0 until the first attend).
+    pub service_p50_us: u64,
+    /// p99 of per-attend service time (µs, 0 until the first attend).
+    pub service_p99_us: u64,
+    /// Activation bytes the `LinkModel` WOULD charge for the attends
+    /// served (3 vectors × elems × wire bytes/elem).
+    pub modeled_payload_bytes: u64,
+    /// Activation bytes actually received (frame − framing overhead).
+    pub measured_payload_bytes: u64,
+    /// KV blocks currently live across the node's caches.
+    pub blocks_used: u64,
+    /// Freed block slots available for reuse (arena free list).
+    pub blocks_free: u64,
+    /// Cache occupancy merged across the node's live connections.
+    pub cache: CacheStats,
+}
+
+impl NodeStatsReport {
+    /// Logical/allocated KV utilization (see [`CacheStats::utilization`]).
+    pub fn kv_utilization(&self) -> f64 {
+        self.cache.utilization()
+    }
+
+    /// Relative payload drift measured/modeled − 1 (0.0 when nothing
+    /// has shipped); nonzero means the byte accounting lies.
+    pub fn payload_drift(&self) -> f64 {
+        if self.modeled_payload_bytes == 0 {
+            0.0
+        } else {
+            self.measured_payload_bytes as f64
+                / self.modeled_payload_bytes as f64
+                - 1.0
+        }
+    }
+
+    /// Attend rows per second of uptime — the coarse live throughput
+    /// `fdtop --once` shows (interval polling uses deltas instead).
+    pub fn rows_per_uptime_s(&self) -> f64 {
+        if self.uptime_us == 0 {
+            0.0
+        } else {
+            self.attend_rows as f64 / (self.uptime_us as f64 / 1e6)
+        }
+    }
+}
+
 /// Client → node. Mirrors `rworker::RRequest` plus the connection
 /// handshake.
 #[derive(Clone, Debug, PartialEq)]
@@ -166,6 +234,12 @@ pub enum NetRequest {
     /// Drain the node's server-side trace buffer (`Trace` reply).
     /// Spans are consumed: a second fetch returns only new ones.
     FetchTrace,
+    /// Ask the node for its live self-report (`NodeStats` reply).
+    /// Unlike every other request, this one (and `Ping`) is also legal
+    /// as the FIRST frame of a connection — a monitor connection that
+    /// never configures, which is how `fdtop` polls a serving node
+    /// without disturbing it.
+    NodeStats,
     Shutdown,
 }
 
@@ -190,6 +264,9 @@ pub enum NetResponse {
     /// timestamped against the NODE's epoch — `Tracer::merge_remote`
     /// remaps them client-side.
     Trace(Vec<TraceSpan>),
+    /// Reply to `NodeStats`: the node's live self-reported counters
+    /// (listener-wide, cache merged across connections).
+    NodeStats(NodeStatsReport),
     Err(String),
 }
 
@@ -204,6 +281,7 @@ const REQ_SHUTDOWN: u8 = 6;
 const REQ_FORK_SEQ: u8 = 7;
 const REQ_PING: u8 = 8;
 const REQ_FETCH_TRACE: u8 = 9;
+const REQ_NODE_STATS: u8 = 10;
 
 const RESP_ACK: u8 = 1;
 const RESP_OUTPUTS: u8 = 2;
@@ -211,6 +289,7 @@ const RESP_STATS: u8 = 3;
 const RESP_ERR: u8 = 4;
 const RESP_PONG: u8 = 5;
 const RESP_TRACE: u8 = 6;
+const RESP_NODE_STATS: u8 = 7;
 
 fn precision_to_u8(p: Precision) -> u8 {
     match p {
@@ -466,6 +545,7 @@ pub fn encode_request(req: &NetRequest, mode: WireMode) -> Vec<u8> {
         NetRequest::Stats => buf.push(REQ_STATS),
         NetRequest::Ping => buf.push(REQ_PING),
         NetRequest::FetchTrace => buf.push(REQ_FETCH_TRACE),
+        NetRequest::NodeStats => buf.push(REQ_NODE_STATS),
         NetRequest::Shutdown => buf.push(REQ_SHUTDOWN),
     }
     buf
@@ -512,6 +592,7 @@ pub fn decode_request(buf: &[u8], mode: WireMode) -> Result<NetRequest> {
         REQ_STATS => NetRequest::Stats,
         REQ_PING => NetRequest::Ping,
         REQ_FETCH_TRACE => NetRequest::FetchTrace,
+        REQ_NODE_STATS => NetRequest::NodeStats,
         REQ_SHUTDOWN => NetRequest::Shutdown,
         tag => bail!("unknown request tag {tag}"),
     };
@@ -554,6 +635,27 @@ pub fn encode_response(resp: &NetResponse, mode: WireMode) -> Vec<u8> {
             for s in spans {
                 put_trace_span(&mut buf, s);
             }
+        }
+        NetResponse::NodeStats(r) => {
+            buf.push(RESP_NODE_STATS);
+            put_u64(&mut buf, r.uptime_us);
+            put_u64(&mut buf, r.connections);
+            put_u64(&mut buf, r.attend_ops);
+            put_u64(&mut buf, r.attend_rows);
+            put_u64(&mut buf, r.attend_errors);
+            put_u64(&mut buf, r.queue_wait_us);
+            put_u64(&mut buf, r.busy_us);
+            put_u64(&mut buf, r.service_p50_us);
+            put_u64(&mut buf, r.service_p99_us);
+            put_u64(&mut buf, r.modeled_payload_bytes);
+            put_u64(&mut buf, r.measured_payload_bytes);
+            put_u64(&mut buf, r.blocks_used);
+            put_u64(&mut buf, r.blocks_free);
+            put_u64(&mut buf, r.cache.sequences as u64);
+            put_u64(&mut buf, r.cache.total_tokens as u64);
+            put_u64(&mut buf, r.cache.physical_tokens as u64);
+            put_u64(&mut buf, r.cache.allocated_bytes as u64);
+            put_u64(&mut buf, r.cache.logical_bytes as u64);
         }
         NetResponse::Err(msg) => {
             buf.push(RESP_ERR);
@@ -600,6 +702,28 @@ pub fn decode_response(buf: &[u8], mode: WireMode) -> Result<NetResponse> {
             }
             NetResponse::Trace(spans)
         }
+        RESP_NODE_STATS => NetResponse::NodeStats(NodeStatsReport {
+            uptime_us: c.u64()?,
+            connections: c.u64()?,
+            attend_ops: c.u64()?,
+            attend_rows: c.u64()?,
+            attend_errors: c.u64()?,
+            queue_wait_us: c.u64()?,
+            busy_us: c.u64()?,
+            service_p50_us: c.u64()?,
+            service_p99_us: c.u64()?,
+            modeled_payload_bytes: c.u64()?,
+            measured_payload_bytes: c.u64()?,
+            blocks_used: c.u64()?,
+            blocks_free: c.u64()?,
+            cache: CacheStats {
+                sequences: c.u64()? as usize,
+                total_tokens: c.u64()? as usize,
+                physical_tokens: c.u64()? as usize,
+                allocated_bytes: c.u64()? as usize,
+                logical_bytes: c.u64()? as usize,
+            },
+        }),
         RESP_ERR => {
             let n = c.count(1)?;
             let msg = String::from_utf8_lossy(c.take(n)?).into_owned();
@@ -674,6 +798,7 @@ mod tests {
                 NetRequest::Stats,
                 NetRequest::Ping,
                 NetRequest::FetchTrace,
+                NetRequest::NodeStats,
                 NetRequest::Shutdown,
                 NetRequest::Configure(NodeConfig {
                     n_heads: g.usize_in(1, 64),
@@ -776,6 +901,28 @@ mod tests {
                         })
                         .collect(),
                 ),
+                NetResponse::NodeStats(NodeStatsReport {
+                    uptime_us: g.u64_in(0, 1 << 50),
+                    connections: g.u64_in(0, 1 << 10),
+                    attend_ops: g.u64_in(0, 1 << 40),
+                    attend_rows: g.u64_in(0, 1 << 40),
+                    attend_errors: g.u64_in(0, 1 << 20),
+                    queue_wait_us: g.u64_in(0, 1 << 50),
+                    busy_us: g.u64_in(0, 1 << 50),
+                    service_p50_us: g.u64_in(0, 1 << 30),
+                    service_p99_us: g.u64_in(0, 1 << 30),
+                    modeled_payload_bytes: g.u64_in(0, 1 << 40),
+                    measured_payload_bytes: g.u64_in(0, 1 << 40),
+                    blocks_used: g.u64_in(0, 1 << 30),
+                    blocks_free: g.u64_in(0, 1 << 30),
+                    cache: CacheStats {
+                        sequences: g.usize_in(0, 1 << 30),
+                        total_tokens: g.usize_in(0, 1 << 40),
+                        physical_tokens: g.usize_in(0, 1 << 40),
+                        allocated_bytes: g.usize_in(0, 1 << 40),
+                        logical_bytes: g.usize_in(0, 1 << 40),
+                    },
+                }),
                 NetResponse::Err(
                     "node 1 refused: seq 9 not placed \u{1F4A3}".into(),
                 ),

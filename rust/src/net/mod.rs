@@ -63,20 +63,47 @@
 //! measured per-node throughput that
 //! `perfmodel::Planner::from_measured_profiles` consumes in place of
 //! assumed-equal device models.
+//!
+//! # Live self-reporting: `NodeStats` and the monitor connection
+//!
+//! Two wire ops extend the protocol for live observability (see
+//! `obs`'s two-surface overview):
+//!
+//! * [`NetRequest::NodeStats`] → [`NetResponse::NodeStats`] carrying a
+//!   [`codec::NodeStatsReport`] — the LISTENER-wide cumulative
+//!   counters every connection of an rnode shares
+//!   ([`rnode::NodeShared`]): uptime, open connections, attend
+//!   ops/rows/errors, queue-wait and busy time, service p50/p99,
+//!   modeled-vs-measured payload bytes, and cache occupancy merged
+//!   across live connections.
+//! * `NodeStats` (or `Ping`) as a connection's FIRST frame enters
+//!   **monitor mode** instead of being refused like other
+//!   pre-`Configure` traffic: the connection serves only
+//!   `NodeStats`/`Ping`/`Shutdown`, so a dashboard can poll a node
+//!   that is busy serving attends without a `Configure` handshake and
+//!   without touching the serving connections. [`monitor`] is that
+//!   client (one fresh connection per poll; dead nodes become DEAD
+//!   rows, not errors), and the `fdtop` binary is its CLI.
 
 pub mod codec;
+pub mod monitor;
 pub mod remote;
 pub mod rnode;
 pub mod transport;
 
 pub use codec::{
     decode_request, decode_response, encode_request, encode_response,
-    vec_payload_bytes, NetRequest, NetResponse, NodeConfig, WireMode,
-    MAX_FRAME_BYTES,
+    vec_payload_bytes, NetRequest, NetResponse, NodeConfig,
+    NodeStatsReport, WireMode, MAX_FRAME_BYTES,
+};
+pub use monitor::{
+    cluster_json, poll_cluster, poll_node, validate_cluster,
+    validate_cluster_file, NodeRow, CLUSTER_SCHEMA_VERSION,
 };
 pub use remote::RemotePool;
 pub use rnode::{
-    run_rnode, serve_connection, serve_listener, spawn_local_listener,
-    spawn_rnode_process, LocalRnode, RnodeProcess,
+    run_rnode, serve_connection, serve_connection_shared, serve_listener,
+    spawn_local_listener, spawn_rnode_process, LocalRnode, NodeShared,
+    RnodeProcess,
 };
 pub use transport::{loopback_pair, Loopback, Tcp, Transport};

@@ -1,0 +1,503 @@
+//! Cluster monitoring client — the library behind the `fdtop` binary.
+//!
+//! A monitor opens a FRESH TCP connection to each rnode per poll and
+//! sends `NetRequest::NodeStats` as the FIRST frame, which the node
+//! serves unconfigured (`rnode::serve_monitor`): polling never touches
+//! the serving connections and never requires a `Configure` handshake.
+//! One poll of a cluster is one connect+request+reply per node.
+//!
+//! Failure discipline matches the rest of `net`: a node that refuses
+//! the connection, hangs up, or answers garbage becomes a DEAD
+//! [`NodeRow`] carrying the root cause — the poll of the other nodes
+//! proceeds, and the rendered table/JSON still has one row per asked
+//! address. A dashboard that aborts because one node died is useless
+//! precisely when it is needed.
+//!
+//! The JSON document ([`cluster_json`], schema below) is the
+//! scripting/CI surface; [`validate_cluster`] is the gate CI runs over
+//! `fdtop --once --json` output.
+//!
+//! # Cluster JSON (schema version 1)
+//!
+//! ```json
+//! {
+//!   "schema_version": 1,
+//!   "nodes": [
+//!     {
+//!       "addr": "127.0.0.1:41234",
+//!       "alive": true,
+//!       "uptime_us": 1234567,
+//!       "connections": 2,
+//!       "attend_ops": 100, "attend_rows": 800, "attend_errors": 0,
+//!       "attend_tok_per_s": 650.0,        // rows / uptime (cumulative)
+//!       "bytes_per_s": 3.1e6,             // measured payload / uptime
+//!       "service_p50_us": 900, "service_p99_us": 2100,
+//!       "queue_wait_us": 40000, "busy_us": 90000,
+//!       "payload_drift": 0.0,             // measured/modeled − 1
+//!       "kv_utilization": 0.93,
+//!       "kv_sequences": 8, "kv_total_tokens": 4096,
+//!       "kv_physical_tokens": 4096,
+//!       "blocks_used": 256, "blocks_free": 0
+//!     },
+//!     { "addr": "127.0.0.1:41235", "alive": false,
+//!       "error": "connection refused" }
+//!   ]
+//! }
+//! ```
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::codec::{
+    decode_response, encode_request, NetRequest, NetResponse,
+    NodeStatsReport, WireMode,
+};
+use super::transport::{Tcp, Transport};
+
+/// Bump when the cluster JSON layout changes incompatibly.
+pub const CLUSTER_SCHEMA_VERSION: u64 = 1;
+
+/// One polled node: either a live self-report or the reason the poll
+/// failed. Exactly one of `report`/`error` is `Some`.
+#[derive(Clone, Debug)]
+pub struct NodeRow {
+    /// The address that was asked (the row's display name).
+    pub addr: String,
+    pub report: Option<NodeStatsReport>,
+    pub error: Option<String>,
+}
+
+impl NodeRow {
+    pub fn alive(&self) -> bool {
+        self.report.is_some()
+    }
+}
+
+/// Fetch one node's [`NodeStatsReport`] over a fresh monitor
+/// connection (`NodeStats` as the first frame — no `Configure`).
+pub fn poll_node(addr: &str) -> Result<NodeStatsReport> {
+    let mut t = Tcp::connect(addr).with_context(|| format!("connecting monitor to {addr}"))?;
+    t.send(&encode_request(&NetRequest::NodeStats, WireMode::F32))
+        .with_context(|| format!("sending NodeStats to {addr}"))?;
+    let reply = t
+        .recv()
+        .with_context(|| format!("awaiting NodeStats from {addr}"))?;
+    match decode_response(&reply, WireMode::F32)
+        .with_context(|| format!("decoding NodeStats reply from {addr}"))?
+    {
+        NetResponse::NodeStats(report) => Ok(report),
+        NetResponse::Err(msg) => {
+            bail!("{addr} refused NodeStats: {msg}")
+        }
+        other => bail!("{addr} answered NodeStats with {other:?}"),
+    }
+}
+
+/// Poll every address; a failed node yields a dead row with the root
+/// cause instead of failing the poll.
+pub fn poll_cluster(addrs: &[String]) -> Vec<NodeRow> {
+    addrs
+        .iter()
+        .map(|addr| match poll_node(addr) {
+            Ok(report) => NodeRow {
+                addr: addr.clone(),
+                report: Some(report),
+                error: None,
+            },
+            Err(e) => NodeRow {
+                addr: addr.clone(),
+                report: None,
+                error: Some(format!("{e:#}")),
+            },
+        })
+        .collect()
+}
+
+/// Attend-rows-per-second between two polls of the SAME node (delta
+/// rows over delta uptime). `None` when the node restarted between
+/// polls (uptime went backwards) or no time passed — the caller should
+/// fall back to the cumulative [`NodeStatsReport::rows_per_uptime_s`].
+pub fn rate_between(prev: &NodeStatsReport, cur: &NodeStatsReport) -> Option<f64> {
+    if cur.uptime_us <= prev.uptime_us || cur.attend_rows < prev.attend_rows {
+        return None;
+    }
+    let dt_s = (cur.uptime_us - prev.uptime_us) as f64 / 1e6;
+    Some((cur.attend_rows - prev.attend_rows) as f64 / dt_s)
+}
+
+fn node_json(row: &NodeRow) -> Json {
+    let base = Json::obj().set("addr", row.addr.as_str()).set("alive", row.alive());
+    match &row.report {
+        Some(r) => {
+            let uptime_s = r.uptime_us as f64 / 1e6;
+            let bytes_per_s = if uptime_s > 0.0 {
+                r.measured_payload_bytes as f64 / uptime_s
+            } else {
+                0.0
+            };
+            base.set("uptime_us", r.uptime_us)
+                .set("connections", r.connections)
+                .set("attend_ops", r.attend_ops)
+                .set("attend_rows", r.attend_rows)
+                .set("attend_errors", r.attend_errors)
+                .set("attend_tok_per_s", r.rows_per_uptime_s())
+                .set("bytes_per_s", bytes_per_s)
+                .set("service_p50_us", r.service_p50_us)
+                .set("service_p99_us", r.service_p99_us)
+                .set("queue_wait_us", r.queue_wait_us)
+                .set("busy_us", r.busy_us)
+                .set("payload_drift", r.payload_drift())
+                .set("kv_utilization", r.kv_utilization())
+                .set("kv_sequences", r.cache.sequences)
+                .set("kv_total_tokens", r.cache.total_tokens)
+                .set("kv_physical_tokens", r.cache.physical_tokens)
+                .set("blocks_used", r.blocks_used)
+                .set("blocks_free", r.blocks_free)
+        }
+        None => {
+            let cause = row.error.clone().unwrap_or_else(|| "unknown".to_string());
+            base.set("error", cause)
+        }
+    }
+}
+
+/// The `fdtop --json` document: one entry per asked address, dead
+/// nodes included (`alive: false` + `error`).
+pub fn cluster_json(rows: &[NodeRow]) -> Json {
+    Json::obj()
+        .set("schema_version", CLUSTER_SCHEMA_VERSION)
+        .set("nodes", Json::Arr(rows.iter().map(node_json).collect()))
+}
+
+fn req_num(j: &Json, ctx: &str, key: &str) -> Result<f64> {
+    let v = j
+        .get(key)
+        .and_then(Json::as_f64)
+        .with_context(|| format!("{ctx}: missing numeric field '{key}'"))?;
+    if !v.is_finite() || v < 0.0 {
+        bail!("{ctx}: field '{key}' is {v}, want finite and >= 0");
+    }
+    Ok(v)
+}
+
+/// CI gate over a parsed `fdtop --once --json` document: schema
+/// version, one well-formed row per node, live rows carry every
+/// numeric field (finite, non-negative, p99 >= p50), dead rows carry
+/// the error cause.
+pub fn validate_cluster(doc: &Json) -> Result<()> {
+    let version = doc
+        .get("schema_version")
+        .and_then(Json::as_f64)
+        .context("cluster: missing numeric field 'schema_version'")?;
+    if version != CLUSTER_SCHEMA_VERSION as f64 {
+        bail!(
+            "unsupported cluster schema_version {version} (want \
+             {CLUSTER_SCHEMA_VERSION})"
+        );
+    }
+    let nodes = doc
+        .get("nodes")
+        .and_then(Json::as_arr)
+        .context("cluster: missing array field 'nodes'")?;
+    if nodes.is_empty() {
+        bail!("cluster: empty 'nodes' — nothing was polled");
+    }
+    for (i, node) in nodes.iter().enumerate() {
+        let ctx = format!("nodes[{i}]");
+        let addr = node
+            .get("addr")
+            .and_then(Json::as_str)
+            .with_context(|| format!("{ctx}: missing string 'addr'"))?;
+        if addr.is_empty() {
+            bail!("{ctx}: empty addr");
+        }
+        let alive = node
+            .get("alive")
+            .and_then(Json::as_bool)
+            .with_context(|| format!("{ctx}: missing bool 'alive'"))?;
+        if !alive {
+            let err = node
+                .get("error")
+                .and_then(Json::as_str)
+                .with_context(|| {
+                    format!("{ctx} ({addr}): dead row without 'error'")
+                })?;
+            if err.is_empty() {
+                bail!("{ctx} ({addr}): dead row with empty 'error'");
+            }
+            continue;
+        }
+        for key in [
+            "uptime_us",
+            "connections",
+            "attend_ops",
+            "attend_rows",
+            "attend_errors",
+            "attend_tok_per_s",
+            "bytes_per_s",
+            "service_p50_us",
+            "service_p99_us",
+            "queue_wait_us",
+            "busy_us",
+            "kv_utilization",
+            "kv_sequences",
+            "kv_total_tokens",
+            "kv_physical_tokens",
+            "blocks_used",
+            "blocks_free",
+        ] {
+            req_num(node, &format!("{ctx} ({addr})"), key)?;
+        }
+        // drift is signed: measured below modeled is legal, so only
+        // finiteness is required
+        let drift = node
+            .get("payload_drift")
+            .and_then(Json::as_f64)
+            .with_context(|| {
+                format!("{ctx} ({addr}): missing 'payload_drift'")
+            })?;
+        if !drift.is_finite() {
+            bail!("{ctx} ({addr}): payload_drift is {drift}");
+        }
+        let p50 = req_num(node, &ctx, "service_p50_us")?;
+        let p99 = req_num(node, &ctx, "service_p99_us")?;
+        if p99 < p50 {
+            bail!("{ctx} ({addr}): p99 {p99} < p50 {p50}");
+        }
+    }
+    Ok(())
+}
+
+/// Read, parse and [`validate_cluster`] an `fdtop --once --json` file.
+pub fn validate_cluster_file(path: &Path) -> Result<()> {
+    let body = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let doc = Json::parse(&body)
+        .with_context(|| format!("parsing {}", path.display()))?;
+    validate_cluster(&doc)
+        .with_context(|| format!("validating {}", path.display()))
+}
+
+fn fmt_rate(v: f64) -> String {
+    if v >= 1e6 {
+        format!("{:.1}M", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.1}k", v / 1e3)
+    } else {
+        format!("{v:.1}")
+    }
+}
+
+/// Render one poll as the fixed-width table the interactive `fdtop`
+/// view shows. `rates` overrides the tok/s column with interval deltas
+/// (same indices as `rows`; `None` falls back to cumulative).
+pub fn render_table(rows: &[NodeRow], rates: &[Option<f64>]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<22} {:>6} {:>9} {:>9} {:>8} {:>8} {:>5} {:>5} {:>6} {:>7} \
+         {:>7}\n",
+        "NODE",
+        "STATE",
+        "TOK/S",
+        "BYTES/S",
+        "P50ms",
+        "P99ms",
+        "CONN",
+        "SEQS",
+        "KV%",
+        "BLOCKS",
+        "DRIFT%",
+    ));
+    for (i, row) in rows.iter().enumerate() {
+        match &row.report {
+            Some(r) => {
+                let tok = rates
+                    .get(i)
+                    .copied()
+                    .flatten()
+                    .unwrap_or_else(|| r.rows_per_uptime_s());
+                let uptime_s = r.uptime_us as f64 / 1e6;
+                let bps = if uptime_s > 0.0 {
+                    r.measured_payload_bytes as f64 / uptime_s
+                } else {
+                    0.0
+                };
+                out.push_str(&format!(
+                    "{:<22} {:>6} {:>9} {:>9} {:>8.2} {:>8.2} {:>5} \
+                     {:>5} {:>6.1} {:>7} {:>7.2}\n",
+                    row.addr,
+                    "up",
+                    fmt_rate(tok),
+                    fmt_rate(bps),
+                    r.service_p50_us as f64 / 1e3,
+                    r.service_p99_us as f64 / 1e3,
+                    r.connections,
+                    r.cache.sequences,
+                    r.kv_utilization() * 100.0,
+                    format!("{}/{}", r.blocks_used, r.blocks_free),
+                    r.payload_drift() * 100.0,
+                ));
+            }
+            None => {
+                out.push_str(&format!(
+                    "{:<22} {:>6}  {}\n",
+                    row.addr,
+                    "DEAD",
+                    row.error.as_deref().unwrap_or("unknown"),
+                ));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::CacheStats;
+
+    fn sample_report() -> NodeStatsReport {
+        NodeStatsReport {
+            uptime_us: 2_000_000,
+            connections: 2,
+            attend_ops: 10,
+            attend_rows: 100,
+            attend_errors: 1,
+            queue_wait_us: 5_000,
+            busy_us: 9_000,
+            service_p50_us: 800,
+            service_p99_us: 2_000,
+            modeled_payload_bytes: 1_000,
+            measured_payload_bytes: 1_000,
+            blocks_used: 4,
+            blocks_free: 1,
+            cache: CacheStats {
+                sequences: 3,
+                total_tokens: 48,
+                physical_tokens: 48,
+                allocated_bytes: 4096,
+                logical_bytes: 3072,
+            },
+        }
+    }
+
+    fn rows() -> Vec<NodeRow> {
+        vec![
+            NodeRow {
+                addr: "127.0.0.1:1000".into(),
+                report: Some(sample_report()),
+                error: None,
+            },
+            NodeRow {
+                addr: "127.0.0.1:1001".into(),
+                report: None,
+                error: Some("connection refused".into()),
+            },
+        ]
+    }
+
+    #[test]
+    fn cluster_json_roundtrips_and_validates() {
+        let doc = cluster_json(&rows());
+        let parsed = Json::parse(&doc.render()).unwrap();
+        validate_cluster(&parsed).unwrap();
+        let nodes = parsed.get("nodes").and_then(Json::as_arr).unwrap();
+        assert_eq!(nodes.len(), 2);
+        assert_eq!(nodes[0].get("alive").and_then(Json::as_bool), Some(true));
+        assert_eq!(
+            nodes[0].get("attend_tok_per_s").and_then(Json::as_f64),
+            Some(50.0)
+        );
+        assert_eq!(nodes[1].get("alive").and_then(Json::as_bool), Some(false));
+        assert_eq!(
+            nodes[1].get("error").and_then(Json::as_str),
+            Some("connection refused")
+        );
+    }
+
+    #[test]
+    fn validate_rejects_malformed_documents() {
+        // wrong version
+        let bad = Json::obj()
+            .set("schema_version", 99u64)
+            .set("nodes", Vec::<f64>::new());
+        assert!(validate_cluster(&bad).is_err());
+        // empty cluster
+        let empty = Json::obj()
+            .set("schema_version", CLUSTER_SCHEMA_VERSION)
+            .set("nodes", Vec::<f64>::new());
+        assert!(validate_cluster(&empty).is_err());
+        // live row missing fields
+        let live_partial = Json::obj().set("addr", "x:1").set("alive", true);
+        let partial = Json::obj()
+            .set("schema_version", CLUSTER_SCHEMA_VERSION)
+            .set("nodes", Json::Arr(vec![live_partial]));
+        assert!(validate_cluster(&partial).is_err());
+        // dead row without a cause
+        let dead_causeless = Json::obj().set("addr", "x:1").set("alive", false);
+        let causeless = Json::obj()
+            .set("schema_version", CLUSTER_SCHEMA_VERSION)
+            .set("nodes", Json::Arr(vec![dead_causeless]));
+        assert!(validate_cluster(&causeless).is_err());
+        // p99 < p50 on a live row
+        let mut doc = cluster_json(&rows());
+        if let Json::Obj(fields) = &mut doc {
+            if let Some((_, Json::Arr(nodes))) =
+                fields.iter_mut().find(|(k, _)| k.as_str() == "nodes")
+            {
+                if let Json::Obj(node) = &mut nodes[0] {
+                    for (k, v) in node.iter_mut() {
+                        if k.as_str() == "service_p99_us" {
+                            *v = Json::Num(1.0);
+                        }
+                    }
+                }
+            }
+        }
+        assert!(validate_cluster(&doc).is_err());
+    }
+
+    #[test]
+    fn rate_between_uses_deltas_and_detects_restart() {
+        let a = sample_report();
+        let mut b = a;
+        b.uptime_us += 1_000_000;
+        b.attend_rows += 250;
+        assert_eq!(rate_between(&a, &b), Some(250.0));
+        // restarted node: uptime went backwards
+        let mut fresh = a;
+        fresh.uptime_us = 10;
+        fresh.attend_rows = 0;
+        assert_eq!(rate_between(&a, &fresh), None);
+        // no time passed
+        assert_eq!(rate_between(&a, &a), None);
+    }
+
+    #[test]
+    fn table_renders_dead_and_live_rows() {
+        let rows = rows();
+        let table = render_table(&rows, &[None, None]);
+        assert!(table.contains("NODE"), "header missing:\n{table}");
+        assert!(table.contains("127.0.0.1:1000"));
+        assert!(table.contains("DEAD"), "dead row missing:\n{table}");
+        assert!(table.contains("connection refused"));
+        // interval rate overrides the cumulative column
+        let fast = render_table(&rows, &[Some(123456.0), None]);
+        assert!(fast.contains("123.5k"), "rate override missing:\n{fast}");
+    }
+
+    #[test]
+    fn poll_node_fetches_a_live_report_over_tcp() {
+        let node = crate::net::rnode::spawn_local_listener().unwrap();
+        let addr = node.addr.to_string();
+        let report = poll_node(&addr).unwrap();
+        assert!(report.uptime_us > 0, "uptime not ticking");
+        // the monitor connection itself is counted
+        assert!(report.connections >= 1, "report: {report:?}");
+        // an address nobody listens on becomes an error, not a panic
+        assert!(poll_node("127.0.0.1:1").is_err());
+    }
+}

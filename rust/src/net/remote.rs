@@ -23,14 +23,15 @@ use anyhow::{anyhow, bail, Context as _, Result};
 
 use crate::kvcache::CacheStats;
 use crate::obs::{
-    pick_clock_sync, NetStats, NodeProfile, Tracer, Track, TransportCounters,
+    pick_clock_sync, Metrics, NetStats, NodeProfile, Tracer, Track,
+    TransportCounters,
 };
 use crate::rworker::{AttendBackend, PendingAttend, PoolStep, SeqTask};
 
 use super::codec::{
     attend_request_overhead_bytes, decode_response, encode_request,
     outputs_response_overhead_bytes, vec_payload_bytes, NetRequest,
-    NetResponse, NodeConfig, WireMode, MAX_FRAME_BYTES,
+    NetResponse, NodeConfig, NodeStatsReport, WireMode, MAX_FRAME_BYTES,
 };
 use super::rnode;
 use super::transport::{loopback_pair, Tcp, Transport};
@@ -244,6 +245,10 @@ impl RemotePool {
             // last chance to read the connection's counters
             node.wire_stats.final_transport = t.counters();
             node.fate = Some(format!("{cause:#}"));
+            let m = Metrics::global();
+            if m.is_enabled() {
+                m.inc("rpool_node_deaths", &[("node", &node.label)], 1);
+            }
         }
     }
 
@@ -613,6 +618,33 @@ impl AttendBackend for RemotePool {
                         bytes,
                         Instant::now().duration_since(pending.submitted),
                     );
+                    let m = Metrics::global();
+                    if m.is_enabled() {
+                        let node = self.nodes[n].label.clone();
+                        let labels = [("node", node.as_str())];
+                        let p = &self.nodes[n].profile;
+                        m.inc("rpool_attend_ops", &labels, 1);
+                        m.set_gauge(
+                            "rpool_tokens_per_s",
+                            &labels,
+                            p.tokens_per_s,
+                        );
+                        m.set_gauge(
+                            "rpool_bytes_per_s",
+                            &labels,
+                            p.bytes_per_s,
+                        );
+                        m.set_gauge(
+                            "rpool_in_flight",
+                            &labels,
+                            p.queue_depth as f64,
+                        );
+                        m.observe_secs(
+                            "rpool_service",
+                            &labels,
+                            busy.as_secs_f64(),
+                        );
+                    }
                     if let Some(track) = self.tracks.get(n) {
                         track.record(
                             "attend",
@@ -631,6 +663,11 @@ impl AttendBackend for RemotePool {
                 }
                 Ok(NetResponse::Err(msg)) => {
                     self.nodes[n].wire_stats.errors += 1;
+                    let m = Metrics::global();
+                    if m.is_enabled() {
+                        let node = self.nodes[n].label.clone();
+                        m.inc("rpool_errors", &[("node", &node)], 1);
+                    }
                     if first_err.is_none() {
                         first_err = Some(anyhow!(
                             "{} refused attend: {msg}",
@@ -640,6 +677,11 @@ impl AttendBackend for RemotePool {
                 }
                 Ok(other) => {
                     self.nodes[n].wire_stats.errors += 1;
+                    let m = Metrics::global();
+                    if m.is_enabled() {
+                        let node = self.nodes[n].label.clone();
+                        m.inc("rpool_errors", &[("node", &node)], 1);
+                    }
                     if first_err.is_none() {
                         first_err = Some(anyhow!(
                             "{} answered attend with {other:?}",
@@ -720,6 +762,60 @@ impl AttendBackend for RemotePool {
         }
         if let Some(e) = first_err {
             return Err(e.context("gathering stats from remote nodes"));
+        }
+        Ok(all)
+    }
+
+    /// Self-reported [`NodeStatsReport`] of every LIVE node, labeled by
+    /// the node's display label. Same scatter-all-then-gather shape as
+    /// [`Self::stats`] — one round trip for the whole cluster. Meant
+    /// for dashboards/CI (`fdtop`), not the per-step hot path.
+    fn node_reports(&mut self) -> Result<Vec<(String, NodeStatsReport)>> {
+        let live: Vec<usize> = (0..self.nodes.len())
+            .filter(|&i| self.nodes[i].transport.is_some())
+            .collect();
+        let mut sent: Vec<usize> = Vec::new();
+        let mut first_err: Option<anyhow::Error> = None;
+        for &i in &live {
+            match self.send_to(i, &NetRequest::NodeStats) {
+                Ok(()) => sent.push(i),
+                Err(e) => {
+                    first_err = Some(e);
+                    break;
+                }
+            }
+        }
+        let mut all = Vec::new();
+        for &i in &sent {
+            match self.recv_from(i) {
+                Ok(NetResponse::NodeStats(report)) => {
+                    all.push((self.nodes[i].label.clone(), report));
+                }
+                Ok(NetResponse::Err(msg)) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow!(
+                            "{} refused node stats: {msg}",
+                            self.nodes[i].label
+                        ));
+                    }
+                }
+                Ok(other) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow!(
+                            "{} answered node stats with {other:?}",
+                            self.nodes[i].label
+                        ));
+                    }
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e.context("gathering node stats from remote nodes"));
         }
         Ok(all)
     }
@@ -949,6 +1045,55 @@ mod tests {
         assert!(format!("{err:#}").contains("unknown sequence"), "{err:#}");
         assert_eq!(pool.socket_of(100), None, "refused fork placed child");
         assert_eq!(pool.live_nodes(), 2, "a refusal must not kill the node");
+    }
+
+    /// `node_reports` gathers each node's listener-wide self-report
+    /// (the `fdtop` surface): per-node attend counters, service
+    /// percentiles, zero payload drift, cache occupancy — and a dead
+    /// node drops out of the report the way it drops out of `stats`.
+    #[test]
+    fn node_reports_cover_live_nodes_and_skip_dead_ones() {
+        let mut pool = RemotePool::loopback(cfg(WireMode::F32), 2).unwrap();
+        // 1 → node 0, 2 → node 1
+        pool.add_seqs(&[1, 2]).unwrap();
+        let mut rng = Rng::new(11);
+        for _ in 0..3 {
+            pool.attend(
+                0,
+                vec![
+                    mk_task(&mut rng, 1, TINY.hidden),
+                    mk_task(&mut rng, 2, TINY.hidden),
+                ],
+            )
+            .unwrap();
+        }
+        let reports = pool.node_reports().unwrap();
+        assert_eq!(reports.len(), 2);
+        for (label, r) in &reports {
+            assert!(!label.is_empty());
+            assert_eq!(r.attend_ops, 3, "{label}: {r:?}");
+            assert_eq!(r.attend_rows, 3, "{label}: {r:?}");
+            assert_eq!(r.attend_errors, 0, "{label}: {r:?}");
+            assert_eq!(r.cache.sequences, 1, "{label}: {r:?}");
+            assert_eq!(r.cache.total_tokens, 3, "{label}: {r:?}");
+            assert!(r.uptime_us > 0, "{label}: uptime not ticking");
+            assert!(r.blocks_used >= 1, "{label}: {r:?}");
+            assert!(r.modeled_payload_bytes > 0, "{label}: {r:?}");
+            assert_eq!(
+                r.measured_payload_bytes, r.modeled_payload_bytes,
+                "{label}: payload drift on the live wire"
+            );
+            assert!(
+                r.service_p99_us >= r.service_p50_us,
+                "{label}: {r:?}"
+            );
+        }
+        // kill node 0: reports shrink to the survivor, no error
+        pool.send_to(0, &NetRequest::Shutdown).unwrap();
+        pool.attend(0, vec![mk_task(&mut rng, 1, TINY.hidden)])
+            .unwrap_err();
+        let reports = pool.node_reports().unwrap();
+        assert_eq!(reports.len(), 1, "{reports:?}");
     }
 
     /// A node that refuses a request reports a routed error and stays

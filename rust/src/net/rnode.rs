@@ -16,32 +16,205 @@
 //! connection: framing is length-prefixed, so the stream stays
 //! synchronized and the node keeps serving. Only a transport failure
 //! (client gone) ends the loop.
+//!
+//! Live self-reporting: every listener owns one [`NodeShared`] —
+//! counters shared by ALL of its connections (attend ops/rows/errors,
+//! queue wait, busy time, a service-time histogram, payload-drift
+//! bytes, per-connection cache occupancy). Any connection can ask for
+//! the merged snapshot with `NetRequest::NodeStats`; a connection
+//! whose FIRST frame is `NodeStats` (or `Ping`) enters **monitor
+//! mode** — it is never configured, provisions no cache, and only
+//! serves `NodeStats`/`Ping`/`Shutdown`. That is how `fdtop` polls a
+//! serving node without disturbing it.
 
+use std::collections::BTreeMap;
 use std::net::{TcpListener, ToSocketAddrs};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context as _, Result};
 
-use crate::kvcache::SocketCache;
+use crate::kvcache::{CacheStats, SocketCache};
+use crate::metrics::Histogram;
 use crate::obs::{Tracer, Track};
 use crate::rworker::{attend_paged, AttnScratch, SeqTask};
 
 use super::codec::{
-    decode_request, encode_response, NetRequest, NetResponse, WireMode,
+    attend_request_overhead_bytes, decode_request, encode_response,
+    NetRequest, NetResponse, NodeStatsReport, WireMode,
 };
 use super::transport::{Tcp, Transport};
 
-/// Serve one R-socket connection to completion. Returns `Ok` on a
-/// clean end (client `Shutdown` or disconnect after configuration),
-/// `Err` if the connection violated the protocol before it was even
-/// configured or the transport failed mid-reply.
-pub fn serve_connection<T: Transport>(mut t: T) -> Result<()> {
+/// Per-listener shared state behind `NetRequest::NodeStats`: cumulative
+/// counters across every connection the listener has served, plus a
+/// per-connection cache-occupancy snapshot (updated by the owning
+/// connection thread after each cache-mutating op, merged at report
+/// time). Mutex poisoning is absorbed (`into_inner`): self-reporting is
+/// advisory and must survive a panicking sibling thread.
+pub struct NodeShared {
+    started: Instant,
+    state: Mutex<SharedState>,
+}
+
+#[derive(Default)]
+struct SharedState {
+    next_conn_id: u64,
+    connections: u64,
+    attend_ops: u64,
+    attend_rows: u64,
+    attend_errors: u64,
+    queue_wait_us: u64,
+    busy_us: u64,
+    modeled_payload_bytes: u64,
+    measured_payload_bytes: u64,
+    service: Histogram,
+    /// conn id → (cache stats, blocks used, blocks free).
+    caches: BTreeMap<u64, (CacheStats, u64, u64)>,
+}
+
+impl Default for NodeShared {
+    fn default() -> NodeShared {
+        NodeShared::new()
+    }
+}
+
+impl NodeShared {
+    pub fn new() -> NodeShared {
+        NodeShared {
+            started: Instant::now(),
+            state: Mutex::new(SharedState::default()),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, SharedState> {
+        match self.state.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    fn register_conn(&self) -> u64 {
+        let mut st = self.lock();
+        st.connections += 1;
+        st.next_conn_id += 1;
+        st.next_conn_id
+    }
+
+    fn unregister_conn(&self, id: u64) {
+        let mut st = self.lock();
+        st.connections = st.connections.saturating_sub(1);
+        st.caches.remove(&id);
+    }
+
+    fn update_cache(&self, id: u64, stats: CacheStats, used: u64, free: u64) {
+        self.lock().caches.insert(id, (stats, used, free));
+    }
+
+    fn on_queue_wait(&self, wait: Duration) {
+        self.lock().queue_wait_us += wait.as_micros() as u64;
+    }
+
+    fn on_attend(&self, rows: u64, busy: Duration, modeled: u64, measured: u64) {
+        let mut st = self.lock();
+        st.attend_ops += 1;
+        st.attend_rows += rows;
+        st.busy_us += busy.as_micros() as u64;
+        st.modeled_payload_bytes += modeled;
+        st.measured_payload_bytes += measured;
+        st.service.record_secs(busy.as_secs_f64());
+    }
+
+    fn on_error(&self) {
+        self.lock().attend_errors += 1;
+    }
+
+    /// The merged live snapshot `NetRequest::NodeStats` answers with.
+    pub fn report(&self) -> NodeStatsReport {
+        let st = self.lock();
+        let mut cache = CacheStats::default();
+        let (mut used, mut free) = (0u64, 0u64);
+        for (cs, u, f) in st.caches.values() {
+            cache.merge(cs);
+            used += u;
+            free += f;
+        }
+        let (p50, p99) = if st.service.count() == 0 {
+            (0, 0)
+        } else {
+            (
+                st.service.percentile_us(0.50) as u64,
+                st.service.percentile_us(0.99) as u64,
+            )
+        };
+        NodeStatsReport {
+            uptime_us: self.started.elapsed().as_micros() as u64,
+            connections: st.connections,
+            attend_ops: st.attend_ops,
+            attend_rows: st.attend_rows,
+            attend_errors: st.attend_errors,
+            queue_wait_us: st.queue_wait_us,
+            busy_us: st.busy_us,
+            service_p50_us: p50,
+            service_p99_us: p99,
+            modeled_payload_bytes: st.modeled_payload_bytes,
+            measured_payload_bytes: st.measured_payload_bytes,
+            blocks_used: used,
+            blocks_free: free,
+            cache,
+        }
+    }
+}
+
+/// Decrements the connection count (and drops the connection's cache
+/// snapshot) on EVERY exit path of a serving loop, error or clean.
+struct ConnGuard {
+    shared: Arc<NodeShared>,
+    id: u64,
+}
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.shared.unregister_conn(self.id);
+    }
+}
+
+/// Serve one R-socket connection to completion over its own private
+/// [`NodeShared`] (standalone use: loopback pools, tests). Listener
+/// paths share one `NodeShared` across connections via
+/// [`serve_connection_shared`] so `NodeStats` reports cover the node.
+pub fn serve_connection<T: Transport>(t: T) -> Result<()> {
+    serve_connection_shared(t, Arc::new(NodeShared::new()))
+}
+
+/// Serve one connection against the listener-wide shared counters.
+/// Returns `Ok` on a clean end (client `Shutdown` or disconnect after
+/// configuration), `Err` if the connection violated the protocol
+/// before it was even configured or the transport failed mid-reply.
+///
+/// A connection whose first frame is `NodeStats` or `Ping` enters
+/// monitor mode ([`serve_monitor`]) instead of configuring a cache.
+pub fn serve_connection_shared<T: Transport>(
+    mut t: T,
+    shared: Arc<NodeShared>,
+) -> Result<()> {
+    let conn_id = shared.register_conn();
+    // dropped on every exit path below — keeps the connection count
+    // and the per-connection cache snapshot honest
+    let _guard = ConnGuard {
+        shared: Arc::clone(&shared),
+        id: conn_id,
+    };
     // handshake: Configure fixes dimensions and the wire mode.
     // Configure frames carry no activations, so the decode mode is
     // immaterial here.
     let first = t.recv().context("awaiting Configure")?;
     let cfg = match decode_request(&first, WireMode::F32) {
         Ok(NetRequest::Configure(cfg)) => cfg,
+        // a monitor connection: never configured, no cache — serves
+        // NodeStats/Ping/Shutdown only (how `fdtop` polls a live node)
+        Ok(NetRequest::NodeStats) | Ok(NetRequest::Ping) => {
+            return serve_monitor(t, &shared, &first);
+        }
         Ok(other) => {
             let msg = format!(
                 "protocol violation: first frame must be Configure, got \
@@ -96,6 +269,7 @@ pub fn serve_connection<T: Transport>(mut t: T) -> Result<()> {
     t.send(&encode_response(&NetResponse::Ack, wire))
         .context("acking Configure")?;
 
+    let width = cfg.n_heads * cfg.head_dim;
     loop {
         // time blocked waiting for the next request frame — the
         // server-side queue-wait the client's submit→reply span hides
@@ -104,13 +278,24 @@ pub fn serve_connection<T: Transport>(mut t: T) -> Result<()> {
             Ok(f) => f,
             Err(_) => return Ok(()), // client gone: normal end of life
         };
-        track.record("queue_wait", idle_from, Instant::now(), &[]);
+        let recv_at = Instant::now();
+        track.record("queue_wait", idle_from, recv_at, &[]);
+        shared.on_queue_wait(recv_at - idle_from);
         let decoded = {
             let _s = track
                 .span("decode")
                 .arg("frame_bytes", frame.len() as f64);
             decode_request(&frame, wire)
         };
+        // does this request mutate the cache on success? (drives the
+        // shared occupancy snapshot refresh below)
+        let mutates = matches!(
+            decoded,
+            Ok(NetRequest::AddSeqs(_))
+                | Ok(NetRequest::DropSeqs(_))
+                | Ok(NetRequest::Attend { .. })
+                | Ok(NetRequest::ForkSeq { .. })
+        );
         let resp = match decoded {
             Err(e) => NetResponse::Err(format!("malformed frame: {e:#}")),
             Ok(NetRequest::Shutdown) => return Ok(()),
@@ -125,7 +310,22 @@ pub fn serve_connection<T: Transport>(mut t: T) -> Result<()> {
                 NetResponse::Ack
             }
             Ok(NetRequest::Attend { layer, tasks }) => {
-                attend(&mut cache, &mut scratch, layer, tasks, &track)
+                // payload accounting BEFORE the tasks move: modeled =
+                // what the LinkModel charges (3 activation vectors per
+                // row), measured = frame minus framing overhead
+                let elems: usize = tasks.iter().map(|t| t.q.len()).sum();
+                let rows = (elems / width) as u64;
+                let modeled = (3 * elems * wire.bytes_per_elem()) as u64;
+                let measured = frame
+                    .len()
+                    .saturating_sub(attend_request_overhead_bytes(tasks.len()))
+                    as u64;
+                let resp =
+                    attend(&mut cache, &mut scratch, layer, tasks, &track);
+                if let NetResponse::Outputs { busy, .. } = &resp {
+                    shared.on_attend(rows, *busy, modeled, measured);
+                }
+                resp
             }
             Ok(NetRequest::ForkSeq { parent, child, upto }) => {
                 // fork_seq validates before it mutates, so a refusal
@@ -137,6 +337,10 @@ pub fn serve_connection<T: Transport>(mut t: T) -> Result<()> {
                 }
             }
             Ok(NetRequest::Stats) => NetResponse::Stats(cache.stats()),
+            // the listener-wide live snapshot (all connections merged)
+            Ok(NetRequest::NodeStats) => {
+                NetResponse::NodeStats(shared.report())
+            }
             // clock-sync probe: answer with the node's epoch-relative
             // time so the client can estimate the offset between the
             // two monotonic clocks from the RTT midpoint
@@ -149,11 +353,58 @@ pub fn serve_connection<T: Transport>(mut t: T) -> Result<()> {
                 NetResponse::Trace(tracer.drain_remote_spans())
             }
         };
+        if matches!(resp, NetResponse::Err(_)) {
+            shared.on_error();
+        } else if mutates {
+            shared.update_cache(
+                conn_id,
+                cache.stats(),
+                cache.live_blocks() as u64,
+                cache.free_blocks() as u64,
+            );
+        }
         let reply = {
             let _s = track.span("encode");
             encode_response(&resp, wire)
         };
         t.send(&reply).context("sending reply")?;
+    }
+}
+
+/// The monitor loop: a connection that never configured (its first
+/// frame was `NodeStats` or `Ping`) serves live snapshots and clock
+/// probes until `Shutdown` or disconnect. No cache, no activations —
+/// frames decode under `F32` by construction. Any other request is
+/// answered with a routed `Err` and the loop keeps serving.
+fn serve_monitor<T: Transport>(
+    mut t: T,
+    shared: &NodeShared,
+    first: &[u8],
+) -> Result<()> {
+    let epoch = Instant::now();
+    let wire = WireMode::F32;
+    let mut frame = first.to_vec();
+    loop {
+        let resp = match decode_request(&frame, wire) {
+            Err(e) => NetResponse::Err(format!("malformed frame: {e:#}")),
+            Ok(NetRequest::NodeStats) => {
+                NetResponse::NodeStats(shared.report())
+            }
+            Ok(NetRequest::Ping) => NetResponse::Pong {
+                node_us: epoch.elapsed().as_secs_f64() * 1e6,
+            },
+            Ok(NetRequest::Shutdown) => return Ok(()),
+            Ok(other) => NetResponse::Err(format!(
+                "protocol violation: monitor connection only serves \
+                 NodeStats/Ping/Shutdown, got {other:?}"
+            )),
+        };
+        t.send(&encode_response(&resp, wire))
+            .context("sending monitor reply")?;
+        frame = match t.recv() {
+            Ok(f) => f,
+            Err(_) => return Ok(()), // monitor gone: normal end of life
+        };
     }
 }
 
@@ -293,18 +544,24 @@ fn attend(
 }
 
 /// Accept loop: every connection gets its own serving thread (one
-/// R-socket each). Runs until the listener errors (or forever).
+/// R-socket each), all sharing ONE [`NodeShared`] — so a `NodeStats`
+/// request on any connection (monitor connections included) reports
+/// the whole node. Runs until the listener errors (or forever).
 pub fn serve_listener(listener: TcpListener) -> Result<()> {
+    let shared = Arc::new(NodeShared::new());
     for conn in listener.incoming() {
         match conn.and_then(|s| {
             s.peer_addr().map(|a| (s, a)) // name the thread after the peer
         }) {
             Ok((stream, peer)) => {
+                let shared = Arc::clone(&shared);
                 std::thread::Builder::new()
                     .name(format!("rnode-{peer}"))
                     .spawn(move || match Tcp::from_stream(stream) {
                         Ok(t) => {
-                            if let Err(e) = serve_connection(t) {
+                            if let Err(e) =
+                                serve_connection_shared(t, shared)
+                            {
                                 crate::obs::log!(
                                     Warn,
                                     "connection {peer}: {e:#}"
@@ -645,6 +902,104 @@ mod tests {
         );
         rpc_shutdown(&mut client, wire);
         h.join().unwrap().unwrap();
+    }
+
+    /// A monitor connection (first frame `NodeStats`, never
+    /// configured) reads the LISTENER-WIDE live counters: attends
+    /// served on a different, configured connection show up in the
+    /// report, with cache occupancy and block accounting merged.
+    #[test]
+    fn monitor_connection_reports_listener_wide_counters() {
+        use super::super::transport::Tcp;
+        let node = spawn_local_listener().unwrap();
+        let wire = WireMode::F32;
+        // connection 1: a normal configured R-socket doing real work
+        let mut worker = Tcp::connect(node.addr).unwrap();
+        assert_eq!(
+            rpc(&mut worker, &NetRequest::Configure(cfg(wire)), wire),
+            NetResponse::Ack
+        );
+        assert_eq!(
+            rpc(&mut worker, &NetRequest::AddSeqs(vec![1, 2]), wire),
+            NetResponse::Ack
+        );
+        let attend = NetRequest::Attend {
+            layer: 0,
+            tasks: vec![SeqTask {
+                seq_id: 1,
+                q: vec![1.0; 2 * 8], // 2 rows of width 8
+                k_new: vec![1.0; 2 * 8],
+                v_new: vec![1.0; 2 * 8],
+            }],
+        };
+        assert!(matches!(
+            rpc(&mut worker, &attend, wire),
+            NetResponse::Outputs { .. }
+        ));
+        // an unknown sequence → routed Err, counted as an error
+        let bad = NetRequest::Attend {
+            layer: 0,
+            tasks: vec![SeqTask {
+                seq_id: 99,
+                q: vec![1.0; 8],
+                k_new: vec![1.0; 8],
+                v_new: vec![1.0; 8],
+            }],
+        };
+        assert!(matches!(rpc(&mut worker, &bad, wire), NetResponse::Err(_)));
+        // connection 2: a monitor that never configures
+        let mut mon = Tcp::connect(node.addr).unwrap();
+        let NetResponse::NodeStats(r) =
+            rpc(&mut mon, &NetRequest::NodeStats, wire)
+        else {
+            panic!("expected NodeStats");
+        };
+        assert_eq!(r.connections, 2, "{r:?}");
+        assert_eq!(r.attend_ops, 1, "{r:?}");
+        assert_eq!(r.attend_rows, 2, "{r:?}");
+        assert_eq!(r.attend_errors, 1, "{r:?}");
+        assert_eq!(r.cache.sequences, 2, "{r:?}");
+        assert_eq!(r.cache.total_tokens, 2, "{r:?}");
+        assert!(r.blocks_used >= 1, "{r:?}");
+        assert!(r.uptime_us > 0, "{r:?}");
+        assert!(r.service_p99_us >= r.service_p50_us, "{r:?}");
+        // drift-free by the pinned overhead formulas
+        assert_eq!(
+            r.modeled_payload_bytes, r.measured_payload_bytes,
+            "{r:?}"
+        );
+        assert!(r.modeled_payload_bytes > 0, "{r:?}");
+        // the monitor also answers Ping, and refuses real work
+        assert!(matches!(
+            rpc(&mut mon, &NetRequest::Ping, wire),
+            NetResponse::Pong { .. }
+        ));
+        assert!(matches!(
+            rpc(&mut mon, &NetRequest::Stats, wire),
+            NetResponse::Err(m) if m.contains("monitor")
+        ));
+        // dropping the worker shrinks the connection count and removes
+        // its cache from the merge
+        rpc_shutdown(&mut worker, wire);
+        drop(worker);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let NetResponse::NodeStats(r2) =
+                rpc(&mut mon, &NetRequest::NodeStats, wire)
+            else {
+                panic!("expected NodeStats");
+            };
+            if r2.connections == 1 && r2.cache.sequences == 0 {
+                // cumulative counters survive the connection
+                assert_eq!(r2.attend_ops, 1, "{r2:?}");
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "worker teardown never reflected: {r2:?}"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
     }
 
     /// First frame must be Configure; anything else is refused and the

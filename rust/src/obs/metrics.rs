@@ -1,0 +1,510 @@
+//! LIVE metrics registry — the "what is happening *right now*" half of
+//! the observability stack (the post-hoc half is [`super::tracer`]).
+//!
+//! A [`Metrics`] handle is a process-wide registry of **labeled
+//! counters, gauges, and histograms** plus fixed-capacity **time-series
+//! ring buffers** ([`RingSeries`]) that callers sample on their own
+//! cadence (the serve engine and pipeline sample once per step). It
+//! follows the exact `Option<Arc<_>>` discipline of
+//! [`crate::obs::Tracer`]: a disabled handle is a single branch per
+//! call, so instrumentation can stay in hot paths unconditionally.
+//!
+//! * [`Metrics::global`] is the process singleton, enabled once per
+//!   process iff `FASTDECODE_METRICS` is set to something other than
+//!   `0`/`""` — mirroring `FASTDECODE_TRACE`.
+//! * Keys are rendered Prometheus-style up front:
+//!   `name{k1="v1",k2="v2"}`, built from a `&[(&str, &str)]` label set
+//!   (labels are sorted by the caller's ordering; pass them in a fixed
+//!   order for stable keys).
+//! * Histograms reuse [`crate::metrics::Histogram`] — one log-bucketed
+//!   percentile implementation in the repo, one merge path.
+//! * Export is [`Metrics::prometheus_text`] (text exposition) and
+//!   [`Metrics::to_json`] (via `util::json`) — both are point-in-time
+//!   snapshots taken under the registry lock.
+//!
+//! Mutex poisoning is deliberately ignored (`into_inner` on a poisoned
+//! lock): metrics are advisory, and a panicking instrumented thread
+//! must never take the rest of the process's observability with it.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+use crate::metrics::Histogram;
+use crate::util::json::Json;
+
+/// Default capacity of a time-series ring buffer. Power of two so the
+/// halving downsample walks through clean sizes.
+pub const DEFAULT_SERIES_CAP: usize = 256;
+
+/// Fixed-capacity time series: `(ts_us, value)` samples with the
+/// timestamp in microseconds since the registry start. When a push
+/// exceeds the capacity the series **downsamples by keeping every
+/// second sample** (plus the newest), so the buffer always spans the
+/// full recording window at degrading resolution rather than
+/// forgetting the oldest half. Downsampling preserves the FIRST and
+/// LAST samples and keeps timestamps monotone (any subsequence of a
+/// monotone sequence is monotone) — pinned by property test.
+#[derive(Clone, Debug)]
+pub struct RingSeries {
+    cap: usize,
+    samples: Vec<(f64, f64)>,
+}
+
+impl RingSeries {
+    pub fn new(cap: usize) -> RingSeries {
+        RingSeries {
+            cap: cap.max(2),
+            samples: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, ts_us: f64, value: f64) {
+        self.samples.push((ts_us, value));
+        if self.samples.len() > self.cap {
+            self.downsample();
+        }
+    }
+
+    /// Keep indices 0, 2, 4, … plus the last sample (the newest point
+    /// must survive — it is what a live poller reads).
+    fn downsample(&mut self) {
+        let n = self.samples.len();
+        if n < 3 {
+            return;
+        }
+        let last = self.samples[n - 1];
+        let mut kept: Vec<(f64, f64)> =
+            self.samples.iter().copied().step_by(2).collect();
+        if (n - 1) % 2 != 0 {
+            kept.push(last);
+        }
+        self.samples = kept;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn samples(&self) -> &[(f64, f64)] {
+        &self.samples
+    }
+
+    fn to_json(&self) -> Json {
+        let ts: Vec<f64> = self.samples.iter().map(|s| s.0).collect();
+        let vs: Vec<f64> = self.samples.iter().map(|s| s.1).collect();
+        Json::obj()
+            .set("capacity", self.cap)
+            .set("ts_us", ts)
+            .set("values", vs)
+    }
+}
+
+#[derive(Default)]
+struct State {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Histogram>,
+    series: BTreeMap<String, RingSeries>,
+}
+
+struct Inner {
+    start: Instant,
+    state: Mutex<State>,
+}
+
+/// Cheap-to-clone handle to the live metrics registry (or to nothing,
+/// when disabled — every op is then a single branch).
+#[derive(Clone, Default)]
+pub struct Metrics {
+    inner: Option<Arc<Inner>>,
+}
+
+/// Render `name{k1="v1",k2="v2"}`; a bare `name` when `labels` is
+/// empty. This is both the storage key and the Prometheus series name.
+pub fn metric_key(name: &str, labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return name.to_string();
+    }
+    let mut k = String::with_capacity(name.len() + 16 * labels.len());
+    k.push_str(name);
+    k.push('{');
+    for (i, (lk, lv)) in labels.iter().enumerate() {
+        if i > 0 {
+            k.push(',');
+        }
+        k.push_str(lk);
+        k.push_str("=\"");
+        k.push_str(lv);
+        k.push('"');
+    }
+    k.push('}');
+    k
+}
+
+/// Insert `suffix` into a rendered key before its label block:
+/// `h{n="0"}` + `_p99_us` → `h_p99_us{n="0"}`.
+fn suffixed(key: &str, suffix: &str) -> String {
+    match key.find('{') {
+        Some(i) => format!("{}{}{}", &key[..i], suffix, &key[i..]),
+        None => format!("{key}{suffix}"),
+    }
+}
+
+impl Metrics {
+    /// A no-op registry: every op is a single branch.
+    pub fn disabled() -> Metrics {
+        Metrics { inner: None }
+    }
+
+    /// An active registry; series timestamps are relative to now.
+    pub fn enabled() -> Metrics {
+        Metrics {
+            inner: Some(Arc::new(Inner {
+                start: Instant::now(),
+                state: Mutex::new(State::default()),
+            })),
+        }
+    }
+
+    /// Enabled iff `FASTDECODE_METRICS` is set to something other than
+    /// `0`/`""` (checked once per process) — a fresh registry per call;
+    /// use [`Metrics::global`] for the process-wide one.
+    pub fn from_env() -> Metrics {
+        static ON: OnceLock<bool> = OnceLock::new();
+        let on = *ON.get_or_init(|| {
+            std::env::var("FASTDECODE_METRICS")
+                .map(|v| !v.is_empty() && v != "0")
+                .unwrap_or(false)
+        });
+        if on {
+            Metrics::enabled()
+        } else {
+            Metrics::disabled()
+        }
+    }
+
+    /// The process-wide registry (a clone of one shared handle),
+    /// enabled by `FASTDECODE_METRICS`. All built-in instrumentation
+    /// (serve engine, pipeline, remote pool, KV cache) records here.
+    pub fn global() -> Metrics {
+        static GLOBAL: OnceLock<Metrics> = OnceLock::new();
+        GLOBAL.get_or_init(Metrics::from_env).clone()
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    fn lock<'a>(inner: &'a Arc<Inner>) -> MutexGuard<'a, State> {
+        match inner.state.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Microseconds since the registry was created (series time base).
+    pub fn elapsed_us(&self) -> f64 {
+        match &self.inner {
+            Some(inner) => inner.start.elapsed().as_secs_f64() * 1e6,
+            None => 0.0,
+        }
+    }
+
+    /// Add `delta` to a monotonically increasing counter.
+    pub fn inc(&self, name: &str, labels: &[(&str, &str)], delta: u64) {
+        let Some(inner) = &self.inner else { return };
+        let key = metric_key(name, labels);
+        *Self::lock(inner).counters.entry(key).or_insert(0) += delta;
+    }
+
+    /// Set a gauge to its latest value (last write wins).
+    pub fn set_gauge(&self, name: &str, labels: &[(&str, &str)], v: f64) {
+        let Some(inner) = &self.inner else { return };
+        let key = metric_key(name, labels);
+        Self::lock(inner).gauges.insert(key, v);
+    }
+
+    /// Record a duration (µs) into a labeled histogram
+    /// ([`crate::metrics::Histogram`] — the repo's one percentile
+    /// implementation).
+    pub fn observe_us(&self, name: &str, labels: &[(&str, &str)], us: f64) {
+        let Some(inner) = &self.inner else { return };
+        let key = metric_key(name, labels);
+        Self::lock(inner)
+            .hists
+            .entry(key)
+            .or_insert_with(Histogram::new)
+            .record_us(us);
+    }
+
+    pub fn observe_secs(&self, name: &str, labels: &[(&str, &str)], s: f64) {
+        self.observe_us(name, labels, s * 1e6);
+    }
+
+    /// Append a time-series sample (timestamped now) to a ring buffer
+    /// of [`DEFAULT_SERIES_CAP`]. Callers pick the cadence — one sample
+    /// per step is the intended interval for step-level series.
+    pub fn sample(&self, name: &str, labels: &[(&str, &str)], v: f64) {
+        self.sample_with_cap(name, labels, v, DEFAULT_SERIES_CAP);
+    }
+
+    pub fn sample_with_cap(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        v: f64,
+        cap: usize,
+    ) {
+        let Some(inner) = &self.inner else { return };
+        let ts_us = inner.start.elapsed().as_secs_f64() * 1e6;
+        let key = metric_key(name, labels);
+        Self::lock(inner)
+            .series
+            .entry(key)
+            .or_insert_with(|| RingSeries::new(cap))
+            .push(ts_us, v);
+    }
+
+    /// Point-in-time read of one counter (test / poll helper).
+    pub fn counter_value(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+    ) -> Option<u64> {
+        let inner = self.inner.as_ref()?;
+        let key = metric_key(name, labels);
+        Self::lock(inner).counters.get(&key).copied()
+    }
+
+    /// Point-in-time read of one gauge (test / poll helper).
+    pub fn gauge_value(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+    ) -> Option<f64> {
+        let inner = self.inner.as_ref()?;
+        let key = metric_key(name, labels);
+        Self::lock(inner).gauges.get(&key).copied()
+    }
+
+    /// Prometheus-style text exposition: one `name{labels} value` line
+    /// per counter/gauge; histograms expand to `_count` / `_mean_us` /
+    /// `_p50_us` / `_p99_us` / `_max_us` lines. Empty string when
+    /// disabled.
+    pub fn prometheus_text(&self) -> String {
+        let Some(inner) = &self.inner else {
+            return String::new();
+        };
+        let st = Self::lock(inner);
+        let mut out = String::new();
+        for (k, v) in &st.counters {
+            out.push_str(&format!("{k} {v}\n"));
+        }
+        for (k, v) in &st.gauges {
+            out.push_str(&format!("{k} {v}\n"));
+        }
+        for (k, h) in &st.hists {
+            if h.count() == 0 {
+                continue;
+            }
+            out.push_str(&format!("{} {}\n", suffixed(k, "_count"), h.count()));
+            out.push_str(&format!(
+                "{} {:.3}\n",
+                suffixed(k, "_mean_us"),
+                h.mean_us()
+            ));
+            out.push_str(&format!(
+                "{} {:.3}\n",
+                suffixed(k, "_p50_us"),
+                h.percentile_us(0.50)
+            ));
+            out.push_str(&format!(
+                "{} {:.3}\n",
+                suffixed(k, "_p99_us"),
+                h.percentile_us(0.99)
+            ));
+            out.push_str(&format!(
+                "{} {:.3}\n",
+                suffixed(k, "_max_us"),
+                h.max_us()
+            ));
+        }
+        out
+    }
+
+    /// JSON snapshot of the whole registry (counters, gauges,
+    /// histogram summaries via `Histogram::to_json_ms`, and the full
+    /// ring-buffer series). `Json::Null` when disabled.
+    pub fn to_json(&self) -> Json {
+        let Some(inner) = &self.inner else {
+            return Json::Null;
+        };
+        let st = Self::lock(inner);
+        let mut counters = Json::obj();
+        for (k, v) in &st.counters {
+            counters = counters.set(k.as_str(), *v);
+        }
+        let mut gauges = Json::obj();
+        for (k, v) in &st.gauges {
+            gauges = gauges.set(k.as_str(), *v);
+        }
+        let mut hists = Json::obj();
+        for (k, h) in &st.hists {
+            hists = hists.set(k.as_str(), h.to_json_ms());
+        }
+        let mut series = Json::obj();
+        for (k, s) in &st.series {
+            series = series.set(k.as_str(), s.to_json());
+        }
+        Json::obj()
+            .set("uptime_us", inner.start.elapsed().as_secs_f64() * 1e6)
+            .set("counters", counters)
+            .set("gauges", gauges)
+            .set("histograms", hists)
+            .set("series", series)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn disabled_registry_is_inert() {
+        let m = Metrics::disabled();
+        assert!(!m.is_enabled());
+        m.inc("c", &[], 3);
+        m.set_gauge("g", &[], 1.0);
+        m.observe_us("h", &[], 5.0);
+        m.sample("s", &[], 1.0);
+        assert_eq!(m.counter_value("c", &[]), None);
+        assert_eq!(m.gauge_value("g", &[]), None);
+        assert_eq!(m.prometheus_text(), "");
+        assert!(matches!(m.to_json(), Json::Null));
+    }
+
+    #[test]
+    fn keys_render_prometheus_style() {
+        assert_eq!(metric_key("tok_per_s", &[]), "tok_per_s");
+        assert_eq!(
+            metric_key("inflight", &[("node", "0"), ("op", "attend")]),
+            "inflight{node=\"0\",op=\"attend\"}"
+        );
+        assert_eq!(
+            suffixed("h{n=\"0\"}", "_p99_us"),
+            "h_p99_us{n=\"0\"}"
+        );
+        assert_eq!(suffixed("h", "_count"), "h_count");
+    }
+
+    #[test]
+    fn counters_gauges_hists_roundtrip_through_exports() {
+        let m = Metrics::enabled();
+        m.inc("frames", &[("node", "0")], 2);
+        m.inc("frames", &[("node", "0")], 3);
+        m.set_gauge("queue_depth", &[], 7.0);
+        for us in [100.0, 200.0, 300.0] {
+            m.observe_us("service", &[("node", "1")], us);
+        }
+        assert_eq!(m.counter_value("frames", &[("node", "0")]), Some(5));
+        assert_eq!(m.gauge_value("queue_depth", &[]), Some(7.0));
+
+        let text = m.prometheus_text();
+        assert!(text.contains("frames{node=\"0\"} 5"), "{text}");
+        assert!(text.contains("queue_depth 7"), "{text}");
+        assert!(text.contains("service_count{node=\"1\"} 3"), "{text}");
+        assert!(text.contains("service_p99_us{node=\"1\"}"), "{text}");
+
+        let doc = Json::parse(&m.to_json().render()).unwrap();
+        let counters = doc.get("counters").unwrap();
+        assert_eq!(
+            counters.get("frames{node=\"0\"}").and_then(|j| j.as_f64()),
+            Some(5.0)
+        );
+        let h = doc.get("histograms").unwrap();
+        assert!(h.get("service{node=\"1\"}").is_some());
+    }
+
+    /// Satellite property test: a snapshot under concurrent recording
+    /// never loses counts — the exported counter equals the sum of
+    /// per-thread increments.
+    #[test]
+    fn prop_concurrent_counter_increments_never_lost() {
+        prop::check("metrics_concurrent_counts", 8, |g| {
+            let threads = g.usize_in(2, 6);
+            let per_thread = g.usize_in(50, 400);
+            let m = Metrics::enabled();
+            std::thread::scope(|s| {
+                for t in 0..threads {
+                    let m = m.clone();
+                    s.spawn(move || {
+                        for i in 0..per_thread {
+                            m.inc("hits", &[("kind", "prop")], 1);
+                            // interleave snapshot reads with writes
+                            if t == 0 && i % 64 == 0 {
+                                let _ = m.prometheus_text();
+                            }
+                        }
+                    });
+                }
+            });
+            assert_eq!(
+                m.counter_value("hits", &[("kind", "prop")]),
+                Some((threads * per_thread) as u64)
+            );
+        });
+    }
+
+    /// Satellite property test: ring-buffer downsampling preserves the
+    /// first and last samples and monotone timestamps, and never
+    /// exceeds capacity + 1.
+    #[test]
+    fn prop_ring_series_downsampling_invariants() {
+        prop::check("ring_series_downsample", 64, |g| {
+            let cap = g.usize_in(2, 64);
+            let n = g.usize_in(1, 1000);
+            let mut rs = RingSeries::new(cap);
+            let mut ts = 0.0f64;
+            for i in 0..n {
+                ts += g.f32_in(0.0, 10.0) as f64;
+                rs.push(ts, i as f64);
+            }
+            let s = rs.samples();
+            assert!(!s.is_empty());
+            // first and last survive every downsample
+            assert_eq!(s[0].1, 0.0, "first sample lost");
+            assert_eq!(s[s.len() - 1].1, (n - 1) as f64, "last sample lost");
+            assert_eq!(s[s.len() - 1].0, ts);
+            // monotone (non-decreasing) timestamps
+            for w in s.windows(2) {
+                assert!(w[0].0 <= w[1].0, "timestamps went backwards");
+            }
+            // bounded: keeping the newest after a halving may briefly
+            // leave cap/2 + 1 entries; never more than cap + 1 overall
+            assert!(s.len() <= rs.capacity() + 1, "len {} cap {}", s.len(), cap);
+        });
+    }
+
+    #[test]
+    fn global_is_disabled_without_env_and_shared() {
+        // CI never sets FASTDECODE_METRICS for the test binary, so the
+        // global must be inert — and repeated calls share the handle.
+        let a = Metrics::global();
+        let b = Metrics::global();
+        assert_eq!(a.is_enabled(), b.is_enabled());
+        if a.is_enabled() {
+            a.inc("global_shared_probe", &[], 1);
+            assert_eq!(b.counter_value("global_shared_probe", &[]), Some(1));
+        }
+    }
+}

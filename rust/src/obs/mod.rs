@@ -1,7 +1,25 @@
-//! Observability: span tracing, leveled logging, and wire-level
-//! counters — the instrument behind the paper's latency decomposition
-//! (Figs 8/11/12/15: S-Part compute vs R-Part attend vs activation
-//! transfer), now spanning the PROCESS BOUNDARY.
+//! Observability: the instrument behind the paper's latency
+//! decomposition (Figs 8/11/12/15: S-Part compute vs R-Part attend vs
+//! activation transfer), built as **two complementary surfaces** over
+//! one set of measurement points:
+//!
+//! | surface | module | question it answers | cost model |
+//! |---|---|---|---|
+//! | **post-hoc traces** | [`tracer`] | *why was step N slow?* — full per-span wall-clock history, exported once at the end | spans buffered until flush |
+//! | **live metrics** | [`metrics`] | *what is the system doing right now?* — current counters/gauges/percentiles, pollable mid-run | O(1) state, read any time |
+//!
+//! Reach for **traces** when you need causality: a Chrome trace-event
+//! timeline (chrome://tracing, Perfetto) with one track per
+//! thread/socket/node, where a remote node's decode/append/attend
+//! spans nest inside the client-side submit→reply span that caused
+//! them. Reach for **metrics** when you need a dashboard: the `fdtop`
+//! binary polls a running cluster's live snapshots without stopping
+//! it, and `FASTDECODE_METRICS=1` turns on the in-process registry for
+//! Prometheus-style text or JSON export. Traces answer questions about
+//! a run that already happened; metrics answer questions about a run
+//! that is still going.
+//!
+//! # Surface 1: post-hoc traces (PR 6/9)
 //!
 //! The in-process flow is **trace → breakdown → snapshot**:
 //!
@@ -10,9 +28,7 @@
 //!    QKV scatter and O-gather incast wait on the coordinator, one
 //!    submit→reply span per socket/node on its own track, admission
 //!    decisions and prefill-vs-decode rows in the serving engine. The
-//!    flush is a Chrome trace-event JSON (chrome://tracing, Perfetto)
-//!    built on `util::json` — one track per thread/node, so straggler
-//!    skew and pipeline bubbles are visible on a timeline.
+//!    flush is a Chrome trace-event JSON built on `util::json`.
 //! 2. **Breakdown** — the same timers feed
 //!    `metrics::StepRecord`'s measured segments (`queue_wait_s`,
 //!    `gather_wait_s`, `dispatch_s`, per-socket busy, straggler
@@ -22,7 +38,8 @@
 //!    `tests/obs_trace.rs` at every step of a live pipelined run.
 //! 3. **Snapshot** — `bench::snapshot` aggregates a run's trace into a
 //!    pinned machine-readable `BENCH_<name>.json` (schema documented
-//!    there), starting the cross-PR perf trajectory.
+//!    there) — the cross-PR perf trajectory that
+//!    `bench_validate --compare` gates against `bench.baseline.json`.
 //!
 //! The cross-process flow is **trace → align → merge**:
 //!
@@ -40,24 +57,35 @@
 //! 3. **Merge** — [`Tracer::merge_remote`] remaps each fetched span by
 //!    that offset ([`map_remote_span`] clamps so estimate error can
 //!    never yield negative timestamps/durations) and lands it on one
-//!    track per node, so a single chrome://tracing view shows the
-//!    S-thread, sockets, wire, AND remote node internals aligned —
-//!    each node's spans nest inside the client-side submit→reply span
-//!    that caused them.
+//!    track per node — one aligned timeline across processes.
 //!
-//! From the same measurements each node gets a live [`NodeProfile`]
-//! (EWMA attend tokens/s and bytes/s, p50/p99 service time, queue
-//! depth) carried in [`NetStats`] — the measured input
-//! `perfmodel::Planner::from_measured_profiles` consumes in place of
-//! assumed-equal device models, and what `ServeReport` and the bench
-//! snapshots surface per node.
+//! # Surface 2: live metrics (this PR)
 //!
-//! Tracing is NEAR-ZERO-COST when disabled: [`Tracer`] is an
-//! `Option<Arc<_>>`; a disabled tracer's `span`/`record`/`instant`
-//! are a single branch with no clock read and no allocation, pinned
-//! below 2 % of a reduced-scale fig9 step by `tests/obs_trace.rs`.
-//! Enable at runtime with `FASTDECODE_TRACE=1` (picked up by every
-//! engine constructor) or explicitly via the `*_traced` constructors.
+//! [`metrics::Metrics`] is a process-wide registry of labeled
+//! counters, gauges, histograms (reusing `crate::metrics::Histogram` —
+//! one percentile implementation repo-wide) and fixed-capacity
+//! time-series ring buffers, enabled by `FASTDECODE_METRICS=1` and
+//! exported as Prometheus-style text or JSON. Built-in
+//! instrumentation: the serve engine (active slots, queue depth,
+//! admissions/completions, live TTFT/ITL/goodput), the pipeline (step
+//! latency histogram + stage-breakdown gauges), `net::RemotePool`
+//! (per-node in-flight, errors, EWMA rates from [`NodeProfile`]), and
+//! `kvcache` (blocks used/free, physical-vs-logical utilization).
+//!
+//! The live surface also crosses the process boundary: every `rnode`
+//! listener keeps shared self-counters (`net::rnode::NodeShared`) and
+//! answers `NetRequest::NodeStats` with a `NodeStatsReport` snapshot —
+//! uptime, attend ops/rows/errors, queue wait, service percentiles,
+//! payload drift, and merged cache occupancy — on ANY connection,
+//! including an unconfigured monitor connection. The `fdtop` binary
+//! (`net::monitor`) polls those reports into a live per-node table or
+//! a `--once --json` document for scripting and CI; a dead node
+//! renders as a DEAD row instead of aborting the poll.
+//!
+//! Both surfaces are NEAR-ZERO-COST when disabled: [`Tracer`] and
+//! [`metrics::Metrics`] are `Option<Arc<_>>` handles; disabled ops are
+//! a single branch with no clock read and no allocation (pinned below
+//! 2 % of a reduced-scale fig9 step by `tests/obs_trace.rs`).
 //!
 //! Logging ([`log!`](crate::obs_log)) is leveled and timestamped,
 //! controlled by `FASTDECODE_LOG` (`error`/`warn`/`info`/`debug`, off
@@ -69,14 +97,21 @@
 //! ops/errors per node in `net::RemotePool`, which also runs a live
 //! drift detector: measured activation payload bytes must equal the
 //! `transport::LinkModel`-modeled bytes (PR 5's pinned-bytes test
-//! discipline, promoted into always-on counters).
+//! discipline, promoted into always-on counters). From the same
+//! submit→reply timing each node gets a live [`NodeProfile`] (EWMA
+//! attend tokens/s and bytes/s, p50/p99 service time, queue depth)
+//! carried in [`NetStats`] — the measured input
+//! `perfmodel::Planner::from_measured_profiles` consumes in place of
+//! assumed-equal device models.
 
 pub mod counters;
 pub mod logging;
+pub mod metrics;
 pub mod tracer;
 
 pub use counters::{NetStats, NodeProfile, TransportCounters};
 pub use logging::Level;
+pub use metrics::{Metrics, RingSeries};
 pub use tracer::{
     map_remote_span, pick_clock_sync, validate_chrome_trace_file, Span,
     TraceSpan, Tracer, Track,

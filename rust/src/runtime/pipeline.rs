@@ -394,6 +394,18 @@ impl ThreadedPipeline {
         }
         let next = res?;
         timing.latency_s = t0.elapsed().as_secs_f64();
+        let m = crate::obs::Metrics::global();
+        if m.is_enabled() {
+            m.observe_secs("pipeline_step_latency", &[], timing.latency_s);
+            m.set_gauge("pipeline_s_time_s", &[], timing.s_time);
+            m.set_gauge("pipeline_r_time_s", &[], timing.r_time);
+            m.set_gauge("pipeline_comm_time_s", &[], timing.comm_time);
+            m.set_gauge("pipeline_queue_wait_s", &[], timing.queue_wait_s);
+            m.set_gauge("pipeline_gather_wait_s", &[], timing.gather_wait_s);
+            m.set_gauge("pipeline_dispatch_s", &[], timing.dispatch_s);
+            m.set_gauge("pipeline_skew_s", &[], timing.skew_s);
+            m.sample("pipeline_step_latency_s", &[], timing.latency_s);
+        }
         self.track.record(
             "step",
             t0,

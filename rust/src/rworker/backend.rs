@@ -26,6 +26,7 @@ use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 use crate::kvcache::CacheStats;
+use crate::net::codec::NodeStatsReport;
 use crate::obs::{NetStats, Tracer};
 
 use super::worker::SeqTask;
@@ -115,6 +116,16 @@ pub trait AttendBackend: Send {
     /// Backends with no wire (in-process threads) report none.
     fn net_stats(&self) -> Vec<NetStats> {
         Vec::new()
+    }
+
+    /// Each live node's self-reported live snapshot
+    /// (`NetRequest::NodeStats`): uptime, attend ops/rows/errors, queue
+    /// wait, service percentiles, payload drift, merged cache occupancy
+    /// — labeled by the node's display label. Meant for dashboards and
+    /// CI (`fdtop`), not the per-step hot path. Backends with no wire
+    /// report none.
+    fn node_reports(&mut self) -> Result<Vec<(String, NodeStatsReport)>> {
+        Ok(Vec::new())
     }
 
     /// Fetch every remote node's server-side trace spans

@@ -26,6 +26,7 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::real::FastDecode;
 use crate::metrics::{Histogram, StepRecord, StepTrace};
+use crate::obs::Metrics;
 use crate::sched::LoadControl;
 use crate::workload::Request;
 
@@ -271,6 +272,9 @@ impl ServeEngine {
         let mut peak_kv_logical = 0usize;
         let share = self.cfg.share_prefixes
             && self.cfg.prefill == PrefillMode::Batched;
+        // live-metrics handle resolved once per run; every call below
+        // is a single branch when FASTDECODE_METRICS is off
+        let metrics = Metrics::global();
         let t0 = Instant::now();
         let mut t = 0usize;
 
@@ -396,8 +400,15 @@ impl ServeEngine {
                         ttft_s: 0.0,
                     },
                 )?;
+                metrics.inc("serve_admissions", &[], 1);
             }
             peak_active = peak_active.max(slots.active_count());
+            metrics.set_gauge(
+                "serve_active_slots",
+                &[],
+                slots.active_count() as f64,
+            );
+            metrics.set_gauge("serve_queue_depth", &[], waiting.len() as f64);
             // 3. assemble one ragged pass over every occupied slot
             struct PassSeg {
                 slot: usize,
@@ -494,6 +505,11 @@ impl ServeEngine {
                             // token produced the first generated token
                             req.ttft_s = now_s - req.wall_arrive_s;
                             ttft_h.record_secs(req.ttft_s);
+                            metrics.observe_secs(
+                                "serve_ttft",
+                                &[],
+                                req.ttft_s,
+                            );
                             req.produced.push(last);
                             req.next_token = last;
                             req.wall_last_token_s = now_s;
@@ -502,6 +518,11 @@ impl ServeEngine {
                         // earlier prefill rows' samples are discarded
                     } else {
                         itl_h.record_secs(now_s - req.wall_last_token_s);
+                        metrics.observe_secs(
+                            "serve_itl",
+                            &[],
+                            now_s - req.wall_last_token_s,
+                        );
                         req.produced.push(last);
                         req.next_token = last;
                         req.wall_last_token_s = now_s;
@@ -527,6 +548,31 @@ impl ServeEngine {
             }
             if !finished_seqs.is_empty() {
                 self.fd.retire_seqs(&finished_seqs)?;
+            }
+            metrics.inc(
+                "serve_completions",
+                &[],
+                finished_seqs.len() as u64,
+            );
+            if metrics.is_enabled() {
+                let wall_s = t0.elapsed().as_secs_f64();
+                let goodput = if wall_s > 0.0 {
+                    total_tokens as f64 / wall_s
+                } else {
+                    0.0
+                };
+                metrics.set_gauge("serve_goodput_tok_per_s", &[], goodput);
+                metrics.set_gauge(
+                    "serve_kv_physical_tokens",
+                    &[],
+                    cs.physical_tokens as f64,
+                );
+                metrics.sample("serve_goodput_tok_per_s", &[], goodput);
+                metrics.sample(
+                    "serve_active_slots",
+                    &[],
+                    slots.active_count() as f64,
+                );
             }
             steps.push(StepRecord {
                 step: t,

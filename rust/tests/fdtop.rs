@@ -1,0 +1,122 @@
+//! E2E pin for the live-metrics surface: drive real attends over two
+//! TCP rnode PROCESSES, then run the actual `fdtop` binary against
+//! them.
+//!
+//! Pin 1: `fdtop --once --json` shows one row per node, each alive
+//! with nonzero attend tok/s and KV utilization — the self-reported
+//! counters reflect traffic that really crossed the wire.
+//!
+//! Pin 2: after one node is killed, the same invocation still exits 0
+//! and reports the dead node BY NAME (`alive: false` + the root
+//! cause) while the survivor's row stays schema-valid — a dashboard
+//! that dies with the node it watches is useless.
+
+use std::process::Command;
+
+use fastdecode::model::{Precision, TINY};
+use fastdecode::net::{
+    spawn_rnode_process, validate_cluster, NodeConfig, RemotePool,
+    RnodeProcess, WireMode,
+};
+use fastdecode::rworker::{AttendBackend, SeqTask};
+use fastdecode::util::json::Json;
+use fastdecode::util::Rng;
+
+fn spawn_rnode() -> RnodeProcess {
+    spawn_rnode_process(env!("CARGO_BIN_EXE_rnode")).expect("spawning the rnode binary")
+}
+
+fn mk_task(rng: &mut Rng, id: u64) -> SeqTask {
+    SeqTask {
+        seq_id: id,
+        q: rng.normal_vec(TINY.hidden, 1.0),
+        k_new: rng.normal_vec(TINY.hidden, 1.0),
+        v_new: rng.normal_vec(TINY.hidden, 1.0),
+    }
+}
+
+/// Run the real `fdtop` binary once and parse its JSON document. The
+/// exit code must be 0 even when some polled nodes are dead.
+fn fdtop_once(addrs: &[String]) -> Json {
+    let out = Command::new(env!("CARGO_BIN_EXE_fdtop"))
+        .arg("--once")
+        .arg("--json")
+        .args(addrs)
+        .output()
+        .expect("running fdtop");
+    assert!(
+        out.status.success(),
+        "fdtop exited nonzero: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8(out.stdout).expect("fdtop output utf8");
+    Json::parse(stdout.trim()).expect("fdtop --json emits valid JSON")
+}
+
+#[test]
+fn fdtop_reports_live_cluster_then_names_the_dead_node() {
+    let mut victim = spawn_rnode();
+    let survivor = spawn_rnode();
+    let addrs = vec![victim.addr.clone(), survivor.addr.clone()];
+    let cfg = NodeConfig::from_spec(&TINY, 64, 8, Precision::F32, WireMode::F32);
+    let mut pool = RemotePool::connect_tcp(&addrs, cfg).expect("connecting to rnodes");
+    // 1 → node 0 (victim), 2 → node 1 (survivor)
+    pool.add_seqs(&[1, 2]).unwrap();
+    let mut rng = Rng::new(3);
+    for _ in 0..4 {
+        pool.attend(0, vec![mk_task(&mut rng, 1), mk_task(&mut rng, 2)])
+            .unwrap();
+    }
+
+    // Pin 1: both nodes alive, really-served traffic in the report
+    let doc = fdtop_once(&addrs);
+    validate_cluster(&doc).expect("cluster document schema");
+    let nodes = doc.get("nodes").and_then(Json::as_arr).unwrap().to_vec();
+    assert_eq!(nodes.len(), 2, "one row per asked node");
+    for node in &nodes {
+        let addr = node.get("addr").and_then(Json::as_str).unwrap();
+        assert_eq!(
+            node.get("alive").and_then(Json::as_bool),
+            Some(true),
+            "{addr} not alive: {node:?}"
+        );
+        let tok = node.get("attend_tok_per_s").and_then(Json::as_f64).unwrap();
+        assert!(tok > 0.0, "{addr}: attend tok/s is {tok}");
+        let util = node.get("kv_utilization").and_then(Json::as_f64).unwrap();
+        assert!(util > 0.0, "{addr}: KV utilization is {util}");
+        let ops = node.get("attend_ops").and_then(Json::as_f64).unwrap();
+        assert!(ops >= 4.0, "{addr}: attend_ops {ops} < 4");
+    }
+
+    // Pin 2: kill one node; fdtop exits 0 and names it
+    victim.child.kill().expect("killing the victim rnode");
+    let _ = victim.child.wait();
+    let doc = fdtop_once(&addrs);
+    validate_cluster(&doc).expect("cluster schema with a dead node");
+    let nodes = doc.get("nodes").and_then(Json::as_arr).unwrap().to_vec();
+    assert_eq!(nodes.len(), 2, "dead node must keep its row");
+    let dead: Vec<&Json> = nodes
+        .iter()
+        .filter(|n| n.get("alive").and_then(Json::as_bool) == Some(false))
+        .collect();
+    assert_eq!(dead.len(), 1, "exactly one dead row: {doc:?}");
+    assert_eq!(
+        dead[0].get("addr").and_then(Json::as_str),
+        Some(victim.addr.as_str()),
+        "dead row names the killed node"
+    );
+    let cause = dead[0].get("error").and_then(Json::as_str).unwrap();
+    assert!(!cause.is_empty(), "dead row carries the root cause");
+    let live: Vec<&Json> = nodes
+        .iter()
+        .filter(|n| n.get("alive").and_then(Json::as_bool) == Some(true))
+        .collect();
+    assert_eq!(live.len(), 1);
+    assert_eq!(
+        live[0].get("addr").and_then(Json::as_str),
+        Some(survivor.addr.as_str()),
+        "survivor keeps reporting"
+    );
+    assert!(live[0].get("attend_tok_per_s").and_then(Json::as_f64).unwrap() > 0.0);
+    drop(pool);
+}
